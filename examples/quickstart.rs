@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT artifacts, build an engine, generate one
+//! completion, and print serving metrics. (Also used as a staged smoke
+//! probe of each runtime layer.)
+
+use anyhow::Result;
+use lazyeviction::bench_harness::artifacts_dir;
+use lazyeviction::coordinator::{Engine, EngineConfig, Request};
+use lazyeviction::runtime::{Client, Manifest};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir())?;
+    eprintln!("[1] manifest: {} variants", manifest.variants.len());
+    let client = Client::cpu()?;
+    eprintln!("[2] pjrt client: {}", client.platform());
+
+    let cfg = EngineConfig {
+        batch: 1,
+        cache: 256,
+        budget: 192,
+        policy: "lazy".into(),
+        ..Default::default()
+    };
+    let mut engine = Engine::new(&client, &manifest, cfg)?;
+    eprintln!("[3] engine ready (policy={})", engine.policy_name());
+
+    let responses = engine.run_all(vec![Request {
+        id: 1,
+        prompt: "#A=3;B=7;C=2;\n>".into(),
+        template: "A=?;B=?;A+B=?;\n".into(),
+        max_new: 64,
+    }])?;
+    eprintln!("[4] generation done");
+    for r in &responses {
+        println!("output: {:?}", r.text);
+        println!("holes : {:?}", r.hole_predictions);
+        println!(
+            "timing: ttft {:.1} ms, total {:.1} ms, {} tokens, {} evictions",
+            r.metrics.ttft_s * 1e3,
+            r.metrics.total_s * 1e3,
+            r.metrics.tokens_out,
+            r.metrics.evictions
+        );
+    }
+    println!(
+        "engine: mean step {:.2} ms, throughput {:.1} tok/s",
+        engine.metrics.step_summary_ms().mean,
+        engine.metrics.throughput()
+    );
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): starts the TCP server on
+//! a background thread with a continuous-batching engine (batch 4), fires a
+//! wave of concurrent reasoning requests through real sockets, scores the
+//! model's answers against ground truth, and reports latency/throughput.
+//!
+//!   cargo run --release --example serve_reasoning -- [--requests N]
+//!     [--policy lazy] [--budget 192] [--clients 4]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use lazyeviction::bench_harness::artifacts_dir;
+use lazyeviction::coordinator::{Engine, EngineConfig};
+use lazyeviction::runtime::{Client, Manifest};
+use lazyeviction::trace::workload::{gen_reasoning_sample, score_sample, ReasoningSample};
+use lazyeviction::util::cli::Args;
+use lazyeviction::util::json::Json;
+use lazyeviction::util::rng::Rng;
+use lazyeviction::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize_or("requests", 24);
+    let n_clients = args.usize_or("clients", 4);
+    let policy = args.str_or("policy", "lazy");
+    let budget = args.usize_or("budget", 192);
+    let addr = "127.0.0.1:8197";
+
+    let manifest = Manifest::load(artifacts_dir())?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    {
+        // the PJRT client/engine are thread-affine (Rc internals) — build
+        // them inside the server thread rather than moving them across
+        let shutdown = shutdown.clone();
+        let manifest = manifest.clone();
+        let policy_t = policy.clone();
+        std::thread::spawn(move || -> Result<()> {
+            let client = Client::cpu()?;
+            let mut cfg = EngineConfig {
+                batch: 4,
+                cache: 256,
+                budget,
+                policy: policy_t.clone(),
+                record_live: false,
+                ..Default::default()
+            };
+            cfg.params.window = 16;
+            cfg.params.recent = 16;
+            cfg.collect_sketches = policy_t.starts_with("rkv");
+            let engine = Engine::new(&client, &manifest, cfg)?;
+            lazyeviction::server::serve(engine, addr, shutdown)
+        });
+    }
+    // wait for the engine to compile + the listener to bind
+    for _ in 0..300 {
+        if TcpStream::connect(addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    // generate the workload
+    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let samples: Vec<ReasoningSample> = (0..n_requests)
+        .map(|_| gen_reasoning_sample(&mut rng, 4, 10))
+        .collect();
+
+    // fire requests from n_clients concurrent connections
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let mine: Vec<(usize, ReasoningSample)> = samples
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % n_clients == c)
+            .map(|(i, s)| (i, s.clone()))
+            .collect();
+        handles.push(std::thread::spawn(move || -> Result<Vec<(usize, Json, f64)>> {
+            let stream = TcpStream::connect(addr)?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut out = Vec::new();
+            for (i, s) in mine {
+                let req = Json::obj()
+                    .set("prompt", s.prompt.as_str())
+                    .set("template", s.template.as_str())
+                    .set("max_new", s.template.chars().count() + 2);
+                let t = Instant::now();
+                writeln!(&stream, "{}", req.to_string())?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                out.push((i, Json::parse(&line).map_err(anyhow::Error::new)?, t.elapsed().as_secs_f64()));
+            }
+            Ok(out)
+        }));
+    }
+
+    let mut latencies = Vec::new();
+    let mut total_tokens = 0usize;
+    let mut acc_sum = 0.0;
+    let mut scored = 0usize;
+    for h in handles {
+        for (i, resp, lat) in h.join().unwrap()? {
+            latencies.push(lat * 1e3);
+            total_tokens += resp.usize_at("tokens").unwrap_or(0);
+            let holes: Vec<char> = resp
+                .str_at("holes")
+                .unwrap_or_default()
+                .chars()
+                .collect();
+            acc_sum += score_sample(&samples[i], &holes);
+            scored += 1;
+        }
+    }
+    shutdown.store(true, Ordering::Relaxed);
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&latencies);
+
+    println!("== serve_reasoning E2E ==");
+    println!("policy           : {policy} (budget {budget}, batch 4)");
+    println!("requests         : {n_requests} over {n_clients} connections");
+    println!("answer accuracy  : {:.1}%", 100.0 * acc_sum / scored.max(1) as f64);
+    println!("wall time        : {wall:.2} s");
+    println!("tokens served    : {total_tokens} ({:.1} tok/s aggregate)", total_tokens as f64 / wall);
+    println!(
+        "request latency  : mean {:.0} ms  p50 {:.0}  p90 {:.0}  p99 {:.0}",
+        s.mean, s.p50, s.p90, s.p99
+    );
+    Ok(())
+}

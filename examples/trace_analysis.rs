@@ -1,0 +1,46 @@
+//! Offline TIR analysis (no artifacts needed): generate synthetic traces
+//! for every dataset profile, report recurrence fractions, MRI percentiles
+//! and the paper's suggested observation window W per (model, dataset) —
+//! i.e. the §4 offline pre-analysis step as a tool.
+//!
+//!   cargo run --release --example trace_analysis -- [--samples 8]
+
+use lazyeviction::bench_harness::table::Table;
+use lazyeviction::trace::workload::{dataset_profile, model_profile, DATASETS, MODELS};
+use lazyeviction::trace::{generator, mri};
+use lazyeviction::util::cli::Args;
+use lazyeviction::util::stats;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("samples", 8) as u64;
+    println!("\nTIR offline analysis (the paper's W-selection preprocessing)");
+    let mut t = Table::new(&[
+        "model", "dataset", "mean len", "recur %", "MRI p50", "MRI p80", "suggested W",
+    ]);
+    for model in MODELS {
+        for dataset in DATASETS {
+            let wp = dataset_profile(dataset);
+            let mp = model_profile(model);
+            let traces: Vec<_> =
+                (0..n).map(|s| generator::generate(&wp, &mp, 31_000 + s)).collect();
+            let mris = mri::measure_mri(&traces, mp.alpha);
+            let frac = mri::recurrence_fraction(&traces, mp.alpha);
+            let mean_len: f64 = traces.iter().map(|t| t.total_len as f64).sum::<f64>()
+                / traces.len() as f64;
+            let w = mri::suggest_window(&traces, mp.alpha, 0.8);
+            t.row(vec![
+                model.into(),
+                dataset.into(),
+                format!("{mean_len:.0}"),
+                format!("{:.1}", frac * 100.0),
+                format!("{:.0}", stats::percentile(&mris, 0.5)),
+                format!("{:.0}", stats::percentile(&mris, 0.8)),
+                w.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!("Reasoning profiles must show large MRIs (W ≈ tens-hundreds);");
+    println!("pg19 (LM) must show MRI < 10 — the paper's Limitations case.");
+}

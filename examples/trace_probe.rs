@@ -1,0 +1,31 @@
+//! Perf probe: pallas-interpret vs pure-jnp attention in the step executable.
+use anyhow::Result;
+use lazyeviction::runtime::{Client, Manifest};
+use std::time::Instant;
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let client = Client::cpu()?;
+    let weights_flat = manifest.load_weights()?;
+    let mut bufs = Vec::new();
+    for p in &manifest.params {
+        bufs.push(client.upload_f32(&weights_flat[p.offset_f32..p.offset_f32+p.size_f32], &p.shape)?);
+    }
+    let (b, l, h, s, dh) = (1usize, 4, 2, 256, 64);
+    let zeros = vec![0f32; b*l*h*s*dh];
+    for path in ["/tmp/step_ref.hlo.txt", "/tmp/step_pallas.hlo.txt"] {
+        let exe = client.compile_file(path)?;
+        let kc = client.upload_f32(&zeros, &[b,l,h,s,dh])?;
+        let vc = client.upload_f32(&zeros, &[b,l,h,s,dh])?;
+        let mut mask = vec![0f32; b*s]; mask[..128].fill(1.0);
+        let maskb = client.upload_f32(&mask, &[b,s])?;
+        let tok = client.upload_i32(&[3], &[b])?;
+        let pos = client.upload_i32(&[128], &[b])?;
+        let mut args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        args.push(&kc); args.push(&vc); args.push(&maskb); args.push(&tok); args.push(&pos);
+        for _ in 0..5 { exe.execute_b(&args)?; }
+        let n = 50; let t0 = Instant::now();
+        for _ in 0..n { let o = exe.execute_b(&args)?; let _ = o[0][0].to_literal_sync()?; }
+        println!("{path}: {:.3} ms/step", t0.elapsed().as_secs_f64()*1e3/n as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT compile path: lower every executable variant to HLO *text*.
+
+HLO text — NOT ``lowered.compile()`` / proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the runtime's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs into ``--out`` (default ../artifacts):
+  <variant>.hlo.txt      one per ArtifactVariant (step/append/gather/...)
+  weights.bin            trained parameters, flat f32 in param_specs order
+  manifest.json          everything the Rust runtime needs (charset, dims,
+                         param layout, variant table, signatures)
+
+Usage:  python -m compile.aot [--out DIR] [--random] [--train-steps N]
+  --random     skip training, random-init weights (fast CI builds)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model
+from .configs import CHARSET, BuildConfig, ModelConfig, TrainConfig
+
+
+def to_hlo_text(fn, *specs, return_tuple: bool = True) -> str:
+    """Lower to HLO text. Multi-output model functions use return_tuple=True;
+    single-output cache ops MUST use return_tuple=False — a 1-tuple root
+    compiles to a tuple (pointer-table) buffer that cannot be chained back
+    into an array parameter via execute_b (observed as an 8-byte buffer
+    where the cache was expected)."""
+    lowered = jax.jit(fn).lower(*specs)
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False,
+        return_tuple=return_tuple,
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs_jax(cfg: ModelConfig):
+    return [_spec(s) for _, s in cfg.param_specs()]
+
+
+def build_variant(cfg: ModelConfig, kind: str, batch: int, cache: int, prefill: int):
+    """Return (fn, arg_specs) for one artifact variant."""
+    B, S, P = batch, cache, prefill
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    i32 = jnp.int32
+    cache_spec = _spec((B, L, H, S, dh))
+    if kind in ("step", "stepf", "trace"):
+        full = kind == "trace"
+        use_pallas = kind != "stepf"
+
+        def fn(*args):
+            params = args[: -5]
+            k_cache, v_cache, slot_mask, token, pos = args[-5:]
+            return model.decode_step(
+                cfg, params, k_cache, v_cache, slot_mask, token, pos,
+                full_attn=full, use_pallas=use_pallas,
+            )
+
+        specs = param_specs_jax(cfg) + [
+            cache_spec, cache_spec, _spec((B, S)), _spec((B,), i32), _spec((B,), i32),
+        ]
+        return fn, specs
+    if kind == "prefill":
+
+        def fn(*args):
+            params = args[:-2]
+            tokens, valid_mask = args[-2:]
+            return model.prefill(cfg, params, tokens, valid_mask, S)
+
+        specs = param_specs_jax(cfg) + [_spec((B, P), i32), _spec((B, P))]
+        return fn, specs
+    if kind == "append":
+        fn = model.cache_append
+        return fn, [cache_spec, _spec((B, L, H, dh)), _spec((B,), i32)]
+    if kind == "gather":
+        fn = model.cache_gather
+        return fn, [cache_spec, _spec((B, S), i32)]
+    if kind == "insert":
+        fn = model.cache_insert
+        return fn, [cache_spec, _spec((L, H, S, dh)), _spec((), i32)]
+    raise ValueError(kind)
+
+
+SIGNATURES = {
+    "step": {
+        "inputs": ["params...", "k_cache[B,L,H,S,dh]", "v_cache[B,L,H,S,dh]",
+                   "slot_mask[B,S]", "token[B]i32", "pos[B]i32"],
+        "outputs": ["logits[B,V]", "attn_agg[B,S]", "k_new[B,L,H,dh]", "v_new[B,L,H,dh]"],
+    },
+    "stepf": {"inputs": ["same as step (XLA-fused attention fast path)"],
+              "outputs": ["same as step"]},
+    "trace": {
+        "inputs": ["params...", "k_cache", "v_cache", "slot_mask", "token", "pos"],
+        "outputs": ["logits[B,V]", "attn_full[B,L,H,S]", "k_new", "v_new"],
+    },
+    "prefill": {
+        "inputs": ["params...", "tokens[B,P]i32", "valid_mask[B,P]"],
+        "outputs": ["k_cache[B,L,H,S,dh]", "v_cache", "attn_last[B,P]", "logits_last[B,V]"],
+    },
+    "append": {"inputs": ["cache", "new[B,L,H,dh]", "idx[B]i32"], "outputs": ["cache"]},
+    "gather": {"inputs": ["cache", "idx[B,S]i32"], "outputs": ["cache"]},
+    "insert": {"inputs": ["cache", "seq[L,H,S,dh]", "b[]i32"], "outputs": ["cache"]},
+}
+
+
+def load_or_train_weights(cfg: ModelConfig, out_dir: str, random_init: bool,
+                          train_steps, log=print):
+    wpath = os.path.join(out_dir, "weights.bin")
+    if random_init:
+        log("weights: random init (--random)")
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        with open(wpath, "wb") as f:
+            f.write(model.params_to_bytes(params))
+        return
+    if os.path.exists(wpath):
+        log(f"weights: reusing {wpath}")
+        return
+    from . import train as train_mod
+
+    tc = TrainConfig(steps=train_steps) if train_steps else TrainConfig()
+    log(f"weights: training {tc.steps} steps ...")
+    train_mod.train(cfg, tc, out_dir, log=log)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--random", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=None)
+    ap.add_argument("--only", default=None, help="comma list of variant names")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    bc = BuildConfig()
+    cfg = bc.model
+    load_or_train_weights(cfg, out_dir, args.random, args.train_steps)
+
+    only = set(args.only.split(",")) if args.only else None
+    variants_meta = []
+    for v in bc.variants():
+        path = os.path.join(out_dir, v.name + ".hlo.txt")
+        variants_meta.append({
+            "kind": v.kind, "name": v.name, "file": v.name + ".hlo.txt",
+            "batch": v.batch, "cache": v.cache, "prefill": v.prefill,
+        })
+        if only and v.name not in only:
+            continue
+        if os.path.exists(path):
+            print(f"  {v.name}: cached")
+            continue
+        fn, specs = build_variant(cfg, v.kind, v.batch, v.cache, v.prefill)
+        single = v.kind in ("append", "gather", "insert")
+        text = to_hlo_text(fn, *specs, return_tuple=not single)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {v.name}: {len(text) / 1e6:.2f} MB hlo text")
+
+    offset = 0
+    params_meta = []
+    for name, shape in cfg.param_specs():
+        size = int(np.prod(shape))
+        params_meta.append({
+            "name": name, "shape": list(shape), "offset_f32": offset, "size_f32": size,
+        })
+        offset += size
+
+    manifest = {
+        "charset": CHARSET,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+            "rope_base": cfg.rope_base,
+        },
+        "weights_file": "weights.bin",
+        "total_param_f32": offset,
+        "params": params_meta,
+        "variants": variants_meta,
+        "signatures": SIGNATURES,
+        "prefill_bucket": bc.prefill_bucket,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(variants_meta)} variants, {offset} f32 params")
+
+
+if __name__ == "__main__":
+    main()

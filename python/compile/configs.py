@@ -1,0 +1,124 @@
+"""Model and artifact configuration shared by the compile path.
+
+The Rust side never imports this; everything it needs is emitted into
+``artifacts/manifest.json`` by ``aot.py``.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+# Byte-level restricted charset. Index == token id. The Rust tokenizer
+# (rust/src/tokenizer) reads this exact string from manifest.json.
+CHARSET = "0123456789+-*=();ABCDEFGHIJKLMNOPQRSTUVWXYZ?.,# >\n"
+VOCAB = len(CHARSET)  # 51
+PAD_ID = CHARSET.index(" ")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer dimensions (RoPE + RMSNorm + SwiGLU)."""
+
+    vocab: int = VOCAB
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 2
+    d_head: int = 64
+    d_ff: int = 256
+    rope_base: float = 10000.0
+    # Pallas decode kernel: single-block up to this cache size, two-pass
+    # blocked kernel above it.
+    max_single_block: int = 2048
+    block_s: int = 128
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.d_head
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Canonical (name, shape) order of the flat parameter tuple.
+
+        This order IS the executable argument order and the layout of
+        weights.bin; keep in sync with model.init_params / model.PARAM_ORDER.
+        """
+        specs: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (self.vocab, self.d_model)),
+        ]
+        for l in range(self.n_layers):
+            specs += [
+                (f"l{l}.ln1", (self.d_model,)),
+                (f"l{l}.wq", (self.d_model, self.d_attn)),
+                (f"l{l}.wk", (self.d_model, self.d_attn)),
+                (f"l{l}.wv", (self.d_model, self.d_attn)),
+                (f"l{l}.wo", (self.d_attn, self.d_model)),
+                (f"l{l}.ln2", (self.d_model,)),
+                (f"l{l}.w_gate", (self.d_model, self.d_ff)),
+                (f"l{l}.w_up", (self.d_model, self.d_ff)),
+                (f"l{l}.w_down", (self.d_ff, self.d_model)),
+            ]
+        specs.append(("ln_f", (self.d_model,)))
+        # Output head is tied to the embedding (embed.T); no extra param.
+        return specs
+
+
+@dataclass(frozen=True)
+class ArtifactVariant:
+    """One compiled executable variant."""
+
+    kind: str  # step | append | gather | insert | prefill | trace
+    batch: int
+    cache: int  # number of KV slots S
+    prefill: int = 0  # prompt bucket length P (prefill only)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "prefill":
+            return f"prefill_b{self.batch}_s{self.cache}_p{self.prefill}"
+        return f"{self.kind}_b{self.batch}_s{self.cache}"
+
+
+@dataclass
+class BuildConfig:
+    """What `make artifacts` produces."""
+
+    model: ModelConfig = field(default_factory=ModelConfig)
+    # (batch, cache) engine shapes. cache = device slot capacity S.
+    engine_shapes: List[Tuple[int, int]] = field(
+        default_factory=lambda: [(1, 256), (4, 256), (1, 512), (1, 2048), (4, 1024)]
+    )
+    prefill_bucket: int = 64
+    trace_cache: int = 512
+
+    def variants(self) -> List[ArtifactVariant]:
+        out: List[ArtifactVariant] = []
+        for b, s in self.engine_shapes:
+            out.append(ArtifactVariant("step", b, s))
+            # fused variant: same step, pure-jnp (XLA-fused) attention —
+            # 2.5x faster under CPU PJRT where Pallas runs interpreted
+            # (EXPERIMENTS.md §Perf); numerics verified identical in tests.
+            out.append(ArtifactVariant("stepf", b, s))
+            out.append(ArtifactVariant("append", b, s))
+            out.append(ArtifactVariant("gather", b, s))
+            out.append(ArtifactVariant("insert", b, s))
+            out.append(ArtifactVariant("prefill", 1, s, self.prefill_bucket))
+        out.append(ArtifactVariant("trace", 1, self.trace_cache))
+        # Dedup (prefill shared across batches with same cache).
+        seen, uniq = set(), []
+        for v in out:
+            if v.name not in seen:
+                seen.add(v.name)
+                uniq.append(v)
+        return uniq
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    seq_len: int = 256
+    batch_size: int = 24
+    steps: int = 1500
+    lr: float = 2e-3
+    warmup: int = 60
+    weight_decay: float = 0.01
+    clip: float = 1.0
+    eval_every: int = 50
+    eval_samples: int = 64

@@ -1,0 +1,136 @@
+"""Synthetic multi-step reasoning corpus (the GSM8K-sim training data).
+
+Each sample plants single-digit *facts* and then asks a chain of queries that
+must *recall* those facts (and intermediate results) from many tokens back —
+the Token Importance Recurrence mechanism of the paper, by construction:
+
+    #A=3;B=7;C=2;
+    >A+B=0;C=A+C=5;Q=B+C=9;Q+A=9;
+
+Grammar (over configs.CHARSET):
+  facts:   '#' (VAR '=' DIGIT ';')+ '\n'
+  queries: '>' (VAR '+' VAR '=' DIGIT ';' | NEWVAR '=' VAR '+' VAR '=' DIGIT ';')+ '\n'
+All arithmetic is mod 10 so every answer is one token. Chained queries define
+new variables whose *values* only exist in the generated text — exactly the
+"intermediate results reactivated in later steps" of Fig. 3(b).
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from .configs import CHARSET
+
+VARS = "ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+_LOOKUP = {c: i for i, c in enumerate(CHARSET)}
+
+
+def encode(text: str) -> np.ndarray:
+    return np.asarray([_LOOKUP[c] for c in text], np.int32)
+
+
+def decode(ids) -> str:
+    return "".join(CHARSET[int(i)] for i in ids)
+
+
+@dataclass
+class Sample:
+    text: str
+    # index of each answer digit within text (position of the digit itself)
+    answer_pos: List[int]
+    answers: List[str]
+
+    @property
+    def prompt_len(self) -> int:
+        """Length of the fact block incl. '>' — what the server gets as prompt."""
+        return self.text.index(">") + 1
+
+
+def gen_sample(rng: np.random.Generator, n_facts: int = 4, n_queries: int = 6,
+               chain_prob: float = 0.25, recall_prob: float = 0.4) -> Sample:
+    """One reasoning sample. Query mix (curriculum for the tiny model):
+      * recall   `A=3;`      — re-state a planted fact (pure retrieval);
+      * add      `A+B=0;`    — retrieve two facts and add mod 10;
+      * chain    `E=A+B=0;`  — define an intermediate result that later
+                               queries can reference (TIR of intermediates).
+    """
+    n_facts = max(2, n_facts)
+    names = list(rng.permutation(list(VARS))[: n_facts + n_queries])
+    env = {}
+    parts = ["#"]
+    for v in names[:n_facts]:
+        env[v] = int(rng.integers(0, 10))
+        parts.append(f"{v}={env[v]};")
+    parts.append("\n>")
+    text = "".join(parts)
+    answer_pos, answers = [], []
+    next_new = n_facts
+    for _ in range(n_queries):
+        known = list(env.keys())
+        r = rng.random()
+        if r < recall_prob:
+            a = known[int(rng.integers(0, len(known)))]
+            val = env[a]
+            frag = f"{a}={val};"
+        else:
+            a = known[int(rng.integers(0, len(known)))]
+            b = known[int(rng.integers(0, len(known)))]
+            val = (env[a] + env[b]) % 10
+            if r < recall_prob + chain_prob and next_new < len(names):
+                nv = names[next_new]
+                next_new += 1
+                frag = f"{nv}={a}+{b}={val};"
+                env[nv] = val
+            else:
+                frag = f"{a}+{b}={val};"
+        # answer digit is the char right before ';'
+        answer_pos.append(len(text) + len(frag) - 2)
+        answers.append(str(val))
+        text += frag
+    text += "\n"
+    return Sample(text, answer_pos, answers)
+
+
+def pack_sequences(rng: np.random.Generator, n_seqs: int, seq_len: int,
+                   n_facts=(3, 7), n_queries=(4, 10)) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack samples into [n_seqs, seq_len] token blocks + loss-weight mask.
+
+    Mask is 1.0 everywhere a real token sits and ANSWER_WEIGHT at answer
+    digits (targets are shifted by one inside lm_loss, hence pos-1 below).
+    """
+    ANSWER_WEIGHT = 10.0
+    toks = np.full((n_seqs, seq_len), _LOOKUP[" "], np.int32)
+    mask = np.zeros((n_seqs, seq_len - 1), np.float32)
+    for i in range(n_seqs):
+        cursor = 0
+        while cursor < seq_len - 8:
+            s = gen_sample(
+                rng,
+                int(rng.integers(n_facts[0], n_facts[1] + 1)),
+                int(rng.integers(n_queries[0], n_queries[1] + 1)),
+            )
+            ids = encode(s.text)
+            take = min(len(ids), seq_len - cursor)
+            toks[i, cursor : cursor + take] = ids[:take]
+            mask[i, cursor : cursor + take - 1] = 1.0
+            for p in s.answer_pos:
+                tp = cursor + p - 1  # target slot predicting the answer digit
+                if 0 <= tp < seq_len - 1 and p < take:
+                    mask[i, tp] = ANSWER_WEIGHT
+            cursor += take
+    return toks, mask
+
+
+def eval_batch(rng: np.random.Generator, n: int, seq_len: int, **kw):
+    """Samples padded to seq_len with per-sample answer target positions."""
+    toks = np.full((n, seq_len), _LOOKUP[" "], np.int32)
+    targets = []  # list of (row, target_pos, answer_id) — target_pos predicts it
+    for i in range(n):
+        s = gen_sample(rng, **kw) if kw else gen_sample(rng)
+        ids = encode(s.text)[:seq_len]
+        toks[i, : len(ids)] = ids
+        for p, a in zip(s.answer_pos, s.answers):
+            if p < len(ids):
+                targets.append((i, p - 1, _LOOKUP[a]))
+    return toks, targets

@@ -1,0 +1,268 @@
+"""Layer-1 Pallas attention kernels (interpret=True on CPU PJRT).
+
+Two kernels implement the serving hot spot — masked decode attention over a
+budget-bounded slot cache with attention-weight export (what makes TS/MRI
+tracking affordable every step), plus a causal prefill kernel.
+
+TPU adaptation notes (see DESIGN.md §Hardware-Adaptation):
+  * the decode kernel computes *cache-only* flash statistics (m, l) and an
+    unnormalized ctx; the current token's self-position and the final
+    normalization are merged in jnp (`merge_self`) — this keeps the kernel a
+    pure HBM→VMEM streaming reduction, the shape a TPU wants.
+  * single-block variant: one [S, dh] K/V tile per (batch, head) program —
+    fits VMEM comfortably up to S=2048 (f32: 2·S·dh·4 = 1 MiB).
+  * blocked variant (S > max_single_block): grid adds an S dimension;
+    VMEM scratch carries the online-softmax (m, l, acc) across S-blocks,
+    i.e. the flash-decoding split-K schedule expressed with BlockSpec.
+
+All kernels must be lowered with interpret=True: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+TINY = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel_single(q_ref, k_ref, v_ref, mask_ref, ctx_ref, p_ref, norm_ref):
+    """One (batch, head) program; the whole cache row in one VMEM tile.
+
+    Outputs cache-only flash stats:
+      ctx_ref:  [dh]  Σ p_j v_j / max(l, TINY)
+      p_ref:    [S]   unnormalized exp(s_j - m) · mask_j
+      norm_ref: [2]   (m, l)
+    """
+    q = q_ref[0, 0, :]  # [dh]
+    k = k_ref[0, 0]  # [S, dh]
+    v = v_ref[0, 0]  # [S, dh]
+    mask = mask_ref[0]  # [S]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [S]
+    s = jnp.where(mask > 0, s, NEG_INF)
+    m = jnp.max(s)
+    p = jnp.exp(s - m) * mask  # masked lanes contribute exactly 0
+    l = jnp.sum(p)
+    ctx = jnp.dot(p, v, preferred_element_type=jnp.float32) / jnp.maximum(l, TINY)
+    ctx_ref[0, 0, :] = ctx
+    p_ref[0, 0, :] = p
+    norm_ref[0, 0, 0] = m
+    norm_ref[0, 0, 1] = l
+
+
+def _decode_kernel_blocked(
+    q_ref, k_ref, v_ref, mask_ref, ctx_ref, p_ref, mblk_ref, norm_ref, acc_ref, ml_ref
+):
+    """Grid (B, H, nS): online-softmax accumulation across S-blocks.
+
+    Per-block outputs are *locally* shifted (exp(s - m_blk)); the jnp wrapper
+    rescales them by exp(m_blk - m_final). VMEM scratch:
+      acc_ref: [dh]   running Σ p v (rescaled on every new max)
+      ml_ref:  [2]    running (m, l)
+    """
+    sb = pl.program_id(2)
+    n_sb = pl.num_programs(2)
+
+    q = q_ref[0, 0, :]
+    k = k_ref[0, 0]  # [block_s, dh]
+    v = v_ref[0, 0]
+    mask = mask_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ml_ref[0] = NEG_INF
+        ml_ref[1] = 0.0
+
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask > 0, s, NEG_INF)
+    m_blk = jnp.max(s)
+    p_blk = jnp.exp(s - m_blk) * mask  # local shift
+    l_blk = jnp.sum(p_blk)
+
+    m_prev, l_prev = ml_ref[0], ml_ref[1]
+    m_new = jnp.maximum(m_prev, m_blk)
+    alpha = jnp.exp(m_prev - m_new)  # rescale old accumulator
+    beta = jnp.exp(m_blk - m_new)  # rescale this block
+    l_new = l_prev * alpha + l_blk * beta
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p_blk, v, preferred_element_type=jnp.float32
+    ) * beta
+    ml_ref[0] = m_new
+    ml_ref[1] = l_new
+
+    p_ref[0, 0, :] = p_blk
+    mblk_ref[0, 0, 0] = m_blk
+
+    @pl.when(sb == n_sb - 1)
+    def _fin():
+        ctx_ref[0, 0, :] = acc_ref[...] / jnp.maximum(ml_ref[1], TINY)
+        norm_ref[0, 0, 0] = ml_ref[0]
+        norm_ref[0, 0, 1] = ml_ref[1]
+
+
+def _decode_cache_single(q, k_cache, v_cache, slot_mask):
+    B, H, S, dh = k_cache.shape
+    f32 = jnp.float32
+    return pl.pallas_call(
+        _decode_kernel_single,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, S, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, S), lambda b, h: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, S), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, 2), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, dh), f32),
+            jax.ShapeDtypeStruct((B, H, S), f32),
+            jax.ShapeDtypeStruct((B, H, 2), f32),
+        ],
+        interpret=True,
+    )(q, k_cache, v_cache, slot_mask)
+
+
+def _decode_cache_blocked(q, k_cache, v_cache, slot_mask, block_s):
+    B, H, S, dh = k_cache.shape
+    assert S % block_s == 0, f"cache size {S} not a multiple of block_s {block_s}"
+    n_sb = S // block_s
+    f32 = jnp.float32
+    ctx, p, m_blk, norm = pl.pallas_call(
+        _decode_kernel_blocked,
+        grid=(B, H, n_sb),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, block_s), lambda b, h, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_s), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, 1, 2), lambda b, h, s: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, dh), f32),
+            jax.ShapeDtypeStruct((B, H, S), f32),
+            jax.ShapeDtypeStruct((B, H, n_sb), f32),
+            jax.ShapeDtypeStruct((B, H, 2), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dh,), f32),
+            pltpu.VMEM((2,), f32),
+        ],
+        interpret=True,
+    )(q, k_cache, v_cache, slot_mask)
+    # Rescale per-block local shifts to the global max.
+    m = norm[..., 0:1]  # [B,H,1]
+    scale = jnp.exp(jnp.repeat(m_blk, block_s, axis=-1) - m)
+    return ctx, p * scale, norm
+
+
+def merge_self(q, k_new, v_new, ctx_c, p_c, norm_c):
+    """Fold the current token's self-position into cache-only flash stats.
+
+    Returns (ctx, w): final attention output [B,H,dh] and normalized weights
+    over cache slots [B,H,S] (self weight is in the denominator only).
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s_self = jnp.sum(q * k_new, axis=-1) * scale  # [B,H]
+    m_c, l_c = norm_c[..., 0], norm_c[..., 1]
+    m_f = jnp.maximum(m_c, s_self)
+    a_c = jnp.exp(m_c - m_f)  # cache rescale
+    a_s = jnp.exp(s_self - m_f)  # self rescale
+    l_f = l_c * a_c + a_s
+    ctx = (
+        ctx_c * (l_c * a_c)[..., None] + a_s[..., None] * v_new
+    ) / l_f[..., None]
+    w = p_c * (a_c / l_f)[..., None]
+    return ctx, w
+
+
+def decode_attention(
+    q, k_cache, v_cache, slot_mask, k_new, v_new, *, block_s=128, max_single_block=2048
+):
+    """Pallas decode attention; drop-in for ref.decode_attention_ref."""
+    S = k_cache.shape[2]
+    if S <= max_single_block:
+        ctx_c, p_c, norm_c = _decode_cache_single(q, k_cache, v_cache, slot_mask)
+    else:
+        ctx_c, p_c, norm_c = _decode_cache_blocked(
+            q, k_cache, v_cache, slot_mask, block_s
+        )
+    return merge_self(q, k_new, v_new, ctx_c, p_c, norm_c)
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, mask_ref, ctx_ref, w_ref):
+    """One (batch, head) program: full causal attention over a P-token tile."""
+    q = q_ref[0, 0]  # [P, dh]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    mask = mask_ref[0]  # [P]
+    P = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [P,P]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (P, P), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (P, P), 1)
+    s = jnp.where(cols <= rows, s, NEG_INF)
+    s = jnp.where(mask[None, :] > 0, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p * mask[None, :]
+    # Diagonal is always valid for valid rows; for padded rows l can be 0.
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), TINY)
+    w = p / l
+    ctx_ref[0, 0] = jnp.dot(w, v, preferred_element_type=jnp.float32)
+    w_ref[0, 0] = w
+
+
+def prefill_attention(q, k, v, valid_mask):
+    """Pallas causal prefill; drop-in for ref.prefill_attention_ref.
+
+    Padded-query rows return w rows that are zero except (possibly) valid
+    columns; callers must mask by valid_mask — same contract as the oracle.
+    """
+    B, H, P, dh = q.shape
+    f32 = jnp.float32
+    return pl.pallas_call(
+        _prefill_kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, P, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, P, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, P, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, P), lambda b, h: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, P, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, P, P), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, P, dh), f32),
+            jax.ShapeDtypeStruct((B, H, P, P), f32),
+        ],
+        interpret=True,
+    )(q, k, v, valid_mask)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest/hypothesis assert the Pallas
+kernels (interpret=True) match these within tolerance. They are also used by
+train.py for the training-time forward pass (XLA fuses them well on CPU).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, slot_mask, k_new, v_new):
+    """Single-token attention over a slot cache plus the current token.
+
+    Args:
+      q:         [B, H, dh]  query for the current token (RoPE applied).
+      k_cache:   [B, H, S, dh] cached keys (RoPE applied at write time).
+      v_cache:   [B, H, S, dh] cached values.
+      slot_mask: [B, S] 1.0 for valid slots, 0.0 for empty/evicted.
+      k_new:     [B, H, dh]  current token's key (attends to itself).
+      v_new:     [B, H, dh]  current token's value.
+
+    Returns:
+      ctx:  [B, H, dh]  attention output (includes the self position).
+      w:    [B, H, S]   normalized attention weights over cache slots only
+                        (the self weight is part of the softmax denominator
+                        but not exported — trackers score *cached* tokens).
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s_cache = jnp.einsum("bhd,bhsd->bhs", q, k_cache) * scale  # [B,H,S]
+    s_cache = jnp.where(slot_mask[:, None, :] > 0, s_cache, NEG_INF)
+    s_self = jnp.einsum("bhd,bhd->bh", q, k_new)[..., None] * scale  # [B,H,1]
+    s_all = jnp.concatenate([s_cache, s_self], axis=-1)  # [B,H,S+1]
+    m = jnp.max(s_all, axis=-1, keepdims=True)
+    p = jnp.exp(s_all - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    w_all = p / denom
+    w, w_self = w_all[..., :-1], w_all[..., -1:]
+    ctx = jnp.einsum("bhs,bhsd->bhd", w, v_cache) + w_self * v_new
+    return ctx, w
+
+
+def prefill_attention_ref(q, k, v, valid_mask):
+    """Causal attention over a padded prompt.
+
+    Args:
+      q, k, v:    [B, H, P, dh] (RoPE already applied to q and k).
+      valid_mask: [B, P] 1.0 for real tokens, 0.0 for padding.
+
+    Returns:
+      ctx: [B, H, P, dh]
+      w:   [B, H, P, P]  normalized weights (rows for padded queries are
+                         garbage-but-finite; callers mask by valid_mask).
+    """
+    dh = q.shape[-1]
+    P = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((P, P), dtype=bool))
+    s = jnp.where(causal[None, None], s, NEG_INF)
+    s = jnp.where(valid_mask[:, None, None, :] > 0, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    w = p / jnp.sum(p, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", w, v)
+    return ctx, w

@@ -1,0 +1,310 @@
+"""Layer-2 JAX model: byte-level decoder transformer (RoPE, RMSNorm, SwiGLU).
+
+Parameters travel as a FLAT TUPLE in the canonical order given by
+``ModelConfig.param_specs()`` — that order is the executable argument order
+the Rust runtime replays from manifest.json, so never reorder it.
+
+Functions lowered to artifacts (see aot.py):
+  decode_step   one token for a whole batch over the slot cache
+  decode_trace  batch-1 step that also exports per-layer/head attention
+  prefill       bucketed prompt ingestion producing the initial caches
+  append/gather/insert  single-output cache maintenance ops (device-chained)
+
+The training forward (full causal, pure-jnp attention) lives here too so the
+fwd/bwd used by train.py and the served decode path share every weight and
+every layernorm — the decode path is the same function, incrementalized.
+"""
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attn as attn_kernels
+from .kernels import ref as attn_ref
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[jnp.ndarray, ...]:
+    """Initialize the flat parameter tuple (truncated-normal / ones)."""
+    params: List[jnp.ndarray] = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name == "embed":
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * 0.02
+            )
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return tuple(params)
+
+
+def params_to_bytes(params: Sequence[jnp.ndarray]) -> bytes:
+    import numpy as np
+
+    return b"".join(np.asarray(p, np.float32).tobytes() for p in params)
+
+
+def params_from_bytes(cfg: ModelConfig, raw: bytes) -> Tuple[jnp.ndarray, ...]:
+    import numpy as np
+
+    out, off = [], 0
+    for _, shape in cfg.param_specs():
+        n = int(np.prod(shape)) * 4
+        arr = np.frombuffer(raw[off : off + n], np.float32).reshape(shape)
+        out.append(jnp.asarray(arr))
+        off += n
+    if off != len(raw):
+        raise ValueError(f"weights.bin size mismatch: used {off}, have {len(raw)}")
+    return tuple(out)
+
+
+class _P:
+    """Name-indexed view over the flat tuple (compile-time sugar only)."""
+
+    def __init__(self, cfg: ModelConfig, flat: Sequence[jnp.ndarray]):
+        names = [n for n, _ in cfg.param_specs()]
+        assert len(names) == len(flat), (len(names), len(flat))
+        self._d = dict(zip(names, flat))
+
+    def __getitem__(self, k: str) -> jnp.ndarray:
+        return self._d[k]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def rope(x, pos, base: float):
+    """Rotary embedding. x: [..., H, dh] with matching pos: [...] (int32)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -jnp.log(base) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # [half]
+    angles = pos[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _split_heads(x, n_heads, d_head):
+    return x.reshape(x.shape[:-1] + (n_heads, d_head))
+
+
+# ---------------------------------------------------------------------------
+# Decode step (the serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, slot_mask, token, pos,
+                *, full_attn: bool = False, use_pallas: bool = True):
+    """One decode step for a batch.
+
+    Args:
+      params:    flat tuple (see param_specs).
+      k_cache:   [B, L, H, S, dh] keys, RoPE applied at write time.
+      v_cache:   [B, L, H, S, dh].
+      slot_mask: [B, S] float 1/0.
+      token:     [B] int32 current input token ids.
+      pos:       [B] int32 absolute positions of `token`.
+
+    Returns:
+      logits:   [B, V]
+      attn_agg: [B, S]  mean-over-layers of max-over-heads slot attention
+                (or [B, L, H, S] when full_attn=True — the trace artifact).
+      k_new:    [B, L, H, dh]  this token's keys (RoPE applied).
+      v_new:    [B, L, H, dh]
+    """
+    p = _P(cfg, params)
+    H, dh = cfg.n_heads, cfg.d_head
+    x = p["embed"][token]  # [B, d]
+    k_news, v_news, attn_maps = [], [], []
+    attention = (
+        functools.partial(
+            attn_kernels.decode_attention,
+            block_s=cfg.block_s,
+            max_single_block=cfg.max_single_block,
+        )
+        if use_pallas
+        else attn_ref.decode_attention_ref
+    )
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{l}.ln1"])
+        q = rope(_split_heads(h @ p[f"l{l}.wq"], H, dh), pos, cfg.rope_base)
+        k_new = rope(_split_heads(h @ p[f"l{l}.wk"], H, dh), pos, cfg.rope_base)
+        v_new = _split_heads(h @ p[f"l{l}.wv"], H, dh)
+        ctx, w = attention(
+            q, k_cache[:, l], v_cache[:, l], slot_mask, k_new, v_new
+        )  # ctx [B,H,dh], w [B,H,S]
+        x = x + ctx.reshape(ctx.shape[0], -1) @ p[f"l{l}.wo"]
+        x = x + swiglu(rmsnorm(x, p[f"l{l}.ln2"]), p[f"l{l}.w_gate"],
+                       p[f"l{l}.w_up"], p[f"l{l}.w_down"])
+        k_news.append(k_new)
+        v_news.append(v_new)
+        attn_maps.append(w)
+    logits = rmsnorm(x, p["ln_f"]) @ p["embed"].T  # tied head, [B, V]
+    w_all = jnp.stack(attn_maps, axis=1)  # [B, L, H, S]
+    if full_attn:
+        attn_agg = w_all
+    else:
+        attn_agg = jnp.mean(jnp.max(w_all, axis=2), axis=1)  # [B, S]
+    k_new = jnp.stack(k_news, axis=1)  # [B, L, H, dh]
+    v_new = jnp.stack(v_news, axis=1)
+    return logits, attn_agg, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, tokens, valid_mask, cache_slots: int,
+            *, use_pallas: bool = True):
+    """Ingest a padded prompt bucket.
+
+    Args:
+      tokens:     [B, P] int32 (padded with arbitrary ids past the length).
+      valid_mask: [B, P] float 1/0.
+      cache_slots: S — capacity of the target cache (S >= P).
+
+    Returns:
+      k_cache: [B, L, H, S, dh]  slots [0, P) filled, rest zero.
+      v_cache: [B, L, H, S, dh]
+      attn_last: [B, P]  last-valid-row attention, aggregated like decode
+                 (initializes the importance tracker for prompt tokens).
+      logits_last: [B, V]  logits at the last valid position.
+    """
+    p = _P(cfg, params)
+    B, P = tokens.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    S = cache_slots
+    assert S >= P
+    pos = jnp.arange(P, dtype=jnp.int32)[None, :].repeat(B, axis=0)  # [B,P]
+    attention = attn_kernels.prefill_attention if use_pallas else attn_ref.prefill_attention_ref
+    x = p["embed"][tokens]  # [B, P, d]
+    ks, vs, attn_maps = [], [], []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{l}.ln1"])
+        q = rope(_split_heads(h @ p[f"l{l}.wq"], H, dh), pos, cfg.rope_base)
+        k = rope(_split_heads(h @ p[f"l{l}.wk"], H, dh), pos, cfg.rope_base)
+        v = _split_heads(h @ p[f"l{l}.wv"], H, dh)
+        # kernels take [B, H, P, dh]
+        ctx, w = attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), valid_mask
+        )  # ctx [B,H,P,dh], w [B,H,P,P]
+        x = x + ctx.transpose(0, 2, 1, 3).reshape(B, P, -1) @ p[f"l{l}.wo"]
+        x = x + swiglu(rmsnorm(x, p[f"l{l}.ln2"]), p[f"l{l}.w_gate"],
+                       p[f"l{l}.w_up"], p[f"l{l}.w_down"])
+        ks.append(k.transpose(0, 2, 1, 3))  # [B,H,P,dh]
+        vs.append(v.transpose(0, 2, 1, 3))
+        attn_maps.append(w)
+    x = rmsnorm(x, p["ln_f"])
+    last = (jnp.sum(valid_mask, axis=1).astype(jnp.int32) - 1).clip(0)  # [B]
+    logits_last = jnp.take_along_axis(
+        x, last[:, None, None], axis=1
+    ).squeeze(1) @ p["embed"].T
+    w_all = jnp.stack(attn_maps, axis=1)  # [B, L, H, P, P]
+    w_last = jnp.take_along_axis(
+        w_all, last[:, None, None, None, None], axis=3
+    ).squeeze(3)  # [B, L, H, P]
+    attn_last = jnp.mean(jnp.max(w_last, axis=2), axis=1) * valid_mask  # [B, P]
+    k_cache = jnp.stack(ks, axis=1)  # [B, L, H, P, dh]
+    v_cache = jnp.stack(vs, axis=1)
+    pad = [(0, 0), (0, 0), (0, 0), (0, S - P), (0, 0)]
+    # Zero out padded-token K/V so stale contents never alias a real slot.
+    k_cache = jnp.pad(k_cache * valid_mask[:, None, None, :, None], pad)
+    v_cache = jnp.pad(v_cache * valid_mask[:, None, None, :, None], pad)
+    return k_cache, v_cache, attn_last, logits_last
+
+
+# ---------------------------------------------------------------------------
+# Cache maintenance ops (single-output => device-chainable buffers)
+# ---------------------------------------------------------------------------
+
+
+def cache_append(cache, new, idx):
+    """Write new [B, L, H, dh] into slot idx[b] of cache [B, L, H, S, dh]."""
+
+    def one(c, n, i):
+        return jax.lax.dynamic_update_slice(c, n[:, :, None, :], (0, 0, i, 0))
+
+    return jax.vmap(one)(cache, new, idx)
+
+
+def cache_gather(cache, idx):
+    """Permute/compact slots: out[b, :, :, j] = cache[b, :, :, idx[b, j]]."""
+
+    def one(c, ix):
+        return jnp.take(c, ix, axis=2)
+
+    return jax.vmap(one)(cache, idx)
+
+
+def cache_insert(cache, seq, b):
+    """Insert a single sequence cache [L, H, S, dh] at batch row b."""
+    return jax.lax.dynamic_update_slice(
+        cache, seq[None], (b, 0, 0, 0, 0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training forward / loss (fwd+bwd used by train.py)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(cfg: ModelConfig, params, tokens):
+    """Full causal forward over packed sequences. tokens: [B, T] → [B, T, V]."""
+    p = _P(cfg, params)
+    B, T = tokens.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    pos = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, axis=0)
+    ones = jnp.ones((B, T), jnp.float32)
+    x = p["embed"][tokens]
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{l}.ln1"])
+        q = rope(_split_heads(h @ p[f"l{l}.wq"], H, dh), pos, cfg.rope_base)
+        k = rope(_split_heads(h @ p[f"l{l}.wk"], H, dh), pos, cfg.rope_base)
+        v = _split_heads(h @ p[f"l{l}.wv"], H, dh)
+        ctx, _ = attn_ref.prefill_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), ones
+        )
+        x = x + ctx.transpose(0, 2, 1, 3).reshape(B, T, -1) @ p[f"l{l}.wo"]
+        x = x + swiglu(rmsnorm(x, p[f"l{l}.ln2"]), p[f"l{l}.w_gate"],
+                       p[f"l{l}.w_up"], p[f"l{l}.w_down"])
+    return rmsnorm(x, p["ln_f"]) @ p["embed"].T
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, loss_mask=None):
+    """Next-token cross-entropy; optional [B, T-1] mask over target slots."""
+    logits = forward_train(cfg, params, tokens)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+    if loss_mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)

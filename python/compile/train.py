@@ -1,0 +1,145 @@
+"""Build-time training of the served model on the synthetic reasoning corpus.
+
+Hand-rolled AdamW over the flat parameter tuple (no optax in this
+environment). Saves artifacts/weights.bin + artifacts/train_log.json.
+Usage: python -m compile.train [--steps N] [--out DIR] [--quick]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .configs import ModelConfig, TrainConfig
+
+
+def adamw_init(params):
+    z = lambda: tuple(jnp.zeros_like(p) for p in params)
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, wd, clip, b1=0.9, b2=0.95, eps=1e-8):
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+    t = state["t"] + 1
+    new_m, new_v, new_p = [], [], []
+    for p, g, m, v in zip(params, grads, state["m"], state["v"]):
+        g = g * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t.astype(jnp.float32))
+        vhat = v / (1 - b2 ** t.astype(jnp.float32))
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        new_m.append(m)
+        new_v.append(v)
+        new_p.append(p)
+    return tuple(new_p), {"m": tuple(new_m), "v": tuple(new_v), "t": t}, gnorm
+
+
+def lr_schedule(tc: TrainConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / tc.warmup)
+    prog = jnp.clip((step - tc.warmup) / max(1, tc.steps - tc.warmup), 0.0, 1.0)
+    return tc.lr * warm * (0.5 * (1 + jnp.cos(jnp.pi * prog)))
+
+
+def teacher_forced_accuracy(cfg, params, toks, targets, batch=16):
+    """Exact-match accuracy of answer digits under teacher forcing."""
+    hits = total = 0
+    logits_all = []
+    for i in range(0, toks.shape[0], batch):
+        logits_all.append(
+            np.asarray(model.forward_train(cfg, params, jnp.asarray(toks[i : i + batch])))
+        )
+    logits = np.concatenate(logits_all, axis=0)
+    for row, tp, ans in targets:
+        if int(np.argmax(logits[row, tp])) == ans:
+            hits += 1
+        total += 1
+    return hits / max(1, total)
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, out_dir: str, log=print):
+    rng = np.random.default_rng(tc.seed)
+    key = jax.random.PRNGKey(tc.seed)
+    params = model.init_params(cfg, key)
+    opt = adamw_init(params)
+
+    n_train_seqs = 512
+    toks, mask = corpus.pack_sequences(rng, n_train_seqs, tc.seq_len)
+    ev_toks, ev_targets = corpus.eval_batch(
+        np.random.default_rng(tc.seed + 1), tc.eval_samples, tc.seq_len
+    )
+
+    loss_fn = lambda p, t, m: model.lm_loss(cfg, p, t, m)
+
+    @jax.jit
+    def step_fn(params, opt, batch_toks, batch_mask, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch_toks, batch_mask)
+        params, opt, gnorm = adamw_update(
+            params, grads, opt, lr, tc.weight_decay, tc.clip
+        )
+        return params, opt, loss, gnorm
+
+    history = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        idx = rng.integers(0, n_train_seqs, tc.batch_size)
+        lr = lr_schedule(tc, step)
+        params, opt, loss, gnorm = step_fn(
+            params, opt, jnp.asarray(toks[idx]), jnp.asarray(mask[idx]), lr
+        )
+        if step % 10 == 0 or step == tc.steps - 1:
+            rec = {
+                "step": step,
+                "loss": float(loss),
+                "gnorm": float(gnorm),
+                "lr": float(lr),
+                "elapsed_s": round(time.time() - t0, 1),
+            }
+            if step % tc.eval_every == 0 or step == tc.steps - 1:
+                rec["answer_acc"] = round(
+                    teacher_forced_accuracy(cfg, params, ev_toks, ev_targets), 4
+                )
+            history.append(rec)
+            log(f"  {rec}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(model.params_to_bytes(params))
+    final_acc = teacher_forced_accuracy(cfg, params, ev_toks, ev_targets)
+    meta = {
+        "steps": tc.steps,
+        "final_loss": history[-1]["loss"],
+        "final_answer_acc": round(final_acc, 4),
+        "wall_s": round(time.time() - t0, 1),
+        "history": history,
+    }
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    log(f"trained: loss={meta['final_loss']:.3f} answer_acc={final_acc:.3f} "
+        f"({meta['wall_s']}s)")
+    return params, meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="30-step smoke run")
+    args = ap.parse_args()
+    tc = TrainConfig()
+    if args.quick:
+        tc = TrainConfig(steps=30, eval_every=30)
+    elif args.steps:
+        tc = TrainConfig(steps=args.steps)
+    train(ModelConfig(), tc, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Synthetic reasoning corpus invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+from compile.configs import CHARSET
+
+
+class TestEncoding:
+    def test_roundtrip(self):
+        s = "#A=3;B=7;\n>A+B=0;\n"
+        assert corpus.decode(corpus.encode(s)) == s
+
+    def test_charset_closed(self):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            s = corpus.gen_sample(rng)
+            assert set(s.text) <= set(CHARSET)
+
+
+class TestSample:
+    def test_answers_at_positions(self):
+        rng = np.random.default_rng(1)
+        for _ in range(100):
+            s = corpus.gen_sample(rng)
+            for p, a in zip(s.answer_pos, s.answers):
+                assert s.text[p] == a
+
+    def test_arithmetic_is_mod10_consistent(self):
+        rng = np.random.default_rng(2)
+        for _ in range(50):
+            s = corpus.gen_sample(rng, chain_prob=0.0, recall_prob=0.0)
+            env = {}
+            for frag in s.text.split("\n")[0][1:].split(";"):
+                if frag:
+                    v, d = frag.split("=")
+                    env[v] = int(d)
+            for frag in s.text.split("\n")[1][1:].split(";"):
+                if frag:
+                    expr, d = frag.rsplit("=", 1)
+                    a, b = expr.split("+")
+                    assert (env[a] + env[b]) % 10 == int(d)
+
+    def test_prompt_len_points_past_gt(self):
+        rng = np.random.default_rng(3)
+        s = corpus.gen_sample(rng)
+        assert s.text[s.prompt_len - 1] == ">"
+
+    def test_chained_vars_recur(self):
+        # with chain_prob=1 some derived var must be reused by later queries
+        rng = np.random.default_rng(4)
+        found = False
+        for _ in range(50):
+            s = corpus.gen_sample(rng, n_facts=2, n_queries=8, chain_prob=1.0,
+                                  recall_prob=0.0)
+            q = s.text.split("\n")[1]
+            frags = [f for f in q[1:].split(";") if f]
+            seen_defs = set()
+            for f in frags:
+                parts = f.split("=")
+                expr = parts[-2] if len(parts) == 3 else parts[0]
+                a, b = expr.split("+")
+                if a in seen_defs or b in seen_defs:
+                    found = True
+                if len(parts) == 3:
+                    seen_defs.add(parts[0])
+            if found:
+                break
+        assert found
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10**6), nf=st.integers(2, 8), nq=st.integers(1, 12))
+    def test_hypothesis_structure(self, seed, nf, nq):
+        rng = np.random.default_rng(seed)
+        s = corpus.gen_sample(rng, nf, nq)
+        assert s.text.startswith("#") and s.text.endswith("\n")
+        assert s.text.count(">") == 1
+        assert len(s.answers) == nq
+
+
+class TestPacking:
+    def test_shapes(self):
+        rng = np.random.default_rng(0)
+        toks, mask = corpus.pack_sequences(rng, 4, 128)
+        assert toks.shape == (4, 128) and mask.shape == (4, 127)
+        assert toks.dtype == np.int32
+
+    def test_mask_has_answer_weights(self):
+        rng = np.random.default_rng(1)
+        _, mask = corpus.pack_sequences(rng, 4, 256)
+        assert (mask == 10.0).sum() > 0
+        assert set(np.unique(mask)) <= {0.0, 1.0, 10.0}
+
+    def test_tokens_in_vocab(self):
+        rng = np.random.default_rng(2)
+        toks, _ = corpus.pack_sequences(rng, 2, 128)
+        assert toks.min() >= 0 and toks.max() < len(CHARSET)
+
+    def test_eval_batch_targets_valid(self):
+        rng = np.random.default_rng(3)
+        toks, targets = corpus.eval_batch(rng, 8, 128)
+        assert len(targets) > 0
+        for row, tp, ans in targets:
+            assert 0 <= row < 8 and 0 <= tp < 127
+            # target slot predicts the answer at tp+1
+            assert toks[row, tp + 1] == ans

@@ -1,0 +1,197 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes / mask densities / magnitudes; deterministic tests
+pin the edge cases (empty cache, single slot, non-multiple blocking).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attn, ref
+
+ATOL = 2e-5
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def make_decode_inputs(seed, B, H, S, dh, density=0.7, scale=1.0):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, B, H, dh, scale=scale)
+    k = _rand(rng, B, H, S, dh, scale=scale)
+    v = _rand(rng, B, H, S, dh)
+    mask = jnp.asarray((rng.random((B, S)) < density).astype(np.float32))
+    kn = _rand(rng, B, H, dh, scale=scale)
+    vn = _rand(rng, B, H, dh)
+    return q, k, v, mask, kn, vn
+
+
+def assert_decode_matches(args, **kw):
+    cr, wr = ref.decode_attention_ref(*args)
+    ck, wk = attn.decode_attention(*args, **kw)
+    np.testing.assert_allclose(np.asarray(cr), np.asarray(ck), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(wr), np.asarray(wk), atol=ATOL)
+
+
+class TestDecodeSingleBlock:
+    def test_basic(self):
+        assert_decode_matches(make_decode_inputs(0, 2, 2, 128, 64))
+
+    def test_batch1_head1(self):
+        assert_decode_matches(make_decode_inputs(1, 1, 1, 32, 16))
+
+    def test_full_mask(self):
+        assert_decode_matches(make_decode_inputs(2, 2, 4, 64, 32, density=1.0))
+
+    def test_sparse_mask(self):
+        assert_decode_matches(make_decode_inputs(3, 2, 2, 64, 32, density=0.05))
+
+    def test_single_valid_slot(self):
+        q, k, v, _, kn, vn = make_decode_inputs(4, 1, 2, 16, 8)
+        mask = np.zeros((1, 16), np.float32)
+        mask[0, 7] = 1.0
+        assert_decode_matches((q, k, v, jnp.asarray(mask), kn, vn))
+
+    def test_empty_cache_returns_self(self):
+        q, k, v, _, kn, vn = make_decode_inputs(5, 2, 2, 16, 8)
+        mask = jnp.zeros((2, 16), jnp.float32)
+        ctx, w = attn.decode_attention(q, k, v, mask, kn, vn)
+        np.testing.assert_allclose(np.asarray(ctx), np.asarray(vn), atol=ATOL)
+        assert float(jnp.abs(w).max()) == 0.0
+
+    def test_large_scores_stable(self):
+        # online-softmax must not overflow for large logits
+        assert_decode_matches(make_decode_inputs(6, 1, 1, 64, 32, scale=12.0))
+
+    def test_weights_sum_below_one(self):
+        # cache weights + (hidden) self weight = 1, so sum(w) <= 1
+        args = make_decode_inputs(7, 2, 2, 64, 32)
+        _, w = attn.decode_attention(*args)
+        s = np.asarray(jnp.sum(w, axis=-1))
+        assert (s <= 1.0 + 1e-5).all() and (s >= 0).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        B=st.integers(1, 3),
+        H=st.integers(1, 4),
+        S=st.sampled_from([16, 64, 96, 256]),
+        dh=st.sampled_from([8, 32, 64]),
+        density=st.floats(0.05, 1.0),
+    )
+    def test_hypothesis_sweep(self, seed, B, H, S, dh, density):
+        assert_decode_matches(make_decode_inputs(seed, B, H, S, dh, density))
+
+
+class TestDecodeBlocked:
+    def test_basic(self):
+        assert_decode_matches(
+            make_decode_inputs(0, 2, 2, 256, 64),
+            max_single_block=128, block_s=64,
+        )
+
+    def test_one_block_degenerate(self):
+        # blocked path with a single S-block must equal single-block path
+        assert_decode_matches(
+            make_decode_inputs(1, 1, 2, 64, 32),
+            max_single_block=32, block_s=64,
+        )
+
+    def test_max_in_last_block(self):
+        q, k, v, mask, kn, vn = make_decode_inputs(2, 1, 1, 128, 32)
+        k = k.at[0, 0, 120].set(q[0, 0] * 4.0)  # spike at the tail block
+        assert_decode_matches((q, k, v, mask, kn, vn),
+                              max_single_block=64, block_s=32)
+
+    def test_block_of_all_masked(self):
+        q, k, v, _, kn, vn = make_decode_inputs(3, 1, 2, 128, 32)
+        mask = np.ones((1, 128), np.float32)
+        mask[0, 32:64] = 0.0  # an entire interior block masked out
+        assert_decode_matches((q, k, v, jnp.asarray(mask), kn, vn),
+                              max_single_block=64, block_s=32)
+
+    def test_large_scores_stable(self):
+        assert_decode_matches(
+            make_decode_inputs(4, 1, 1, 128, 32, scale=10.0),
+            max_single_block=64, block_s=32,
+        )
+
+    def test_non_multiple_raises(self):
+        args = make_decode_inputs(5, 1, 1, 96, 16)
+        with pytest.raises(AssertionError):
+            attn.decode_attention(*args, max_single_block=64, block_s=64)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        S=st.sampled_from([128, 256]),
+        block=st.sampled_from([32, 64, 128]),
+        density=st.floats(0.05, 1.0),
+    )
+    def test_hypothesis_sweep(self, seed, S, block, density):
+        assert_decode_matches(
+            make_decode_inputs(seed, 2, 2, S, 32, density),
+            max_single_block=64, block_s=block,
+        )
+
+
+class TestPrefill:
+    def _inputs(self, seed, B, H, P, dh, lens):
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, B, H, P, dh)
+        k = _rand(rng, B, H, P, dh)
+        v = _rand(rng, B, H, P, dh)
+        vm = np.zeros((B, P), np.float32)
+        for b, ln in enumerate(lens):
+            vm[b, :ln] = 1.0
+        return q, k, v, jnp.asarray(vm)
+
+    def _check(self, args):
+        q, k, v, vm = args
+        cr, wr = ref.prefill_attention_ref(q, k, v, vm)
+        ck, wk = attn.prefill_attention(q, k, v, vm)
+        sel = np.asarray(vm)[:, None, :, None]
+        np.testing.assert_allclose(
+            np.asarray(cr) * sel, np.asarray(ck) * sel, atol=ATOL)
+        np.testing.assert_allclose(
+            np.asarray(wr) * sel, np.asarray(wk) * sel, atol=ATOL)
+
+    def test_full_lengths(self):
+        self._check(self._inputs(0, 2, 2, 64, 32, [64, 64]))
+
+    def test_ragged_lengths(self):
+        self._check(self._inputs(1, 3, 2, 64, 32, [1, 13, 64]))
+
+    def test_causality(self):
+        # perturbing token j must not change rows < j
+        q, k, v, vm = self._inputs(2, 1, 1, 32, 16, [32])
+        c1, _ = attn.prefill_attention(q, k, v, vm)
+        k2 = k.at[0, 0, 20].add(3.0)
+        v2 = v.at[0, 0, 20].add(3.0)
+        c2, _ = attn.prefill_attention(q, k2, v2, vm)
+        np.testing.assert_allclose(
+            np.asarray(c1[0, 0, :20]), np.asarray(c2[0, 0, :20]), atol=ATOL)
+        assert float(jnp.abs(c1[0, 0, 20:] - c2[0, 0, 20:]).max()) > 1e-3
+
+    def test_rows_sum_to_one(self):
+        q, k, v, vm = self._inputs(3, 2, 2, 32, 16, [17, 32])
+        _, w = attn.prefill_attention(q, k, v, vm)
+        s = np.asarray(jnp.sum(w, axis=-1))
+        valid = np.broadcast_to(np.asarray(vm)[:, None, :], s.shape)
+        np.testing.assert_allclose(s * valid, valid, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        B=st.integers(1, 3),
+        P=st.sampled_from([16, 64]),
+        dh=st.sampled_from([8, 32]),
+    )
+    def test_hypothesis_sweep(self, seed, B, P, dh):
+        rng = np.random.default_rng(seed)
+        lens = [int(rng.integers(1, P + 1)) for _ in range(B)]
+        self._check(self._inputs(seed, B, 2, P, dh, lens))

@@ -1,0 +1,183 @@
+"""L2 model tests: decode/prefill/training-path consistency and cache ops."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import corpus, model
+from compile.configs import ModelConfig
+
+TINY = ModelConfig(d_model=32, n_layers=2, n_heads=2, d_head=8, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def _tokens(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, TINY.vocab, size=n).astype(np.int32)
+
+
+class TestParams:
+    def test_spec_count_matches(self, params):
+        assert len(params) == len(TINY.param_specs())
+
+    def test_shapes(self, params):
+        for p, (_, shape) in zip(params, TINY.param_specs()):
+            assert p.shape == shape
+
+    def test_bytes_roundtrip(self, params):
+        raw = model.params_to_bytes(params)
+        back = model.params_from_bytes(TINY, raw)
+        for a, b in zip(params, back):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bytes_size_mismatch_raises(self, params):
+        raw = model.params_to_bytes(params)
+        with pytest.raises(ValueError):
+            model.params_from_bytes(TINY, raw + b"\x00" * 4)
+
+
+class TestRope:
+    def test_norm_preserved(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 2, 8)), jnp.float32)
+        pos = jnp.asarray([3, 11], jnp.int32)
+        y = model.rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), atol=1e-5)
+
+    def test_relative_property(self):
+        # <rope(q,i), rope(k,j)> depends only on i-j
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.normal(size=(1, 1, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 1, 8)), jnp.float32)
+        def dot(i, j):
+            qi = model.rope(q, jnp.asarray([i], jnp.int32), 10000.0)
+            kj = model.rope(k, jnp.asarray([j], jnp.int32), 10000.0)
+            return float(jnp.sum(qi * kj))
+        assert abs(dot(5, 2) - dot(103, 100)) < 1e-3
+
+    def test_pos_zero_identity(self):
+        x = jnp.asarray(np.random.default_rng(2).normal(size=(1, 2, 8)), jnp.float32)
+        y = model.rope(x, jnp.asarray([0], jnp.int32), 10000.0)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+class TestDecodeConsistency:
+    """Prefill + incremental decode must reproduce teacher-forced logits."""
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_decode_matches_forward(self, params, use_pallas):
+        T, S, P = 24, 32, 16
+        toks = _tokens(0, T)[None, :]
+        ref_logits = model.forward_train(TINY, params, jnp.asarray(toks))
+        n_pre = 12
+        vm = np.zeros((1, P), np.float32); vm[0, :n_pre] = 1
+        pt = np.zeros((1, P), np.int32); pt[0, :n_pre] = toks[0, :n_pre]
+        kc, vc, attn_last, ll = model.prefill(
+            TINY, params, jnp.asarray(pt), jnp.asarray(vm), S, use_pallas=use_pallas)
+        np.testing.assert_allclose(
+            np.asarray(ll[0]), np.asarray(ref_logits[0, n_pre - 1]), atol=2e-4)
+        mask = np.zeros((1, S), np.float32); mask[0, :n_pre] = 1
+        for i in range(n_pre, T):
+            lg, ag, kn, vn = model.decode_step(
+                TINY, params, kc, vc, jnp.asarray(mask),
+                jnp.asarray(toks[:, i]), jnp.asarray([i], np.int32),
+                use_pallas=use_pallas)
+            np.testing.assert_allclose(
+                np.asarray(lg[0]), np.asarray(ref_logits[0, i]), atol=2e-4)
+            kc = model.cache_append(kc, kn, jnp.asarray([i], np.int32))
+            vc = model.cache_append(vc, vn, jnp.asarray([i], np.int32))
+            mask[0, i] = 1
+
+    def test_attention_agg_shape_and_range(self, params):
+        S, B = 16, 2
+        kc = jnp.zeros((B, TINY.n_layers, TINY.n_heads, S, TINY.d_head))
+        vc = jnp.zeros_like(kc)
+        mask = jnp.ones((B, S))
+        lg, ag, kn, vn = model.decode_step(
+            TINY, params, kc, vc, mask,
+            jnp.asarray([1, 2], jnp.int32), jnp.asarray([5, 5], jnp.int32),
+            use_pallas=False)
+        assert ag.shape == (B, S)
+        a = np.asarray(ag)
+        assert (a >= 0).all() and (a <= 1.0 + 1e-5).all()
+
+    def test_trace_variant_full_attention(self, params):
+        S = 16
+        kc = jnp.zeros((1, TINY.n_layers, TINY.n_heads, S, TINY.d_head))
+        vc = jnp.zeros_like(kc)
+        mask = jnp.ones((1, S))
+        _, w, _, _ = model.decode_step(
+            TINY, params, kc, vc, mask, jnp.asarray([1], jnp.int32),
+            jnp.asarray([3], jnp.int32), full_attn=True, use_pallas=False)
+        assert w.shape == (1, TINY.n_layers, TINY.n_heads, S)
+
+
+class TestCacheOps:
+    def _cache(self, B=2, S=8):
+        L, H, dh = TINY.n_layers, TINY.n_heads, TINY.d_head
+        rng = np.random.default_rng(0)
+        return jnp.asarray(rng.normal(size=(B, L, H, S, dh)), jnp.float32)
+
+    def test_append_writes_slot(self):
+        c = self._cache()
+        B, L, H, S, dh = c.shape
+        new = jnp.ones((B, L, H, dh))
+        idx = jnp.asarray([3, 5], jnp.int32)
+        out = model.cache_append(c, new, idx)
+        np.testing.assert_allclose(np.asarray(out[0, :, :, 3]), 1.0)
+        np.testing.assert_allclose(np.asarray(out[1, :, :, 5]), 1.0)
+        # other slots untouched
+        np.testing.assert_array_equal(
+            np.asarray(out[0, :, :, :3]), np.asarray(c[0, :, :, :3]))
+
+    def test_gather_permutes(self):
+        c = self._cache()
+        B, L, H, S, dh = c.shape
+        perm = np.stack([np.roll(np.arange(S), 1), np.arange(S)])
+        out = model.cache_gather(c, jnp.asarray(perm, jnp.int32))
+        np.testing.assert_array_equal(
+            np.asarray(out[0, :, :, 1]), np.asarray(c[0, :, :, 0]))
+        np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(c[1]))
+
+    def test_gather_compaction_duplicates_allowed(self):
+        c = self._cache(B=1)
+        S = c.shape[3]
+        idx = np.zeros((1, S), np.int32)  # everything = slot 0
+        out = model.cache_gather(c, jnp.asarray(idx))
+        for j in range(S):
+            np.testing.assert_array_equal(
+                np.asarray(out[0, :, :, j]), np.asarray(c[0, :, :, 0]))
+
+    def test_insert_replaces_row(self):
+        c = self._cache()
+        _, L, H, S, dh = c.shape
+        seq = jnp.full((L, H, S, dh), 7.0)
+        out = model.cache_insert(c, seq, jnp.asarray(1, jnp.int32))
+        np.testing.assert_allclose(np.asarray(out[1]), 7.0)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(c[0]))
+
+
+class TestLoss:
+    def test_loss_decreases_with_fit(self, params):
+        toks = jnp.asarray(_tokens(3, 16)[None, :])
+        l0 = model.lm_loss(TINY, params, toks)
+        assert np.isfinite(float(l0)) and float(l0) > 0
+
+    def test_mask_weighting(self, params):
+        toks = jnp.asarray(_tokens(4, 16)[None, :])
+        m_uniform = jnp.ones((1, 15))
+        l_u = model.lm_loss(TINY, params, toks, m_uniform)
+        l_none = model.lm_loss(TINY, params, toks)
+        np.testing.assert_allclose(float(l_u), float(l_none), rtol=1e-6)
+
+    def test_grad_finite(self, params):
+        toks = jnp.asarray(_tokens(5, 16)[None, :])
+        g = jax.grad(lambda p: model.lm_loss(TINY, p, toks))(params)
+        for gi in g:
+            assert np.isfinite(np.asarray(gi)).all()

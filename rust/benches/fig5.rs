@@ -1,0 +1,40 @@
+//! Fig. 5: accuracy–budget trade-off curves, r ∈ {0.1..0.9}, four panels
+//! (DS-Llama-8B / DS-Qwen-7B × GSM8K / MATH-500). The reproduction target:
+//! all methods converge near FullKV at large r; under tight budgets the
+//! greedy baselines collapse while LazyEviction degrades gracefully.
+
+use lazyeviction::bench_harness::simgrid::{run_cell, samples_per_cell, CellSpec};
+use lazyeviction::bench_harness::{save_results, table::acc, table::Table};
+use lazyeviction::util::json::Json;
+
+const RS: [f64; 5] = [0.1, 0.3, 0.5, 0.7, 0.9];
+
+fn main() {
+    let mut out = Json::obj();
+    for model in ["ds-llama-8b", "ds-qwen-7b"] {
+        for dataset in ["gsm8k", "math500"] {
+            println!("\nFig. 5 — {model} × {dataset}");
+            let mut header = vec!["Method".to_string()];
+            header.extend(RS.iter().map(|r| format!("r={r:.1}")));
+            let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+            let mut t = Table::new(&hrefs);
+            let mut panel = Json::obj();
+            for policy in ["full", "tova", "h2o", "raas", "rkv", "lazy"] {
+                let mut row = vec![policy.to_string()];
+                let mut curve: Vec<Json> = Vec::new();
+                for r in RS {
+                    let mut spec = CellSpec::new(policy, model, dataset, r);
+                    spec.n_samples = samples_per_cell().min(16);
+                    let a = run_cell(&spec).accuracy;
+                    row.push(acc(a));
+                    curve.push(Json::obj().set("r", r).set("acc", a));
+                }
+                t.row(row);
+                panel = panel.set(policy, Json::Arr(curve));
+            }
+            t.print();
+            out = out.set(&format!("{model}/{dataset}"), panel);
+        }
+    }
+    let _ = save_results("fig5", out);
+}

@@ -1,0 +1,50 @@
+//! Table 1: accuracy on mathematical reasoning (GSM8K r=50%, MATH-500
+//! r=50%, AIME r=30%) for 6 methods × 4 model profiles. Simulator tier
+//! (DESIGN.md §5.3); the paper's FullKV rows seed the model ceilings.
+
+use lazyeviction::bench_harness::simgrid::{run_cell, samples_per_cell, CellSpec};
+use lazyeviction::bench_harness::{save_results, table::acc, table::Table};
+use lazyeviction::eviction::PAPER_POLICIES;
+use lazyeviction::trace::workload::MODELS;
+use lazyeviction::util::json::Json;
+
+fn main() {
+    let blocks = [("gsm8k", 0.5), ("math500", 0.5), ("aime", 0.3)];
+    let mut out = Json::obj();
+    for (dataset, r) in blocks {
+        println!(
+            "\nTable 1 — {dataset} (compression ratio r = {:.0}%)",
+            r * 100.0
+        );
+        let mut t = Table::new(&["Method", "DS-Llama", "DS-Qwen", "Qwen3", "QwQ"]);
+        let mut block = Json::obj();
+        for policy in PAPER_POLICIES {
+            let mut row = vec![display_name(policy)];
+            let mut jrow = Json::obj();
+            for model in MODELS {
+                let mut spec = CellSpec::new(policy, model, dataset, r);
+                spec.n_samples = samples_per_cell();
+                let cell = run_cell(&spec);
+                row.push(acc(cell.accuracy));
+                jrow = jrow.set(model, cell.accuracy);
+            }
+            t.row(row);
+            block = block.set(policy, jrow);
+        }
+        t.print();
+        out = out.set(dataset, block);
+    }
+    let _ = save_results("table1", out);
+}
+
+fn display_name(p: &str) -> String {
+    match p {
+        "full" => "FullKV".into(),
+        "raas" => "RaaS".into(),
+        "h2o" => "H2O".into(),
+        "tova" => "TOVA".into(),
+        "rkv" => "R-KV".into(),
+        "lazy" => "Ours (LazyEviction)".into(),
+        other => other.into(),
+    }
+}

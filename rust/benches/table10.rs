@@ -1,0 +1,41 @@
+//! Table 10 (App. F.2): importance-threshold α sweep on GSM8K, r=50%.
+//! Too-small α ⇒ everything "important" every step (MRI collapses to ~1);
+//! too-large α ⇒ spikes missed. The per-model optimum sits in between.
+
+use lazyeviction::bench_harness::simgrid::{run_cell, samples_per_cell, CellSpec};
+use lazyeviction::bench_harness::{save_results, table::acc, table::Table};
+use lazyeviction::util::json::Json;
+
+fn main() {
+    let sweeps: [(&str, &[f32]); 2] = [
+        ("ds-llama-8b", &[1e-4, 5e-4, 1e-3, 5e-2]),
+        ("ds-qwen-7b", &[1e-5, 1e-4, 1e-3, 5e-2]),
+    ];
+    let mut out = Json::obj();
+    for (model, alphas) in sweeps {
+        println!("\nTable 10 — α sweep ({model}, GSM8K, r=50%)");
+        let mut header = vec!["".to_string(), "FullKV".to_string()];
+        header.extend(alphas.iter().map(|a| format!("α={a:.0e}")));
+        let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hrefs);
+
+        let mut full_spec = CellSpec::new("full", model, "gsm8k", 0.5);
+        full_spec.n_samples = samples_per_cell();
+        let full = run_cell(&full_spec).accuracy;
+
+        let mut row = vec!["Acc.".to_string(), acc(full)];
+        let mut block = Json::obj().set("full", full);
+        for &a in alphas {
+            let mut spec = CellSpec::new("lazy", model, "gsm8k", 0.5);
+            spec.alpha = Some(a);
+            spec.n_samples = samples_per_cell();
+            let v = run_cell(&spec).accuracy;
+            row.push(acc(v));
+            block = block.set(&format!("{a:e}"), v);
+        }
+        t.row(row);
+        t.print();
+        out = out.set(model, block);
+    }
+    let _ = save_results("table10", out);
+}

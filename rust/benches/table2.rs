@@ -1,0 +1,36 @@
+//! Table 2: GPQA-Diamond (r=50%) and LiveCodeBench (r=40%) — the
+//! low-token-similarity domains where R-KV's redundancy assumption breaks
+//! (its accuracy must collapse relative to the math tables) while
+//! LazyEviction stays near FullKV.
+
+use lazyeviction::bench_harness::simgrid::{run_cell, samples_per_cell, CellSpec};
+use lazyeviction::bench_harness::{save_results, table::acc, table::Table};
+use lazyeviction::eviction::PAPER_POLICIES;
+use lazyeviction::util::json::Json;
+
+fn main() {
+    let blocks = [("gpqa", 0.5), ("lcb", 0.4)];
+    let models = ["ds-llama-8b", "ds-qwen-7b"];
+    let mut out = Json::obj();
+    for (dataset, r) in blocks {
+        println!("\nTable 2 — {dataset} (r = {:.0}%)", r * 100.0);
+        let mut t = Table::new(&["Method", "DS-Llama-8B", "DS-Qwen-7B"]);
+        let mut block = Json::obj();
+        for policy in PAPER_POLICIES {
+            let mut row = vec![policy.to_string()];
+            let mut jrow = Json::obj();
+            for model in models {
+                let mut spec = CellSpec::new(policy, model, dataset, r);
+                spec.n_samples = samples_per_cell();
+                let cell = run_cell(&spec);
+                row.push(acc(cell.accuracy));
+                jrow = jrow.set(model, cell.accuracy);
+            }
+            t.row(row);
+            block = block.set(policy, jrow);
+        }
+        t.print();
+        out = out.set(dataset, block);
+    }
+    let _ = save_results("table2", out);
+}

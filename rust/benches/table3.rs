@@ -1,0 +1,39 @@
+//! Table 3: the observation-window ablation — give H2O/TOVA/RaaS the same
+//! lagged mechanics (evict every W, pin recent W) and show they improve but
+//! still trail LazyEviction (the MRI score is the remaining gap).
+//! GSM8K, DS-Llama-8B, r=50%, W=25 (paper's setting).
+
+use lazyeviction::bench_harness::simgrid::{run_cell, samples_per_cell, CellSpec};
+use lazyeviction::bench_harness::{save_results, table::acc, table::Table};
+use lazyeviction::util::json::Json;
+
+fn main() {
+    println!("\nTable 3 — +window ablation (GSM8K, DS-Llama-8B, r=50%, W=25)");
+    let mut t = Table::new(&["Policy", "Accuracy", "Δ vs base"]);
+    let mut out = Json::obj();
+    let run = |policy: &str| {
+        let mut spec = CellSpec::new(policy, "ds-llama-8b", "gsm8k", 0.5);
+        spec.window = Some(25);
+        spec.n_samples = samples_per_cell();
+        run_cell(&spec).accuracy
+    };
+    let lazy = run("lazy");
+    t.row(vec!["LazyEviction".into(), acc(lazy), "-".into()]);
+    out = out.set("lazy", lazy);
+    for base in ["h2o", "tova", "raas"] {
+        let plain = run(base);
+        let windowed = run(&format!("{base}+window"));
+        t.row(vec![base.to_string(), acc(plain), "-".into()]);
+        t.row(vec![
+            format!("{base} + window"),
+            acc(windowed),
+            format!("{:+.2}", windowed - plain),
+        ]);
+        out = out
+            .set(base, plain)
+            .set(&format!("{base}+window"), windowed);
+    }
+    t.print();
+    println!("(windowed baselines must improve yet stay below LazyEviction)");
+    let _ = save_results("table3", out);
+}

@@ -1,0 +1,49 @@
+//! Table 5 (App. D): score-function forms — swap sigmoid for exp/tanh/log/
+//! inverse in H1 and H2; all forms should land within a fraction of a point
+//! (the paper's point: the *shape* matters, not the exact squashing).
+//! Extension: compares the H2 formula as-printed (increasing in MRI) vs the
+//! monotone-decreasing reading we default to (DESIGN.md §5 note).
+
+use lazyeviction::bench_harness::simgrid::{run_cell, samples_per_cell, CellSpec};
+use lazyeviction::bench_harness::{save_results, table::acc, table::Table};
+use lazyeviction::eviction::{H2Mode, ScoreConfig, ScoreForm};
+use lazyeviction::util::json::Json;
+
+const FORMS: [ScoreForm; 5] = [
+    ScoreForm::Sigmoid,
+    ScoreForm::Exp,
+    ScoreForm::Tanh,
+    ScoreForm::Log,
+    ScoreForm::Inverse,
+];
+
+fn main() {
+    let mut out = Json::obj();
+    for dataset in ["gsm8k", "math500"] {
+        println!("\nTable 5 — score-form sweep ({dataset}, DS-Qwen-7B, r=50%)");
+        let mut t = Table::new(&["Form", "H1 swapped", "H2 swapped"]);
+        let mut block = Json::obj();
+        let run = |sc: ScoreConfig| {
+            let mut spec = CellSpec::new("lazy", "ds-qwen-7b", dataset, 0.5);
+            spec.score = Some(sc);
+            spec.n_samples = samples_per_cell();
+            run_cell(&spec).accuracy
+        };
+        for form in FORMS {
+            let h1 = run(ScoreConfig { h1_form: form, ..Default::default() });
+            let h2 = run(ScoreConfig { h2_form: form, ..Default::default() });
+            t.row(vec![form.name().into(), acc(h1), acc(h2)]);
+            block = block.set(
+                form.name(),
+                Json::obj().set("h1", h1).set("h2", h2),
+            );
+        }
+        // H2-as-printed extension
+        let lit = run(ScoreConfig { h2_mode: H2Mode::Literal, ..Default::default() });
+        t.row(vec!["h2-as-printed".into(), "-".into(), acc(lit)]);
+        block = block.set("h2_literal", lit);
+        t.print();
+        out = out.set(dataset, block);
+    }
+    let _ = save_results("table5", out);
+}

@@ -1,0 +1,61 @@
+//! Table 6 (App. E.1): per-window computational complexity. We *measure*
+//! the score/ranking op counters the policies report during replay and the
+//! simulator wall time, and check them against the paper's bounds:
+//!   H2O/RaaS  O(W(B + BlogB))   TOVA  O(W·BlogB)
+//!   LazyEviction  O(WB + BlogB)  — one ranking per window, not W.
+
+use lazyeviction::bench_harness::simgrid::samples_per_cell;
+use lazyeviction::bench_harness::{save_results, table::Table};
+use lazyeviction::eviction::{self, PolicyParams};
+use lazyeviction::sim::{replay, ReplayConfig};
+use lazyeviction::trace::generator::generate;
+use lazyeviction::trace::workload::{dataset_profile, model_profile};
+use lazyeviction::util::json::Json;
+
+fn main() {
+    println!("\nTable 6 — measured eviction-side work per generated window (W=25, B=budget)");
+    let wp = dataset_profile("math500");
+    let mp = model_profile("ds-qwen-7b");
+    let params = PolicyParams { window: 25, recent: 25, ..Default::default() };
+    let n = samples_per_cell().min(12);
+    let mut t = Table::new(&[
+        "Policy",
+        "score ops/window",
+        "rank ops/window",
+        "decisions",
+        "sim wall ms/sample",
+    ]);
+    let mut out = Json::obj();
+    for spec in ["h2o", "tova", "raas", "rkv", "lazy"] {
+        let policy = eviction::build(spec, &params).unwrap();
+        let (mut s_ops, mut r_ops, mut dec, mut wall, mut windows) = (0u64, 0u64, 0usize, 0.0, 0f64);
+        for i in 0..n {
+            let tr = generate(&wp, &mp, 40_000 + i as u64);
+            let budget = (tr.total_len as f64 * 0.5) as usize;
+            let cfg = ReplayConfig::new(budget, params.window + 8, mp.alpha);
+            let r = replay(&tr, policy.as_ref(), cfg);
+            s_ops += r.score_ops;
+            r_ops += r.rank_ops;
+            dec += r.eviction_decisions;
+            wall += r.wall_s;
+            windows += tr.steps.len() as f64 / params.window as f64;
+        }
+        t.row(vec![
+            spec.to_string(),
+            format!("{:.0}", s_ops as f64 / windows),
+            format!("{:.0}", r_ops as f64 / windows),
+            format!("{:.1}", dec as f64 / n as f64),
+            format!("{:.2}", wall * 1e3 / n as f64),
+        ]);
+        out = out.set(
+            spec,
+            Json::obj()
+                .set("score_ops_per_window", s_ops as f64 / windows)
+                .set("rank_ops_per_window", r_ops as f64 / windows)
+                .set("wall_ms_per_sample", wall * 1e3 / n as f64),
+        );
+    }
+    t.print();
+    println!("(lazy's rank ops/window must be ~1/W of the greedy baselines')");
+    let _ = save_results("table6", out);
+}

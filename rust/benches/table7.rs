@@ -1,0 +1,73 @@
+//! Table 7 (App. E.2): single-step decode latency vs position — REAL ENGINE.
+//! FullKV's per-step latency grows with generated length; LazyEviction's
+//! flattens once the budget caps the live KV. Paper scale 16k/8192 budget is
+//! divided by 8 for this testbed: generate 2048 tokens, budget 1024,
+//! measuring mean step latency around positions {256, 512, 1024, 1536, 2048}.
+
+use lazyeviction::bench_harness::{artifacts_available, artifacts_dir, save_results, table::Table};
+use lazyeviction::coordinator::{Engine, EngineConfig, Request};
+use lazyeviction::runtime::{Client, Manifest};
+use lazyeviction::util::json::Json;
+
+const CHECKPOINTS: [usize; 5] = [256, 512, 1024, 1536, 2048];
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        eprintln!("table7: artifacts missing — run `make artifacts` (engine bench skipped)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(artifacts_dir())?;
+    let client = Client::cpu()?;
+    let gen_len = std::env::var("LAZYEVICTION_T7_LEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000usize); // leave prompt headroom below the 2048 cache
+
+    println!("\nTable 7 — single-step decode latency (ms) vs position, gen={gen_len}, budget=1024");
+    let mut t = Table::new(&["Method", "256", "512", "1024", "1536", "2048"]);
+    let mut out = Json::obj();
+    for (name, policy, budget) in [
+        ("FullKV", "full", 2048usize),
+        ("LazyEviction", "lazy", 1024),
+    ] {
+        let mut cfg = EngineConfig {
+            batch: 1,
+            cache: 2048,
+            budget,
+            policy: policy.into(),
+            record_live: false,
+            ..Default::default()
+        };
+        cfg.params.window = 25;
+        cfg.params.recent = 25;
+        let mut engine = Engine::new(&client, &manifest, cfg)?;
+        engine.run_all(vec![Request {
+            id: 0,
+            prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
+            template: String::new(),
+            max_new: gen_len,
+        }])?;
+        let lat = &engine.metrics.step_latencies;
+        let mut row = vec![name.to_string()];
+        let mut jrow = Json::obj();
+        for cp in CHECKPOINTS {
+            let cp = cp.min(lat.len());
+            let lo = cp.saturating_sub(64);
+            let window = &lat[lo..cp];
+            let ms = window.iter().sum::<f64>() * 1e3 / window.len().max(1) as f64;
+            row.push(format!("{ms:.2}"));
+            jrow = jrow.set(&format!("{cp}"), ms);
+        }
+        t.row(row);
+        out = out.set(name, jrow);
+        eprintln!(
+            "  {name}: evictions in {} decisions, throughput {:.1} tok/s",
+            engine.metrics.eviction_count,
+            engine.metrics.throughput()
+        );
+    }
+    t.print();
+    println!("(FullKV must grow with position; LazyEviction must flatten at the budget)");
+    let _ = save_results("table7", out);
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Table 8 (App. E.2): average decode latency + throughput — REAL ENGINE.
+//! FullKV vs TOVA vs LazyEviction at generation lengths {512, 1024, 2048}
+//! (paper's 4k/8k/16k over the ÷8 testbed scale), budget = len/2 (r=50%).
+//! The ordering to reproduce: LazyEviction's overhead < TOVA's (lagged vs
+//! per-step eviction), and LazyEviction ≥ FullKV at the longest length.
+
+use lazyeviction::bench_harness::{artifacts_available, artifacts_dir, save_results, table::Table};
+use lazyeviction::coordinator::{Engine, EngineConfig, Request};
+use lazyeviction::runtime::{Client, Manifest};
+use lazyeviction::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        eprintln!("table8: artifacts missing — run `make artifacts` (engine bench skipped)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(artifacts_dir())?;
+    let client = Client::cpu()?;
+    let lens: Vec<usize> = std::env::var("LAZYEVICTION_T8_LENS")
+        .map(|v| v.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![512, 1024, 2048]);
+
+    let mut out = Json::obj();
+    for gen_len in lens {
+        let budget = gen_len / 2;
+        println!("\nTable 8 — generation length {gen_len} (budget {budget})");
+        let mut t = Table::new(&["Method", "Budget", "Throughput tok/s ↑", "Avg latency ms/tok ↓"]);
+        let mut block = Json::obj();
+        for (name, policy, b) in [
+            ("FullKV", "full", gen_len),
+            ("TOVA", "tova", budget),
+            ("LazyEviction", "lazy", budget),
+        ] {
+            let mut cfg = EngineConfig {
+                batch: 1,
+                cache: 2048,
+                budget: b,
+                policy: policy.into(),
+                record_live: false,
+                ..Default::default()
+            };
+            cfg.params.window = 25;
+            cfg.params.recent = 25;
+            let mut engine = Engine::new(&client, &manifest, cfg)?;
+            engine.run_all(vec![Request {
+                id: 0,
+                prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
+                template: String::new(),
+                max_new: gen_len,
+            }])?;
+            let thr = engine.metrics.throughput();
+            let lat = engine.metrics.avg_latency_ms();
+            t.row(vec![
+                name.into(),
+                if policy == "full" { "-".into() } else { b.to_string() },
+                format!("{thr:.2}"),
+                format!("{lat:.3}"),
+            ]);
+            block = block.set(
+                name,
+                Json::obj().set("throughput", thr).set("avg_latency_ms", lat),
+            );
+        }
+        t.print();
+        out = out.set(&format!("len{gen_len}"), block);
+    }
+    let _ = save_results("table8", out);
+    Ok(())
+}

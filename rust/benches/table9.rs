@@ -1,0 +1,37 @@
+//! Table 9 (App. F.1): window-size sweep — accuracy vs W on GSM8K
+//! (W ∈ {4..32}) and MATH-500 (W ∈ {8..64}), DS-Llama-8B, r=50%.
+//! Shape: accuracy rises with W (more recurrences observed) then dips when
+//! the pinned window starts crowding out global tokens.
+
+use lazyeviction::bench_harness::simgrid::{run_cell, samples_per_cell, CellSpec};
+use lazyeviction::bench_harness::{save_results, table::acc, table::Table};
+use lazyeviction::util::json::Json;
+
+fn main() {
+    let sweeps: [(&str, &[usize]); 2] = [
+        ("gsm8k", &[4, 8, 16, 25, 32]),
+        ("math500", &[8, 16, 32, 52, 64]),
+    ];
+    let mut out = Json::obj();
+    for (dataset, ws) in sweeps {
+        println!("\nTable 9 — W sweep ({dataset}, DS-Llama-8B, r=50%)");
+        let mut header = vec!["".to_string()];
+        header.extend(ws.iter().map(|w| format!("W={w}")));
+        let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hrefs);
+        let mut row = vec!["Acc.".to_string()];
+        let mut block = Json::obj();
+        for &w in ws {
+            let mut spec = CellSpec::new("lazy", "ds-llama-8b", dataset, 0.5);
+            spec.window = Some(w);
+            spec.n_samples = samples_per_cell();
+            let a = run_cell(&spec).accuracy;
+            row.push(acc(a));
+            block = block.set(&format!("{w}"), a);
+        }
+        t.row(row);
+        t.print();
+        out = out.set(dataset, block);
+    }
+    let _ = save_results("table9", out);
+}

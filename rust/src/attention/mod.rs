@@ -1,0 +1,124 @@
+//! Recurrence Interval Tracking (paper §4, Eq. 1).
+//!
+//! Every decode step the engine receives one aggregated attention score per
+//! live slot. `observe` applies the RaaS-style timestamp rule and the
+//! LazyEviction MRI update to the slot records:
+//!
+//! ```text
+//! if attn[i] >= alpha:  MRI_t[i] = max(MRI_{t-1}[i], t - TS_{t-1}[i])
+//!                       TS_t[i]  = t
+//! ```
+//!
+//! plus the bookkeeping other baselines need (last/cumulative attention,
+//! hit counts). One pass, O(live).
+
+use crate::kvcache::TokenRecord;
+
+/// Tracking hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TrackerConfig {
+    /// Importance threshold α (paper: 1e-4..1e-3 depending on model; our
+    /// aggregated scores are max-over-heads so the same scale applies).
+    pub alpha: f32,
+}
+
+impl Default for TrackerConfig {
+    fn default() -> Self {
+        TrackerConfig { alpha: 5e-4 }
+    }
+}
+
+/// Apply one step of attention observation to the live records.
+/// `attn[i]` is the aggregated attention for slot i; `step` is the absolute
+/// decoding step (same clock as TokenRecord.ts).
+pub fn observe(records: &mut [TokenRecord], attn: &[f32], step: u32, cfg: TrackerConfig) {
+    debug_assert!(attn.len() >= records.len());
+    for (rec, &a) in records.iter_mut().zip(attn.iter()) {
+        rec.last_attn = a;
+        rec.cum_attn += a;
+        if a >= cfg.alpha {
+            // Eq. 1: interval since the previous important step
+            let interval = step.saturating_sub(rec.ts);
+            if interval > rec.mri {
+                rec.mri = interval;
+            }
+            rec.ts = step;
+            rec.hits += 1;
+        }
+    }
+}
+
+/// Elapsed time since last importance (Δt in the H1 score).
+#[inline]
+pub fn elapsed(rec: &TokenRecord, step: u32) -> u32 {
+    step.saturating_sub(rec.ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(pos: u32) -> TokenRecord {
+        TokenRecord::new(pos, pos)
+    }
+
+    #[test]
+    fn below_alpha_only_accumulates() {
+        let mut rs = vec![rec(0)];
+        observe(&mut rs, &[1e-6], 5, TrackerConfig { alpha: 1e-3 });
+        assert_eq!(rs[0].ts, 0);
+        assert_eq!(rs[0].mri, 0);
+        assert_eq!(rs[0].hits, 0);
+        assert!((rs[0].cum_attn - 1e-6).abs() < 1e-12);
+        assert!((rs[0].last_attn - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn activation_updates_ts_and_mri() {
+        let cfg = TrackerConfig { alpha: 0.1 };
+        let mut rs = vec![rec(0)];
+        observe(&mut rs, &[0.5], 4, cfg); // interval 4-0=4
+        assert_eq!(rs[0].ts, 4);
+        assert_eq!(rs[0].mri, 4);
+        observe(&mut rs, &[0.5], 6, cfg); // interval 2 < 4 → mri stays
+        assert_eq!(rs[0].ts, 6);
+        assert_eq!(rs[0].mri, 4);
+        observe(&mut rs, &[0.5], 16, cfg); // interval 10 > 4 → mri grows
+        assert_eq!(rs[0].mri, 10);
+        assert_eq!(rs[0].hits, 3);
+    }
+
+    #[test]
+    fn eq1_matches_paper_semantics() {
+        // MRI_t = max(MRI_{t-1}, TS_t - TS_{t-1}) — only on activations
+        let cfg = TrackerConfig { alpha: 0.01 };
+        let mut rs = vec![rec(10)]; // born (TS=10)
+        for (t, a) in [(12, 0.0), (13, 0.9), (20, 0.9), (21, 0.001)] {
+            observe(&mut rs, &[a], t, cfg);
+        }
+        // activations at 13 (interval 3) and 20 (interval 7)
+        assert_eq!(rs[0].mri, 7);
+        assert_eq!(rs[0].ts, 20);
+    }
+
+    #[test]
+    fn never_activated_keeps_mri_zero() {
+        let cfg = TrackerConfig { alpha: 0.5 };
+        let mut rs = vec![rec(0)];
+        for t in 1..50 {
+            observe(&mut rs, &[0.01], t, cfg);
+        }
+        assert_eq!(rs[0].mri, 0);
+        assert_eq!(elapsed(&rs[0], 49), 49);
+    }
+
+    #[test]
+    fn multiple_slots_independent() {
+        let cfg = TrackerConfig { alpha: 0.1 };
+        let mut rs = vec![rec(0), rec(1), rec(2)];
+        observe(&mut rs, &[0.9, 0.0, 0.9], 5, cfg);
+        assert_eq!(rs[0].ts, 5);
+        assert_eq!(rs[1].ts, 1);
+        assert_eq!(rs[2].ts, 5);
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench harness: timing (criterion is not in the offline crate set),
+//! table rendering matching the paper's rows, and results persistence.
+
+pub mod simgrid;
+pub mod table;
+pub mod timing;
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Write a bench result JSON under results/ and echo where it went.
+pub fn save_results(name: &str, payload: Json) -> std::io::Result<()> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, payload.to_pretty())?;
+    eprintln!("[results] wrote {}", path.display());
+    Ok(())
+}
+
+/// Locate the artifacts directory: $LAZYEVICTION_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("LAZYEVICTION_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when the AOT artifacts exist (engine benches need them; simulator
+/// benches do not).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

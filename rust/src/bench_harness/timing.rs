@@ -1,0 +1,76 @@
+//! Minimal benchmarking: warmup + timed iterations + percentile summary.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration seconds.
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>6} iters  mean {:>9.3}ms  p50 {:>9.3}ms  p99 {:>9.3}ms",
+            self.name,
+            self.iters,
+            self.summary.mean * 1e3,
+            self.summary.p50 * 1e3,
+            self.summary.p99 * 1e3
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let summary = Summary::of(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        samples,
+        summary,
+    }
+}
+
+/// Time a single run of `f`, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 10);
+        assert_eq!(r.samples.len(), 10);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, s) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,364 @@
+//! The decode-loop engine: continuous batching over a fixed-row executable,
+//! TS/MRI tracking from the step's exported attention, and lagged/greedy KV
+//! eviction compiled down to device-side gathers. This is the request path —
+//! no Python, no model code, just PJRT executions orchestrated from Rust.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::attention::{observe, TrackerConfig};
+use crate::coordinator::row::RowState;
+use crate::coordinator::{EngineConfig, Request, Response};
+use crate::eviction::{self, Policy};
+use crate::kvcache::TokenRecord;
+use crate::metrics::{EngineMetrics, RequestMetrics};
+use crate::runtime::{Client, Manifest, ModelExecutor};
+use crate::tokenizer::Tokenizer;
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    exec: ModelExecutor,
+    pub tokenizer: Tokenizer,
+    policy: Box<dyn Policy>,
+    rows: Vec<Option<RowState>>,
+    pub metrics: EngineMetrics,
+    vocab: usize,
+    // staging buffers reused across steps (no per-step allocation)
+    mask_buf: Vec<f32>,
+    tok_buf: Vec<i32>,
+    pos_buf: Vec<i32>,
+    idx_buf: Vec<i32>,
+    gather_buf: Vec<i32>,
+}
+
+impl Engine {
+    pub fn new(client: &Client, manifest: &Manifest, cfg: EngineConfig) -> Result<Engine> {
+        cfg.validate()?;
+        let exec = ModelExecutor::new(client, manifest, cfg.batch, cfg.cache)
+            .context("building executor")?;
+        let tokenizer = Tokenizer::new(&manifest.charset);
+        let policy = eviction::build(&cfg.policy, &cfg.params)?;
+        let (b, s) = (cfg.batch, cfg.cache);
+        Ok(Engine {
+            vocab: manifest.model.vocab,
+            tokenizer,
+            policy,
+            rows: (0..b).map(|_| None).collect(),
+            metrics: EngineMetrics::default(),
+            mask_buf: vec![0.0; b * s],
+            tok_buf: vec![0; b],
+            pos_buf: vec![0; b],
+            idx_buf: vec![0; b],
+            gather_buf: vec![0; b * s],
+            exec,
+            cfg,
+        })
+    }
+
+    pub fn policy_name(&self) -> String {
+        self.policy.name()
+    }
+
+    pub fn active(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_some()).count()
+    }
+
+    pub fn has_free_row(&self) -> bool {
+        self.rows.iter().any(|r| r.is_none())
+    }
+
+    pub fn exec_counts(&self) -> crate::runtime::executor::ExecCounts {
+        self.exec.exec_counts
+    }
+
+    /// Extract the layer-0 concat-heads key vector for slot data laid out
+    /// as [L, H, ..., dh] — the R-KV similarity sketch.
+    fn sketch_from(&self, data: &[f32], h_stride: usize, slot: usize) -> Vec<f32> {
+        let d = self.exec.dims();
+        let (h, dh) = (d.n_heads, d.d_head);
+        let mut out = Vec::with_capacity(h * dh);
+        for head in 0..h {
+            let base = (head * h_stride + slot) * dh;
+            out.extend_from_slice(&data[base..base + dh]);
+        }
+        out
+    }
+
+    /// Admit a request into a free row: prefill, insert, initialize records.
+    /// Returns false (request untouched) when no row is free.
+    pub fn submit(&mut self, req: Request, queued_s: f64) -> Result<bool> {
+        let Some(row_idx) = self.rows.iter().position(|r| r.is_none()) else {
+            return Ok(false);
+        };
+        let p_bucket = self.exec.prefill_bucket;
+        let ids = self
+            .tokenizer
+            .encode(&req.prompt)
+            .map_err(|e| anyhow::anyhow!("prompt: {e}"))?;
+        anyhow::ensure!(!ids.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            ids.len() <= p_bucket,
+            "prompt len {} exceeds prefill bucket {}",
+            ids.len(),
+            p_bucket
+        );
+        anyhow::ensure!(
+            ids.len() < self.cfg.budget,
+            "prompt len {} must be < budget {}",
+            ids.len(),
+            self.cfg.budget
+        );
+
+        let t0 = Instant::now();
+        let mut toks = vec![0i32; p_bucket];
+        let mut valid = vec![0f32; p_bucket];
+        for (i, &id) in ids.iter().enumerate() {
+            toks[i] = id as i32;
+            valid[i] = 1.0;
+        }
+        let out = self.exec.prefill(&toks, &valid)?;
+        self.exec.insert(&out.k_seq, &out.v_seq, row_idx)?;
+        self.metrics.record_prefill(t0.elapsed());
+
+        let mut row = RowState::new(req, self.cfg.cache, queued_s);
+        let p = ids.len();
+        let d = self.exec.dims();
+        let h_stride = self.cfg.cache; // k_seq is [L, H, S, dh]
+        for (i, _) in ids.iter().enumerate() {
+            let mut rec = TokenRecord::new(i as u32, i as u32);
+            rec.last_attn = 1.0;
+            if self.cfg.collect_sketches {
+                rec.key_sketch = self.sketch_from(&out.k_seq[..d.n_heads * h_stride * d.d_head], h_stride, i);
+            }
+            row.seq.push(rec);
+        }
+        // one observation from the last prompt row's attention
+        observe(
+            row.seq.records_mut(),
+            &out.attn_last[..p],
+            (p - 1) as u32,
+            TrackerConfig {
+                alpha: self.cfg.alpha,
+            },
+        );
+        row.pos = p as u32;
+
+        // first prediction comes from the prefill logits
+        let pred_id = argmax(&out.logits_last);
+        let pred = self.tokenizer.char_of(pred_id as u32).unwrap_or(' ');
+        match row.advance_with_prediction(pred, self.cfg.stop_char) {
+            Some(c) => {
+                row.next_token = self.tokenizer.id(c).unwrap_or(0);
+                self.rows[row_idx] = Some(row);
+            }
+            None => {
+                // degenerate: finished without a single decode step
+                self.rows[row_idx] = Some(row);
+            }
+        }
+        Ok(true)
+    }
+
+    /// One decode iteration over all active rows. Returns finished responses.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let (b, s) = (self.cfg.batch, self.cfg.cache);
+        // collect immediately-finished rows (prefill-finished), and
+        // force-finish rows whose cache is physically full and whose policy
+        // cannot shed tokens (FullKV hitting capacity)
+        let mut finished = Vec::new();
+        for i in 0..b {
+            if let Some(row) = self.rows[i].as_mut() {
+                if row.finish.is_none() && row.seq.len() >= self.cfg.cache {
+                    row.finish = Some(crate::coordinator::FinishReason::MaxTokens);
+                }
+            }
+            if self.rows[i].as_ref().map(|r| r.finish.is_some()) == Some(true) {
+                finished.push(self.finish_row(i));
+            }
+        }
+        if self.rows.iter().all(|r| r.is_none()) {
+            return Ok(finished);
+        }
+
+        let t0 = Instant::now();
+        // stage inputs
+        self.mask_buf.fill(0.0);
+        self.tok_buf.fill(0);
+        self.pos_buf.fill(0);
+        self.idx_buf.fill(0);
+        let mut active = 0u64;
+        for i in 0..b {
+            if let Some(row) = &self.rows[i] {
+                row.seq.slot_mask(&mut self.mask_buf[i * s..(i + 1) * s]);
+                self.tok_buf[i] = row.next_token as i32;
+                self.pos_buf[i] = row.pos as i32;
+                self.idx_buf[i] = row.seq.len() as i32;
+                active += 1;
+            }
+        }
+
+        let out = self.exec.step(&self.mask_buf, &self.tok_buf, &self.pos_buf)?;
+        self.exec.append(&out.k_new, &out.v_new, &self.idx_buf)?;
+
+        let d = self.exec.dims().clone();
+        let (nh, dh, nl) = (d.n_heads, d.d_head, d.n_layers);
+        let per_row_new = nl * nh * dh;
+        let alpha_cfg = TrackerConfig {
+            alpha: self.cfg.alpha,
+        };
+
+        // per-row: observe attention, record the new token, pick next input
+        for i in 0..b {
+            let Some(row) = self.rows[i].as_mut() else {
+                continue;
+            };
+            let step_t = row.pos;
+            let live = row.seq.len();
+            let attn_row = &out.attn[i * s..i * s + live];
+            observe(row.seq.records_mut(), attn_row, step_t, alpha_cfg);
+
+            let mut rec = TokenRecord::new(step_t, step_t);
+            rec.last_attn = 1.0; // self-attention at birth; overwritten next step
+            if self.cfg.collect_sketches {
+                // k_new row layout: [L, H, dh] for this batch row
+                let base = i * per_row_new;
+                let mut sk = Vec::with_capacity(nh * dh);
+                for head in 0..nh {
+                    let off = base + head * dh; // layer 0
+                    sk.extend_from_slice(&out.k_new[off..off + dh]);
+                }
+                rec.key_sketch = sk;
+            }
+            row.seq.push(rec);
+            if self.cfg.record_live {
+                row.live_curve.push(row.seq.len());
+            }
+            row.pos += 1;
+
+            let logits = &out.logits[i * self.vocab..(i + 1) * self.vocab];
+            let pred = self
+                .tokenizer
+                .char_of(argmax(logits) as u32)
+                .unwrap_or(' ');
+            if let Some(c) = row.advance_with_prediction(pred, self.cfg.stop_char) {
+                row.next_token = self.tokenizer.id(c).unwrap_or(0);
+            }
+        }
+        self.metrics.record_step(t0.elapsed(), active);
+
+        // eviction pass (lagged or greedy per policy; forced at capacity)
+        let te = Instant::now();
+        let mut any_evict = false;
+        for i in 0..b {
+            let wants = match &self.rows[i] {
+                Some(row) => {
+                    let live = row.seq.len();
+                    let step_t = row.pos;
+                    (self
+                        .policy
+                        .should_evict(live, self.cfg.budget, step_t)
+                        || live >= self.cfg.cache)
+                        && live > self.cfg.budget
+                }
+                None => false,
+            };
+            let range = i * s..(i + 1) * s;
+            if wants {
+                let row = self.rows[i].as_mut().unwrap();
+                let keep =
+                    self.policy
+                        .select_keep(row.seq.records(), self.cfg.budget, row.pos);
+                row.evictions += row.seq.len() - keep.len();
+                row.seq.apply_keep(&keep, row.pos);
+                let idx = row.seq.gather_indices(&keep);
+                self.gather_buf[range].copy_from_slice(&idx);
+                any_evict = true;
+            } else {
+                for (j, v) in self.gather_buf[range].iter_mut().enumerate() {
+                    *v = j as i32;
+                }
+            }
+        }
+        if any_evict {
+            self.exec.gather(&self.gather_buf)?;
+            self.metrics.record_eviction(te.elapsed());
+        }
+
+        // collect rows that finished this step
+        for i in 0..b {
+            if self.rows[i].as_ref().map(|r| r.finish.is_some()) == Some(true) {
+                finished.push(self.finish_row(i));
+            }
+        }
+        Ok(finished)
+    }
+
+    fn finish_row(&mut self, i: usize) -> Response {
+        let row = self.rows[i].take().expect("finish_row on empty row");
+        let total = row.admitted_at.elapsed().as_secs_f64();
+        let ttft = row
+            .first_token_at
+            .map(|t| t.duration_since(row.admitted_at).as_secs_f64())
+            .unwrap_or(total);
+        Response {
+            id: row.req.id,
+            text: row.out_text,
+            hole_predictions: row.hole_predictions,
+            finish: row.finish.unwrap(),
+            metrics: RequestMetrics {
+                queued_s: row.queued_s,
+                ttft_s: ttft,
+                total_s: total,
+                tokens_out: row.produced,
+                evictions: row.evictions,
+            },
+            live_curve: row.live_curve,
+        }
+    }
+
+    /// Convenience driver: run a whole list of requests to completion with
+    /// continuous batching. Returns responses in completion order.
+    pub fn run_all(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        let mut pending: std::collections::VecDeque<Request> = reqs.into();
+        let mut done = Vec::new();
+        self.metrics.start();
+        loop {
+            while self.has_free_row() {
+                let Some(r) = pending.pop_front() else {
+                    break;
+                };
+                self.submit(r, 0.0)?;
+            }
+            if self.active() == 0 && pending.is_empty() {
+                break;
+            }
+            done.extend(self.step()?);
+        }
+        self.metrics.stop();
+        Ok(done)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! L3 coordinator: request/response types, engine configuration, and the
+//! decode-loop engine that wires runtime ⇄ kvcache ⇄ eviction together.
+
+pub mod engine;
+pub mod row;
+
+pub use engine::Engine;
+
+use crate::eviction::PolicyParams;
+use crate::metrics::RequestMetrics;
+
+/// Engine configuration (one engine = one compiled (batch, cache) shape).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Batch rows of the compiled executables.
+    pub batch: usize,
+    /// Physical slot capacity S of the device cache.
+    pub cache: usize,
+    /// KV budget B (paper's B; lagged policies additionally need headroom:
+    /// capacity >= budget + window).
+    pub budget: usize,
+    /// Policy spec: `full`, `tova`, `h2o`, `raas`, `rkv`, `lazy`,
+    /// `<base>+window` (see eviction::build).
+    pub policy: String,
+    pub params: PolicyParams,
+    /// Importance threshold α for TS/MRI tracking.
+    pub alpha: f32,
+    /// Stop generation at this char (in addition to max_new). '\0' ⇒ none.
+    pub stop_char: char,
+    /// Collect layer-0 key sketches into records (needed by `rkv`).
+    pub collect_sketches: bool,
+    /// Record live-token counts each step (Fig. 6 memory curves).
+    pub record_live: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            batch: 1,
+            cache: 256,
+            budget: 192,
+            policy: "lazy".into(),
+            params: PolicyParams::default(),
+            alpha: 5e-4,
+            stop_char: '\0',
+            collect_sketches: false,
+            record_live: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Validate budget/capacity/window interplay.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.budget >= 2, "budget too small");
+        anyhow::ensure!(
+            self.budget <= self.cache,
+            "budget {} > cache capacity {}",
+            self.budget,
+            self.cache
+        );
+        let w = self.params.window;
+        if self.policy == "lazy" || self.policy.ends_with("+window") {
+            anyhow::ensure!(
+                self.budget + w <= self.cache,
+                "lagged policy needs capacity >= budget+W ({} + {} > {})",
+                self.budget,
+                w,
+                self.cache
+            );
+            anyhow::ensure!(w < self.budget, "window W must be < budget B (B >> W)");
+        }
+        Ok(())
+    }
+}
+
+/// One generation request. `template` chars are forced as inputs after the
+/// prompt; `?` marks holes the model must fill (the E2E accuracy protocol —
+/// long teacher-forced reasoning chains with measurable answer slots).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub template: String,
+    pub max_new: usize,
+}
+
+/// Why a row finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopChar,
+    TemplateDone,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopChar => "stop_char",
+            FinishReason::TemplateDone => "template_done",
+        }
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Everything after the prompt (forced + generated chars).
+    pub text: String,
+    /// Model predictions at template holes, in order.
+    pub hole_predictions: Vec<char>,
+    pub finish: FinishReason,
+    pub metrics: RequestMetrics,
+    /// Live-token count per decode step (memory accounting; empty unless
+    /// EngineConfig.record_live).
+    pub live_curve: Vec<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn lagged_needs_headroom() {
+        let cfg = EngineConfig {
+            cache: 100,
+            budget: 90,
+            policy: "lazy".into(),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err()); // 90 + 25 > 100
+        let cfg2 = EngineConfig {
+            cache: 100,
+            budget: 90,
+            policy: "tova".into(),
+            ..Default::default()
+        };
+        cfg2.validate().unwrap(); // greedy policies need no headroom
+    }
+
+    #[test]
+    fn window_must_be_under_budget() {
+        let mut cfg = EngineConfig::default();
+        cfg.params.window = cfg.budget;
+        assert!(cfg.validate().is_err());
+    }
+}

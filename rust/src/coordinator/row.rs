@@ -1,0 +1,148 @@
+//! Per-batch-row decode state: one in-flight request bound to a row of the
+//! compiled executables, its slot records, template cursor, and timing.
+
+use std::time::Instant;
+
+use crate::coordinator::{FinishReason, Request};
+use crate::kvcache::SeqKv;
+
+#[derive(Debug)]
+pub struct RowState {
+    pub req: Request,
+    pub seq: SeqKv,
+    /// Absolute position of the *next* input token (== tokens processed).
+    pub pos: u32,
+    /// The token to feed at the next step.
+    pub next_token: u32,
+    /// Whether `next_token` was forced by the template (vs model-chosen).
+    pub next_forced: bool,
+    /// Byte cursor into req.template (chars consumed).
+    pub template_cursor: usize,
+    /// Generated/forced chars after the prompt.
+    pub out_text: String,
+    /// Model predictions at `?` holes.
+    pub hole_predictions: Vec<char>,
+    /// Tokens produced so far (decode steps done for this row).
+    pub produced: usize,
+    pub finish: Option<FinishReason>,
+    pub admitted_at: Instant,
+    pub first_token_at: Option<Instant>,
+    pub queued_s: f64,
+    pub evictions: usize,
+    pub live_curve: Vec<usize>,
+}
+
+impl RowState {
+    pub fn new(req: Request, capacity: usize, queued_s: f64) -> RowState {
+        RowState {
+            req,
+            seq: SeqKv::new(capacity),
+            pos: 0,
+            next_token: 0,
+            next_forced: false,
+            template_cursor: 0,
+            out_text: String::new(),
+            hole_predictions: Vec::new(),
+            produced: 0,
+            finish: None,
+            admitted_at: Instant::now(),
+            first_token_at: None,
+            queued_s,
+            evictions: 0,
+            live_curve: Vec::new(),
+        }
+    }
+
+    /// Resolve what the model's prediction `pred` becomes as the next input
+    /// token, honoring the template, and record outputs. Returns None when
+    /// the row is finished.
+    pub fn advance_with_prediction(
+        &mut self,
+        pred: char,
+        stop_char: char,
+    ) -> Option<char> {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        let tmpl: Vec<char> = self.req.template.chars().collect();
+        let (next, forced) = if self.template_cursor < tmpl.len() {
+            let t = tmpl[self.template_cursor];
+            self.template_cursor += 1;
+            if t == '?' {
+                self.hole_predictions.push(pred);
+                (pred, false)
+            } else {
+                (t, true)
+            }
+        } else if self.req.template.is_empty() {
+            (pred, false)
+        } else {
+            self.finish = Some(FinishReason::TemplateDone);
+            return None;
+        };
+        self.out_text.push(next);
+        self.produced += 1;
+        if !forced && stop_char != '\0' && next == stop_char {
+            self.finish = Some(FinishReason::StopChar);
+            return None;
+        }
+        if self.produced >= self.req.max_new {
+            self.finish = Some(FinishReason::MaxTokens);
+            return None;
+        }
+        self.next_forced = forced;
+        Some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(template: &str, max_new: usize) -> Request {
+        Request {
+            id: 1,
+            prompt: "#A=3;\n>".into(),
+            template: template.into(),
+            max_new,
+        }
+    }
+
+    #[test]
+    fn free_running_emits_predictions() {
+        let mut r = RowState::new(req("", 3), 16, 0.0);
+        assert_eq!(r.advance_with_prediction('x', '\0'), Some('x'));
+        assert_eq!(r.advance_with_prediction('y', '\0'), Some('y'));
+        assert_eq!(r.advance_with_prediction('z', '\0'), None); // max_new
+        assert_eq!(r.finish, Some(FinishReason::MaxTokens));
+        assert_eq!(r.out_text, "xyz");
+        assert!(r.hole_predictions.is_empty());
+    }
+
+    #[test]
+    fn template_forces_and_collects_holes() {
+        let mut r = RowState::new(req("A+B=?;", 100), 16, 0.0);
+        // model predictions are ignored on forced chars
+        assert_eq!(r.advance_with_prediction('Q', '\0'), Some('A'));
+        assert_eq!(r.advance_with_prediction('Q', '\0'), Some('+'));
+        assert_eq!(r.advance_with_prediction('Q', '\0'), Some('B'));
+        assert_eq!(r.advance_with_prediction('Q', '\0'), Some('='));
+        // hole: model's char is used and recorded
+        assert_eq!(r.advance_with_prediction('7', '\0'), Some('7'));
+        assert_eq!(r.hole_predictions, vec!['7']);
+        assert_eq!(r.advance_with_prediction('Q', '\0'), Some(';'));
+        // template exhausted
+        assert_eq!(r.advance_with_prediction('Q', '\0'), None);
+        assert_eq!(r.finish, Some(FinishReason::TemplateDone));
+        assert_eq!(r.out_text, "A+B=7;");
+    }
+
+    #[test]
+    fn stop_char_only_on_model_tokens() {
+        // forced newline must NOT stop; model-emitted newline must
+        let mut r = RowState::new(req("\n?", 100), 16, 0.0);
+        assert_eq!(r.advance_with_prediction('x', '\n'), Some('\n')); // forced
+        assert_eq!(r.advance_with_prediction('\n', '\n'), None); // hole, stop
+        assert_eq!(r.finish, Some(FinishReason::StopChar));
+    }
+}

@@ -1,0 +1,37 @@
+//! FullKV: the no-eviction upper bound (paper's accuracy reference).
+
+use super::Policy;
+use crate::kvcache::TokenRecord;
+
+pub struct FullKv;
+
+impl Policy for FullKv {
+    fn name(&self) -> String {
+        "full".into()
+    }
+
+    fn should_evict(&self, _live: usize, _budget: usize, _step: u32) -> bool {
+        false
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], _budget: usize, _step: u32) -> Vec<u32> {
+        (0..records.len() as u32).collect()
+    }
+
+    fn step_cost(&self, _live: usize, _budget: usize, _step: u32) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_evicts() {
+        let p = FullKv;
+        assert!(!p.should_evict(10_000, 10, 5));
+        let recs: Vec<TokenRecord> = (0..5).map(|i| TokenRecord::new(i, i)).collect();
+        assert_eq!(p.select_keep(&recs, 2, 9).len(), 5);
+    }
+}

@@ -1,0 +1,80 @@
+//! H2O (Zhang et al. 2023): heavy-hitter oracle — keep the tokens with the
+//! highest *cumulative* attention plus a recent window. The paper's
+//! representative of Cumulative-Attention-based Eviction (Fig. 1b): latent
+//! recurring tokens with long quiet phases still starve on cumulative score.
+
+use super::{keep_with_pinned, recent_slots, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct H2O {
+    /// Recent tokens always retained (paper sets this = LazyEviction's W).
+    pub recent: usize,
+}
+
+impl Policy for H2O {
+    fn name(&self) -> String {
+        format!("h2o(recent={})", self.recent)
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, _step: u32) -> bool {
+        live > budget
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, _step: u32) -> Vec<u32> {
+        let pinned = recent_slots(records, self.recent.min(budget));
+        keep_with_pinned(records, pinned, budget, |r| r.cum_attn as f64)
+    }
+
+    fn step_cost(&self, live: usize, budget: usize, _step: u32) -> (u64, u64) {
+        // score accumulation is O(B) every step; ranking when over budget
+        let rank = if live > budget {
+            super::ranking_cost(live)
+        } else {
+            0
+        };
+        (live as u64, rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs_with_cum(cums: &[f32]) -> Vec<TokenRecord> {
+        cums.iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let mut r = TokenRecord::new(i as u32, i as u32);
+                r.cum_attn = c;
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn keeps_heavy_hitters_and_recent() {
+        let rs = recs_with_cum(&[5.0, 0.1, 4.0, 0.1, 0.1, 0.1]);
+        let p = H2O { recent: 2 };
+        let keep = p.select_keep(&rs, 4, 10);
+        let mut pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        pos.sort_unstable();
+        // recent {4,5} + heavy {0,2}
+        assert_eq!(pos, vec![0, 2, 4, 5]);
+    }
+
+    #[test]
+    fn recent_window_never_dropped() {
+        let rs = recs_with_cum(&[9.0, 9.0, 9.0, 0.0, 0.0]);
+        let p = H2O { recent: 2 };
+        let keep = p.select_keep(&rs, 3, 10);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        assert!(pos.contains(&4) && pos.contains(&3));
+    }
+
+    #[test]
+    fn exact_budget() {
+        let rs = recs_with_cum(&[1.0; 20]);
+        let keep = H2O { recent: 5 }.select_keep(&rs, 8, 10);
+        assert_eq!(keep.len(), 8);
+    }
+}

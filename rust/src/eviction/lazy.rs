@@ -1,0 +1,152 @@
+//! LazyEviction (the paper's contribution, §4):
+//!
+//!   * lagged decisions — evictions run only at steps t = kW (Eq. 5 trigger),
+//!     never per-step, so latent recurring tokens get an observation window
+//!     in which their attention spike can be *seen* before they are judged;
+//!   * the most recent W tokens are always retained (local coherence +
+//!     the observation window itself);
+//!   * the remaining B − W slots go to the tokens with the highest
+//!     MRI-centric importance score I_t (Eq. 2; see eviction::score).
+
+use super::score::{importance, ScoreConfig};
+use super::{keep_with_pinned, recent_slots, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct LazyEviction {
+    /// Observation window W (paper: the 80th-percentile MRI of the task,
+    /// measured offline on 1% of samples — see trace::mri::suggest_window).
+    pub window: usize,
+    pub score: ScoreConfig,
+}
+
+impl Policy for LazyEviction {
+    fn name(&self) -> String {
+        let mut n = format!("lazy(W={}", self.window);
+        if !self.score.use_h1 {
+            n.push_str(",-H1");
+        }
+        if !self.score.use_h2 {
+            n.push_str(",-H2");
+        }
+        n.push(')');
+        n
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, step: u32) -> bool {
+        live > budget && step as usize % self.window.max(1) == 0
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, step: u32) -> Vec<u32> {
+        // Eq. 5: S' = Top_{B-W}(I_t) ∪ W_t
+        let pinned = recent_slots(records, self.window.min(budget));
+        keep_with_pinned(records, pinned, budget, |r| importance(r, step, &self.score))
+    }
+
+    fn step_cost(&self, live: usize, budget: usize, step: u32) -> (u64, u64) {
+        // Tracking is O(B) every step (done by attention::observe);
+        // scoring + one ranking only at decision steps: O(WB + BlogB)/window.
+        let scoring = live as u64; // MRI/TS update per step
+        let rank = if self.should_evict(live, budget, step) {
+            super::ranking_cost(live)
+        } else {
+            0
+        };
+        (scoring, rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{observe, TrackerConfig};
+
+    fn policy(w: usize) -> LazyEviction {
+        LazyEviction {
+            window: w,
+            score: ScoreConfig::default(),
+        }
+    }
+
+    #[test]
+    fn evicts_only_on_window_boundary() {
+        let p = policy(25);
+        assert!(!p.should_evict(100, 50, 26));
+        assert!(p.should_evict(100, 50, 50));
+        assert!(!p.should_evict(40, 50, 50)); // under budget: never
+    }
+
+    #[test]
+    fn recent_w_always_kept() {
+        let p = policy(4);
+        let rs: Vec<TokenRecord> = (0..20).map(|i| TokenRecord::new(i, i)).collect();
+        let keep = p.select_keep(&rs, 8, 20);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        for recent in 16..20 {
+            assert!(pos.contains(&recent), "recent {recent} missing: {pos:?}");
+        }
+        assert_eq!(keep.len(), 8);
+    }
+
+    #[test]
+    fn recurring_token_survives_quiet_phase() {
+        // Build a token that spikes every 20 steps (MRI 20) and is quiet
+        // for 10 steps; greedy TOVA/RaaS would drop it, LazyEviction keeps
+        // it because Δt < MRI keeps H1 high.
+        let cfg = TrackerConfig { alpha: 0.1 };
+        let mut rs: Vec<TokenRecord> = (0..30).map(|i| TokenRecord::new(i, i)).collect();
+        // token 0 spikes at steps 30, 50, 70 (MRI becomes 30 then 20)
+        for t in 30..=80 {
+            let mut attn = vec![0.0f32; 30];
+            if t % 20 == 10 {
+                attn[0] = 0.9;
+            }
+            attn[29] = 0.9; // keep the tail alive
+            observe(&mut rs, &attn, t, cfg);
+        }
+        // at step 80, token 0 last spiked at 70, Δt=10 < MRI=20
+        let p = policy(5);
+        let keep = p.select_keep(&rs, 10, 80);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        assert!(pos.contains(&0), "recurring token evicted: {pos:?}");
+    }
+
+    #[test]
+    fn dead_token_evicted_after_mri_exceeded() {
+        let cfg = TrackerConfig { alpha: 0.1 };
+        let mut rs: Vec<TokenRecord> = (0..10).map(|i| TokenRecord::new(i, i)).collect();
+        // token 0: one early spike (MRI small), then silence forever
+        let mut attn = vec![0.0f32; 10];
+        attn[0] = 0.9;
+        observe(&mut rs, &attn, 12, cfg);
+        for t in 13..100 {
+            let mut a = vec![0.0f32; 10];
+            a[5] = 0.9; // token 5 stays hot
+            observe(&mut rs, &a, t, cfg);
+        }
+        let p = policy(2);
+        // budget 3 = recent-2 + one scored slot: the hot token must win it
+        let keep = p.select_keep(&rs, 3, 100);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        assert!(!pos.contains(&0), "dead token should go: {pos:?}");
+        assert!(pos.contains(&5));
+    }
+
+    #[test]
+    fn window_larger_than_budget_degrades_gracefully() {
+        let p = policy(100);
+        let rs: Vec<TokenRecord> = (0..50).map(|i| TokenRecord::new(i, i)).collect();
+        let keep = p.select_keep(&rs, 10, 100);
+        assert_eq!(keep.len(), 10);
+    }
+
+    #[test]
+    fn step_cost_is_lagged() {
+        let p = policy(25);
+        let (s_on, r_on) = p.step_cost(100, 50, 50);
+        let (s_off, r_off) = p.step_cost(100, 50, 51);
+        assert_eq!(s_on, 100);
+        assert!(r_on > 0);
+        assert_eq!(s_off, 100);
+        assert_eq!(r_off, 0);
+    }
+}

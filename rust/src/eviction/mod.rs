@@ -1,0 +1,290 @@
+//! KV eviction policies: the paper's LazyEviction plus every baseline it is
+//! evaluated against (§5: FullKV, StreamingLLM, TOVA, H2O, Scissorhands,
+//! RaaS, R-KV) and the observation-window wrapper of the Table-3 ablation.
+//!
+//! Policies are *stateless over the slot records* — every per-token signal
+//! (ts, MRI, cumulative attention, hit counts, key sketches) lives in
+//! `kvcache::TokenRecord`, so cache compaction reorders policy state
+//! uniformly and the same `Policy` impls run in both the real engine and the
+//! trace-driven simulator.
+
+pub mod full;
+pub mod h2o;
+pub mod lazy;
+pub mod raas;
+pub mod rkv;
+pub mod scissorhands;
+pub mod score;
+pub mod streaming;
+pub mod tova;
+pub mod window;
+
+use crate::kvcache::TokenRecord;
+
+pub use score::{H2Mode, ScoreConfig, ScoreForm};
+
+/// An eviction policy decides *when* to evict and *which* slots to keep.
+pub trait Policy: Send {
+    fn name(&self) -> String;
+
+    /// Run an eviction decision at this step? `live` is the current number
+    /// of cached tokens. Greedy baselines trigger whenever live > budget;
+    /// windowed policies only at step % W == 0 (the engine additionally
+    /// forces eviction when the physical capacity is about to overflow).
+    fn should_evict(&self, live: usize, budget: usize, step: u32) -> bool;
+
+    /// Choose the keep-set: slot indices (any order) of size
+    /// min(budget, records.len()).
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, step: u32) -> Vec<u32>;
+
+    /// Per-step score work for the complexity accounting of Table 6:
+    /// (score_ops, rank_ops) incurred *at this step* given `live` tokens.
+    fn step_cost(&self, live: usize, budget: usize, _step: u32) -> (u64, u64) {
+        // default: greedy per-step policy — score + rank every step when full
+        if live > budget {
+            (live as u64, ranking_cost(live))
+        } else {
+            (0, 0)
+        }
+    }
+}
+
+/// B log B comparison count for one ranking pass.
+pub fn ranking_cost(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    (n as f64 * (n as f64).log2()).ceil() as u64
+}
+
+/// Slot indices of the `n` most recent tokens (by absolute position).
+pub fn recent_slots(records: &[TokenRecord], n: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..records.len() as u32).collect();
+    idx.sort_unstable_by_key(|&i| std::cmp::Reverse(records[i as usize].pos));
+    idx.truncate(n);
+    idx
+}
+
+/// Top-k slot indices by a score, descending, with a deterministic
+/// tie-break (newer ts, then newer pos win). Uses partial selection —
+/// O(n + k log k) — because this sits on the eviction hot path.
+pub fn top_k_by<F: Fn(&TokenRecord) -> f64>(
+    records: &[TokenRecord],
+    exclude: &[bool],
+    k: usize,
+    score: F,
+) -> Vec<u32> {
+    debug_assert_eq!(exclude.len(), records.len());
+    let mut scored: Vec<(f64, u32, u32, u32)> = records
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !exclude[*i])
+        .map(|(i, r)| (score(r), r.ts, r.pos, i as u32))
+        .collect();
+    let k = k.min(scored.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let cmp = |a: &(f64, u32, u32, u32), b: &(f64, u32, u32, u32)| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.1.cmp(&a.1))
+            .then(b.2.cmp(&a.2))
+    };
+    if k < scored.len() {
+        scored.select_nth_unstable_by(k - 1, cmp);
+        scored.truncate(k);
+    }
+    scored.sort_unstable_by(cmp);
+    scored.into_iter().map(|(_, _, _, i)| i).collect()
+}
+
+/// Combine an always-keep set with a ranked fill to exactly `budget` slots.
+pub fn keep_with_pinned<F: Fn(&TokenRecord) -> f64>(
+    records: &[TokenRecord],
+    pinned: Vec<u32>,
+    budget: usize,
+    score: F,
+) -> Vec<u32> {
+    let mut exclude = vec![false; records.len()];
+    let mut keep: Vec<u32> = Vec::with_capacity(budget);
+    for &p in pinned.iter().take(budget) {
+        if !exclude[p as usize] {
+            exclude[p as usize] = true;
+            keep.push(p);
+        }
+    }
+    let remaining = budget.saturating_sub(keep.len());
+    keep.extend(top_k_by(records, &exclude, remaining, score));
+    keep
+}
+
+/// Shared knobs for constructing policies from CLI/config strings.
+#[derive(Clone, Debug)]
+pub struct PolicyParams {
+    /// Observation window W (LazyEviction and the +window wrapper).
+    pub window: usize,
+    /// Recent-token set size for H2O/Scissorhands/R-KV (paper sets = W).
+    pub recent: usize,
+    /// StreamingLLM sink size.
+    pub sink: usize,
+    /// R-KV importance/redundancy mix λ.
+    pub rkv_lambda: f64,
+    /// R-KV similarity threshold τ.
+    pub rkv_tau: f64,
+    /// LazyEviction score configuration.
+    pub score: ScoreConfig,
+}
+
+impl Default for PolicyParams {
+    fn default() -> Self {
+        PolicyParams {
+            window: 25,
+            recent: 25,
+            sink: 4,
+            rkv_lambda: 0.6,
+            rkv_tau: 0.9,
+            score: ScoreConfig::default(),
+        }
+    }
+}
+
+/// Build a policy from its spec string: `full`, `streaming`, `tova`, `h2o`,
+/// `scissorhands`, `raas`, `rkv`, `lazy`, or `<base>+window` (Table 3).
+pub fn build(spec: &str, params: &PolicyParams) -> anyhow::Result<Box<dyn Policy>> {
+    let (base, windowed) = match spec.strip_suffix("+window") {
+        Some(b) => (b, true),
+        None => (spec, false),
+    };
+    let inner: Box<dyn Policy> = match base {
+        "full" => Box::new(full::FullKv),
+        "streaming" => Box::new(streaming::StreamingLlm { sink: params.sink }),
+        "tova" => Box::new(tova::Tova),
+        "h2o" => Box::new(h2o::H2O {
+            recent: params.recent,
+        }),
+        "scissorhands" => Box::new(scissorhands::Scissorhands {
+            recent: params.recent,
+        }),
+        "raas" => Box::new(raas::Raas),
+        "rkv" => Box::new(rkv::RKv {
+            recent: params.recent,
+            lambda: params.rkv_lambda,
+            tau: params.rkv_tau,
+        }),
+        "lazy" => Box::new(lazy::LazyEviction {
+            window: params.window,
+            score: params.score,
+        }),
+        other => anyhow::bail!("unknown policy '{other}'"),
+    };
+    if windowed {
+        anyhow::ensure!(base != "lazy" && base != "full", "+window on {base}");
+        Ok(Box::new(window::Windowed {
+            inner,
+            window: params.window,
+        }))
+    } else {
+        Ok(inner)
+    }
+}
+
+/// All policy specs exercised by the paper's tables.
+pub const PAPER_POLICIES: [&str; 6] = ["full", "raas", "h2o", "tova", "rkv", "lazy"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs(n: usize) -> Vec<TokenRecord> {
+        (0..n)
+            .map(|i| TokenRecord::new(i as u32, i as u32))
+            .collect()
+    }
+
+    #[test]
+    fn recent_slots_by_pos() {
+        let mut rs = recs(5);
+        rs.swap(0, 4); // slot order no longer pos order
+        let r = recent_slots(&rs, 2);
+        assert_eq!(
+            r.iter().map(|&i| rs[i as usize].pos).collect::<Vec<_>>(),
+            vec![4, 3]
+        );
+    }
+
+    #[test]
+    fn top_k_deterministic_ties() {
+        let rs = recs(10);
+        let ex = vec![false; 10];
+        let a = top_k_by(&rs, &ex, 3, |_| 1.0);
+        let b = top_k_by(&rs, &ex, 3, |_| 1.0);
+        assert_eq!(a, b);
+        // ties break toward newer pos
+        assert_eq!(a.iter().map(|&i| rs[i as usize].pos).collect::<Vec<_>>(), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn top_k_excludes() {
+        let rs = recs(4);
+        let mut ex = vec![false; 4];
+        ex[3] = true;
+        let got = top_k_by(&rs, &ex, 4, |r| r.pos as f64);
+        assert_eq!(got, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn keep_with_pinned_exact_budget() {
+        let rs = recs(10);
+        let keep = keep_with_pinned(&rs, vec![9, 8], 5, |r| r.pos as f64);
+        assert_eq!(keep.len(), 5);
+        assert_eq!(keep[..2], [9, 8]);
+        assert!(!keep[2..].contains(&9));
+    }
+
+    #[test]
+    fn registry_builds_all() {
+        let p = PolicyParams::default();
+        for spec in [
+            "full", "streaming", "tova", "h2o", "scissorhands", "raas", "rkv", "lazy",
+            "tova+window", "h2o+window", "raas+window",
+        ] {
+            let pol = build(spec, &p).unwrap();
+            assert!(!pol.name().is_empty());
+        }
+        assert!(build("bogus", &p).is_err());
+        assert!(build("lazy+window", &p).is_err());
+    }
+
+    #[test]
+    fn ranking_cost_nlogn() {
+        assert_eq!(ranking_cost(0), 0);
+        assert_eq!(ranking_cost(1), 0);
+        assert!(ranking_cost(1024) >= 10 * 1024);
+    }
+
+    #[test]
+    fn property_top_k_is_correct_set() {
+        crate::util::property_test("top_k_correct", 50, |rng| {
+            let n = rng.range(1, 64);
+            let mut rs = recs(n);
+            for r in rs.iter_mut() {
+                r.cum_attn = rng.f32();
+            }
+            let k = rng.range(0, n);
+            let ex = vec![false; n];
+            let got = top_k_by(&rs, &ex, k, |r| r.cum_attn as f64);
+            assert_eq!(got.len(), k);
+            // every kept score >= every dropped score
+            let kept: Vec<f64> = got.iter().map(|&i| rs[i as usize].cum_attn as f64).collect();
+            let min_kept = kept.iter().cloned().fold(f64::INFINITY, f64::min);
+            let dropped_max = (0..n as u32)
+                .filter(|i| !got.contains(i))
+                .map(|i| rs[i as usize].cum_attn as f64)
+                .fold(f64::NEG_INFINITY, f64::max);
+            if k > 0 && k < n {
+                assert!(min_kept >= dropped_max - 1e-12);
+            }
+        });
+    }
+}

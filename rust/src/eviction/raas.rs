@@ -1,0 +1,57 @@
+//! RaaS (Hu et al. 2025): timestamp-based eviction for long decoding —
+//! tokens with the *newest* "important" timestamps are retained; a token
+//! whose timestamp goes stale is evicted. LazyEviction adopts RaaS's
+//! timestamp rule (attention >= alpha ⇒ TS := t) but adds MRI on top;
+//! RaaS itself cannot distinguish a dead token from one mid-recurrence.
+
+use super::{top_k_by, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct Raas;
+
+impl Policy for Raas {
+    fn name(&self) -> String {
+        "raas".into()
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, _step: u32) -> bool {
+        live > budget
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, _step: u32) -> Vec<u32> {
+        let exclude = vec![false; records.len()];
+        top_k_by(records, &exclude, budget, |r| r.ts as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn newest_timestamps_survive() {
+        let mut rs: Vec<TokenRecord> = (0..5).map(|i| TokenRecord::new(i, i)).collect();
+        rs[0].ts = 50; // reactivated recently
+        rs[1].ts = 1;
+        rs[2].ts = 40;
+        rs[3].ts = 3;
+        rs[4].ts = 4;
+        let keep = Raas.select_keep(&rs, 3, 60);
+        let mut pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        pos.sort_unstable();
+        assert_eq!(pos, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn stale_recurring_token_is_lost() {
+        // the gap LazyEviction fixes: token 0 recurs every 30 steps but its
+        // TS is stale right before the next spike → RaaS evicts it
+        let mut rs: Vec<TokenRecord> = (0..3).map(|i| TokenRecord::new(i, i)).collect();
+        rs[0].ts = 10;
+        rs[0].mri = 30; // would recur around step 40
+        rs[1].ts = 35;
+        rs[2].ts = 36;
+        let keep = Raas.select_keep(&rs, 2, 39);
+        assert!(!keep.contains(&0));
+    }
+}

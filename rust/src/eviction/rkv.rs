@@ -1,0 +1,166 @@
+//! R-KV (Cai et al. 2025): redundancy-aware compression for reasoning —
+//! rank by importance (cumulative attention) but suppress tokens that are
+//! near-duplicates of already-kept ones. Strong on math traces (huge
+//! redundancy), weak where similar tokens are rare (paper Table 2).
+//!
+//! Similarity source: key sketches (cosine) when the engine provides them,
+//! else trace-provided `sim_group` ids (same group ⇒ similarity 1).
+
+use super::{recent_slots, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct RKv {
+    pub recent: usize,
+    /// Importance weight λ (1 ⇒ pure H2O-like, 0 ⇒ pure diversity).
+    pub lambda: f64,
+    /// Similarity above which a candidate is deferred as redundant.
+    pub tau: f64,
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    if a.is_empty() || a.len() != b.len() {
+        return 0.0;
+    }
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (x, y) in a.iter().zip(b.iter()) {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+fn similarity(a: &TokenRecord, b: &TokenRecord) -> f64 {
+    if a.sim_group != u32::MAX && a.sim_group == b.sim_group {
+        return 1.0;
+    }
+    cosine(&a.key_sketch, &b.key_sketch)
+}
+
+impl Policy for RKv {
+    fn name(&self) -> String {
+        format!("rkv(λ={},τ={})", self.lambda, self.tau)
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, _step: u32) -> bool {
+        live > budget
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, _step: u32) -> Vec<u32> {
+        let budget = budget.min(records.len());
+        let mut keep: Vec<u32> = Vec::with_capacity(budget);
+        let mut taken = vec![false; records.len()];
+
+        // recent window pinned first
+        for slot in recent_slots(records, self.recent.min(budget)) {
+            taken[slot as usize] = true;
+            keep.push(slot);
+        }
+
+        // candidates by importance, greedy accept unless redundant
+        let mut cand: Vec<u32> = (0..records.len() as u32)
+            .filter(|&i| !taken[i as usize])
+            .collect();
+        cand.sort_unstable_by(|&a, &b| {
+            let (ra, rb) = (&records[a as usize], &records[b as usize]);
+            rb.cum_attn
+                .partial_cmp(&ra.cum_attn)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(rb.pos.cmp(&ra.pos))
+        });
+        let mut deferred: Vec<u32> = Vec::new();
+        for &c in &cand {
+            if keep.len() >= budget {
+                break;
+            }
+            let max_sim = keep
+                .iter()
+                .map(|&k| similarity(&records[c as usize], &records[k as usize]))
+                .fold(0.0, f64::max);
+            // score blends importance and novelty; redundant ⇒ defer
+            if max_sim >= self.tau && self.lambda < 1.0 {
+                deferred.push(c);
+            } else {
+                keep.push(c);
+            }
+        }
+        // fill any remaining budget from deferred (still importance order)
+        for &c in &deferred {
+            if keep.len() >= budget {
+                break;
+            }
+            keep.push(c);
+        }
+        keep
+    }
+
+    fn step_cost(&self, live: usize, budget: usize, _step: u32) -> (u64, u64) {
+        if live > budget {
+            // pairwise similarity dominates: O(B * kept)
+            ((live * budget) as u64, super::ranking_cost(live))
+        } else {
+            (live as u64, 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(pos: u32, cum: f32, group: u32) -> TokenRecord {
+        let mut r = TokenRecord::new(pos, pos);
+        r.cum_attn = cum;
+        r.sim_group = group;
+        r
+    }
+
+    #[test]
+    fn redundant_tokens_deferred() {
+        // three high-importance tokens in the same group: only one kept
+        // until budget forces more
+        let rs = vec![
+            rec(0, 10.0, 1),
+            rec(1, 9.0, 1),
+            rec(2, 8.0, 1),
+            rec(3, 1.0, u32::MAX),
+            rec(4, 0.5, u32::MAX),
+        ];
+        let p = RKv { recent: 1, lambda: 0.6, tau: 0.9 };
+        let keep = p.select_keep(&rs, 3, 10);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        // recent(4) + best-of-group(0) + novel(3)
+        assert!(pos.contains(&4) && pos.contains(&0) && pos.contains(&3), "{pos:?}");
+    }
+
+    #[test]
+    fn fills_budget_from_deferred() {
+        let rs = vec![rec(0, 5.0, 1), rec(1, 4.0, 1), rec(2, 3.0, 1)];
+        let p = RKv { recent: 0, lambda: 0.6, tau: 0.9 };
+        let keep = p.select_keep(&rs, 3, 10);
+        assert_eq!(keep.len(), 3);
+    }
+
+    #[test]
+    fn cosine_similarity_path() {
+        let mut a = TokenRecord::new(0, 0);
+        a.key_sketch = vec![1.0, 0.0];
+        let mut b = TokenRecord::new(1, 1);
+        b.key_sketch = vec![1.0, 0.001];
+        assert!(similarity(&a, &b) > 0.99);
+        let mut c = TokenRecord::new(2, 2);
+        c.key_sketch = vec![0.0, 1.0];
+        assert!(similarity(&a, &c) < 0.01);
+    }
+
+    #[test]
+    fn no_sketch_no_group_means_novel() {
+        let a = TokenRecord::new(0, 0);
+        let b = TokenRecord::new(1, 1);
+        assert_eq!(similarity(&a, &b), 0.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! Scissorhands (Liu et al. 2023): persistence-of-importance — keep tokens
+//! that were important in a large fraction of their lifetime, plus recents.
+
+use super::{keep_with_pinned, recent_slots, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct Scissorhands {
+    pub recent: usize,
+}
+
+impl Scissorhands {
+    /// Persistence ratio: hits / age (tokens important in many of their
+    /// steps persist). Brand-new tokens get 1.0 (not instantly evictable).
+    fn persistence(r: &TokenRecord, step: u32) -> f64 {
+        let age = step.saturating_sub(r.born);
+        if age == 0 {
+            1.0
+        } else {
+            r.hits as f64 / age as f64
+        }
+    }
+}
+
+impl Policy for Scissorhands {
+    fn name(&self) -> String {
+        format!("scissorhands(recent={})", self.recent)
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, _step: u32) -> bool {
+        live > budget
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, step: u32) -> Vec<u32> {
+        let pinned = recent_slots(records, self.recent.min(budget));
+        keep_with_pinned(records, pinned, budget, |r| Self::persistence(r, step))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn persistent_tokens_survive() {
+        let mut rs: Vec<TokenRecord> = (0..6).map(|i| TokenRecord::new(i, i)).collect();
+        rs[1].hits = 9; // almost always important
+        rs[2].hits = 1;
+        let p = Scissorhands { recent: 1 };
+        let keep = p.select_keep(&rs, 3, 10);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        assert!(pos.contains(&1));
+        assert!(pos.contains(&5)); // recent
+    }
+
+    #[test]
+    fn new_token_not_instantly_evicted() {
+        let r = TokenRecord::new(10, 10);
+        assert_eq!(Scissorhands::persistence(&r, 10), 1.0);
+    }
+
+    #[test]
+    fn persistence_normalizes_by_age() {
+        let mut old = TokenRecord::new(0, 0);
+        old.hits = 5;
+        let mut young = TokenRecord::new(90, 90);
+        young.hits = 5;
+        // same hits, younger → higher ratio
+        assert!(
+            Scissorhands::persistence(&young, 100) > Scissorhands::persistence(&old, 100)
+        );
+    }
+}

@@ -1,0 +1,266 @@
+//! MRI-centric importance score (paper §4 Eq. 2 + Appendix D score forms).
+//!
+//! H1 reflects the chance a token regains importance within the next window:
+//! larger Δt/MRI ⇒ less likely. H2 prioritizes *frequently* recurring tokens
+//! (small MRI). Appendix D sweeps five monotone-decreasing forms mapped into
+//! [0, 1]; sigmoid is the paper's default.
+//!
+//! Note on the printed H2: the paper writes H2 = 2σ(−1/(MRI−1)), which
+//! *increases* with MRI (0 at MRI=1, →1 as MRI→∞) while the prose says
+//! smaller MRI ⇒ more important. The formula — not the prose — is the one
+//! that works: tokens picking up incidental *local* attention acquire tiny
+//! MRIs (1–4) and would be rewarded forever by a decreasing H2, crowding out
+//! genuinely recurring tokens whose MRI equals their recurrence period.
+//! We therefore default to the literal formula and keep the prose-faithful
+//! monotone-decreasing variant as `H2Mode::Monotonic` for the Table-5
+//! extension ablation (benches/table5.rs, DESIGN.md §5).
+
+use crate::kvcache::TokenRecord;
+
+/// Monotone-decreasing squashing g: [0, ∞) → [0, 1], g(0) = 1 (App. D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreForm {
+    /// 2σ(−x)
+    Sigmoid,
+    /// exp(−x)
+    Exp,
+    /// 1 − tanh(x)
+    Tanh,
+    /// 1 / (1 + ln(1 + x))
+    Log,
+    /// 1 / (1 + x)
+    Inverse,
+}
+
+impl ScoreForm {
+    pub fn parse(s: &str) -> Option<ScoreForm> {
+        Some(match s {
+            "sigmoid" => ScoreForm::Sigmoid,
+            "exp" => ScoreForm::Exp,
+            "tanh" => ScoreForm::Tanh,
+            "log" => ScoreForm::Log,
+            "inverse" => ScoreForm::Inverse,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScoreForm::Sigmoid => "sigmoid",
+            ScoreForm::Exp => "exp",
+            ScoreForm::Tanh => "tanh",
+            ScoreForm::Log => "log",
+            ScoreForm::Inverse => "inverse",
+        }
+    }
+
+    /// Evaluate g(x) for x >= 0.
+    #[inline]
+    pub fn eval(&self, x: f64) -> f64 {
+        match self {
+            ScoreForm::Sigmoid => 2.0 / (1.0 + x.exp()),
+            ScoreForm::Exp => (-x).exp(),
+            ScoreForm::Tanh => 1.0 - x.tanh(),
+            ScoreForm::Log => 1.0 / (1.0 + (1.0 + x).ln()),
+            ScoreForm::Inverse => 1.0 / (1.0 + x),
+        }
+    }
+}
+
+/// H2 interpretation (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum H2Mode {
+    /// g(1/(MRI−1)) — the paper's printed formula (default; 0 at MRI<=1).
+    Literal,
+    /// g((MRI − 1)/κ): decreasing in MRI — the heuristic as *worded*
+    /// (rewards small-MRI tokens; measurably worse, see table5).
+    Monotonic,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreConfig {
+    pub h1_form: ScoreForm,
+    pub h2_form: ScoreForm,
+    pub h2_mode: H2Mode,
+    /// κ in the monotonic H2 (dynamic-range knob).
+    pub h2_kappa: f64,
+    pub use_h1: bool,
+    pub use_h2: bool,
+}
+
+impl Default for ScoreConfig {
+    fn default() -> Self {
+        ScoreConfig {
+            h1_form: ScoreForm::Sigmoid,
+            h2_form: ScoreForm::Sigmoid,
+            h2_mode: H2Mode::Literal,
+            h2_kappa: 8.0,
+            use_h1: true,
+            use_h2: true,
+        }
+    }
+}
+
+/// H1-score: g(Δt / MRI). For MRI = 0 (never reactivated) the ratio is +∞
+/// for Δt > 0 (score → 0) and we define Δt = 0 ⇒ 1 (just-created tokens are
+/// not instantly evictable).
+#[inline]
+pub fn h1(rec: &TokenRecord, step: u32, cfg: &ScoreConfig) -> f64 {
+    let dt = step.saturating_sub(rec.ts) as f64;
+    if rec.mri == 0 {
+        return if dt == 0.0 { 1.0 } else { 0.0 };
+    }
+    cfg.h1_form.eval(dt / rec.mri as f64)
+}
+
+/// H2-score: 0 for MRI = 0 (paper); otherwise per `h2_mode`. The literal
+/// mode generalizes 2σ(−1/(MRI−1)) to the Table-5 form family as
+/// g(1/(MRI−1)).
+#[inline]
+pub fn h2(rec: &TokenRecord, cfg: &ScoreConfig) -> f64 {
+    if rec.mri == 0 {
+        return 0.0;
+    }
+    match cfg.h2_mode {
+        H2Mode::Monotonic => cfg.h2_form.eval((rec.mri as f64 - 1.0) / cfg.h2_kappa),
+        H2Mode::Literal => {
+            let m = rec.mri as f64;
+            if m <= 1.0 {
+                0.0
+            } else {
+                cfg.h2_form.eval(1.0 / (m - 1.0))
+            }
+        }
+    }
+}
+
+/// Eq. 2: I_t[i] = H1 + H2 (H1 alone when MRI = 0). The `use_*` switches
+/// drive the Table-4 ablation.
+#[inline]
+pub fn importance(rec: &TokenRecord, step: u32, cfg: &ScoreConfig) -> f64 {
+    let mut s = 0.0;
+    if cfg.use_h1 {
+        s += h1(rec, step, cfg);
+    }
+    if cfg.use_h2 && rec.mri != 0 {
+        s += h2(rec, cfg);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::TokenRecord;
+
+    fn rec(ts: u32, mri: u32) -> TokenRecord {
+        let mut r = TokenRecord::new(0, 0);
+        r.ts = ts;
+        r.mri = mri;
+        r
+    }
+
+    #[test]
+    fn forms_decreasing_and_bounded() {
+        for f in [
+            ScoreForm::Sigmoid,
+            ScoreForm::Exp,
+            ScoreForm::Tanh,
+            ScoreForm::Log,
+            ScoreForm::Inverse,
+        ] {
+            assert!((f.eval(0.0) - 1.0).abs() < 1e-12, "{f:?} g(0) != 1");
+            let mut prev = f.eval(0.0);
+            for i in 1..50 {
+                let x = i as f64 * 0.5;
+                let y = f.eval(x);
+                assert!(y <= prev + 1e-12, "{f:?} not decreasing at {x}");
+                assert!((0.0..=1.0).contains(&y));
+                prev = y;
+            }
+        }
+    }
+
+    #[test]
+    fn h1_larger_elapsed_smaller_score() {
+        let cfg = ScoreConfig::default();
+        let r = rec(10, 5);
+        let near = h1(&r, 12, &cfg); // Δt=2, Δt/MRI=0.4
+        let far = h1(&r, 40, &cfg); // Δt=30, Δt/MRI=6
+        assert!(near > far);
+    }
+
+    #[test]
+    fn h1_within_mri_stays_high() {
+        // paper's H1 intuition: Δt < MRI ⇒ still plausible to recur
+        let cfg = ScoreConfig::default();
+        let r = rec(100, 50);
+        assert!(h1(&r, 120, &cfg) > 0.5); // Δt/MRI = 0.4 ⇒ 2σ(-0.4) ≈ 0.8
+    }
+
+    #[test]
+    fn h1_mri_zero_cases() {
+        let cfg = ScoreConfig::default();
+        let r = rec(7, 0);
+        assert_eq!(h1(&r, 7, &cfg), 1.0);
+        assert_eq!(h1(&r, 8, &cfg), 0.0);
+    }
+
+    #[test]
+    fn h2_zero_when_never_activated() {
+        let cfg = ScoreConfig::default();
+        assert_eq!(h2(&rec(0, 0), &cfg), 0.0);
+    }
+
+    #[test]
+    fn h2_literal_matches_printed_formula() {
+        let cfg = ScoreConfig::default(); // literal is the default
+        assert_eq!(h2(&rec(0, 1), &cfg), 0.0);
+        let m2 = h2(&rec(0, 2), &cfg); // 2σ(-1) ≈ 0.538
+        assert!((m2 - 2.0 / (1.0 + 1f64.exp())).abs() < 1e-12);
+        assert!(h2(&rec(0, 50), &cfg) > m2); // increases with MRI
+    }
+
+    #[test]
+    fn h2_monotonic_variant_prefers_small_mri() {
+        let cfg = ScoreConfig {
+            h2_mode: H2Mode::Monotonic,
+            ..ScoreConfig::default()
+        };
+        assert!(h2(&rec(0, 1), &cfg) > h2(&rec(0, 10), &cfg));
+        assert!(h2(&rec(0, 10), &cfg) > h2(&rec(0, 100), &cfg));
+    }
+
+    #[test]
+    fn importance_eq2_composition() {
+        let cfg = ScoreConfig::default();
+        let active = rec(90, 10); // recently important, recurs often
+        let stale = rec(10, 3); // long past its MRI
+        let never = rec(0, 0);
+        let step = 100;
+        assert!(importance(&active, step, &cfg) > importance(&stale, step, &cfg));
+        assert!(importance(&stale, step, &cfg) >= importance(&never, step, &cfg));
+    }
+
+    #[test]
+    fn ablation_switches() {
+        let r = rec(90, 10);
+        let full = ScoreConfig::default();
+        let no_h1 = ScoreConfig {
+            use_h1: false,
+            ..full
+        };
+        let no_h2 = ScoreConfig {
+            use_h2: false,
+            ..full
+        };
+        let i_full = importance(&r, 100, &full);
+        assert!((importance(&r, 100, &no_h1) + importance(&r, 100, &no_h2) - i_full).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(ScoreForm::parse("tanh"), Some(ScoreForm::Tanh));
+        assert_eq!(ScoreForm::parse("nope"), None);
+    }
+}

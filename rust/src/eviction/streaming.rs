@@ -1,0 +1,85 @@
+//! StreamingLLM (Xiao et al. 2023): static retention of attention-sink
+//! (initial) tokens plus the most recent tokens. No attention needed —
+//! the paper's example of a rigid policy that cannot see recurring tokens.
+
+use super::{recent_slots, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct StreamingLlm {
+    /// Number of initial "sink" tokens pinned forever.
+    pub sink: usize,
+}
+
+impl Policy for StreamingLlm {
+    fn name(&self) -> String {
+        format!("streaming(sink={})", self.sink)
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, _step: u32) -> bool {
+        live > budget
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, _step: u32) -> Vec<u32> {
+        let budget = budget.min(records.len());
+        // sink = lowest positions
+        let mut by_pos: Vec<u32> = (0..records.len() as u32).collect();
+        by_pos.sort_unstable_by_key(|&i| records[i as usize].pos);
+        let sink_n = self.sink.min(budget);
+        let mut keep: Vec<u32> = by_pos[..sink_n].to_vec();
+        let recent = recent_slots(records, budget - sink_n + sink_n); // oversample
+        for slot in recent {
+            if keep.len() >= budget {
+                break;
+            }
+            if !keep.contains(&slot) {
+                keep.push(slot);
+            }
+        }
+        keep
+    }
+
+    fn step_cost(&self, live: usize, budget: usize, _step: u32) -> (u64, u64) {
+        // no scoring; ranking = position sort when over budget
+        if live > budget {
+            (0, super::ranking_cost(live))
+        } else {
+            (0, 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs(n: usize) -> Vec<TokenRecord> {
+        (0..n).map(|i| TokenRecord::new(i as u32, i as u32)).collect()
+    }
+
+    #[test]
+    fn keeps_sink_and_recent() {
+        let p = StreamingLlm { sink: 2 };
+        let rs = recs(10);
+        let keep = p.select_keep(&rs, 5, 10);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        assert!(pos.contains(&0) && pos.contains(&1), "sinks kept: {pos:?}");
+        assert!(pos.contains(&9) && pos.contains(&8) && pos.contains(&7));
+        assert_eq!(keep.len(), 5);
+    }
+
+    #[test]
+    fn budget_one_keeps_one() {
+        let p = StreamingLlm { sink: 4 };
+        let rs = recs(10);
+        assert_eq!(p.select_keep(&rs, 1, 10).len(), 1);
+    }
+
+    #[test]
+    fn middle_tokens_evicted() {
+        let p = StreamingLlm { sink: 1 };
+        let rs = recs(100);
+        let keep = p.select_keep(&rs, 10, 100);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        assert!(!pos.contains(&50));
+    }
+}

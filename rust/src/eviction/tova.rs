@@ -1,0 +1,62 @@
+//! TOVA (Oren et al. 2024): per-step greedy eviction by *current* attention
+//! — the paper's representative of Current-Attention-based Eviction
+//! (Fig. 1a), which forgets recurring tokens in their low-attention phase.
+
+use super::{top_k_by, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct Tova;
+
+impl Policy for Tova {
+    fn name(&self) -> String {
+        "tova".into()
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, _step: u32) -> bool {
+        live > budget
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, _step: u32) -> Vec<u32> {
+        let exclude = vec![false; records.len()];
+        top_k_by(records, &exclude, budget, |r| r.last_attn as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_highest_current_attention() {
+        let mut rs: Vec<TokenRecord> =
+            (0..6).map(|i| TokenRecord::new(i, i)).collect();
+        for (i, a) in [0.1, 0.9, 0.05, 0.8, 0.2, 0.3].iter().enumerate() {
+            rs[i].last_attn = *a;
+        }
+        let p = Tova;
+        let keep = p.select_keep(&rs, 3, 10);
+        let mut pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        pos.sort_unstable();
+        assert_eq!(pos, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn forgets_low_attention_recurring_token() {
+        // the failure mode the paper illustrates: a token currently quiet
+        // is dropped even if it was important before
+        let mut rs: Vec<TokenRecord> = (0..3).map(|i| TokenRecord::new(i, i)).collect();
+        rs[0].cum_attn = 100.0; // historically dominant…
+        rs[0].last_attn = 0.0; // …but quiet now
+        rs[1].last_attn = 0.5;
+        rs[2].last_attn = 0.4;
+        let keep = Tova.select_keep(&rs, 2, 10);
+        assert!(!keep.contains(&0));
+    }
+
+    #[test]
+    fn evicts_only_over_budget() {
+        let p = Tova;
+        assert!(!p.should_evict(5, 5, 1));
+        assert!(p.should_evict(6, 5, 1));
+    }
+}

@@ -1,0 +1,122 @@
+//! Observation-window wrapper (Table 3 ablation): give *any* baseline the
+//! lagged-eviction mechanics — decisions every W steps, recent-W pinned —
+//! while its own score ranks the rest. Isolates how much of LazyEviction's
+//! gain comes from the window versus from the MRI-centric score.
+
+use super::{recent_slots, Policy};
+use crate::kvcache::TokenRecord;
+
+pub struct Windowed {
+    pub inner: Box<dyn Policy>,
+    pub window: usize,
+}
+
+impl Policy for Windowed {
+    fn name(&self) -> String {
+        format!("{}+window(W={})", self.inner.name(), self.window)
+    }
+
+    fn should_evict(&self, live: usize, budget: usize, step: u32) -> bool {
+        live > budget && step as usize % self.window.max(1) == 0
+    }
+
+    fn select_keep(&self, records: &[TokenRecord], budget: usize, step: u32) -> Vec<u32> {
+        let budget = budget.min(records.len());
+        let pinned = recent_slots(records, self.window.min(budget));
+        let mut taken = vec![false; records.len()];
+        let mut keep = Vec::with_capacity(budget);
+        for &p in &pinned {
+            taken[p as usize] = true;
+            keep.push(p);
+        }
+        if keep.len() >= budget {
+            keep.truncate(budget);
+            return keep;
+        }
+        // let the inner policy rank everything, then take its picks that
+        // are not already pinned until the budget is filled
+        let inner_keep = self.inner.select_keep(records, records.len(), step);
+        let inner_ranked = {
+            // inner returns its keep-set in rank order; fall back to the
+            // returned order
+            inner_keep
+        };
+        for slot in inner_ranked {
+            if keep.len() >= budget {
+                break;
+            }
+            if !taken[slot as usize] {
+                taken[slot as usize] = true;
+                keep.push(slot);
+            }
+        }
+        keep
+    }
+
+    fn step_cost(&self, live: usize, budget: usize, step: u32) -> (u64, u64) {
+        if self.should_evict(live, budget, step) {
+            let (s, r) = self.inner.step_cost(live, budget, step);
+            (s.max(live as u64), r.max(super::ranking_cost(live)))
+        } else {
+            // between decisions only O(live) accumulation
+            (live as u64, 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{build, PolicyParams};
+    use super::*;
+
+    fn recs(n: usize) -> Vec<TokenRecord> {
+        (0..n)
+            .map(|i| {
+                let mut r = TokenRecord::new(i as u32, i as u32);
+                r.cum_attn = (n - i) as f32; // older = heavier
+                r.last_attn = (n - i) as f32;
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lagged_trigger() {
+        let p = build("tova+window", &PolicyParams { window: 10, ..Default::default() }).unwrap();
+        assert!(p.should_evict(100, 50, 20));
+        assert!(!p.should_evict(100, 50, 21));
+    }
+
+    #[test]
+    fn recent_w_pinned_even_if_inner_hates_them() {
+        // inner=tova ranks by last_attn which is highest for OLD tokens here
+        let p = Windowed {
+            inner: Box::new(super::super::tova::Tova),
+            window: 3,
+        };
+        let rs = recs(10);
+        let keep = p.select_keep(&rs, 6, 30);
+        let pos: Vec<u32> = keep.iter().map(|&i| rs[i as usize].pos).collect();
+        for recent in [7, 8, 9] {
+            assert!(pos.contains(&recent), "{pos:?}");
+        }
+        // and the inner policy fills the rest with its favorites (old ones)
+        assert!(pos.contains(&0));
+        assert_eq!(keep.len(), 6);
+    }
+
+    #[test]
+    fn exact_budget_no_duplicates() {
+        let p = Windowed {
+            inner: Box::new(super::super::h2o::H2O { recent: 2 }),
+            window: 4,
+        };
+        let rs = recs(20);
+        let keep = p.select_keep(&rs, 9, 16);
+        assert_eq!(keep.len(), 9);
+        let mut sorted = keep.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 9);
+    }
+}

@@ -1,0 +1,272 @@
+//! Host-side KV cache bookkeeping for one sequence.
+//!
+//! The actual K/V tensors live on the PJRT device (runtime::ModelExecutor);
+//! this module owns the *metadata* the eviction policies operate on: one
+//! `TokenRecord` per live slot, compacted so live tokens always occupy slots
+//! `[0, len)` — which keeps the slot mask trivial and turns an eviction into
+//! a single device `gather` with the keep-list as indices.
+
+pub mod memory;
+
+/// Per-token tracking state. All per-token signals any of the implemented
+/// policies need are kept here so that compaction reorders them uniformly.
+#[derive(Clone, Debug)]
+pub struct TokenRecord {
+    /// Absolute position in the sequence (0-based; prompt included).
+    pub pos: u32,
+    /// Creation decoding step (== pos for self-generated tokens).
+    pub born: u32,
+    /// Last "important" step: updated to t whenever attention >= alpha
+    /// (RaaS-style timestamp; LazyEviction Eq. 1 input).
+    pub ts: u32,
+    /// Maximum Recurrence Interval (LazyEviction Eq. 1).
+    pub mri: u32,
+    /// Attention score from the most recent step (TOVA).
+    pub last_attn: f32,
+    /// Cumulative attention (H2O heavy-hitter score).
+    pub cum_attn: f32,
+    /// Number of steps with attention >= alpha (Scissorhands persistence).
+    pub hits: u32,
+    /// Key sketch for similarity-based policies (R-KV): layer-0 key vector,
+    /// empty when the producer cannot supply one.
+    pub key_sketch: Vec<f32>,
+    /// Trace-provided redundancy group (u32::MAX = none) — lets the
+    /// simulator model R-KV without materializing key vectors.
+    pub sim_group: u32,
+}
+
+impl TokenRecord {
+    pub fn new(pos: u32, step: u32) -> TokenRecord {
+        TokenRecord {
+            pos,
+            born: step,
+            ts: step,
+            mri: 0,
+            last_attn: 0.0,
+            cum_attn: 0.0,
+            hits: 0,
+            key_sketch: Vec::new(),
+            sim_group: u32::MAX,
+        }
+    }
+
+    pub fn with_sketch(mut self, sketch: Vec<f32>) -> TokenRecord {
+        self.key_sketch = sketch;
+        self
+    }
+
+    pub fn with_group(mut self, g: u32) -> TokenRecord {
+        self.sim_group = g;
+        self
+    }
+}
+
+/// An eviction event (kept for analysis/benches when logging is enabled).
+#[derive(Clone, Debug)]
+pub struct Eviction {
+    pub step: u32,
+    pub pos: u32,
+}
+
+/// Compacted per-sequence slot state.
+#[derive(Clone, Debug)]
+pub struct SeqKv {
+    pub capacity: usize,
+    records: Vec<TokenRecord>,
+    pub log_evictions: bool,
+    pub evictions: Vec<Eviction>,
+    /// Peak live count (memory accounting).
+    pub peak_live: usize,
+}
+
+impl SeqKv {
+    pub fn new(capacity: usize) -> SeqKv {
+        SeqKv {
+            capacity,
+            records: Vec::with_capacity(capacity),
+            log_evictions: false,
+            evictions: Vec::new(),
+            peak_live: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.records.len() >= self.capacity
+    }
+
+    pub fn records(&self) -> &[TokenRecord] {
+        &self.records
+    }
+
+    pub fn records_mut(&mut self) -> &mut [TokenRecord] {
+        &mut self.records
+    }
+
+    /// Append a token at the next free slot; returns its slot index.
+    pub fn push(&mut self, rec: TokenRecord) -> usize {
+        assert!(
+            self.records.len() < self.capacity,
+            "SeqKv overflow: len {} == capacity {}",
+            self.records.len(),
+            self.capacity
+        );
+        self.records.push(rec);
+        self.peak_live = self.peak_live.max(self.records.len());
+        self.records.len() - 1
+    }
+
+    /// Apply a keep-set (slot indices into the current layout, any order).
+    /// Records are reordered to match; the same list must be fed to the
+    /// device `gather`. Returns the evicted positions.
+    pub fn apply_keep(&mut self, keep: &[u32], step: u32) -> Vec<u32> {
+        debug_assert!(keep.len() <= self.records.len());
+        let mut kept_flags = vec![false; self.records.len()];
+        let mut new_records = Vec::with_capacity(keep.len());
+        for &slot in keep {
+            let slot = slot as usize;
+            assert!(slot < self.records.len(), "keep index {slot} out of range");
+            assert!(!kept_flags[slot], "duplicate keep index {slot}");
+            kept_flags[slot] = true;
+            new_records.push(self.records[slot].clone());
+        }
+        let mut evicted = Vec::new();
+        for (slot, kept) in kept_flags.iter().enumerate() {
+            if !kept {
+                evicted.push(self.records[slot].pos);
+                if self.log_evictions {
+                    self.evictions.push(Eviction {
+                        step,
+                        pos: self.records[slot].pos,
+                    });
+                }
+            }
+        }
+        self.records = new_records;
+        evicted
+    }
+
+    /// Build the device gather index vector: keep-list followed by identity
+    /// padding (slot values past `len` are never read thanks to the mask).
+    pub fn gather_indices(&self, keep: &[u32]) -> Vec<i32> {
+        let mut idx: Vec<i32> = keep.iter().map(|&k| k as i32).collect();
+        let mut fill = keep.len();
+        while idx.len() < self.capacity {
+            idx.push(fill as i32 % self.capacity as i32);
+            fill += 1;
+        }
+        idx
+    }
+
+    /// Slot mask for the step executable: 1.0 for live slots [0, len).
+    pub fn slot_mask(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.capacity);
+        let n = self.records.len();
+        out[..n].fill(1.0);
+        out[n..].fill(0.0);
+    }
+
+    /// Does the live set contain this absolute position?
+    pub fn contains_pos(&self, pos: u32) -> bool {
+        self.records.iter().any(|r| r.pos == pos)
+    }
+
+    pub fn clear(&mut self) {
+        self.records.clear();
+        self.evictions.clear();
+        self.peak_live = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_with(n: usize) -> SeqKv {
+        let mut s = SeqKv::new(16);
+        for i in 0..n {
+            s.push(TokenRecord::new(i as u32, i as u32));
+        }
+        s
+    }
+
+    #[test]
+    fn push_assigns_sequential_slots() {
+        let s = seq_with(5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.records()[3].pos, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn push_over_capacity_panics() {
+        let mut s = SeqKv::new(2);
+        s.push(TokenRecord::new(0, 0));
+        s.push(TokenRecord::new(1, 1));
+        s.push(TokenRecord::new(2, 2));
+    }
+
+    #[test]
+    fn apply_keep_compacts_in_order() {
+        let mut s = seq_with(6);
+        let evicted = s.apply_keep(&[5, 0, 3], 10);
+        assert_eq!(s.len(), 3);
+        assert_eq!(
+            s.records().iter().map(|r| r.pos).collect::<Vec<_>>(),
+            vec![5, 0, 3]
+        );
+        assert_eq!(evicted, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn eviction_log() {
+        let mut s = seq_with(4);
+        s.log_evictions = true;
+        s.apply_keep(&[0, 1], 9);
+        assert_eq!(s.evictions.len(), 2);
+        assert_eq!(s.evictions[0].step, 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_keep_rejected() {
+        let mut s = seq_with(4);
+        s.apply_keep(&[1, 1], 0);
+    }
+
+    #[test]
+    fn gather_indices_padded() {
+        let s = seq_with(6);
+        let idx = s.gather_indices(&[5, 0, 3]);
+        assert_eq!(idx.len(), 16);
+        assert_eq!(&idx[..3], &[5, 0, 3]);
+        assert_eq!(idx[3], 3); // identity-ish padding
+    }
+
+    #[test]
+    fn slot_mask_matches_len() {
+        let s = seq_with(4);
+        let mut m = vec![9.0; 16];
+        s.slot_mask(&mut m);
+        assert_eq!(&m[..5], &[1.0, 1.0, 1.0, 1.0, 0.0]);
+        assert!(m[5..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn peak_live_tracks_high_water() {
+        let mut s = seq_with(6);
+        s.apply_keep(&[0, 1], 0);
+        assert_eq!(s.peak_live, 6);
+        for i in 6..9 {
+            s.push(TokenRecord::new(i, i));
+        }
+        assert_eq!(s.peak_live, 6.max(5));
+    }
+}

@@ -1,0 +1,33 @@
+//! # LazyEviction — lagged KV eviction for efficient long reasoning
+//!
+//! A three-layer serving stack reproducing *LazyEviction: Lagged KV Eviction
+//! with Attention Pattern Observation for Efficient Long Reasoning*
+//! (ACL 2026): a Rust request coordinator (this crate) drives AOT-compiled
+//! JAX/Pallas model executables through PJRT, with the paper's
+//! observation-window lagged KV eviction (plus all of its baselines) as a
+//! first-class pluggable policy.
+//!
+//! Layer map (DESIGN.md §2):
+//! * [`runtime`] — PJRT client, artifact manifest, device-resident executor
+//! * [`kvcache`] + [`attention`] — slot records, TS/MRI tracking (Eq. 1)
+//! * [`eviction`] — LazyEviction (Eq. 2/5) and baselines
+//! * [`scheduler`] + [`coordinator`] + [`server`] — continuous batching,
+//!   decode loop, TCP front-end
+//! * [`trace`] + [`sim`] — synthetic TIR workloads, trace-driven replay,
+//!   fidelity/accuracy metrics for the paper's tables
+//! * [`bench_harness`] — table/figure regeneration harness
+//! * [`util`] — offline substrate (JSON, RNG, stats, CLI)
+
+pub mod attention;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod eviction;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod trace;
+pub mod util;

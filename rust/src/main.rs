@@ -1,0 +1,194 @@
+//! lazyevictiond — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   serve     --addr 127.0.0.1:8088 --policy lazy --budget 192 ...
+//!   generate  one-shot generation from a prompt (smoke/debug)
+//!   eval      run N reasoning samples through the engine, report accuracy
+//!   suggest-w print the paper's W rule for a dataset profile
+//!   info      artifact + engine-shape inventory
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use lazyeviction::bench_harness::{artifacts_dir, table::Table};
+use lazyeviction::coordinator::{Engine, EngineConfig, Request};
+use lazyeviction::eviction::PolicyParams;
+use lazyeviction::runtime::{Client, Manifest};
+use lazyeviction::trace::workload::{
+    dataset_profile, gen_reasoning_sample, model_profile, score_sample,
+};
+use lazyeviction::trace::{generator, mri};
+use lazyeviction::util::cli::Args;
+use lazyeviction::util::rng::Rng;
+
+fn engine_config_from(args: &Args) -> EngineConfig {
+    let mut params = PolicyParams::default();
+    params.window = args.usize_or("window", 25);
+    params.recent = args.usize_or("recent", params.window);
+    let mut cfg = EngineConfig {
+        batch: args.usize_or("batch", 1),
+        cache: args.usize_or("cache", 256),
+        budget: args.usize_or("budget", 192),
+        policy: args.str_or("policy", "lazy"),
+        params,
+        alpha: args.f64_or("alpha", 5e-4) as f32,
+        stop_char: '\0',
+        collect_sketches: false,
+        record_live: !args.bool_flag("no-record-live"),
+    };
+    cfg.collect_sketches = cfg.policy.starts_with("rkv");
+    if args.bool_flag("stop-newline") {
+        cfg.stop_char = '\n';
+    }
+    cfg
+}
+
+fn build_engine(args: &Args) -> Result<Engine> {
+    let dir = args.str_or("artifacts", artifacts_dir().to_string_lossy().as_ref());
+    let manifest = Manifest::load(&dir).context("loading manifest (run `make artifacts`)")?;
+    let client = Client::cpu()?;
+    let cfg = engine_config_from(args);
+    eprintln!(
+        "engine: batch={} cache={} budget={} policy={}",
+        cfg.batch, cfg.cache, cfg.budget, cfg.policy
+    );
+    Engine::new(&client, &manifest, cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let addr = args.str_or("addr", "127.0.0.1:8088");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    lazyeviction::server::serve(engine, &addr, shutdown)
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut engine = build_engine(args)?;
+    let prompt = args.str_or("prompt", "#A=3;B=7;C=2;\n>");
+    let max_new = args.usize_or("max-new", 64);
+    let responses = engine.run_all(vec![Request {
+        id: 1,
+        prompt: prompt.clone(),
+        template: args.str_or("template", ""),
+        max_new,
+    }])?;
+    for r in responses {
+        println!("prompt : {prompt:?}");
+        println!("output : {:?}", r.text);
+        println!(
+            "finish : {} ({} tokens, {:.1} ms total, ttft {:.1} ms, {} evictions)",
+            r.finish.as_str(),
+            r.metrics.tokens_out,
+            r.metrics.total_s * 1e3,
+            r.metrics.ttft_s * 1e3,
+            r.metrics.evictions
+        );
+    }
+    let m = &engine.metrics;
+    eprintln!(
+        "steps: {} decode, mean {:.2} ms, throughput {:.1} tok/s",
+        m.step_latencies.len(),
+        m.step_summary_ms().mean,
+        m.throughput()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut engine = build_engine(args)?;
+    let n = args.usize_or("samples", 16);
+    let n_facts = args.usize_or("facts", 4);
+    let n_queries = args.usize_or("queries", 8);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let mut samples = Vec::new();
+    let mut reqs = Vec::new();
+    for i in 0..n {
+        let s = gen_reasoning_sample(&mut rng, n_facts, n_queries);
+        reqs.push(Request {
+            id: i as u64,
+            prompt: s.prompt.clone(),
+            template: s.template.clone(),
+            max_new: s.template.chars().count() + 4,
+        });
+        samples.push(s);
+    }
+    let responses = engine.run_all(reqs)?;
+    let mut total_acc = 0.0;
+    for r in &responses {
+        let s = &samples[r.id as usize];
+        total_acc += score_sample(s, &r.hole_predictions);
+    }
+    let m = &engine.metrics;
+    println!(
+        "eval: {} samples, hole accuracy {:.1}%, throughput {:.1} tok/s, mean step {:.2} ms",
+        responses.len(),
+        100.0 * total_acc / responses.len().max(1) as f64,
+        m.throughput(),
+        m.step_summary_ms().mean
+    );
+    Ok(())
+}
+
+fn cmd_suggest_w(args: &Args) -> Result<()> {
+    let ds = args.str_or("dataset", "gsm8k");
+    let model = args.str_or("model", "ds-llama-8b");
+    let n = args.usize_or("samples", 8);
+    let wp = dataset_profile(&ds);
+    let mp = model_profile(&model);
+    let traces: Vec<_> = (0..n as u64)
+        .map(|s| generator::generate(&wp, &mp, s))
+        .collect();
+    let w = mri::suggest_window(&traces, mp.alpha, args.f64_or("pct", 0.8));
+    let frac = mri::recurrence_fraction(&traces, mp.alpha);
+    println!(
+        "dataset={ds} model={model}: recurrence fraction {:.1}%, suggested W = {w}",
+        frac * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", artifacts_dir().to_string_lossy().as_ref());
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "model: vocab={} d_model={} layers={} heads={} d_head={} (charset {} chars)",
+        manifest.model.vocab,
+        manifest.model.d_model,
+        manifest.model.n_layers,
+        manifest.model.n_heads,
+        manifest.model.d_head,
+        manifest.charset.chars().count()
+    );
+    let mut t = Table::new(&["kind", "name", "batch", "cache", "prefill"]);
+    for v in &manifest.variants {
+        t.row(vec![
+            format!("{:?}", v.kind),
+            v.name.clone(),
+            v.batch.to_string(),
+            v.cache.to_string(),
+            v.prefill.to_string(),
+        ]);
+    }
+    t.print();
+    println!("engine shapes: {:?}", manifest.engine_shapes());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("suggest-w") => cmd_suggest_w(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: lazyevictiond <serve|generate|eval|suggest-w|info> [--flags]\n\
+                 common flags: --artifacts DIR --policy P --budget B --cache S --batch N --window W"
+            );
+            std::process::exit(2);
+        }
+    }
+}

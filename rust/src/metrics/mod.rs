@@ -1,0 +1,112 @@
+//! Serving metrics: step latencies, per-request timing, throughput counters.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Rolling recorder for one engine's decode loop.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    /// Wall time of each decode step (seconds).
+    pub step_latencies: Vec<f64>,
+    /// Wall time of each prefill (seconds).
+    pub prefill_latencies: Vec<f64>,
+    /// Wall time spent inside eviction decisions (seconds).
+    pub eviction_time: f64,
+    pub eviction_count: u64,
+    /// Tokens produced (all rows).
+    pub tokens_out: u64,
+    /// Live-token counts sampled per step (for memory curves), per row.
+    pub live_counts: Vec<usize>,
+    started: Option<Instant>,
+    pub wall: f64,
+}
+
+impl EngineMetrics {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.wall += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    pub fn record_step(&mut self, d: Duration, new_tokens: u64) {
+        self.step_latencies.push(d.as_secs_f64());
+        self.tokens_out += new_tokens;
+    }
+
+    pub fn record_prefill(&mut self, d: Duration) {
+        self.prefill_latencies.push(d.as_secs_f64());
+    }
+
+    pub fn record_eviction(&mut self, d: Duration) {
+        self.eviction_time += d.as_secs_f64();
+        self.eviction_count += 1;
+    }
+
+    /// Decode throughput in tokens/second over recorded steps.
+    pub fn throughput(&self) -> f64 {
+        let total: f64 = self.step_latencies.iter().sum();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / total
+        }
+    }
+
+    /// Mean per-token decode latency in ms.
+    pub fn avg_latency_ms(&self) -> f64 {
+        if self.tokens_out == 0 {
+            return f64::NAN;
+        }
+        self.step_latencies.iter().sum::<f64>() * 1e3 / self.tokens_out as f64
+    }
+
+    pub fn step_summary_ms(&self) -> Summary {
+        let ms: Vec<f64> = self.step_latencies.iter().map(|x| x * 1e3).collect();
+        Summary::of(&ms)
+    }
+}
+
+/// Per-request timing captured by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct RequestMetrics {
+    pub queued_s: f64,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub tokens_out: usize,
+    pub evictions: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = EngineMetrics::default();
+        m.record_step(Duration::from_millis(10), 4);
+        m.record_step(Duration::from_millis(10), 4);
+        assert!((m.throughput() - 400.0).abs() < 1.0);
+        assert!((m.avg_latency_ms() - 2.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.throughput(), 0.0);
+        assert!(m.avg_latency_ms().is_nan());
+    }
+
+    #[test]
+    fn wall_clock_accumulates() {
+        let mut m = EngineMetrics::default();
+        m.start();
+        std::thread::sleep(Duration::from_millis(5));
+        m.stop();
+        assert!(m.wall >= 0.004);
+    }
+}

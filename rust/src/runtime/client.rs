@@ -1,0 +1,105 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO *text* (python/compile/aot.py): jax >= 0.5 emits
+//! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly (see /opt/xla-example/README.md).
+//!
+//! ## Upload-safety gotcha (hard-won)
+//! `PjRtClient::buffer_from_host_literal` maps to `BufferFromHostLiteral`,
+//! which is **asynchronous**: the literal must outlive the device copy, but
+//! the crate returns immediately and Rust drops the temporary — a
+//! use-after-free that corrupts uploads nondeterministically (we observed
+//! both segfaults and `literal.size_bytes() == b->size()` check failures).
+//! All uploads here therefore go through `buffer_from_host_buffer`, whose C
+//! shim uses `HostBufferSemantics::kImmutableOnlyDuringCall` — a synchronous
+//! copy. (`execute::<Literal>` is safe too: its shim awaits the transfer.)
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub struct Client {
+    inner: xla::PjRtClient,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        Ok(Client {
+            inner: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_file(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Upload a host f32 tensor as a device buffer (synchronous copy).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.inner
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Upload a host i32 tensor as a device buffer (synchronous copy).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.inner
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+
+    /// Upload a scalar i32.
+    pub fn upload_i32_scalar(&self, x: i32) -> Result<xla::PjRtBuffer> {
+        self.inner
+            .buffer_from_host_buffer(&[x], &[], None)
+            .context("uploading i32 scalar")
+    }
+}
+
+/// Build an f32 literal with the given logical dims (test helpers / the
+/// literal-based `execute` path, which synchronizes internally).
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(
+        n as usize == data.len(),
+        "literal_f32: {} elements for dims {:?}",
+        data.len(),
+        dims
+    );
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal with the given logical dims.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(
+        n as usize == data.len(),
+        "literal_i32: {} elements for dims {:?}",
+        data.len(),
+        dims
+    );
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}

@@ -1,0 +1,293 @@
+//! ModelExecutor: device-resident KV serving of one engine shape (B, S).
+//!
+//! The KV cache K/V live as PJRT device buffers for the whole generation;
+//! `step` feeds them (plus the once-uploaded weights) by reference via
+//! `execute_b`, and the cache-maintenance executables (`append`, `gather`,
+//! `insert`) are single-output so their results chain device-side without a
+//! host round-trip. Only small tensors cross the host boundary each step:
+//! slot_mask/token/pos up; logits + aggregated attention + per-layer new K/V
+//! rows down. This is the L3 hot path.
+
+use anyhow::{Context, Result};
+
+use super::client::Client;
+use super::manifest::{Manifest, Variant, VariantKind};
+
+/// Host-side copy of one decode step's outputs.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// [B * V] row-major.
+    pub logits: Vec<f32>,
+    /// [B * S] aggregated slot attention (mean over layers of max over heads)
+    /// — or [L * H * S] per-layer/head for the trace variant (B = 1).
+    pub attn: Vec<f32>,
+    /// [B * L * H * dh] current token keys (RoPE applied).
+    pub k_new: Vec<f32>,
+    /// [B * L * H * dh] current token values.
+    pub v_new: Vec<f32>,
+}
+
+/// Host-side copy of a prefill's outputs (batch-1 executable).
+#[derive(Debug)]
+pub struct PrefillOut {
+    /// [L * H * S * dh] — ready for `insert`.
+    pub k_seq: Vec<f32>,
+    pub v_seq: Vec<f32>,
+    /// [P] last-valid-row aggregated attention over prompt tokens.
+    pub attn_last: Vec<f32>,
+    /// [V] logits at the last valid position.
+    pub logits_last: Vec<f32>,
+}
+
+pub struct ModelExecutor {
+    pub batch: usize,
+    pub cache: usize,
+    pub prefill_bucket: usize,
+    dims: super::manifest::ModelDims,
+
+    client: xla::PjRtClient,
+    step_exe: xla::PjRtLoadedExecutable,
+    append_exe: xla::PjRtLoadedExecutable,
+    gather_exe: xla::PjRtLoadedExecutable,
+    insert_exe: xla::PjRtLoadedExecutable,
+    prefill_exe: xla::PjRtLoadedExecutable,
+
+    weights: Vec<xla::PjRtBuffer>,
+    k_cache: xla::PjRtBuffer,
+    v_cache: xla::PjRtBuffer,
+
+    /// Cumulative count of PJRT executions, by kind (perf accounting).
+    pub exec_counts: ExecCounts,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecCounts {
+    pub step: u64,
+    pub append: u64,
+    pub gather: u64,
+    pub insert: u64,
+    pub prefill: u64,
+}
+
+fn take_single(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<xla::PjRtBuffer> {
+    let replica = out
+        .into_iter()
+        .next()
+        .context("executable returned no replicas")?;
+    anyhow::ensure!(replica.len() == 1, "expected single-output executable");
+    Ok(replica.into_iter().next().unwrap())
+}
+
+impl ModelExecutor {
+    /// Compile + load everything for engine shape (batch, cache).
+    pub fn new(client: &Client, manifest: &Manifest, batch: usize, cache: usize) -> Result<Self> {
+        Self::new_inner(client, manifest, batch, cache, false)
+    }
+
+    /// Trace-mode executor: the step executable is the `trace` variant whose
+    /// attention output is per-layer/per-head [L,H,S] (batch 1) — used by the
+    /// Fig. 2/3 analyses on the real model.
+    pub fn new_trace(client: &Client, manifest: &Manifest, cache: usize) -> Result<Self> {
+        Self::new_inner(client, manifest, 1, cache, true)
+    }
+
+    fn new_inner(
+        client: &Client,
+        manifest: &Manifest,
+        batch: usize,
+        cache: usize,
+        trace_mode: bool,
+    ) -> Result<Self> {
+        let get = |kind: VariantKind, b: usize| -> Result<&Variant> {
+            manifest.find(kind.clone(), b, cache).ok_or_else(|| {
+                anyhow::anyhow!("manifest has no {kind:?} variant for b{b} s{cache}")
+            })
+        };
+        let compile = |v: &Variant| client.compile_file(manifest.dir.join(&v.file));
+
+        // LAZYEVICTION_FUSED=1 selects the XLA-fused-attention step variant
+        // (2.5x faster under CPU PJRT; Pallas remains the default/verified
+        // path). Falls back to the Pallas step when the variant is absent.
+        let fused = std::env::var("LAZYEVICTION_FUSED").map(|v| v == "1").unwrap_or(false);
+        let step_kind = if trace_mode {
+            VariantKind::Trace
+        } else if fused && manifest.find(VariantKind::StepFused, batch, cache).is_some() {
+            VariantKind::StepFused
+        } else {
+            VariantKind::Step
+        };
+        let step_v = get(step_kind, batch)?;
+        let append_v = get(VariantKind::Append, batch)?;
+        let gather_v = get(VariantKind::Gather, batch)?;
+        let insert_v = get(VariantKind::Insert, batch)?;
+        let prefill_v = manifest
+            .variants
+            .iter()
+            .find(|v| v.kind == VariantKind::Prefill && v.cache == cache)
+            .context("no prefill variant for this cache size")?;
+
+        let dims = manifest.model.clone();
+        let weights_flat = manifest.load_weights()?;
+        let mut weights = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let data = &weights_flat[p.offset_f32..p.offset_f32 + p.size_f32];
+            weights.push(client.upload_f32(data, &p.shape)?);
+        }
+
+        let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.d_head);
+        let cache_len = batch * l * h * cache * dh;
+        let cache_dims = [batch, l, h, cache, dh];
+        let zeros = vec![0f32; cache_len];
+        let k_cache = client.upload_f32(&zeros, &cache_dims)?;
+        let v_cache = client.upload_f32(&zeros, &cache_dims)?;
+
+        Ok(ModelExecutor {
+            batch,
+            cache,
+            prefill_bucket: prefill_v.prefill,
+            dims,
+            client: client.raw().clone(),
+            step_exe: compile(step_v)?,
+            append_exe: compile(append_v)?,
+            gather_exe: compile(gather_v)?,
+            insert_exe: compile(insert_v)?,
+            prefill_exe: compile(prefill_v)?,
+            weights,
+            k_cache,
+            v_cache,
+            exec_counts: ExecCounts::default(),
+        })
+    }
+
+    pub fn dims(&self) -> &super::manifest::ModelDims {
+        &self.dims
+    }
+
+    /// KV bytes held on device for this engine (both caches).
+    pub fn device_cache_bytes(&self) -> usize {
+        2 * self.batch
+            * self.dims.n_layers
+            * self.dims.n_heads
+            * self.cache
+            * self.dims.d_head
+            * 4
+    }
+
+    /// Run one decode step. `slot_mask` is [B*S] (1.0 = live slot),
+    /// `tokens`/`pos` are per-batch-row current token and absolute position.
+    pub fn step(&mut self, slot_mask: &[f32], tokens: &[i32], pos: &[i32]) -> Result<StepOut> {
+        let (b, s) = (self.batch, self.cache);
+        anyhow::ensure!(slot_mask.len() == b * s && tokens.len() == b && pos.len() == b);
+        // kImmutableOnlyDuringCall semantics: synchronous copies (see client.rs)
+        let mask_buf = self.client.buffer_from_host_buffer(slot_mask, &[b, s], None)?;
+        let tok_buf = self.client.buffer_from_host_buffer(tokens, &[b], None)?;
+        let pos_buf = self.client.buffer_from_host_buffer(pos, &[b], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&self.k_cache);
+        args.push(&self.v_cache);
+        args.push(&mask_buf);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+
+        let out = self.step_exe.execute_b(&args)?;
+        self.exec_counts.step += 1;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "step: expected 4 outputs");
+        Ok(StepOut {
+            logits: parts[0].to_vec::<f32>()?,
+            attn: parts[1].to_vec::<f32>()?,
+            k_new: parts[2].to_vec::<f32>()?,
+            v_new: parts[3].to_vec::<f32>()?,
+        })
+    }
+
+    /// Append this step's K/V rows at per-row slot indices (device-side DUS).
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], idx: &[i32]) -> Result<()> {
+        let (b, l, h, dh) = (
+            self.batch,
+            self.dims.n_layers,
+            self.dims.n_heads,
+            self.dims.d_head,
+        );
+        anyhow::ensure!(idx.len() == b && k_new.len() == b * l * h * dh);
+        let new_dims = [b, l, h, dh];
+        let idx_buf = self.client.buffer_from_host_buffer(idx, &[b], None)?;
+
+        let kn = self.client.buffer_from_host_buffer(k_new, &new_dims, None)?;
+        let out = self.append_exe.execute_b(&[&self.k_cache, &kn, &idx_buf])?;
+        self.k_cache = take_single(out)?;
+
+        let vn = self.client.buffer_from_host_buffer(v_new, &new_dims, None)?;
+        let out = self.append_exe.execute_b(&[&self.v_cache, &vn, &idx_buf])?;
+        self.v_cache = take_single(out)?;
+        self.exec_counts.append += 2;
+        Ok(())
+    }
+
+    /// Compact/permute slots of both caches: new[b][j] = old[b][idx[b*S+j]].
+    pub fn gather(&mut self, idx: &[i32]) -> Result<()> {
+        let (b, s) = (self.batch, self.cache);
+        anyhow::ensure!(idx.len() == b * s);
+        let idx_buf = self.client.buffer_from_host_buffer(idx, &[b, s], None)?;
+        let out = self.gather_exe.execute_b(&[&self.k_cache, &idx_buf])?;
+        self.k_cache = take_single(out)?;
+        let out = self.gather_exe.execute_b(&[&self.v_cache, &idx_buf])?;
+        self.v_cache = take_single(out)?;
+        self.exec_counts.gather += 2;
+        Ok(())
+    }
+
+    /// Run the batch-1 prefill executable over a padded prompt bucket.
+    pub fn prefill(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillOut> {
+        let p = self.prefill_bucket;
+        anyhow::ensure!(tokens.len() == p && valid.len() == p);
+        let tok = self.client.buffer_from_host_buffer(tokens, &[1, p], None)?;
+        let val = self.client.buffer_from_host_buffer(valid, &[1, p], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok);
+        args.push(&val);
+        let out = self.prefill_exe.execute_b(&args)?;
+        self.exec_counts.prefill += 1;
+        let parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "prefill: expected 4 outputs");
+        Ok(PrefillOut {
+            k_seq: parts[0].to_vec::<f32>()?,
+            v_seq: parts[1].to_vec::<f32>()?,
+            attn_last: parts[2].to_vec::<f32>()?,
+            logits_last: parts[3].to_vec::<f32>()?,
+        })
+    }
+
+    /// Insert a prefilled sequence cache ([L,H,S,dh] host data) at batch row b.
+    pub fn insert(&mut self, k_seq: &[f32], v_seq: &[f32], row: usize) -> Result<()> {
+        let (l, h, s, dh) = (
+            self.dims.n_layers,
+            self.dims.n_heads,
+            self.cache,
+            self.dims.d_head,
+        );
+        anyhow::ensure!(k_seq.len() == l * h * s * dh && row < self.batch);
+        let seq_dims = [l, h, s, dh];
+        let row_buf = self.client.buffer_from_host_buffer(&[row as i32], &[], None)?;
+
+        let ks = self.client.buffer_from_host_buffer(k_seq, &seq_dims, None)?;
+        let out = self.insert_exe.execute_b(&[&self.k_cache, &ks, &row_buf])?;
+        self.k_cache = take_single(out)?;
+
+        let vs = self.client.buffer_from_host_buffer(v_seq, &seq_dims, None)?;
+        let out = self.insert_exe.execute_b(&[&self.v_cache, &vs, &row_buf])?;
+        self.v_cache = take_single(out)?;
+        self.exec_counts.insert += 2;
+        Ok(())
+    }
+
+    /// Download both caches to host (test/debug only — not on the hot path).
+    pub fn download_caches(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        Ok((
+            self.k_cache.to_literal_sync()?.to_vec::<f32>()?,
+            self.v_cache.to_literal_sync()?.to_vec::<f32>()?,
+        ))
+    }
+}

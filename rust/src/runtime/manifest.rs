@@ -1,0 +1,249 @@
+//! Parse `artifacts/manifest.json` — the contract between the Python compile
+//! path and this runtime (charset, model dims, parameter layout, executable
+//! variant table). See python/compile/aot.py.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub rope_base: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_f32: usize,
+    pub size_f32: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VariantKind {
+    Step,
+    /// XLA-fused-attention step (CPU fast path; see EXPERIMENTS §Perf).
+    StepFused,
+    Trace,
+    Prefill,
+    Append,
+    Gather,
+    Insert,
+}
+
+impl VariantKind {
+    fn parse(s: &str) -> anyhow::Result<VariantKind> {
+        Ok(match s {
+            "step" => VariantKind::Step,
+            "stepf" => VariantKind::StepFused,
+            "trace" => VariantKind::Trace,
+            "prefill" => VariantKind::Prefill,
+            "append" => VariantKind::Append,
+            "gather" => VariantKind::Gather,
+            "insert" => VariantKind::Insert,
+            other => anyhow::bail!("unknown variant kind '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub kind: VariantKind,
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub cache: usize,
+    pub prefill: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub charset: String,
+    pub model: ModelDims,
+    pub weights_file: String,
+    pub total_param_f32: usize,
+    pub params: Vec<ParamSpec>,
+    pub variants: Vec<Variant>,
+    pub prefill_bucket: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+
+        let m = j.req("model").map_err(anyhow::Error::new)?;
+        let model = ModelDims {
+            vocab: m.usize_at("vocab")?,
+            d_model: m.usize_at("d_model")?,
+            n_layers: m.usize_at("n_layers")?,
+            n_heads: m.usize_at("n_heads")?,
+            d_head: m.usize_at("d_head")?,
+            d_ff: m.usize_at("d_ff")?,
+            rope_base: m.f64_at("rope_base")?,
+        };
+
+        let mut params = Vec::new();
+        for p in j.arr_at("params")? {
+            params.push(ParamSpec {
+                name: p.str_at("name")?.to_string(),
+                shape: p
+                    .arr_at("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                offset_f32: p.usize_at("offset_f32")?,
+                size_f32: p.usize_at("size_f32")?,
+            });
+        }
+
+        let mut variants = Vec::new();
+        for v in j.arr_at("variants")? {
+            variants.push(Variant {
+                kind: VariantKind::parse(v.str_at("kind")?)?,
+                name: v.str_at("name")?.to_string(),
+                file: v.str_at("file")?.to_string(),
+                batch: v.usize_at("batch")?,
+                cache: v.usize_at("cache")?,
+                prefill: v.usize_at("prefill")?,
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            charset: j.str_at("charset")?.to_string(),
+            model,
+            weights_file: j.str_at("weights_file")?.to_string(),
+            total_param_f32: j.usize_at("total_param_f32")?,
+            params,
+            variants,
+            prefill_bucket: j.usize_at("prefill_bucket")?,
+        })
+    }
+
+    /// Find a variant by kind + engine shape. `prefill` is matched only for
+    /// prefill variants.
+    pub fn find(&self, kind: VariantKind, batch: usize, cache: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.kind == kind && v.batch == batch && v.cache == cache)
+    }
+
+    /// All distinct (batch, cache) engine shapes that have a full executable
+    /// set (step + append + gather + insert + a prefill at the same cache).
+    pub fn engine_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes: Vec<(usize, usize)> = Vec::new();
+        for v in self.variants.iter().filter(|v| v.kind == VariantKind::Step) {
+            let (b, s) = (v.batch, v.cache);
+            let complete = self.find(VariantKind::Append, b, s).is_some()
+                && self.find(VariantKind::Gather, b, s).is_some()
+                && self.find(VariantKind::Insert, b, s).is_some()
+                && self
+                    .variants
+                    .iter()
+                    .any(|p| p.kind == VariantKind::Prefill && p.cache == s);
+            if complete && !shapes.contains(&(b, s)) {
+                shapes.push((b, s));
+            }
+        }
+        shapes.sort_unstable();
+        shapes
+    }
+
+    /// Load weights.bin as a flat f32 vec (length-validated).
+    pub fn load_weights(&self) -> anyhow::Result<Vec<f32>> {
+        let path = self.dir.join(&self.weights_file);
+        let raw = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        anyhow::ensure!(
+            raw.len() == self.total_param_f32 * 4,
+            "weights.bin: expected {} f32 ({} bytes), got {} bytes",
+            self.total_param_f32,
+            self.total_param_f32 * 4,
+            raw.len()
+        );
+        let mut out = vec![0f32; self.total_param_f32];
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+          "charset": "01 >\n",
+          "model": {"vocab": 5, "d_model": 8, "n_layers": 1, "n_heads": 1,
+                    "d_head": 8, "d_ff": 16, "rope_base": 10000.0},
+          "weights_file": "weights.bin",
+          "total_param_f32": 10,
+          "params": [{"name": "embed", "shape": [5, 2], "offset_f32": 0, "size_f32": 10}],
+          "variants": [
+            {"kind": "step", "name": "step_b1_s8", "file": "step_b1_s8.hlo.txt",
+             "batch": 1, "cache": 8, "prefill": 0},
+            {"kind": "append", "name": "append_b1_s8", "file": "a.hlo.txt",
+             "batch": 1, "cache": 8, "prefill": 0},
+            {"kind": "gather", "name": "gather_b1_s8", "file": "g.hlo.txt",
+             "batch": 1, "cache": 8, "prefill": 0},
+            {"kind": "insert", "name": "insert_b1_s8", "file": "i.hlo.txt",
+             "batch": 1, "cache": 8, "prefill": 0},
+            {"kind": "prefill", "name": "prefill_b1_s8_p4", "file": "p.hlo.txt",
+             "batch": 1, "cache": 8, "prefill": 4}
+          ],
+          "prefill_bucket": 4
+        }"#
+        .to_string()
+    }
+
+    fn write_fixture(dir: &std::path::Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        let w: Vec<u8> = (0..10u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), w).unwrap();
+    }
+
+    #[test]
+    fn parse_and_find() {
+        let dir = std::env::temp_dir().join("lazyeviction_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 5);
+        assert_eq!(m.params[0].name, "embed");
+        assert!(m.find(VariantKind::Step, 1, 8).is_some());
+        assert!(m.find(VariantKind::Step, 2, 8).is_none());
+        assert_eq!(m.engine_shapes(), vec![(1, 8)]);
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let dir = std::env::temp_dir().join("lazyeviction_manifest_test2");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let w = m.load_weights().unwrap();
+        assert_eq!(w.len(), 10);
+        assert_eq!(w[3], 3.0);
+    }
+
+    #[test]
+    fn weights_size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("lazyeviction_manifest_test3");
+        write_fixture(&dir);
+        std::fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.load_weights().is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and run them on the hot path.
+//!
+//! `Client` wraps the PJRT CPU client; `Manifest` is the compile-path
+//! contract; `ModelExecutor` serves one (batch, cache) engine shape with
+//! device-resident KV buffers. Python never runs at request time.
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+
+pub use client::Client;
+pub use executor::{ModelExecutor, PrefillOut, StepOut};
+pub use manifest::{Manifest, ModelDims, Variant, VariantKind};

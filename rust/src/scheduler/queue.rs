@@ -1,0 +1,142 @@
+//! Thread-safe FIFO admission queue shared between the server front-end and
+//! the engine thread (std sync primitives; tokio is not in the offline set).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub prompt: String,
+    /// Forced-continuation template: after the prompt the engine feeds these
+    /// chars as inputs; `?` marks holes the model must fill (answer digits).
+    /// Empty ⇒ free-running generation.
+    pub template: String,
+    pub max_new: usize,
+    pub queued_at: Instant,
+}
+
+#[derive(Default)]
+struct Inner {
+    q: VecDeque<QueuedRequest>,
+    closed: bool,
+}
+
+/// MPSC-ish blocking queue with close semantics.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for RequestQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, req: QueuedRequest) {
+        let mut g = self.inner.lock().unwrap();
+        g.q.push_back(req);
+        self.cv.notify_one();
+    }
+
+    /// Non-blocking pop (engine polls between iterations).
+    pub fn try_pop(&self) -> Option<QueuedRequest> {
+        self.inner.lock().unwrap().q.pop_front()
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop_wait(&self) -> Option<QueuedRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.q.pop_front() {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            prompt: String::new(),
+            template: String::new(),
+            max_new: 8,
+            queued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new();
+        q.push(req(1));
+        q.push(req(2));
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert_eq!(q.try_pop().unwrap().id, 2);
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let q = Arc::new(RequestQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn pop_wait_gets_pushed_item() {
+        let q = Arc::new(RequestQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_wait().map(|r| r.id));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.push(req(42));
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn drain_then_close() {
+        let q = RequestQueue::new();
+        q.push(req(1));
+        q.close();
+        assert_eq!(q.pop_wait().unwrap().id, 1);
+        assert!(q.pop_wait().is_none());
+    }
+}

@@ -1,0 +1,223 @@
+//! TCP JSON-lines serving front-end (std::net + threads; the offline crate
+//! set has no tokio — at our batch sizes the engine is PJRT-compute-bound,
+//! so thread-per-connection I/O costs nothing measurable).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": "...", "template": "...", "max_new": 256}
+//!   ← {"id": 1, "text": "...", "holes": "…", "finish": "max_tokens",
+//!      "ttft_ms": 12.3, "total_ms": 456.7, "tokens": 256, "evictions": 3}
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{Engine, Request, Response};
+use crate::scheduler::{QueuedRequest, RequestQueue};
+use crate::util::json::Json;
+
+pub fn response_to_json(r: &Response) -> Json {
+    Json::obj()
+        .set("id", r.id as f64)
+        .set("text", r.text.as_str())
+        .set(
+            "holes",
+            r.hole_predictions.iter().collect::<String>(),
+        )
+        .set("finish", r.finish.as_str())
+        .set("ttft_ms", r.metrics.ttft_s * 1e3)
+        .set("total_ms", r.metrics.total_s * 1e3)
+        .set("tokens", r.metrics.tokens_out)
+        .set("evictions", r.metrics.evictions)
+}
+
+pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+    Ok(QueuedRequest {
+        id,
+        prompt: j.str_at("prompt")?.to_string(),
+        template: j
+            .get("template")
+            .and_then(|t| t.as_str())
+            .unwrap_or("")
+            .to_string(),
+        max_new: j
+            .get("max_new")
+            .and_then(|m| m.as_usize())
+            .unwrap_or(256),
+        queued_at: Instant::now(),
+    })
+}
+
+type Routes = Arc<Mutex<HashMap<u64, mpsc::Sender<Response>>>>;
+
+/// Serve an engine on `addr` until `shutdown` flips. The engine loop runs on
+/// the calling thread; connections are handled by spawned threads.
+pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    eprintln!(
+        "lazyevictiond: serving on {addr} (policy={}, budget={}, batch={})",
+        engine.policy_name(),
+        engine.cfg.budget,
+        engine.cfg.batch
+    );
+
+    let queue = Arc::new(RequestQueue::new());
+    let routes: Routes = Arc::new(Mutex::new(HashMap::new()));
+    let next_id = Arc::new(AtomicU64::new(1));
+
+    // acceptor thread
+    {
+        let queue = queue.clone();
+        let routes = routes.clone();
+        let next_id = next_id.clone();
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let queue = queue.clone();
+                        let routes = routes.clone();
+                        let next_id = next_id.clone();
+                        std::thread::spawn(move || handle_conn(s, queue, routes, next_id));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+    }
+
+    // engine loop (this thread)
+    while !shutdown.load(Ordering::Relaxed) {
+        let mut idle = true;
+        while engine.has_free_row() {
+            let Some(q) = queue.try_pop() else { break };
+            let queued_s = q.queued_at.elapsed().as_secs_f64();
+            let req = Request {
+                id: q.id,
+                prompt: q.prompt,
+                template: q.template,
+                max_new: q.max_new,
+            };
+            if let Err(e) = engine.submit(req, queued_s) {
+                eprintln!("submit error: {e:#}");
+            }
+            idle = false;
+        }
+        if engine.active() > 0 {
+            idle = false;
+            match engine.step() {
+                Ok(done) => {
+                    let mut routes = routes.lock().unwrap();
+                    for resp in done {
+                        if let Some(tx) = routes.remove(&resp.id) {
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+                Err(e) => eprintln!("engine step error: {e:#}"),
+            }
+        }
+        if idle {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, queue: Arc<RequestQueue>, routes: Routes, next_id: Arc<AtomicU64>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        let q = match parse_request(&line, id) {
+            Ok(q) => q,
+            Err(e) => {
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    Json::obj().set("error", format!("{e:#}")).to_string()
+                );
+                continue;
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        routes.lock().unwrap().insert(id, tx);
+        queue.push(q);
+        match rx.recv() {
+            Ok(resp) => {
+                if writeln!(writer, "{}", response_to_json(&resp).to_string()).is_err() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = peer;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_full() {
+        let q = parse_request(r##"{"prompt":"#A=1;\n>","template":"A=?;","max_new":32}"##, 7)
+            .unwrap();
+        assert_eq!(q.id, 7);
+        assert_eq!(q.prompt, "#A=1;\n>");
+        assert_eq!(q.template, "A=?;");
+        assert_eq!(q.max_new, 32);
+    }
+
+    #[test]
+    fn parse_request_defaults() {
+        let q = parse_request(r#"{"prompt":"x"}"#, 1).unwrap();
+        assert_eq!(q.template, "");
+        assert_eq!(q.max_new, 256);
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage() {
+        assert!(parse_request("not json", 1).is_err());
+        assert!(parse_request(r#"{"template":"x"}"#, 1).is_err());
+    }
+
+    #[test]
+    fn response_json_shape() {
+        use crate::coordinator::FinishReason;
+        use crate::metrics::RequestMetrics;
+        let r = Response {
+            id: 3,
+            text: "A+B=4;".into(),
+            hole_predictions: vec!['4'],
+            finish: FinishReason::TemplateDone,
+            metrics: RequestMetrics::default(),
+            live_curve: vec![],
+        };
+        let j = response_to_json(&r);
+        assert_eq!(j.str_at("holes").unwrap(), "4");
+        assert_eq!(j.str_at("finish").unwrap(), "template_done");
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.usize_at("id").unwrap(), 3);
+    }
+}

@@ -1,0 +1,107 @@
+//! Task-accuracy model on top of replay results (DESIGN.md §5.3).
+//!
+//! A sample's success probability is its model ceiling (FullKV accuracy of
+//! the (model, dataset) cell) damped per missed need: the paper's Finding 2
+//! says premature eviction of recurring tokens causes *catastrophic*
+//! degradation, so each missed need retains only `miss_survival` of the
+//! success probability. Fidelity loss adds a softer, graded penalty
+//! (attention-output error per Eq. 4 degrades reasoning even when no
+//! hard need is missed).
+
+use super::replay::ReplayResult;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AccuracyModel {
+    /// Success retention per missed critical need (hard failure mode).
+    pub miss_survival: f64,
+    /// Weight of the graded fidelity penalty.
+    pub fidelity_weight: f64,
+}
+
+impl Default for AccuracyModel {
+    fn default() -> Self {
+        AccuracyModel {
+            miss_survival: 0.25,
+            fidelity_weight: 0.35,
+        }
+    }
+}
+
+impl AccuracyModel {
+    /// Per-sample success probability in [0, base_acc/100].
+    pub fn sample_success(&self, base_acc: f64, r: &ReplayResult) -> f64 {
+        let hard = self.miss_survival.powi(r.needs_missed as i32);
+        let soft = 1.0 - self.fidelity_weight * (1.0 - r.fidelity());
+        (base_acc / 100.0) * hard * soft.clamp(0.0, 1.0)
+    }
+}
+
+/// Dataset-level accuracy (0–100) over many replayed samples.
+pub fn accuracy_over(
+    model: &AccuracyModel,
+    base_acc: f64,
+    results: &[ReplayResult],
+) -> f64 {
+    if results.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = results
+        .iter()
+        .map(|r| model.sample_success(base_acc, r))
+        .sum();
+    100.0 * s / results.len() as f64
+}
+
+/// Mean fidelity (0–1) over results — reported alongside accuracy.
+pub fn mean_fidelity(results: &[ReplayResult]) -> f64 {
+    if results.is_empty() {
+        return f64::NAN;
+    }
+    results.iter().map(|r| r.fidelity()).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(missed: usize, fid_lost2: f64) -> ReplayResult {
+        ReplayResult {
+            needs_total: 10,
+            needs_missed: missed,
+            mass2_total: 1.0,
+            mass2_lost: fid_lost2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn no_loss_recovers_base() {
+        let m = AccuracyModel::default();
+        let acc = accuracy_over(&m, 81.73, &[res(0, 0.0)]);
+        assert!((acc - 81.73).abs() < 1e-9);
+    }
+
+    #[test]
+    fn misses_are_catastrophic() {
+        let m = AccuracyModel::default();
+        let one = accuracy_over(&m, 80.0, &[res(1, 0.0)]);
+        let three = accuracy_over(&m, 80.0, &[res(3, 0.0)]);
+        assert!(one < 80.0 * 0.3);
+        assert!(three < one * 0.2);
+    }
+
+    #[test]
+    fn fidelity_penalty_is_graded() {
+        let m = AccuracyModel::default();
+        let a = accuracy_over(&m, 80.0, &[res(0, 0.04)]); // 20% L2 error
+        let b = accuracy_over(&m, 80.0, &[res(0, 0.25)]); // 50% L2 error
+        assert!(a > b && b > 50.0);
+    }
+
+    #[test]
+    fn averaging_over_samples() {
+        let m = AccuracyModel::default();
+        let acc = accuracy_over(&m, 100.0, &[res(0, 0.0), res(10, 0.0)]);
+        assert!(acc < 55.0 && acc > 45.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Trace-driven eviction simulation: run the *same* Policy implementations
+//! the engine uses over synthetic TIR traces, and score retention, attention
+//! fidelity (Eq. 4 proxy) and task accuracy. This powers the big table
+//! sweeps (Tables 1–5, 9, 10; Figs. 2, 5) where thousands of full real-model
+//! generations per cell would be prohibitive (DESIGN.md §5.3).
+
+pub mod accuracy;
+pub mod replay;
+
+pub use accuracy::{accuracy_over, AccuracyModel};
+pub use replay::{replay, ReplayConfig, ReplayResult};

@@ -1,0 +1,104 @@
+//! Byte-level tokenizer over the restricted charset shared with the Python
+//! compile path (manifest.json `charset`; index == token id).
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    chars: Vec<char>,
+    lookup: HashMap<char, u32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TokenizerError {
+    #[error("character {0:?} is not in the model charset")]
+    UnknownChar(char),
+    #[error("token id {0} out of range (vocab {1})")]
+    BadId(u32, usize),
+}
+
+impl Tokenizer {
+    pub fn new(charset: &str) -> Tokenizer {
+        let chars: Vec<char> = charset.chars().collect();
+        let lookup = chars.iter().enumerate().map(|(i, &c)| (c, i as u32)).collect();
+        Tokenizer { chars, lookup }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.chars.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>, TokenizerError> {
+        text.chars()
+            .map(|c| self.lookup.get(&c).copied().ok_or(TokenizerError::UnknownChar(c)))
+            .collect()
+    }
+
+    /// Encode, replacing unknown characters with space (lossy ingestion path).
+    pub fn encode_lossy(&self, text: &str) -> Vec<u32> {
+        let space = self.lookup.get(&' ').copied().unwrap_or(0);
+        text.chars()
+            .map(|c| self.lookup.get(&c).copied().unwrap_or(space))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> Result<String, TokenizerError> {
+        ids.iter()
+            .map(|&i| {
+                self.chars
+                    .get(i as usize)
+                    .copied()
+                    .ok_or(TokenizerError::BadId(i, self.chars.len()))
+            })
+            .collect()
+    }
+
+    pub fn id(&self, c: char) -> Option<u32> {
+        self.lookup.get(&c).copied()
+    }
+
+    pub fn char_of(&self, id: u32) -> Option<char> {
+        self.chars.get(id as usize).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CS: &str = "0123456789+-*=();ABCDEFGHIJKLMNOPQRSTUVWXYZ?.,# >\n";
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new(CS);
+        let s = "#A=3;B=7;\n>A+B=0;\n";
+        let ids = t.encode(s).unwrap();
+        assert_eq!(t.decode(&ids).unwrap(), s);
+    }
+
+    #[test]
+    fn ids_are_charset_indices() {
+        let t = Tokenizer::new(CS);
+        assert_eq!(t.encode("0").unwrap(), vec![0]);
+        assert_eq!(t.encode("9").unwrap(), vec![9]);
+        assert_eq!(t.id('+'), Some(10));
+    }
+
+    #[test]
+    fn unknown_char_errors() {
+        let t = Tokenizer::new(CS);
+        assert!(t.encode("abc").is_err());
+        assert_eq!(t.encode_lossy("a").len(), 1);
+    }
+
+    #[test]
+    fn bad_id_errors() {
+        let t = Tokenizer::new(CS);
+        assert!(t.decode(&[10_000]).is_err());
+    }
+
+    #[test]
+    fn vocab_size() {
+        assert_eq!(Tokenizer::new(CS).vocab(), CS.chars().count());
+    }
+}

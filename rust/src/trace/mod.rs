@@ -1,0 +1,44 @@
+//! Synthetic TIR workloads and attention traces.
+//!
+//! The paper's experiments run 7B–32B reasoning models over GSM8K / MATH-500
+//! / AIME / GPQA / LiveCodeBench — none of which is runnable in this
+//! environment (repro gate, DESIGN.md §5). The substitution: a trace
+//! generator that reproduces the *attention statistics the paper measures*
+//! (Fig. 2/3): >95% of tokens recur, MRI distributions per model×task
+//! (80th-pct MRI ≈ the paper's W), attention sinks, local recency mass, and
+//! answer-critical tokens whose eviction destroys the sample — plus token
+//! redundancy levels that separate math (R-KV's favorable case) from QA/code.
+
+pub mod generator;
+pub mod mri;
+pub mod workload;
+
+pub use generator::{generate, Trace};
+pub use workload::{ModelProfile, WorkloadProfile, DATASETS, MODELS};
+
+/// One attention spike: token at `pos` receives aggregated score `score`
+/// at some step. Background (non-spike) attention is treated as 0 by the
+/// tracker (below any α).
+#[derive(Clone, Copy, Debug)]
+pub struct Activation {
+    pub pos: u32,
+    pub score: f32,
+}
+
+/// Per-generated-step trace record.
+#[derive(Clone, Debug, Default)]
+pub struct TraceStep {
+    /// Attention spikes over *previous* tokens at this step.
+    pub activations: Vec<Activation>,
+    /// Positions whose information is REQUIRED by this step (recurrence of
+    /// an answer-critical token). A missed need damages the sample.
+    pub needs: Vec<u32>,
+}
+
+/// Static per-token metadata.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceToken {
+    /// Redundancy group (u32::MAX ⇒ unique content).
+    pub sim_group: u32,
+    pub is_critical: bool,
+}

@@ -1,0 +1,109 @@
+//! MRI analysis (Fig. 3c) and the paper's W-selection rule (§4: W = the MRI
+//! value covering 80% of tokens, measured offline on ~1% of samples).
+
+use super::Trace;
+use crate::kvcache::TokenRecord;
+use crate::util::stats;
+
+/// Measured MRI values from a set of traces by replaying the tracker update
+/// (Eq. 1) over every step — i.e. what the runtime would observe, not the
+/// generator's hidden periods.
+pub fn measure_mri(traces: &[Trace], alpha: f32) -> Vec<f64> {
+    let mut out = Vec::new();
+    for t in traces {
+        // TS initializes to the token's creation step (prompt tokens are all
+        // "born" during prefill at their own positions).
+        let mut recs: Vec<TokenRecord> = (0..t.total_len).map(|p| TokenRecord::new(p, p)).collect();
+        for (si, step) in t.steps.iter().enumerate() {
+            let step_t = t.prompt_len + si as u32;
+            for a in &step.activations {
+                if a.score >= alpha {
+                    let r = &mut recs[a.pos as usize];
+                    let interval = step_t.saturating_sub(r.ts);
+                    if interval > r.mri {
+                        r.mri = interval;
+                    }
+                    r.ts = step_t;
+                }
+            }
+        }
+        out.extend(recs.iter().filter(|r| r.mri > 0).map(|r| r.mri as f64));
+    }
+    out
+}
+
+/// Fraction of tokens with MRI > 1 (the paper's ">95% recur" statistic).
+pub fn recurrence_fraction(traces: &[Trace], alpha: f32) -> f64 {
+    let mut recurring = 0usize;
+    let mut total = 0usize;
+    for t in traces {
+        let mris = measure_mri(std::slice::from_ref(t), alpha);
+        recurring += mris.iter().filter(|&&m| m > 1.0).count();
+        total += t.total_len as usize;
+    }
+    recurring as f64 / total.max(1) as f64
+}
+
+/// The paper's W rule: the MRI percentile (default 80%) over sample traces.
+pub fn suggest_window(traces: &[Trace], alpha: f32, pct: f64) -> usize {
+    let mris = measure_mri(traces, alpha);
+    if mris.is_empty() {
+        return 25;
+    }
+    stats::quantile_of(&mris, pct).round().max(2.0) as usize
+}
+
+/// CDF points (x, F(x)) for plotting Fig. 3c.
+pub fn mri_cdf(mris: &[f64], xs: &[f64]) -> Vec<(f64, f64)> {
+    xs.iter().map(|&x| (x, stats::ecdf(mris, x))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::generate;
+    use crate::trace::workload::{dataset_profile, model_profile};
+
+    fn traces(ds: &str, n: u64) -> Vec<Trace> {
+        (0..n)
+            .map(|s| generate(&dataset_profile(ds), &model_profile("ds-llama-8b"), s))
+            .collect()
+    }
+
+    #[test]
+    fn mri_measured_close_to_planted_periods() {
+        let ts = traces("gsm8k", 3);
+        let mris = measure_mri(&ts, 1e-3);
+        assert!(!mris.is_empty());
+        let med = crate::util::stats::percentile(&mris, 0.5);
+        // medians within a small factor of the profile's median period
+        assert!(med > 4.0 && med < 120.0, "median {med}");
+    }
+
+    #[test]
+    fn recurrence_fraction_high_on_reasoning() {
+        let ts = traces("gsm8k", 3);
+        assert!(recurrence_fraction(&ts, 1e-3) > 0.85);
+    }
+
+    #[test]
+    fn window_rule_scales_with_mri() {
+        let w_gsm = suggest_window(&traces("gsm8k", 4), 1e-3, 0.8);
+        let w_pg = suggest_window(&traces("pg19", 4), 1e-3, 0.8);
+        assert!(
+            w_gsm > w_pg,
+            "reasoning W {w_gsm} should exceed LM W {w_pg}"
+        );
+        assert!(w_gsm >= 10 && w_gsm <= 400, "{w_gsm}");
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let ts = traces("math500", 2);
+        let mris = measure_mri(&ts, 1e-3);
+        let pts = mri_cdf(&mris, &[1.0, 10.0, 100.0, 1000.0]);
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Dataset and model profiles (the paper's evaluation grid), plus the Rust
+//! reasoning-sample generator used by the real-engine E2E driver (mirrors
+//! python/compile/corpus.py exactly — same grammar, same charset).
+
+use crate::util::rng::Rng;
+
+/// Statistical profile of one benchmark dataset (DESIGN.md §5 substitution).
+#[derive(Clone, Debug)]
+pub struct WorkloadProfile {
+    pub name: &'static str,
+    /// Prompt length range (tokens).
+    pub prompt_len: (usize, usize),
+    /// Generated length range (tokens) — paper scales: GSM8K ≲4k,
+    /// MATH-500 ≲8k, AIME/LCB ≲16k (divided by 8 for this testbed).
+    pub out_len: (usize, usize),
+    /// Fraction of tokens that exhibit importance recurrence (paper: >95%).
+    pub recur_frac: f64,
+    /// Lognormal MRI: median (steps) and sigma. Paper Fig. 3c: most MRIs are
+    /// far below output length; 80% < 175 for Qwen on MATH-500.
+    pub mri_median: f64,
+    pub mri_sigma: f64,
+    /// Local-recency attention span.
+    pub locality: usize,
+    /// Attention-sink tokens at the start.
+    pub sink_n: usize,
+    /// Fraction of tokens carrying near-duplicate content (math ≫ QA/code —
+    /// what R-KV exploits, and why it collapses on GPQA/LCB: paper Table 2).
+    pub redundancy: f64,
+    /// Redundancy group size when redundant.
+    pub group_size: usize,
+    /// Answer-critical tokens per sample.
+    pub n_critical: usize,
+    /// Recurrences ("needs") per critical token.
+    pub needs_per_critical: usize,
+}
+
+/// A reasoning-model profile = base accuracy per dataset + MRI scale.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// FullKV accuracy on [gsm8k, math500, aime, gpqa, lcb] (paper Tables
+    /// 1–2; missing entries interpolated).
+    pub base_acc: [f64; 5],
+    /// Multiplier on MRI medians (bigger models re-reference further back).
+    pub mri_scale: f64,
+    /// Tracking threshold α (paper App. F.2).
+    pub alpha: f32,
+}
+
+pub const DATASETS: [&str; 6] = ["gsm8k", "math500", "aime", "gpqa", "lcb", "pg19"];
+
+pub fn dataset_profile(name: &str) -> WorkloadProfile {
+    match name {
+        "gsm8k" => WorkloadProfile {
+            name: "gsm8k",
+            prompt_len: (24, 56),
+            out_len: (256, 512),
+            recur_frac: 0.96,
+            mri_median: 18.0,
+            mri_sigma: 0.9,
+            locality: 4,
+            sink_n: 2,
+            redundancy: 0.45,
+            group_size: 4,
+            n_critical: 6,
+            needs_per_critical: 3,
+        },
+        "math500" => WorkloadProfile {
+            name: "math500",
+            prompt_len: (24, 56),
+            out_len: (512, 1024),
+            recur_frac: 0.96,
+            mri_median: 28.0,
+            mri_sigma: 1.0,
+            locality: 4,
+            sink_n: 2,
+            redundancy: 0.5,
+            group_size: 4,
+            n_critical: 8,
+            needs_per_critical: 3,
+        },
+        "aime" => WorkloadProfile {
+            name: "aime",
+            prompt_len: (24, 56),
+            out_len: (1024, 2048),
+            recur_frac: 0.97,
+            mri_median: 40.0,
+            mri_sigma: 1.1,
+            locality: 4,
+            sink_n: 2,
+            redundancy: 0.5,
+            group_size: 4,
+            n_critical: 10,
+            needs_per_critical: 4,
+        },
+        "gpqa" => WorkloadProfile {
+            name: "gpqa",
+            prompt_len: (40, 60),
+            out_len: (512, 1024),
+            recur_frac: 0.95,
+            mri_median: 30.0,
+            mri_sigma: 1.0,
+            locality: 4,
+            sink_n: 2,
+            redundancy: 0.08, // low token similarity: R-KV's failure case
+            group_size: 2,
+            n_critical: 8,
+            needs_per_critical: 3,
+        },
+        "lcb" => WorkloadProfile {
+            name: "lcb",
+            prompt_len: (40, 60),
+            out_len: (1024, 2048),
+            recur_frac: 0.95,
+            mri_median: 36.0,
+            mri_sigma: 1.1,
+            locality: 6,
+            sink_n: 2,
+            redundancy: 0.12,
+            group_size: 2,
+            n_critical: 10,
+            needs_per_critical: 3,
+        },
+        // PG-19-like language modelling: recurrence exists but with tiny MRI
+        // (paper Limitations: recurring tokens have MRI < 10 on C4) and few
+        // long-range needs — where greedy baselines do fine (Fig. 2a).
+        "pg19" => WorkloadProfile {
+            name: "pg19",
+            prompt_len: (24, 56),
+            out_len: (256, 512),
+            recur_frac: 0.9,
+            mri_median: 4.0,
+            mri_sigma: 0.5,
+            locality: 6,
+            sink_n: 2,
+            redundancy: 0.2,
+            group_size: 2,
+            n_critical: 2,
+            needs_per_critical: 1,
+        },
+        other => panic!("unknown dataset profile '{other}'"),
+    }
+}
+
+pub const MODELS: [&str; 4] = ["ds-llama-8b", "ds-qwen-7b", "qwen3-4b", "qwq-32b"];
+
+pub fn model_profile(name: &str) -> ModelProfile {
+    // base_acc: [gsm8k, math500, aime, gpqa, lcb] — FullKV rows of Tables 1–2
+    match name {
+        "ds-llama-8b" => ModelProfile {
+            name: "ds-llama-8b",
+            base_acc: [81.73, 74.8, 30.0, 37.4, 58.62],
+            mri_scale: 1.0,
+            alpha: 5e-4,
+        },
+        "ds-qwen-7b" => ModelProfile {
+            name: "ds-qwen-7b",
+            base_acc: [89.92, 86.0, 46.7, 55.7, 55.17],
+            mri_scale: 1.1,
+            alpha: 1e-4,
+        },
+        "qwen3-4b" => ModelProfile {
+            name: "qwen3-4b",
+            base_acc: [93.32, 87.2, 60.0, 62.0, 60.0],
+            mri_scale: 1.25,
+            alpha: 1e-4,
+        },
+        "qwq-32b" => ModelProfile {
+            name: "qwq-32b",
+            base_acc: [95.61, 87.2, 73.3, 68.0, 63.0],
+            mri_scale: 1.5,
+            alpha: 1e-4,
+        },
+        other => panic!("unknown model profile '{other}'"),
+    }
+}
+
+pub fn dataset_index(name: &str) -> usize {
+    DATASETS
+        .iter()
+        .position(|&d| d == name)
+        .unwrap_or_else(|| panic!("unknown dataset '{name}'"))
+        .min(4) // pg19 has no accuracy column; reuse lcb slot harmlessly
+}
+
+// ---------------------------------------------------------------------------
+// Real-engine reasoning samples (mirror of python/compile/corpus.py)
+// ---------------------------------------------------------------------------
+
+const VARS: &[u8] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZ";
+
+/// A generated reasoning sample for the served model: `prompt` plants the
+/// facts, `template` replays queries with `?` holes at answer digits, and
+/// `answers` holds the ground truth for each hole.
+#[derive(Clone, Debug)]
+pub struct ReasoningSample {
+    pub prompt: String,
+    pub template: String,
+    pub answers: Vec<char>,
+}
+
+/// Mirrors corpus.gen_sample (recall / add / chain query mix) with answers
+/// replaced by `?` holes in the template.
+pub fn gen_reasoning_sample(
+    rng: &mut Rng,
+    n_facts: usize,
+    n_queries: usize,
+) -> ReasoningSample {
+    let n_facts = n_facts.max(2);
+    let mut names: Vec<u8> = VARS.to_vec();
+    rng.shuffle(&mut names);
+    names.truncate(n_facts + n_queries);
+
+    let mut env: Vec<(u8, u32)> = Vec::new();
+    let mut prompt = String::from("#");
+    for &v in &names[..n_facts] {
+        let d = rng.below(10) as u32;
+        env.push((v, d));
+        prompt.push(v as char);
+        prompt.push('=');
+        prompt.push(char::from_digit(d, 10).unwrap());
+        prompt.push(';');
+    }
+    prompt.push_str("\n>");
+
+    let mut template = String::new();
+    let mut answers = Vec::new();
+    let mut next_new = n_facts;
+    for _ in 0..n_queries {
+        let r = rng.f64();
+        if r < 0.4 {
+            // recall
+            let (a, va) = env[rng.below(env.len())];
+            template.push(a as char);
+            template.push_str("=?;");
+            answers.push(char::from_digit(va, 10).unwrap());
+        } else {
+            let (a, va) = env[rng.below(env.len())];
+            let (b, vb) = env[rng.below(env.len())];
+            let val = (va + vb) % 10;
+            if r < 0.65 && next_new < names.len() {
+                let nv = names[next_new];
+                next_new += 1;
+                template.push(nv as char);
+                template.push('=');
+                env.push((nv, val));
+            }
+            template.push(a as char);
+            template.push('+');
+            template.push(b as char);
+            template.push_str("=?;");
+            answers.push(char::from_digit(val, 10).unwrap());
+        }
+    }
+    template.push('\n');
+    ReasoningSample {
+        prompt,
+        template,
+        answers,
+    }
+}
+
+/// Score hole predictions against ground truth: fraction correct.
+pub fn score_sample(sample: &ReasoningSample, holes: &[char]) -> f64 {
+    if sample.answers.is_empty() {
+        return 1.0;
+    }
+    let hits = sample
+        .answers
+        .iter()
+        .zip(holes.iter())
+        .filter(|(a, p)| a == p)
+        .count();
+    hits as f64 / sample.answers.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_resolve() {
+        for d in DATASETS {
+            let p = dataset_profile(d);
+            assert!(p.recur_frac > 0.5 && p.out_len.1 >= p.out_len.0);
+        }
+        for m in MODELS {
+            let p = model_profile(m);
+            assert!(p.base_acc.iter().all(|&a| a > 0.0 && a <= 100.0));
+        }
+    }
+
+    #[test]
+    fn math_redundancy_exceeds_qa() {
+        assert!(dataset_profile("math500").redundancy > 3.0 * dataset_profile("gpqa").redundancy);
+    }
+
+    #[test]
+    fn pg19_has_tiny_mri() {
+        assert!(dataset_profile("pg19").mri_median < 10.0);
+    }
+
+    #[test]
+    fn reasoning_sample_well_formed() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let s = gen_reasoning_sample(&mut rng, 4, 6);
+            assert!(s.prompt.starts_with('#') && s.prompt.ends_with('>'));
+            assert_eq!(
+                s.template.matches('?').count(),
+                s.answers.len(),
+                "{s:?}"
+            );
+            assert!(s.template.ends_with('\n'));
+            // answers are digits
+            assert!(s.answers.iter().all(|c| c.is_ascii_digit()));
+        }
+    }
+
+    #[test]
+    fn reasoning_sample_charset_closed() {
+        const CS: &str = "0123456789+-*=();ABCDEFGHIJKLMNOPQRSTUVWXYZ?.,# >\n";
+        let mut rng = Rng::new(5);
+        let s = gen_reasoning_sample(&mut rng, 5, 8);
+        for c in s.prompt.chars().chain(s.template.chars()) {
+            assert!(CS.contains(c), "char {c:?} not in charset");
+        }
+    }
+
+    #[test]
+    fn score_sample_counts_matches() {
+        let s = ReasoningSample {
+            prompt: String::new(),
+            template: String::new(),
+            answers: vec!['1', '2', '3'],
+        };
+        assert!((score_sample(&s, &['1', 'x', '3']) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(score_sample(&s, &[]), 0.0);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = gen_reasoning_sample(&mut Rng::new(7), 4, 5);
+        let b = gen_reasoning_sample(&mut Rng::new(7), 4, 5);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.template, b.template);
+    }
+}

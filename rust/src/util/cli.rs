@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch is done by the caller on `positional[0]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    match iter.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("serve --port 8088 --budget=512 --verbose --name x");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 8088);
+        assert_eq!(a.usize_or("budget", 0), 512);
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.str_or("name", ""), "x");
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse("--a --b v");
+        assert!(a.bool_flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert!(!a.bool_flag("missing"));
+    }
+
+    #[test]
+    fn positional_order() {
+        let a = parse("one two --k v three");
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--x -3` : "-3" does not start with --, so it is a value
+        let a = parse("--x -3");
+        assert_eq!(a.f64_or("x", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Self-contained substrate utilities (the offline crate set has only the
+//! `xla` closure, so JSON, RNG, stats and CLI parsing are implemented here).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// In-house property-test driver: runs `f` over `n` seeded random cases and
+/// reports the failing seed so a failure is replayable with a unit test.
+pub fn property_test(name: &str, n: u64, mut f: impl FnMut(&mut rng::Rng)) {
+    for case in 0..n {
+        let seed = 0x5EED_0000 + case;
+        let mut r = rng::Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut r)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at seed {seed:#x} (case {case})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Small statistics helpers: summaries, percentiles, histograms, CDFs.
+
+/// Summary of a sample (latencies, scores, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile_sorted(&v, 0.50),
+            p90: percentile_sorted(&v, 0.90),
+            p99: percentile_sorted(&v, 0.99),
+            max: v[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Empirical CDF evaluated at `x` (fraction of samples <= x).
+pub fn ecdf(xs: &[f64], x: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().filter(|&&v| v <= x).count() as f64 / xs.len() as f64
+}
+
+/// The value at which the ECDF first reaches `q` — e.g. "80% of MRIs are
+/// below this" drives the paper's W selection rule (§4, Fig. 3c).
+pub fn quantile_of(xs: &[f64], q: f64) -> f64 {
+    percentile(xs, q)
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets (+overflow).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub overflow: u64,
+    pub underflow: u64,
+    pub n: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            overflow: 0,
+            underflow: 0,
+            n: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let w = (self.hi - self.lo) / self.counts.len() as f64;
+            let idx = (((x - self.lo) / w) as usize).min(self.counts.len() - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    /// Bucket centers with normalized densities (sums to 1 incl. tails).
+    pub fn normalized(&self) -> Vec<(f64, f64)> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                (
+                    self.lo + w * (i as f64 + 0.5),
+                    c as f64 / self.n.max(1) as f64,
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(ecdf(&v, 0.5), 0.0);
+        assert!((ecdf(&v, 2.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(ecdf(&v, 9.0), 1.0);
+    }
+
+    #[test]
+    fn quantile_of_matches_paper_rule() {
+        // 80th percentile of MRI distribution drives W
+        let mris: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let w = quantile_of(&mris, 0.8);
+        assert!((w - 80.2).abs() < 0.5, "{w}");
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(99.0);
+        assert_eq!(h.counts, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.n, 12);
+    }
+
+    #[test]
+    fn histogram_normalized_sums() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for _ in 0..100 {
+            h.add(0.3);
+        }
+        let total: f64 = h.normalized().iter().map(|(_, d)| d).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}
