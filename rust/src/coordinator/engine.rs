@@ -1,7 +1,22 @@
 //! The decode-loop engine: continuous batching over a fixed-row executable,
 //! TS/MRI tracking from the step's exported attention, and lagged/greedy KV
 //! eviction compiled down to device-side gathers. This is the request path —
-//! no Python, no model code, just PJRT executions orchestrated from Rust.
+//! no Python, no model code, just backend executions orchestrated from Rust.
+//!
+//! The engine drives any [`DecodeBackend`] (the PJRT `ModelExecutor`, or the
+//! artifact-free `SimBackend` via [`Engine::new_sim`]). With a
+//! `kvpool::PoolConfig` in the engine config, rows stop assuming dedicated
+//! capacity and instead allocate KV blocks from a shared pool:
+//!
+//! * `submit` admits a request only when enough free blocks cover its
+//!   prompt (+1 headroom block) — otherwise it reports "not admitted" and
+//!   the scheduler keeps it queued;
+//! * before each decode step the engine ensures every active row can map
+//!   one more token; if the pool is dry it **preempts the youngest row**
+//!   (highest admission ticket): blocks are returned, the request is handed
+//!   back via [`Engine::take_preempted`] for re-prefill;
+//! * the eviction pass (`apply_keep_pooled`) returns whole freed blocks to
+//!   the pool — lagged eviction becomes cross-sequence capacity.
 
 use std::time::Instant;
 
@@ -12,16 +27,23 @@ use crate::coordinator::row::RowState;
 use crate::coordinator::{EngineConfig, Request, Response};
 use crate::eviction::{self, Policy};
 use crate::kvcache::TokenRecord;
-use crate::metrics::{EngineMetrics, RequestMetrics};
-use crate::runtime::{Client, Manifest, ModelExecutor};
+use crate::kvpool::{BlockPool, BlockTable, PoolPressure};
+use crate::metrics::{EngineMetrics, PoolGauges, RequestMetrics};
+use crate::runtime::{Client, DecodeBackend, Manifest, ModelExecutor, SimBackend};
 use crate::tokenizer::Tokenizer;
 
 pub struct Engine {
     pub cfg: EngineConfig,
-    exec: ModelExecutor,
+    exec: Box<dyn DecodeBackend>,
     pub tokenizer: Tokenizer,
     policy: Box<dyn Policy>,
     rows: Vec<Option<RowState>>,
+    /// Shared block pool (present iff cfg.pool is set).
+    pool: Option<BlockPool>,
+    /// Requests preempted since the last `take_preempted` drain.
+    preempted: Vec<Request>,
+    /// Next admission ticket (monotone; youngest row = max ticket).
+    admit_seq: u64,
     pub metrics: EngineMetrics,
     vocab: usize,
     // staging buffers reused across steps (no per-step allocation)
@@ -33,18 +55,43 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Real-model engine over compiled PJRT artifacts.
     pub fn new(client: &Client, manifest: &Manifest, cfg: EngineConfig) -> Result<Engine> {
-        cfg.validate()?;
         let exec = ModelExecutor::new(client, manifest, cfg.batch, cfg.cache)
             .context("building executor")?;
-        let tokenizer = Tokenizer::new(&manifest.charset);
+        Engine::with_backend(Box::new(exec), &manifest.charset, cfg)
+    }
+
+    /// Artifact-free engine over the deterministic sim backend — the same
+    /// decode loop, eviction policies, pool and server, no PJRT required.
+    pub fn new_sim(cfg: EngineConfig) -> Result<Engine> {
+        let exec = SimBackend::new(cfg.batch, cfg.cache);
+        let charset = exec.charset();
+        Engine::with_backend(Box::new(exec), charset, cfg)
+    }
+
+    /// Engine over any backend (the two constructors above delegate here).
+    pub fn with_backend(
+        exec: Box<dyn DecodeBackend>,
+        charset: &str,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        cfg.validate()?;
+        let tokenizer = Tokenizer::new(charset);
         let policy = eviction::build(&cfg.policy, &cfg.params)?;
+        let pool = match &cfg.pool {
+            Some(pc) => Some(BlockPool::new(pc.clone())?),
+            None => None,
+        };
         let (b, s) = (cfg.batch, cfg.cache);
         Ok(Engine {
-            vocab: manifest.model.vocab,
+            vocab: exec.dims().vocab,
             tokenizer,
             policy,
             rows: (0..b).map(|_| None).collect(),
+            pool,
+            preempted: Vec::new(),
+            admit_seq: 0,
             metrics: EngineMetrics::default(),
             mask_buf: vec![0.0; b * s],
             tok_buf: vec![0; b],
@@ -69,7 +116,46 @@ impl Engine {
     }
 
     pub fn exec_counts(&self) -> crate::runtime::executor::ExecCounts {
-        self.exec.exec_counts
+        self.exec.exec_counts()
+    }
+
+    /// Pool watermark signal for the scheduler's admission controller.
+    pub fn pool_pressure(&self) -> Option<PoolPressure> {
+        self.pool.as_ref().map(|p| p.pressure())
+    }
+
+    /// Pool gauges for metrics export / server responses.
+    pub fn pool_gauges(&self) -> Option<PoolGauges> {
+        self.pool.as_ref().map(|p| PoolGauges {
+            free_blocks: p.free_blocks(),
+            total_blocks: p.total_blocks(),
+            utilization: p.utilization(),
+            preemptions: self.metrics.preemptions,
+        })
+    }
+
+    /// Drain the requests preempted since the last call; the caller re-runs
+    /// them from their (preserved) prompts — typically at the queue front.
+    pub fn take_preempted(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.preempted)
+    }
+
+    /// Error recovery: drop every active row, returning blocks to the pool
+    /// and reporting the owning request ids so the caller can fail their
+    /// replies. Unlike preemption, aborted requests are NOT re-queued — the
+    /// engine state behind them is unrecoverable and the client must be
+    /// told, not silently retried.
+    pub fn abort_rows(&mut self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        for slot in self.rows.iter_mut() {
+            if let Some(mut row) = slot.take() {
+                if let Some(pool) = self.pool.as_mut() {
+                    row.seq.release_blocks(pool);
+                }
+                ids.push(row.req.id);
+            }
+        }
+        ids
     }
 
     /// Extract the layer-0 concat-heads key vector for slot data laid out
@@ -86,12 +172,13 @@ impl Engine {
     }
 
     /// Admit a request into a free row: prefill, insert, initialize records.
-    /// Returns false (request untouched) when no row is free.
+    /// Returns false (request untouched) when no row is free, or when the
+    /// block pool cannot cover the prompt — the scheduler holds it queued.
     pub fn submit(&mut self, req: Request, queued_s: f64) -> Result<bool> {
         let Some(row_idx) = self.rows.iter().position(|r| r.is_none()) else {
             return Ok(false);
         };
-        let p_bucket = self.exec.prefill_bucket;
+        let p_bucket = self.exec.prefill_bucket();
         let ids = self
             .tokenizer
             .encode(&req.prompt)
@@ -109,6 +196,13 @@ impl Engine {
             ids.len(),
             self.cfg.budget
         );
+        // pressure-driven admission: the prompt (plus one headroom block for
+        // the first decode token) must fit in the free part of the pool
+        if let Some(pool) = self.pool.as_ref() {
+            if pool.free_blocks() < pool.blocks_for(ids.len() + 1) {
+                return Ok(false);
+            }
+        }
 
         let t0 = Instant::now();
         let mut toks = vec![0i32; p_bucket];
@@ -122,16 +216,35 @@ impl Engine {
         self.metrics.record_prefill(t0.elapsed());
 
         let mut row = RowState::new(req, self.cfg.cache, queued_s);
+        row.admit_seq = self.admit_seq;
+        self.admit_seq += 1;
+        if let Some(pool) = self.pool.as_ref() {
+            row.seq.attach_block_table(BlockTable::new(pool.block_size()));
+        }
         let p = ids.len();
         let d = self.exec.dims();
         let h_stride = self.cfg.cache; // k_seq is [L, H, S, dh]
+        let sketch_span = d.n_heads * h_stride * d.d_head;
         for (i, _) in ids.iter().enumerate() {
             let mut rec = TokenRecord::new(i as u32, i as u32);
             rec.last_attn = 1.0;
             if self.cfg.collect_sketches {
-                rec.key_sketch = self.sketch_from(&out.k_seq[..d.n_heads * h_stride * d.d_head], h_stride, i);
+                rec.key_sketch = self.sketch_from(&out.k_seq[..sketch_span], h_stride, i);
             }
-            row.seq.push(rec);
+            match self.pool.as_mut() {
+                Some(pool) => {
+                    if row.seq.push_pooled(rec, pool).is_none() {
+                        // Free-count was checked above; this is unreachable
+                        // in the single-threaded loop, but stay safe: give
+                        // the blocks back and leave the request queued.
+                        row.seq.release_blocks(pool);
+                        return Ok(false);
+                    }
+                }
+                None => {
+                    row.seq.push(rec);
+                }
+            }
         }
         // one observation from the last prompt row's attention
         observe(
@@ -160,7 +273,53 @@ impl Engine {
         Ok(true)
     }
 
-    /// One decode iteration over all active rows. Returns finished responses.
+    /// Preempt row `i`: return its blocks to the pool and queue its request
+    /// for re-prefill (prompt preserved; generated text is recomputed).
+    fn preempt_row(&mut self, i: usize) {
+        let Some(mut row) = self.rows[i].take() else {
+            return;
+        };
+        if let Some(pool) = self.pool.as_mut() {
+            row.seq.release_blocks(pool);
+        }
+        self.metrics.preemptions += 1;
+        self.preempted.push(row.req);
+    }
+
+    /// Make sure every active row can map one more token this step; preempt
+    /// youngest rows while the pool cannot cover the demand. Terminates:
+    /// each round either satisfies the demand or removes a row, and config
+    /// validation guarantees a solo row always fits
+    /// (`n_blocks * block_size >= cache`).
+    fn ensure_block_headroom(&mut self) {
+        loop {
+            let Some(pool) = self.pool.as_ref() else { return };
+            let free = pool.free_blocks();
+            let needed = self
+                .rows
+                .iter()
+                .flatten()
+                .filter(|r| r.seq.needs_block_for_next())
+                .count();
+            if needed <= free {
+                return;
+            }
+            let victim = self
+                .rows
+                .iter()
+                .enumerate()
+                .filter_map(|(i, r)| r.as_ref().map(|row| (row.admit_seq, i)))
+                .max_by_key(|&(seq, _)| seq)
+                .map(|(_, i)| i);
+            match victim {
+                Some(i) => self.preempt_row(i),
+                None => return,
+            }
+        }
+    }
+
+    /// One decode iteration over all active rows. Returns finished responses
+    /// (preempted requests are reported via `take_preempted`, not here).
     pub fn step(&mut self) -> Result<Vec<Response>> {
         let (b, s) = (self.cfg.batch, self.cfg.cache);
         // collect immediately-finished rows (prefill-finished), and
@@ -176,6 +335,10 @@ impl Engine {
             if self.rows[i].as_ref().map(|r| r.finish.is_some()) == Some(true) {
                 finished.push(self.finish_row(i));
             }
+        }
+        // paged mode: every surviving row must be able to map one more token
+        if self.pool.is_some() {
+            self.ensure_block_headroom();
         }
         if self.rows.iter().all(|r| r.is_none()) {
             return Ok(finished);
@@ -230,7 +393,16 @@ impl Engine {
                 }
                 rec.key_sketch = sk;
             }
-            row.seq.push(rec);
+            match self.pool.as_mut() {
+                Some(pool) => {
+                    row.seq
+                        .push_pooled(rec, pool)
+                        .expect("block headroom ensured before step");
+                }
+                None => {
+                    row.seq.push(rec);
+                }
+            }
             if self.cfg.record_live {
                 row.live_curve.push(row.seq.len());
             }
@@ -247,7 +419,8 @@ impl Engine {
         }
         self.metrics.record_step(t0.elapsed(), active);
 
-        // eviction pass (lagged or greedy per policy; forced at capacity)
+        // eviction pass (lagged or greedy per policy; forced at capacity).
+        // In paged mode compaction also returns whole freed blocks.
         let te = Instant::now();
         let mut any_evict = false;
         for i in 0..b {
@@ -270,7 +443,14 @@ impl Engine {
                     self.policy
                         .select_keep(row.seq.records(), self.cfg.budget, row.pos);
                 row.evictions += row.seq.len() - keep.len();
-                row.seq.apply_keep(&keep, row.pos);
+                match self.pool.as_mut() {
+                    Some(pool) => {
+                        row.seq.apply_keep_pooled(&keep, row.pos, pool);
+                    }
+                    None => {
+                        row.seq.apply_keep(&keep, row.pos);
+                    }
+                }
                 let idx = row.seq.gather_indices(&keep);
                 self.gather_buf[range].copy_from_slice(&idx);
                 any_evict = true;
@@ -295,7 +475,10 @@ impl Engine {
     }
 
     fn finish_row(&mut self, i: usize) -> Response {
-        let row = self.rows[i].take().expect("finish_row on empty row");
+        let mut row = self.rows[i].take().expect("finish_row on empty row");
+        if let Some(pool) = self.pool.as_mut() {
+            row.seq.release_blocks(pool);
+        }
         let total = row.admitted_at.elapsed().as_secs_f64();
         let ttft = row
             .first_token_at
@@ -318,7 +501,8 @@ impl Engine {
     }
 
     /// Convenience driver: run a whole list of requests to completion with
-    /// continuous batching. Returns responses in completion order.
+    /// continuous batching. Preempted requests rejoin the front of the
+    /// pending queue. Returns responses in completion order.
     pub fn run_all(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
         let mut pending: std::collections::VecDeque<Request> = reqs.into();
         let mut done = Vec::new();
@@ -328,12 +512,19 @@ impl Engine {
                 let Some(r) = pending.pop_front() else {
                     break;
                 };
-                self.submit(r, 0.0)?;
+                if !self.submit(r.clone(), 0.0)? {
+                    // pool pressure: hold it until blocks free up
+                    pending.push_front(r);
+                    break;
+                }
             }
             if self.active() == 0 && pending.is_empty() {
                 break;
             }
             done.extend(self.step()?);
+            for r in self.take_preempted() {
+                pending.push_front(r);
+            }
         }
         self.metrics.stop();
         Ok(done)
@@ -355,10 +546,175 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::FinishReason;
+    use crate::kvpool::PoolConfig;
 
     #[test]
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    fn sim_cfg(batch: usize, pool: Option<PoolConfig>) -> EngineConfig {
+        let mut cfg = EngineConfig {
+            batch,
+            cache: 64,
+            budget: 40,
+            policy: "lazy".into(),
+            record_live: true,
+            pool,
+            ..Default::default()
+        };
+        cfg.params.window = 8;
+        cfg.params.recent = 8;
+        cfg
+    }
+
+    fn req(id: u64, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt: "#A=3;B=7;\n>".into(),
+            template: String::new(),
+            max_new,
+        }
+    }
+
+    #[test]
+    fn sim_engine_generates_deterministically() {
+        let mut e1 = Engine::new_sim(sim_cfg(1, None)).unwrap();
+        let mut e2 = Engine::new_sim(sim_cfg(1, None)).unwrap();
+        let r1 = e1.run_all(vec![req(1, 32)]).unwrap();
+        let r2 = e2.run_all(vec![req(1, 32)]).unwrap();
+        assert_eq!(r1.len(), 1);
+        assert_eq!(r1[0].text, r2[0].text);
+        assert_eq!(r1[0].metrics.tokens_out, 32);
+        assert_eq!(r1[0].finish, FinishReason::MaxTokens);
+    }
+
+    #[test]
+    fn sim_engine_evicts_under_tight_budget() {
+        let mut e = Engine::new_sim(sim_cfg(1, None)).unwrap();
+        let r = e.run_all(vec![req(1, 60)]).unwrap();
+        assert!(r[0].metrics.evictions > 0, "no evictions at budget 40");
+        assert!(r[0].live_curve.iter().all(|&l| l <= 64));
+    }
+
+    #[test]
+    fn sim_engine_fills_template_holes() {
+        let mut e = Engine::new_sim(sim_cfg(1, None)).unwrap();
+        let r = e
+            .run_all(vec![Request {
+                id: 9,
+                prompt: "#A=3;\n>".into(),
+                template: "A=?;".into(),
+                max_new: 32,
+            }])
+            .unwrap();
+        assert_eq!(r[0].finish, FinishReason::TemplateDone);
+        assert_eq!(r[0].hole_predictions.len(), 1);
+        assert!(r[0].text.starts_with("A="));
+    }
+
+    #[test]
+    fn pooled_engine_tracks_block_usage() {
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 1,
+            high_watermark: 2,
+        };
+        let mut e = Engine::new_sim(sim_cfg(1, Some(pool))).unwrap();
+        let g0 = e.pool_gauges().unwrap();
+        assert_eq!(g0.free_blocks, 16);
+        let r = e.run_all(vec![req(1, 40)]).unwrap();
+        assert_eq!(r[0].metrics.tokens_out, 40);
+        // drained: every block returned
+        let g = e.pool_gauges().unwrap();
+        assert_eq!(g.free_blocks, 16);
+        assert_eq!(g.preemptions, 0);
+    }
+
+    #[test]
+    fn pool_preemption_round_trip() {
+        // 9 blocks x 8 tokens: one row needs ~6 blocks near its 40-token
+        // budget (+window), so two concurrent rows must collide and the
+        // youngest must be preempted, re-queued, and still complete.
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 9,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(2, Some(pool))).unwrap();
+        let reqs = (0..3).map(|i| req(i, 50)).collect();
+        let rs = e.run_all(reqs).unwrap();
+        assert_eq!(rs.len(), 3);
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        for r in &rs {
+            assert_eq!(r.metrics.tokens_out, 50, "request {} cut short", r.id);
+        }
+        assert!(
+            e.metrics.preemptions >= 1,
+            "two 6-block rows in a 9-block pool must preempt"
+        );
+        // leak-free: the drained pool is fully free again
+        assert_eq!(e.pool_gauges().unwrap().free_blocks, 9);
+    }
+
+    #[test]
+    fn abort_rows_clears_engine_and_pool() {
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(2, Some(pool))).unwrap();
+        assert!(e.submit(req(1, 40), 0.0).unwrap());
+        assert!(e.submit(req(2, 40), 0.0).unwrap());
+        for _ in 0..5 {
+            e.step().unwrap();
+        }
+        let mut ids = e.abort_rows();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(e.active(), 0);
+        // aborted rows returned their blocks; nothing was re-queued
+        assert_eq!(e.pool_gauges().unwrap().free_blocks, 16);
+        assert!(e.take_preempted().is_empty());
+        assert!(e.abort_rows().is_empty());
+    }
+
+    #[test]
+    fn pool_admission_defers_when_free_blocks_short() {
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 8,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(2, Some(pool))).unwrap();
+        // 19-token prompt: admission needs blocks_for(20) = 3 free blocks
+        let big = |id: u64| Request {
+            id,
+            prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
+            template: String::new(),
+            max_new: 50,
+        };
+        assert!(e.submit(big(1), 0.0).unwrap());
+        // 25 decode steps: row 1 is at live = 19 + 25 = 44 tokens = 6 of the
+        // 8 blocks (first lazy eviction only lands at pos 48), so free = 2
+        for _ in 0..25 {
+            e.step().unwrap();
+            assert!(e.take_preempted().is_empty(), "solo row must never preempt");
+        }
+        assert!(
+            !e.submit(big(2), 0.0).unwrap(),
+            "admission must defer while the pool cannot cover the prompt"
+        );
+        assert!(e.has_free_row(), "the decline must come from the pool, not rows");
+        assert_eq!(e.pool_gauges().unwrap().free_blocks, 2);
     }
 }

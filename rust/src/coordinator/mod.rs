@@ -7,6 +7,7 @@ pub mod row;
 pub use engine::Engine;
 
 use crate::eviction::PolicyParams;
+use crate::kvpool::PoolConfig;
 use crate::metrics::RequestMetrics;
 
 /// Engine configuration (one engine = one compiled (batch, cache) shape).
@@ -31,6 +32,11 @@ pub struct EngineConfig {
     pub collect_sketches: bool,
     /// Record live-token counts each step (Fig. 6 memory curves).
     pub record_live: bool,
+    /// Shared paged-KV block pool. `None` keeps the seed behavior (each row
+    /// owns its full slot capacity); `Some` makes rows allocate blocks from
+    /// a global budget, with pressure-driven admission and youngest-row
+    /// preemption when it runs dry.
+    pub pool: Option<PoolConfig>,
 }
 
 impl Default for EngineConfig {
@@ -45,6 +51,7 @@ impl Default for EngineConfig {
             stop_char: '\0',
             collect_sketches: false,
             record_live: true,
+            pool: None,
         }
     }
 }
@@ -69,6 +76,18 @@ impl EngineConfig {
                 self.cache
             );
             anyhow::ensure!(w < self.budget, "window W must be < budget B (B >> W)");
+        }
+        if let Some(p) = &self.pool {
+            p.validate()?;
+            // One row alone must always be able to reach physical capacity,
+            // otherwise a solo sequence could preempt itself forever.
+            anyhow::ensure!(
+                p.n_blocks * p.block_size >= self.cache,
+                "pool too small: {} blocks x {} tokens < cache capacity {}",
+                p.n_blocks,
+                p.block_size,
+                self.cache
+            );
         }
         Ok(())
     }
@@ -150,5 +169,29 @@ mod tests {
         let mut cfg = EngineConfig::default();
         cfg.params.window = cfg.budget;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pool_must_cover_one_full_row() {
+        let cfg = EngineConfig {
+            pool: Some(PoolConfig {
+                block_size: 16,
+                n_blocks: 8, // 128 tokens < cache 256
+                low_watermark: 2,
+                high_watermark: 4,
+            }),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg_ok = EngineConfig {
+            pool: Some(PoolConfig {
+                block_size: 16,
+                n_blocks: 16,
+                low_watermark: 2,
+                high_watermark: 4,
+            }),
+            ..Default::default()
+        };
+        cfg_ok.validate().unwrap();
     }
 }

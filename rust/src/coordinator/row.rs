@@ -30,6 +30,9 @@ pub struct RowState {
     pub queued_s: f64,
     pub evictions: usize,
     pub live_curve: Vec<usize>,
+    /// Monotone admission ticket from the engine; the *highest* ticket is
+    /// the youngest row — the preemption victim when the pool runs dry.
+    pub admit_seq: u64,
 }
 
 impl RowState {
@@ -50,6 +53,7 @@ impl RowState {
             queued_s,
             evictions: 0,
             live_curve: Vec::new(),
+            admit_seq: 0,
         }
     }
 

@@ -5,8 +5,15 @@
 //! `TokenRecord` per live slot, compacted so live tokens always occupy slots
 //! `[0, len)` — which keeps the slot mask trivial and turns an eviction into
 //! a single device `gather` with the keep-list as indices.
+//!
+//! When the engine runs against a shared [`kvpool`](crate::kvpool) budget, a
+//! `SeqKv` additionally carries a `BlockTable` view (slot → block/offset):
+//! `push_pooled` grows it a block at a time and `apply_keep_pooled` returns
+//! whole freed blocks to the pool after compaction.
 
 pub mod memory;
+
+use crate::kvpool::{BlockPool, BlockTable};
 
 /// Per-token tracking state. All per-token signals any of the implemented
 /// policies need are kept here so that compaction reorders them uniformly.
@@ -77,6 +84,8 @@ pub struct SeqKv {
     pub evictions: Vec<Eviction>,
     /// Peak live count (memory accounting).
     pub peak_live: usize,
+    /// Paged view: present iff this sequence draws from a shared BlockPool.
+    block_table: Option<BlockTable>,
 }
 
 impl SeqKv {
@@ -87,6 +96,66 @@ impl SeqKv {
             log_evictions: false,
             evictions: Vec::new(),
             peak_live: 0,
+            block_table: None,
+        }
+    }
+
+    /// Attach a (fresh) paged-view block table. Must happen before tokens
+    /// are pushed, so table length and record count stay in lockstep.
+    pub fn attach_block_table(&mut self, table: BlockTable) {
+        assert!(
+            self.records.is_empty() && table.len() == self.records.len(),
+            "block table must be attached to an empty sequence"
+        );
+        self.block_table = Some(table);
+    }
+
+    pub fn block_table(&self) -> Option<&BlockTable> {
+        self.block_table.as_ref()
+    }
+
+    /// Will the next pooled push need a fresh block from the pool?
+    pub fn needs_block_for_next(&self) -> bool {
+        match &self.block_table {
+            Some(t) => t.at_block_boundary(),
+            None => false,
+        }
+    }
+
+    /// `push` through the paged view: maps one more token in the block
+    /// table first (allocating at block boundaries). Returns `None` with
+    /// state unchanged when the pool is exhausted.
+    pub fn push_pooled(&mut self, rec: TokenRecord, pool: &mut BlockPool) -> Option<usize> {
+        if let Some(t) = self.block_table.as_mut() {
+            if !t.push_token(pool) {
+                return None;
+            }
+        }
+        Some(self.push(rec))
+    }
+
+    /// `apply_keep` through the paged view: compaction shrinks the live set
+    /// to `keep.len()`, and whole trailing blocks go back to the pool.
+    /// Returns (evicted positions, blocks freed).
+    pub fn apply_keep_pooled(
+        &mut self,
+        keep: &[u32],
+        step: u32,
+        pool: &mut BlockPool,
+    ) -> (Vec<u32>, usize) {
+        let evicted = self.apply_keep(keep, step);
+        let freed = match self.block_table.as_mut() {
+            Some(t) => t.truncate(self.records.len(), pool),
+            None => 0,
+        };
+        (evicted, freed)
+    }
+
+    /// Return every held block to the pool (sequence finished or preempted).
+    pub fn release_blocks(&mut self, pool: &mut BlockPool) -> usize {
+        match self.block_table.as_mut() {
+            Some(t) => t.release_all(pool),
+            None => 0,
         }
     }
 
@@ -257,6 +326,88 @@ mod tests {
         s.slot_mask(&mut m);
         assert_eq!(&m[..5], &[1.0, 1.0, 1.0, 1.0, 0.0]);
         assert!(m[5..].iter().all(|&x| x == 0.0));
+    }
+
+    fn pooled_pair() -> (SeqKv, crate::kvpool::BlockPool) {
+        use crate::kvpool::{BlockPool, BlockTable, PoolConfig};
+        let pool = BlockPool::new(PoolConfig {
+            block_size: 4,
+            n_blocks: 8,
+            low_watermark: 0,
+            high_watermark: 0,
+        })
+        .unwrap();
+        let mut s = SeqKv::new(32);
+        s.attach_block_table(BlockTable::new(pool.block_size()));
+        (s, pool)
+    }
+
+    #[test]
+    fn pooled_push_grows_blocks_in_lockstep() {
+        let (mut s, mut pool) = pooled_pair();
+        for i in 0..9 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        let t = s.block_table().unwrap();
+        assert_eq!(t.len(), s.len());
+        assert_eq!(t.n_blocks(), 3);
+        assert_eq!(pool.used_blocks(), 3);
+        assert!(!s.needs_block_for_next()); // 9 < 12
+        for i in 9..12 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        assert!(s.needs_block_for_next());
+    }
+
+    #[test]
+    fn pooled_apply_keep_frees_whole_blocks() {
+        let (mut s, mut pool) = pooled_pair();
+        for i in 0..16 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        assert_eq!(pool.used_blocks(), 4);
+        let keep: Vec<u32> = (0..5).collect();
+        let (evicted, freed) = s.apply_keep_pooled(&keep, 20, &mut pool);
+        assert_eq!(evicted.len(), 11);
+        assert_eq!(freed, 2); // 5 tokens still need 2 blocks
+        assert_eq!(s.block_table().unwrap().len(), 5);
+        assert_eq!(pool.used_blocks(), 2);
+        // block table stays consistent with the compacted layout
+        assert_eq!(s.block_table().unwrap().locate(4).unwrap().1, 0);
+        assert!(s.block_table().unwrap().locate(5).is_none());
+    }
+
+    #[test]
+    fn pooled_push_fails_cleanly_on_exhaustion() {
+        use crate::kvpool::{BlockPool, BlockTable, PoolConfig};
+        let mut pool = BlockPool::new(PoolConfig {
+            block_size: 4,
+            n_blocks: 1,
+            low_watermark: 0,
+            high_watermark: 0,
+        })
+        .unwrap();
+        let mut s = SeqKv::new(32);
+        s.attach_block_table(BlockTable::new(4));
+        for i in 0..4 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        assert!(s.push_pooled(TokenRecord::new(4, 4), &mut pool).is_none());
+        assert_eq!(s.len(), 4); // record count untouched by the failed push
+        assert_eq!(s.release_blocks(&mut pool), 1);
+        assert_eq!(pool.free_blocks(), 1);
+    }
+
+    #[test]
+    fn unpooled_seq_ignores_pool_ops() {
+        use crate::kvpool::{BlockPool, PoolConfig};
+        let mut pool = BlockPool::new(PoolConfig::default()).unwrap();
+        let mut s = seq_with(6);
+        assert!(!s.needs_block_for_next());
+        let (evicted, freed) = s.apply_keep_pooled(&[0, 1], 9, &mut pool);
+        assert_eq!(evicted.len(), 4);
+        assert_eq!(freed, 0);
+        assert_eq!(s.release_blocks(&mut pool), 0);
     }
 
     #[test]

@@ -1,0 +1,35 @@
+//! Paged KV block pool: a vLLM-style shared memory budget for the whole
+//! engine instead of per-row worst-case provisioning.
+//!
+//! The seed gave every engine row an isolated `SeqKv` slot array sized for
+//! the worst case. This module introduces the global alternative that makes
+//! LazyEviction's 50–70% KV reduction pay off at serving scale: a fixed-size
+//! [`BlockPool`] of refcounted blocks ([`pool`]), per-sequence
+//! [`BlockTable`]s mapping compacted slots → (block, offset) ([`table`]),
+//! and a [`PoolPressure`] signal the scheduler uses for admission control
+//! and preemption:
+//!
+//! * **admission** — the server holds queued requests while
+//!   `free < low_watermark` and resumes at `free >= high_watermark`
+//!   (hysteresis lives in `scheduler::admission`);
+//! * **preemption** — when the pool is exhausted mid-decode, the engine
+//!   evicts the *youngest* row, returns its blocks, and re-queues its
+//!   request for re-prefill (`coordinator::Engine::step`);
+//! * **reclamation** — `SeqKv::apply_keep_pooled` returns whole blocks freed
+//!   by an eviction pass, so lagged eviction directly becomes cross-sequence
+//!   capacity (`sim::capacity` + `benches/pool.rs` measure it).
+//!
+//! Refcounts let identical prompt prefixes share whole blocks across a batch
+//! ([`BlockTable::fork_prefix`]); copy-on-write (`ensure_private`) detaches a
+//! table before its contents diverge under compaction.
+//!
+//! Scope note: the tensors themselves still live in the per-row device cache
+//! buffers of `runtime::ModelExecutor`; the pool governs the *logical* block
+//! budget (admission, preemption, capacity accounting). Swapping the device
+//! layout to true paged attention is the recorded follow-up in ROADMAP.md.
+
+pub mod pool;
+pub mod table;
+
+pub use pool::{BlockId, BlockPool, PoolConfig, PoolPressure};
+pub use table::BlockTable;

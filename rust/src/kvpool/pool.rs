@@ -1,0 +1,312 @@
+//! The fixed-size block allocator: free list + per-block refcounts.
+
+/// Index of a block inside one [`BlockPool`].
+pub type BlockId = u32;
+
+/// Pool sizing and the admission watermarks read by the scheduler.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Tokens per block (vLLM uses 16; same default here).
+    pub block_size: usize,
+    /// Total blocks in the pool — the global KV budget.
+    pub n_blocks: usize,
+    /// Hold new admissions while `free < low_watermark` (blocks).
+    pub low_watermark: usize,
+    /// Resume admissions once `free >= high_watermark` (blocks).
+    pub high_watermark: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            block_size: 16,
+            n_blocks: 64,
+            low_watermark: 4,
+            high_watermark: 8,
+        }
+    }
+}
+
+impl PoolConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.block_size >= 1, "block_size must be >= 1");
+        anyhow::ensure!(self.n_blocks >= 1, "pool needs at least one block");
+        anyhow::ensure!(
+            self.low_watermark <= self.high_watermark,
+            "low watermark {} > high watermark {}",
+            self.low_watermark,
+            self.high_watermark
+        );
+        anyhow::ensure!(
+            self.high_watermark <= self.n_blocks,
+            "high watermark {} > pool size {}",
+            self.high_watermark,
+            self.n_blocks
+        );
+        Ok(())
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        (tokens + self.block_size - 1) / self.block_size
+    }
+}
+
+/// Instantaneous pool state + the configured watermarks — everything the
+/// admission controller needs in one copyable value.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolPressure {
+    pub free: usize,
+    pub total: usize,
+    pub low_watermark: usize,
+    pub high_watermark: usize,
+}
+
+impl PoolPressure {
+    /// Below the hold threshold: stop admitting.
+    pub fn below_low(&self) -> bool {
+        self.free < self.low_watermark
+    }
+
+    /// Recovered past the resume threshold.
+    pub fn at_or_above_high(&self) -> bool {
+        self.free >= self.high_watermark
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            (self.total - self.free) as f64 / self.total as f64
+        }
+    }
+}
+
+/// Fixed-size refcounted block allocator. Single-owner (`&mut`) by design:
+/// it lives inside one engine's decode loop, which is single-threaded.
+#[derive(Clone, Debug)]
+pub struct BlockPool {
+    cfg: PoolConfig,
+    /// Per-block reference count; 0 = free.
+    refcount: Vec<u32>,
+    /// Free-list stack of block ids.
+    free: Vec<BlockId>,
+    /// Lifetime counters (metrics).
+    pub alloc_count: u64,
+    pub failed_allocs: u64,
+}
+
+impl BlockPool {
+    pub fn new(cfg: PoolConfig) -> anyhow::Result<BlockPool> {
+        cfg.validate()?;
+        let n = cfg.n_blocks;
+        Ok(BlockPool {
+            cfg,
+            refcount: vec![0; n],
+            // pop() hands out low ids first
+            free: (0..n as BlockId).rev().collect(),
+            alloc_count: 0,
+            failed_allocs: 0,
+        })
+    }
+
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.cfg.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.cfg.n_blocks - self.free.len()
+    }
+
+    /// Fraction of the pool currently allocated.
+    pub fn utilization(&self) -> f64 {
+        if self.cfg.n_blocks == 0 {
+            0.0
+        } else {
+            self.used_blocks() as f64 / self.cfg.n_blocks as f64
+        }
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.cfg.blocks_for(tokens)
+    }
+
+    /// Take one free block (refcount 1), or `None` when exhausted.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        match self.free.pop() {
+            Some(b) => {
+                debug_assert_eq!(self.refcount[b as usize], 0);
+                self.refcount[b as usize] = 1;
+                self.alloc_count += 1;
+                Some(b)
+            }
+            None => {
+                self.failed_allocs += 1;
+                None
+            }
+        }
+    }
+
+    /// Add a reference to an already-allocated block (prefix sharing).
+    pub fn retain(&mut self, b: BlockId) {
+        let rc = &mut self.refcount[b as usize];
+        assert!(*rc > 0, "retain of free block {b}");
+        *rc += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list at zero.
+    pub fn release(&mut self, b: BlockId) {
+        let rc = &mut self.refcount[b as usize];
+        assert!(*rc > 0, "double free of block {b}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+        }
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcount[b as usize]
+    }
+
+    pub fn pressure(&self) -> PoolPressure {
+        PoolPressure {
+            free: self.free.len(),
+            total: self.cfg.n_blocks,
+            low_watermark: self.cfg.low_watermark,
+            high_watermark: self.cfg.high_watermark,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n: usize) -> BlockPool {
+        BlockPool::new(PoolConfig {
+            block_size: 4,
+            n_blocks: n,
+            low_watermark: 1,
+            high_watermark: 2,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn alloc_until_exhausted_then_free_restores() {
+        let mut p = pool(3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        assert_eq!(p.free_blocks(), 0);
+        assert!(p.alloc().is_none());
+        assert_eq!(p.failed_allocs, 1);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 1);
+        let d = p.alloc().unwrap();
+        assert_eq!(d, b); // the freed block is reused
+        assert_eq!(p.used_blocks(), 3);
+        p.release(a);
+        p.release(c);
+        p.release(d);
+        assert_eq!(p.free_blocks(), 3);
+        assert!((p.utilization() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn refcount_shares_until_last_release() {
+        let mut p = pool(2);
+        let b = p.alloc().unwrap();
+        p.retain(b);
+        p.retain(b);
+        assert_eq!(p.refcount(b), 3);
+        p.release(b);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 1); // still held once
+        assert_eq!(p.refcount(b), 1);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 2);
+        assert_eq!(p.refcount(b), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = pool(1);
+        let b = p.alloc().unwrap();
+        p.release(b);
+        p.release(b);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free")]
+    fn retain_free_block_panics() {
+        let mut p = pool(1);
+        p.retain(0);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let p = pool(4);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(4), 1);
+        assert_eq!(p.blocks_for(5), 2);
+    }
+
+    #[test]
+    fn pressure_watermarks() {
+        let mut p = pool(3); // low 1, high 2
+        assert!(!p.pressure().below_low());
+        assert!(p.pressure().at_or_above_high());
+        let _a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        let pr = p.pressure();
+        assert!(pr.below_low());
+        assert!(!pr.at_or_above_high());
+        assert!((pr.utilization() - 1.0).abs() < 1e-12);
+        p.release(c);
+        assert!(!p.pressure().below_low()); // free 1 == low 1: not below
+        assert!(!p.pressure().at_or_above_high());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(PoolConfig::default().validate().is_ok());
+        assert!(PoolConfig {
+            block_size: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(PoolConfig {
+            low_watermark: 9,
+            high_watermark: 3,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(PoolConfig {
+            n_blocks: 4,
+            low_watermark: 2,
+            high_watermark: 8,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+    }
+}

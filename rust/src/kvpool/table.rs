@@ -1,0 +1,274 @@
+//! Per-sequence block table: compacted slot index → (block, offset).
+//!
+//! `SeqKv` keeps live tokens compacted in slots `[0, len)`, so the mapping
+//! is dense: slot `s` lives at `(blocks[s / block_size], s % block_size)`.
+//! Growth allocates a block only when crossing a block boundary; shrinking
+//! (after an eviction pass) releases whole trailing blocks back to the pool
+//! — that reclamation is what turns lagged eviction into cross-sequence
+//! serving capacity.
+
+use super::pool::{BlockId, BlockPool};
+
+#[derive(Clone, Debug)]
+pub struct BlockTable {
+    block_size: usize,
+    blocks: Vec<BlockId>,
+    /// Tokens currently mapped (== owning SeqKv's live count).
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn new(block_size: usize) -> BlockTable {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        BlockTable {
+            block_size,
+            blocks: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Tokens the currently-held blocks can hold.
+    pub fn capacity_tokens(&self) -> usize {
+        self.blocks.len() * self.block_size
+    }
+
+    /// Will the next `push_token` need a fresh block?
+    pub fn at_block_boundary(&self) -> bool {
+        self.len == self.capacity_tokens()
+    }
+
+    /// Physical location of a mapped slot.
+    pub fn locate(&self, slot: usize) -> Option<(BlockId, usize)> {
+        if slot >= self.len {
+            return None;
+        }
+        Some((self.blocks[slot / self.block_size], slot % self.block_size))
+    }
+
+    /// Map one more token, allocating a block at boundaries. Returns false
+    /// (state unchanged) when the pool is exhausted.
+    pub fn push_token(&mut self, pool: &mut BlockPool) -> bool {
+        debug_assert_eq!(self.block_size, pool.block_size(), "table/pool block size");
+        if self.at_block_boundary() {
+            match pool.alloc() {
+                Some(b) => self.blocks.push(b),
+                None => return false,
+            }
+        }
+        self.len += 1;
+        true
+    }
+
+    /// Shrink to `new_len` tokens, releasing whole trailing blocks. Returns
+    /// how many blocks this table let go of.
+    pub fn truncate(&mut self, new_len: usize, pool: &mut BlockPool) -> usize {
+        assert!(new_len <= self.len, "truncate {} > len {}", new_len, self.len);
+        self.len = new_len;
+        let needed = (new_len + self.block_size - 1) / self.block_size;
+        let mut released = 0;
+        while self.blocks.len() > needed {
+            pool.release(self.blocks.pop().expect("blocks non-empty"));
+            released += 1;
+        }
+        released
+    }
+
+    /// Release every block (sequence finished or preempted).
+    pub fn release_all(&mut self, pool: &mut BlockPool) -> usize {
+        self.truncate(0, pool)
+    }
+
+    /// New table sharing the longest whole-block prefix of `other` that
+    /// covers at most `n_tokens` tokens (refcounts bumped). The shared
+    /// region maps `n_full_blocks * block_size` tokens; the caller allocates
+    /// privately from there.
+    pub fn fork_prefix(other: &BlockTable, n_tokens: usize, pool: &mut BlockPool) -> BlockTable {
+        let n_full = (n_tokens.min(other.len) / other.block_size).min(other.blocks.len());
+        let blocks: Vec<BlockId> = other.blocks[..n_full].to_vec();
+        for &b in &blocks {
+            pool.retain(b);
+        }
+        BlockTable {
+            block_size: other.block_size,
+            len: n_full * other.block_size,
+            blocks,
+        }
+    }
+
+    /// Count of blocks this table shares with other holders.
+    pub fn n_shared_blocks(&self, pool: &BlockPool) -> usize {
+        self.blocks
+            .iter()
+            .filter(|&&b| pool.refcount(b) > 1)
+            .count()
+    }
+
+    /// Copy-on-write: replace every shared block with a freshly-allocated
+    /// private one. Returns false if the pool ran out mid-way (the table
+    /// stays consistent — already-privatized blocks keep their new ids,
+    /// remaining shared blocks are untouched; safe to retry after blocks
+    /// free up).
+    pub fn ensure_private(&mut self, pool: &mut BlockPool) -> bool {
+        for i in 0..self.blocks.len() {
+            let b = self.blocks[i];
+            if pool.refcount(b) > 1 {
+                match pool.alloc() {
+                    Some(fresh) => {
+                        pool.release(b);
+                        self.blocks[i] = fresh;
+                    }
+                    None => return false,
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::PoolConfig;
+
+    fn pool(n_blocks: usize) -> BlockPool {
+        BlockPool::new(PoolConfig {
+            block_size: 4,
+            n_blocks,
+            low_watermark: 0,
+            high_watermark: 0,
+        })
+        .unwrap()
+    }
+
+    fn grow(t: &mut BlockTable, n: usize, pool: &mut BlockPool) {
+        for _ in 0..n {
+            assert!(t.push_token(pool));
+        }
+    }
+
+    #[test]
+    fn growth_allocates_at_boundaries() {
+        let mut p = pool(8);
+        let mut t = BlockTable::new(4);
+        assert!(t.at_block_boundary()); // empty: first push allocates
+        grow(&mut t, 4, &mut p);
+        assert_eq!(t.n_blocks(), 1);
+        assert!(t.at_block_boundary());
+        grow(&mut t, 1, &mut p);
+        assert_eq!(t.n_blocks(), 2);
+        assert_eq!(t.len(), 5);
+        assert_eq!(p.used_blocks(), 2);
+    }
+
+    #[test]
+    fn locate_maps_slots_densely() {
+        let mut p = pool(8);
+        let mut t = BlockTable::new(4);
+        grow(&mut t, 9, &mut p);
+        let (b0, o0) = t.locate(0).unwrap();
+        let (b5, o5) = t.locate(5).unwrap();
+        let (b8, o8) = t.locate(8).unwrap();
+        assert_eq!((b0, o0), (t.blocks()[0], 0));
+        assert_eq!((b5, o5), (t.blocks()[1], 1));
+        assert_eq!((b8, o8), (t.blocks()[2], 0));
+        assert!(t.locate(9).is_none());
+    }
+
+    #[test]
+    fn truncate_releases_whole_blocks_only() {
+        let mut p = pool(8);
+        let mut t = BlockTable::new(4);
+        grow(&mut t, 16, &mut p); // 4 blocks
+        let released = t.truncate(5, &mut p); // needs 2 blocks
+        assert_eq!(released, 2);
+        assert_eq!(t.n_blocks(), 2);
+        assert_eq!(p.free_blocks(), 6);
+        // partial block at the tail is retained
+        assert_eq!(t.truncate(5, &mut p), 0);
+        assert_eq!(t.release_all(&mut p), 2);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn exhaustion_leaves_state_consistent() {
+        let mut p = pool(2);
+        let mut t = BlockTable::new(4);
+        grow(&mut t, 8, &mut p);
+        assert!(!t.push_token(&mut p)); // pool empty at the boundary
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.n_blocks(), 2);
+        assert_eq!(p.failed_allocs, 1);
+    }
+
+    #[test]
+    fn fork_prefix_shares_whole_blocks() {
+        let mut p = pool(8);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 10, &mut p); // 3 blocks, last partial
+        let b = BlockTable::fork_prefix(&a, 10, &mut p);
+        assert_eq!(b.n_blocks(), 2); // only full blocks shared
+        assert_eq!(b.len(), 8);
+        assert_eq!(p.refcount(a.blocks()[0]), 2);
+        assert_eq!(p.refcount(a.blocks()[2]), 1);
+        assert_eq!(a.n_shared_blocks(&p), 2);
+        // sharing consumed no new blocks
+        assert_eq!(p.used_blocks(), 3);
+        // releasing the fork leaves the original intact
+        let mut b = b;
+        b.release_all(&mut p);
+        assert_eq!(p.refcount(a.blocks()[0]), 1);
+        assert_eq!(p.used_blocks(), 3);
+        a.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn ensure_private_copies_on_write() {
+        let mut p = pool(8);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 8, &mut p);
+        let mut b = BlockTable::fork_prefix(&a, 8, &mut p);
+        assert_eq!(b.n_shared_blocks(&p), 2);
+        assert!(b.ensure_private(&mut p));
+        assert_eq!(b.n_shared_blocks(&p), 0);
+        assert_eq!(a.n_shared_blocks(&p), 0);
+        // two tables, four blocks total now
+        assert_eq!(p.used_blocks(), 4);
+        a.release_all(&mut p);
+        b.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn ensure_private_reports_exhaustion() {
+        let mut p = pool(2);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 8, &mut p); // uses both blocks
+        let mut b = BlockTable::fork_prefix(&a, 8, &mut p);
+        assert!(!b.ensure_private(&mut p)); // no spare block for the copy
+        // still consistent: can be released safely
+        b.release_all(&mut p);
+        a.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 2);
+    }
+}

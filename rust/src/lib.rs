@@ -8,13 +8,18 @@
 //! first-class pluggable policy.
 //!
 //! Layer map (DESIGN.md §2):
-//! * [`runtime`] — PJRT client, artifact manifest, device-resident executor
+//! * [`runtime`] — PJRT client, artifact manifest, device-resident executor,
+//!   and the `DecodeBackend` abstraction (PJRT or the artifact-free sim)
 //! * [`kvcache`] + [`attention`] — slot records, TS/MRI tracking (Eq. 1)
+//! * [`kvpool`] — shared paged-KV block pool: refcounted fixed-size blocks,
+//!   per-sequence block tables, pressure watermarks (admission/preemption)
 //! * [`eviction`] — LazyEviction (Eq. 2/5) and baselines
-//! * [`scheduler`] + [`coordinator`] + [`server`] — continuous batching,
-//!   decode loop, TCP front-end
+//! * [`scheduler`] + [`coordinator`] + [`server`] — continuous batching
+//!   with pool-pressure admission control, decode loop with youngest-row
+//!   preemption, TCP front-end
 //! * [`trace`] + [`sim`] — synthetic TIR workloads, trace-driven replay,
-//!   fidelity/accuracy metrics for the paper's tables
+//!   fidelity/accuracy metrics for the paper's tables, and pool-capacity
+//!   replay (effective batch under a fixed global block budget)
 //! * [`bench_harness`] — table/figure regeneration harness
 //! * [`util`] — offline substrate (JSON, RNG, stats, CLI)
 
@@ -23,6 +28,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod eviction;
 pub mod kvcache;
+pub mod kvpool;
 pub mod metrics;
 pub mod runtime;
 pub mod scheduler;

@@ -2,10 +2,15 @@
 //!
 //! Subcommands:
 //!   serve     --addr 127.0.0.1:8088 --policy lazy --budget 192 ...
+//!   sim-serve same, over the artifact-free sim backend (no PJRT needed)
 //!   generate  one-shot generation from a prompt (smoke/debug)
 //!   eval      run N reasoning samples through the engine, report accuracy
 //!   suggest-w print the paper's W rule for a dataset profile
 //!   info      artifact + engine-shape inventory
+//!
+//! Paged-KV pool flags (serve/sim-serve): --pool-blocks N enables a shared
+//! block pool (0 = per-row capacity, the default), --block-size (16),
+//! --pool-low / --pool-high admission watermarks in blocks.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -14,6 +19,7 @@ use anyhow::{Context, Result};
 use lazyeviction::bench_harness::{artifacts_dir, table::Table};
 use lazyeviction::coordinator::{Engine, EngineConfig, Request};
 use lazyeviction::eviction::PolicyParams;
+use lazyeviction::kvpool::PoolConfig;
 use lazyeviction::runtime::{Client, Manifest};
 use lazyeviction::trace::workload::{
     dataset_profile, gen_reasoning_sample, model_profile, score_sample,
@@ -41,6 +47,15 @@ fn engine_config_from(args: &Args) -> EngineConfig {
     if args.bool_flag("stop-newline") {
         cfg.stop_char = '\n';
     }
+    let pool_blocks = args.usize_or("pool-blocks", 0);
+    if pool_blocks > 0 {
+        cfg.pool = Some(PoolConfig {
+            block_size: args.usize_or("block-size", 16),
+            n_blocks: pool_blocks,
+            low_watermark: args.usize_or("pool-low", 4),
+            high_watermark: args.usize_or("pool-high", 8),
+        });
+    }
     cfg
 }
 
@@ -58,6 +73,18 @@ fn build_engine(args: &Args) -> Result<Engine> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = build_engine(args)?;
+    let addr = args.str_or("addr", "127.0.0.1:8088");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    lazyeviction::server::serve(engine, &addr, shutdown)
+}
+
+fn cmd_sim_serve(args: &Args) -> Result<()> {
+    let cfg = engine_config_from(args);
+    eprintln!(
+        "sim engine: batch={} cache={} budget={} policy={} (artifact-free backend)",
+        cfg.batch, cfg.cache, cfg.budget, cfg.policy
+    );
+    let engine = Engine::new_sim(cfg)?;
     let addr = args.str_or("addr", "127.0.0.1:8088");
     let shutdown = Arc::new(AtomicBool::new(false));
     lazyeviction::server::serve(engine, &addr, shutdown)
@@ -179,14 +206,16 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand() {
         Some("serve") => cmd_serve(&args),
+        Some("sim-serve") => cmd_sim_serve(&args),
         Some("generate") => cmd_generate(&args),
         Some("eval") => cmd_eval(&args),
         Some("suggest-w") => cmd_suggest_w(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: lazyevictiond <serve|generate|eval|suggest-w|info> [--flags]\n\
-                 common flags: --artifacts DIR --policy P --budget B --cache S --batch N --window W"
+                "usage: lazyevictiond <serve|sim-serve|generate|eval|suggest-w|info> [--flags]\n\
+                 common flags: --artifacts DIR --policy P --budget B --cache S --batch N --window W\n\
+                 pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8"
             );
             std::process::exit(2);
         }

@@ -14,6 +14,8 @@ pub struct EngineMetrics {
     /// Wall time spent inside eviction decisions (seconds).
     pub eviction_time: f64,
     pub eviction_count: u64,
+    /// Rows preempted because the shared block pool ran dry (paged mode).
+    pub preemptions: u64,
     /// Tokens produced (all rows).
     pub tokens_out: u64,
     /// Live-token counts sampled per step (for memory curves), per row.
@@ -79,6 +81,19 @@ pub struct RequestMetrics {
     pub total_s: f64,
     pub tokens_out: usize,
     pub evictions: usize,
+}
+
+/// Instantaneous block-pool gauges (paged-KV mode). Exported by
+/// `Engine::pool_gauges` and attached to server responses so clients and
+/// scrapers see global memory pressure alongside each completion.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolGauges {
+    pub free_blocks: usize,
+    pub total_blocks: usize,
+    /// Fraction of the pool allocated, in [0, 1].
+    pub utilization: f64,
+    /// Cumulative preemption count for the engine.
+    pub preemptions: u64,
 }
 
 #[cfg(test)]

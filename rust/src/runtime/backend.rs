@@ -1,0 +1,264 @@
+//! The model-execution surface the coordinator drives, abstracted from PJRT.
+//!
+//! `coordinator::Engine` needs five operations (prefill, step, and the three
+//! device-side cache maintenance calls) plus shape metadata. Factoring them
+//! into [`DecodeBackend`] lets the same decode loop, eviction pass, block
+//! pool and scheduler run over:
+//!
+//! * [`ModelExecutor`](super::executor::ModelExecutor) — the real AOT/PJRT
+//!   path (needs compiled artifacts);
+//! * [`SimBackend`] — a deterministic, artifact-free toy backend whose
+//!   attention statistics are rich enough to exercise TS/MRI tracking,
+//!   every eviction policy, pool preemption, and the TCP server end to end.
+
+use anyhow::Result;
+
+use super::executor::{ExecCounts, PrefillOut, StepOut};
+use super::manifest::ModelDims;
+
+/// One engine shape's model-execution backend (see module docs).
+pub trait DecodeBackend: Send {
+    fn dims(&self) -> &ModelDims;
+    /// Padded prompt bucket of the prefill executable.
+    fn prefill_bucket(&self) -> usize;
+    /// Run the batch-1 prefill over a padded prompt.
+    fn prefill(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillOut>;
+    /// Insert a prefilled sequence cache at batch row `row`.
+    fn insert(&mut self, k_seq: &[f32], v_seq: &[f32], row: usize) -> Result<()>;
+    /// One decode step over all rows.
+    fn step(&mut self, slot_mask: &[f32], tokens: &[i32], pos: &[i32]) -> Result<StepOut>;
+    /// Append this step's K/V rows at per-row slot indices.
+    fn append(&mut self, k_new: &[f32], v_new: &[f32], idx: &[i32]) -> Result<()>;
+    /// Compact/permute cache slots (the eviction gather).
+    fn gather(&mut self, idx: &[i32]) -> Result<()>;
+    fn exec_counts(&self) -> ExecCounts;
+    /// KV bytes the device-resident caches occupy for this engine.
+    fn device_cache_bytes(&self) -> usize;
+}
+
+/// Charset of the sim backend (a superset of the reasoning-sample grammar in
+/// `trace::workload`, so `gen_reasoning_sample` prompts encode cleanly).
+pub const SIM_CHARSET: &str = "#>=;?+*-.0123456789ABCDEFGHIJKLMNOPQRSTUVWXYZ \n";
+
+/// Deterministic artifact-free backend. The "model" is a hash: the next
+/// token is a fixed function of (current token, position), and per-slot
+/// attention mixes a sub-α floor with sparse super-α spikes, so recurrence
+/// tracking and every eviction policy see non-degenerate signals. No PJRT,
+/// no weights, no tensors — K/V payloads are zeros (the engine only routes
+/// them; policies act on the attention metadata).
+pub struct SimBackend {
+    batch: usize,
+    cache: usize,
+    bucket: usize,
+    dims: ModelDims,
+    counts: ExecCounts,
+}
+
+impl SimBackend {
+    pub fn new(batch: usize, cache: usize) -> SimBackend {
+        SimBackend {
+            batch,
+            cache,
+            bucket: 64,
+            dims: ModelDims {
+                vocab: SIM_CHARSET.chars().count(),
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_head: 4,
+                d_ff: 32,
+                rope_base: 10000.0,
+            },
+            counts: ExecCounts::default(),
+        }
+    }
+
+    pub fn charset(&self) -> &'static str {
+        SIM_CHARSET
+    }
+
+    /// Next-token id as a fixed hash of (token, position).
+    fn next_id(&self, tok: i32, pos: i32) -> usize {
+        let x = (tok as u64)
+            .wrapping_mul(1099511628211)
+            .wrapping_add((pos as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        ((x >> 17) % self.dims.vocab as u64) as usize
+    }
+
+    /// Aggregated attention for a live slot at absolute position `pos`:
+    /// ~9% of (slot, pos) pairs spike well above any α, the rest sit on a
+    /// sub-α noise floor.
+    fn attn_at(slot: usize, pos: i32) -> f32 {
+        let x = (slot as u64)
+            .wrapping_mul(2654435761)
+            .wrapping_add((pos as u64).wrapping_mul(40503));
+        let h = x ^ (x >> 13);
+        if h % 11 == 0 {
+            0.25
+        } else {
+            1e-6
+        }
+    }
+
+    fn one_hot(&self, out: &mut [f32], id: usize) {
+        debug_assert_eq!(out.len(), self.dims.vocab);
+        out.fill(0.0);
+        out[id] = 1.0;
+    }
+}
+
+impl DecodeBackend for SimBackend {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn prefill_bucket(&self) -> usize {
+        self.bucket
+    }
+
+    fn prefill(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillOut> {
+        anyhow::ensure!(tokens.len() == self.bucket && valid.len() == self.bucket);
+        self.counts.prefill += 1;
+        let n = valid.iter().filter(|&&v| v > 0.0).count().max(1);
+        let mut attn_last = vec![0f32; self.bucket];
+        for (i, a) in attn_last.iter_mut().enumerate().take(n) {
+            *a = Self::attn_at(i, (n - 1) as i32);
+        }
+        let mut logits_last = vec![0f32; self.dims.vocab];
+        let id = self.next_id(tokens[n - 1], (n - 1) as i32);
+        self.one_hot(&mut logits_last, id);
+        let cache_elems = self.dims.n_layers * self.dims.n_heads * self.cache * self.dims.d_head;
+        Ok(PrefillOut {
+            k_seq: vec![0.0; cache_elems],
+            v_seq: vec![0.0; cache_elems],
+            attn_last,
+            logits_last,
+        })
+    }
+
+    fn insert(&mut self, k_seq: &[f32], v_seq: &[f32], row: usize) -> Result<()> {
+        let cache_elems = self.dims.n_layers * self.dims.n_heads * self.cache * self.dims.d_head;
+        anyhow::ensure!(k_seq.len() == cache_elems && v_seq.len() == cache_elems);
+        anyhow::ensure!(row < self.batch, "insert row {row} out of range");
+        self.counts.insert += 2;
+        Ok(())
+    }
+
+    fn step(&mut self, slot_mask: &[f32], tokens: &[i32], pos: &[i32]) -> Result<StepOut> {
+        let (b, s) = (self.batch, self.cache);
+        anyhow::ensure!(slot_mask.len() == b * s && tokens.len() == b && pos.len() == b);
+        self.counts.step += 1;
+        let v = self.dims.vocab;
+        let mut logits = vec![0f32; b * v];
+        let mut attn = vec![0f32; b * s];
+        for row in 0..b {
+            let id = self.next_id(tokens[row], pos[row]);
+            logits[row * v + id] = 1.0;
+            for j in 0..s {
+                if slot_mask[row * s + j] > 0.0 {
+                    attn[row * s + j] = Self::attn_at(j, pos[row]);
+                }
+            }
+        }
+        let new_elems = b * self.dims.n_layers * self.dims.n_heads * self.dims.d_head;
+        Ok(StepOut {
+            logits,
+            attn,
+            k_new: vec![0.0; new_elems],
+            v_new: vec![0.0; new_elems],
+        })
+    }
+
+    fn append(&mut self, k_new: &[f32], _v_new: &[f32], idx: &[i32]) -> Result<()> {
+        let new_elems =
+            self.batch * self.dims.n_layers * self.dims.n_heads * self.dims.d_head;
+        anyhow::ensure!(idx.len() == self.batch && k_new.len() == new_elems);
+        self.counts.append += 2;
+        Ok(())
+    }
+
+    fn gather(&mut self, idx: &[i32]) -> Result<()> {
+        anyhow::ensure!(idx.len() == self.batch * self.cache);
+        self.counts.gather += 2;
+        Ok(())
+    }
+
+    fn exec_counts(&self) -> ExecCounts {
+        self.counts
+    }
+
+    fn device_cache_bytes(&self) -> usize {
+        2 * self.batch
+            * self.dims.n_layers
+            * self.dims.n_heads
+            * self.cache
+            * self.dims.d_head
+            * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charset_covers_reasoning_grammar() {
+        // gen_reasoning_sample emits '#', lowercase? no — uppercase vars,
+        // digits, '=', ';', '+', '?', '\n', '>' — all must tokenize
+        for c in "#A=3;B+7?\n> ".chars() {
+            assert!(SIM_CHARSET.contains(c), "charset missing {c:?}");
+        }
+    }
+
+    #[test]
+    fn step_is_deterministic_and_mask_respecting() {
+        let mut b = SimBackend::new(2, 16);
+        let mut mask = vec![0f32; 32];
+        mask[..5].fill(1.0); // row 0: 5 live slots; row 1 inactive
+        let o1 = b.step(&mask, &[3, 0], &[5, 0]).unwrap();
+        let o2 = b.step(&mask, &[3, 0], &[5, 0]).unwrap();
+        assert_eq!(o1.logits, o2.logits);
+        assert_eq!(o1.attn, o2.attn);
+        assert_eq!(o1.logits.iter().filter(|&&x| x == 1.0).count(), 2);
+        // no attention outside the mask
+        assert!(o1.attn[5..16].iter().all(|&x| x == 0.0));
+        assert!(o1.attn[16..].iter().all(|&x| x == 0.0));
+        assert_eq!(b.exec_counts().step, 2);
+    }
+
+    #[test]
+    fn attention_has_spikes_and_floor() {
+        let mut hot = 0;
+        let mut total = 0;
+        for pos in 0..200 {
+            for slot in 0..64 {
+                let a = SimBackend::attn_at(slot, pos);
+                total += 1;
+                if a > 5e-4 {
+                    hot += 1;
+                } else {
+                    assert!(a < 5e-4);
+                }
+            }
+        }
+        let frac = hot as f64 / total as f64;
+        assert!(frac > 0.02 && frac < 0.3, "spike fraction {frac}");
+    }
+
+    #[test]
+    fn prefill_shapes_match_engine_expectations() {
+        let mut b = SimBackend::new(1, 32);
+        let p = b.prefill_bucket();
+        let mut toks = vec![0i32; p];
+        let mut valid = vec![0f32; p];
+        for i in 0..7 {
+            toks[i] = i as i32;
+            valid[i] = 1.0;
+        }
+        let out = b.prefill(&toks, &valid).unwrap();
+        assert_eq!(out.logits_last.len(), b.dims().vocab);
+        assert_eq!(out.attn_last.len(), p);
+        let d = b.dims();
+        assert_eq!(out.k_seq.len(), d.n_layers * d.n_heads * 32 * d.d_head);
+    }
+}

@@ -10,6 +10,7 @@
 
 use anyhow::{Context, Result};
 
+use super::backend::DecodeBackend;
 use super::client::Client;
 use super::manifest::{Manifest, Variant, VariantKind};
 
@@ -289,5 +290,46 @@ impl ModelExecutor {
             self.k_cache.to_literal_sync()?.to_vec::<f32>()?,
             self.v_cache.to_literal_sync()?.to_vec::<f32>()?,
         ))
+    }
+}
+
+/// The PJRT executor is the real-model [`DecodeBackend`]; the coordinator
+/// drives it through this trait so the same decode loop also runs over the
+/// artifact-free sim backend.
+impl DecodeBackend for ModelExecutor {
+    fn dims(&self) -> &super::manifest::ModelDims {
+        &self.dims
+    }
+
+    fn prefill_bucket(&self) -> usize {
+        self.prefill_bucket
+    }
+
+    fn prefill(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillOut> {
+        ModelExecutor::prefill(self, tokens, valid)
+    }
+
+    fn insert(&mut self, k_seq: &[f32], v_seq: &[f32], row: usize) -> Result<()> {
+        ModelExecutor::insert(self, k_seq, v_seq, row)
+    }
+
+    fn step(&mut self, slot_mask: &[f32], tokens: &[i32], pos: &[i32]) -> Result<StepOut> {
+        ModelExecutor::step(self, slot_mask, tokens, pos)
+    }
+
+    fn append(&mut self, k_new: &[f32], v_new: &[f32], idx: &[i32]) -> Result<()> {
+        ModelExecutor::append(self, k_new, v_new, idx)
+    }
+
+    fn gather(&mut self, idx: &[i32]) -> Result<()> {
+        ModelExecutor::gather(self, idx)
+    }
+
+    fn exec_counts(&self) -> ExecCounts {
+        self.exec_counts
+    }
+
+    fn device_cache_bytes(&self) -> usize {
+        ModelExecutor::device_cache_bytes(self)
     }
 }

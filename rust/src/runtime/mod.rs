@@ -3,11 +3,18 @@
 //! `Client` wraps the PJRT CPU client; `Manifest` is the compile-path
 //! contract; `ModelExecutor` serves one (batch, cache) engine shape with
 //! device-resident KV buffers. Python never runs at request time.
+//!
+//! `backend::DecodeBackend` abstracts the execution surface: the PJRT
+//! executor and the deterministic artifact-free `SimBackend` both implement
+//! it, so the coordinator/scheduler/pool stack is testable without AOT
+//! artifacts.
 
+pub mod backend;
 pub mod client;
 pub mod executor;
 pub mod manifest;
 
+pub use backend::{DecodeBackend, SimBackend, SIM_CHARSET};
 pub use client::Client;
 pub use executor::{ModelExecutor, PrefillOut, StepOut};
 pub use manifest::{Manifest, ModelDims, Variant, VariantKind};

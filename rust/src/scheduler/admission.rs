@@ -1,0 +1,105 @@
+//! Pressure-driven admission control over the shared KV block pool.
+//!
+//! A bare `free < needed` check admits right up to the cliff edge and then
+//! thrashes: every eviction pass frees a block, one request is admitted, the
+//! pool is instantly dry again and the new row gets preempted. The
+//! controller adds hysteresis around the pool's two watermarks instead:
+//! once free blocks dip under `low_watermark`, admissions *hold* until the
+//! pool recovers to `high_watermark` — leaving the freed blocks to the rows
+//! already decoding (who finish and release more), rather than feeding an
+//! admission/preemption cycle.
+
+use crate::kvpool::PoolPressure;
+
+/// Hysteresis latch between the pool's low/high watermarks.
+#[derive(Debug, Default)]
+pub struct AdmissionController {
+    holding: bool,
+    /// How many times the controller transitioned into the hold state.
+    pub hold_transitions: u64,
+}
+
+impl AdmissionController {
+    pub fn new() -> AdmissionController {
+        AdmissionController::default()
+    }
+
+    /// Is the gate currently closed?
+    pub fn is_holding(&self) -> bool {
+        self.holding
+    }
+
+    /// Evaluate the gate against the current pool pressure. Returns true
+    /// when new admissions may proceed this iteration.
+    pub fn allow(&mut self, p: &PoolPressure) -> bool {
+        if self.holding {
+            if p.at_or_above_high() {
+                self.holding = false;
+            } else {
+                return false;
+            }
+        } else if p.below_low() {
+            self.holding = true;
+            self.hold_transitions += 1;
+            return false;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pressure(free: usize) -> PoolPressure {
+        PoolPressure {
+            free,
+            total: 16,
+            low_watermark: 3,
+            high_watermark: 6,
+        }
+    }
+
+    #[test]
+    fn open_above_low() {
+        let mut a = AdmissionController::new();
+        assert!(a.allow(&pressure(10)));
+        assert!(a.allow(&pressure(3))); // at the low mark: still open
+        assert!(!a.is_holding());
+    }
+
+    #[test]
+    fn holds_below_low_until_high() {
+        let mut a = AdmissionController::new();
+        assert!(!a.allow(&pressure(2))); // dips under low: close
+        assert!(a.is_holding());
+        // recovery below the high mark keeps the gate closed (hysteresis)
+        assert!(!a.allow(&pressure(4)));
+        assert!(!a.allow(&pressure(5)));
+        // reaching the high mark reopens
+        assert!(a.allow(&pressure(6)));
+        assert!(!a.is_holding());
+        assert_eq!(a.hold_transitions, 1);
+    }
+
+    #[test]
+    fn reentry_counts_transitions() {
+        let mut a = AdmissionController::new();
+        assert!(!a.allow(&pressure(0)));
+        assert!(a.allow(&pressure(16)));
+        assert!(!a.allow(&pressure(1)));
+        assert_eq!(a.hold_transitions, 2);
+    }
+
+    #[test]
+    fn zero_watermarks_never_hold() {
+        let mut a = AdmissionController::new();
+        let p = PoolPressure {
+            free: 0,
+            total: 8,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        assert!(a.allow(&p)); // free < 0 is impossible: gate stays open
+    }
+}

@@ -1,13 +1,21 @@
-//! Request scheduling: FIFO admission queue + continuous batcher.
+//! Request scheduling: FIFO admission queue + continuous batcher +
+//! pool-pressure admission control.
 //!
 //! The engine has a fixed number of batch rows (the compiled executable's
 //! batch dimension). The batcher admits queued requests into free rows at
 //! iteration granularity (Orca-style continuous batching): finished rows
 //! free immediately and the next queued request is prefilled into the slot
 //! while other rows keep decoding.
+//!
+//! With a shared KV block pool, free rows are no longer sufficient: the
+//! `admission::AdmissionController` holds the queue while free blocks sit
+//! under the pool's low watermark (hysteresis up to the high watermark),
+//! and requests the engine preempts re-enter via `RequestQueue::push_front`.
 
+pub mod admission;
 pub mod queue;
 
+pub use admission::AdmissionController;
 pub use queue::{QueuedRequest, RequestQueue};
 
 /// Iteration-level admission decisions for a fixed-row engine.

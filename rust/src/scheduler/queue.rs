@@ -49,6 +49,15 @@ impl RequestQueue {
         self.cv.notify_one();
     }
 
+    /// Put a request at the *front* of the queue — used to hand back a
+    /// request the engine declined under pool pressure, or one whose row was
+    /// preempted, so it is first in line once blocks free up.
+    pub fn push_front(&self, req: QueuedRequest) {
+        let mut g = self.inner.lock().unwrap();
+        g.q.push_front(req);
+        self.cv.notify_one();
+    }
+
     /// Non-blocking pop (engine polls between iterations).
     pub fn try_pop(&self) -> Option<QueuedRequest> {
         self.inner.lock().unwrap().q.pop_front()
@@ -109,6 +118,17 @@ mod tests {
         assert_eq!(q.try_pop().unwrap().id, 1);
         assert_eq!(q.try_pop().unwrap().id, 2);
         assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn push_front_jumps_the_line() {
+        let q = RequestQueue::new();
+        q.push(req(1));
+        q.push(req(2));
+        q.push_front(req(9)); // a held/preempted request goes first
+        assert_eq!(q.try_pop().unwrap().id, 9);
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert_eq!(q.try_pop().unwrap().id, 2);
     }
 
     #[test]

@@ -1,11 +1,39 @@
 //! TCP JSON-lines serving front-end (std::net + threads; the offline crate
-//! set has no tokio — at our batch sizes the engine is PJRT-compute-bound,
-//! so thread-per-connection I/O costs nothing measurable).
+//! set has no tokio — at our batch sizes the engine is compute-bound, so
+//! thread-per-connection I/O costs nothing measurable).
 //!
 //! Protocol (one JSON object per line):
 //!   → {"prompt": "...", "template": "...", "max_new": 256}
 //!   ← {"id": 1, "text": "...", "holes": "…", "finish": "max_tokens",
-//!      "ttft_ms": 12.3, "total_ms": 456.7, "tokens": 256, "evictions": 3}
+//!      "ttft_ms": 12.3, "total_ms": 456.7, "tokens": 256, "evictions": 3,
+//!      "pool": {"free_blocks": 9, "total_blocks": 64,
+//!               "utilization": 0.86, "preemptions": 2}}   // paged mode only
+//!   ← {"error": "..."}                                    // on any failure
+//!
+//! `max_new` is clamped: 0 is rejected, values above [`MAX_MAX_NEW`] are
+//! capped before they reach the scheduler.
+//!
+//! ## Pressure / preemption protocol (paged-KV mode)
+//!
+//! When the engine runs on a shared block pool, the serve loop consults an
+//! `AdmissionController` each iteration: while free blocks sit below the
+//! pool's low watermark the queue is held (requests wait, connections stay
+//! blocked on their reply channel) until the pool recovers past the high
+//! watermark. A request the engine declines (`submit -> Ok(false)`) or
+//! preempts mid-decode goes back to the *front* of the queue with its
+//! prompt intact and is re-prefilled when capacity returns — clients never
+//! see a preemption, only latency. Completed responses carry the pool
+//! gauges above so clients/scrapers observe global pressure.
+//!
+//! ## Failure delivery
+//!
+//! Every queued request owns a reply channel in `routes`. All terminal
+//! outcomes deliver exactly one reply: a response, or an `{"error": ...}`
+//! line when its submit fails or the engine's step errors. On a step error
+//! the engine's active rows are aborted (blocks released, rows cleared) and
+//! exactly those requests get the error line — no connection thread is left
+//! blocked on a channel that can no longer be served, queued-but-unsubmitted
+//! requests are unaffected, and the loop cannot busy-spin on zombie rows.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -17,8 +45,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::{Engine, Request, Response};
-use crate::scheduler::{QueuedRequest, RequestQueue};
+use crate::metrics::PoolGauges;
+use crate::scheduler::{AdmissionController, QueuedRequest, RequestQueue};
 use crate::util::json::Json;
+
+/// Upper bound on a request's `max_new`; larger asks are capped, not erred,
+/// so misconfigured clients degrade gracefully.
+pub const MAX_MAX_NEW: usize = 4096;
 
 pub fn response_to_json(r: &Response) -> Json {
     Json::obj()
@@ -35,8 +68,22 @@ pub fn response_to_json(r: &Response) -> Json {
         .set("evictions", r.metrics.evictions)
 }
 
+/// Block-pool gauges as attached to responses in paged-KV mode.
+pub fn pool_gauges_to_json(g: &PoolGauges) -> Json {
+    Json::obj()
+        .set("free_blocks", g.free_blocks)
+        .set("total_blocks", g.total_blocks)
+        .set("utilization", g.utilization)
+        .set("preemptions", g.preemptions as f64)
+}
+
 pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+    let max_new = j
+        .get("max_new")
+        .and_then(|m| m.as_usize())
+        .unwrap_or(256);
+    anyhow::ensure!(max_new > 0, "max_new must be >= 1");
     Ok(QueuedRequest {
         id,
         prompt: j.str_at("prompt")?.to_string(),
@@ -45,15 +92,24 @@ pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
             .and_then(|t| t.as_str())
             .unwrap_or("")
             .to_string(),
-        max_new: j
-            .get("max_new")
-            .and_then(|m| m.as_usize())
-            .unwrap_or(256),
+        max_new: max_new.min(MAX_MAX_NEW),
         queued_at: Instant::now(),
     })
 }
 
-type Routes = Arc<Mutex<HashMap<u64, mpsc::Sender<Response>>>>;
+/// One terminal outcome per queued request (see "Failure delivery" above).
+enum ServeReply {
+    Done(Response, Option<PoolGauges>),
+    Failed(String),
+}
+
+type Routes = Arc<Mutex<HashMap<u64, mpsc::Sender<ServeReply>>>>;
+
+fn send_reply(routes: &Routes, id: u64, reply: ServeReply) {
+    if let Some(tx) = routes.lock().unwrap().remove(&id) {
+        let _ = tx.send(reply);
+    }
+}
 
 /// Serve an engine on `addr` until `shutdown` flips. The engine loop runs on
 /// the calling thread; connections are handled by spawned threads.
@@ -61,10 +117,14 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     eprintln!(
-        "lazyevictiond: serving on {addr} (policy={}, budget={}, batch={})",
+        "lazyevictiond: serving on {addr} (policy={}, budget={}, batch={}{})",
         engine.policy_name(),
         engine.cfg.budget,
-        engine.cfg.batch
+        engine.cfg.batch,
+        match &engine.cfg.pool {
+            Some(p) => format!(", pool={}x{}", p.n_blocks, p.block_size),
+            None => String::new(),
+        }
     );
 
     let queue = Arc::new(RequestQueue::new());
@@ -99,34 +159,71 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
     }
 
     // engine loop (this thread)
+    let mut admission = AdmissionController::new();
     while !shutdown.load(Ordering::Relaxed) {
         let mut idle = true;
-        while engine.has_free_row() {
+        let admit_open = match engine.pool_pressure() {
+            Some(p) => admission.allow(&p),
+            None => true,
+        };
+        while admit_open && engine.has_free_row() {
             let Some(q) = queue.try_pop() else { break };
             let queued_s = q.queued_at.elapsed().as_secs_f64();
             let req = Request {
                 id: q.id,
-                prompt: q.prompt,
-                template: q.template,
+                prompt: q.prompt.clone(),
+                template: q.template.clone(),
                 max_new: q.max_new,
             };
-            if let Err(e) = engine.submit(req, queued_s) {
-                eprintln!("submit error: {e:#}");
+            match engine.submit(req, queued_s) {
+                Ok(true) => {
+                    idle = false;
+                }
+                Ok(false) => {
+                    // declined under pool pressure: hold it at the front
+                    queue.push_front(q);
+                    break;
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    eprintln!("submit error (request {}): {msg}", q.id);
+                    send_reply(&routes, q.id, ServeReply::Failed(msg));
+                }
             }
-            idle = false;
         }
         if engine.active() > 0 {
             idle = false;
             match engine.step() {
                 Ok(done) => {
-                    let mut routes = routes.lock().unwrap();
+                    let gauges = engine.pool_gauges();
                     for resp in done {
-                        if let Some(tx) = routes.remove(&resp.id) {
-                            let _ = tx.send(resp);
-                        }
+                        let id = resp.id;
+                        send_reply(&routes, id, ServeReply::Done(resp, gauges));
                     }
                 }
-                Err(e) => eprintln!("engine step error: {e:#}"),
+                Err(e) => {
+                    let msg = format!("engine step error: {e:#}");
+                    eprintln!("{msg}");
+                    // Fail exactly the requests whose rows were inside the
+                    // erroring engine — their decode state is gone — and
+                    // clear those rows (blocks released) so the loop cannot
+                    // busy-spin on zombie rows or run out of free rows.
+                    // Requests still waiting in the queue keep their routes
+                    // and are served normally once the engine recovers.
+                    for id in engine.abort_rows() {
+                        send_reply(&routes, id, ServeReply::Failed(msg.clone()));
+                    }
+                }
+            }
+            // preempted rows: prompt preserved, first in line for re-prefill
+            for r in engine.take_preempted() {
+                queue.push_front(QueuedRequest {
+                    id: r.id,
+                    prompt: r.prompt,
+                    template: r.template,
+                    max_new: r.max_new,
+                    queued_at: Instant::now(),
+                });
             }
         }
         if idle {
@@ -164,12 +261,36 @@ fn handle_conn(stream: TcpStream, queue: Arc<RequestQueue>, routes: Routes, next
         routes.lock().unwrap().insert(id, tx);
         queue.push(q);
         match rx.recv() {
-            Ok(resp) => {
-                if writeln!(writer, "{}", response_to_json(&resp).to_string()).is_err() {
+            Ok(ServeReply::Done(resp, gauges)) => {
+                let mut j = response_to_json(&resp);
+                if let Some(g) = gauges {
+                    j = j.set("pool", pool_gauges_to_json(&g));
+                }
+                if writeln!(writer, "{}", j.to_string()).is_err() {
                     break;
                 }
             }
-            Err(_) => break,
+            Ok(ServeReply::Failed(msg)) => {
+                // deterministic failure line; connection stays usable
+                if writeln!(
+                    writer,
+                    "{}",
+                    Json::obj().set("error", msg.as_str()).to_string()
+                )
+                .is_err()
+                {
+                    break;
+                }
+            }
+            // server shut down with the request still queued
+            Err(_) => {
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    Json::obj().set("error", "server shut down").to_string()
+                );
+                break;
+            }
         }
     }
     let _ = peer;
@@ -203,6 +324,20 @@ mod tests {
     }
 
     #[test]
+    fn parse_request_clamps_max_new() {
+        // zero is rejected outright
+        assert!(parse_request(r#"{"prompt":"x","max_new":0}"#, 1).is_err());
+        // negative numbers land on 0 via the f64→usize cast: also rejected
+        assert!(parse_request(r#"{"prompt":"x","max_new":-5}"#, 1).is_err());
+        // absurd values are capped, not erred
+        let q = parse_request(r#"{"prompt":"x","max_new":999999999}"#, 1).unwrap();
+        assert_eq!(q.max_new, MAX_MAX_NEW);
+        let q = parse_request(&format!(r#"{{"prompt":"x","max_new":{MAX_MAX_NEW}}}"#), 1)
+            .unwrap();
+        assert_eq!(q.max_new, MAX_MAX_NEW);
+    }
+
+    #[test]
     fn response_json_shape() {
         use crate::coordinator::FinishReason;
         use crate::metrics::RequestMetrics;
@@ -219,5 +354,21 @@ mod tests {
         assert_eq!(j.str_at("finish").unwrap(), "template_done");
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.usize_at("id").unwrap(), 3);
+    }
+
+    #[test]
+    fn pool_gauges_json_shape() {
+        let g = PoolGauges {
+            free_blocks: 9,
+            total_blocks: 64,
+            utilization: 0.859,
+            preemptions: 2,
+        };
+        let j = pool_gauges_to_json(&g);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.usize_at("free_blocks").unwrap(), 9);
+        assert_eq!(parsed.usize_at("total_blocks").unwrap(), 64);
+        assert_eq!(parsed.usize_at("preemptions").unwrap(), 2);
+        assert!((parsed.f64_at("utilization").unwrap() - 0.859).abs() < 1e-9);
     }
 }

@@ -1,0 +1,305 @@
+//! Pool-capacity replay: how many concurrent sequences a *fixed global
+//! block budget* sustains per eviction policy — the serving-scale payoff of
+//! lagged eviction. Per-sequence live-token curves come from the trace
+//! replayer ([`super::replay`]); this module packs them into one
+//! [`BlockPool`] with the same iteration-level mechanics as the engine:
+//! watermark-gated admission, block-at-a-time growth, whole-block
+//! reclamation after eviction, and youngest-first preemption with
+//! re-prefill when the pool runs dry. The headline metric is
+//! `mean_concurrency` — the sustained batch size under the budget; a policy
+//! whose live set collapses to ≈ B+W (LazyEviction) sustains several times
+//! the concurrency of FullKV's unbounded growth.
+
+use std::collections::VecDeque;
+
+use crate::eviction::{self, PolicyParams};
+use crate::kvpool::{BlockPool, BlockTable, PoolConfig};
+use crate::sim::replay::{replay, ReplayConfig};
+use crate::trace::generator::generate;
+use crate::trace::workload::{dataset_profile, model_profile};
+
+#[derive(Clone, Debug)]
+pub struct CapacitySpec {
+    pub policy: String,
+    pub dataset: String,
+    pub model: String,
+    pub n_requests: usize,
+    /// Per-sequence KV budget B.
+    pub budget: usize,
+    /// Observation window W (also the recent set for the W-baselines).
+    pub window: usize,
+    pub alpha: f32,
+    /// The fixed global budget being contended for.
+    pub pool: PoolConfig,
+    /// Engine row cap (compiled batch dimension analog).
+    pub max_rows: usize,
+    pub seed: u64,
+}
+
+impl CapacitySpec {
+    pub fn new(policy: &str, n_requests: usize) -> CapacitySpec {
+        CapacitySpec {
+            policy: policy.into(),
+            dataset: "gsm8k".into(),
+            model: "ds-llama-8b".into(),
+            n_requests,
+            budget: 96,
+            window: 16,
+            alpha: 1e-3,
+            pool: PoolConfig {
+                block_size: 16,
+                n_blocks: 96,
+                low_watermark: 4,
+                high_watermark: 8,
+            },
+            max_rows: 16,
+            seed: 7,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CapacityReport {
+    pub completed: usize,
+    /// Sequences that could never fit the pool alone (misconfiguration
+    /// guard; 0 in any sane setup).
+    pub failed: usize,
+    pub steps: u64,
+    /// Mean decoding sequences per step — the sustained batch size.
+    pub mean_concurrency: f64,
+    pub peak_concurrency: usize,
+    pub preemptions: u64,
+    pub peak_used_blocks: usize,
+    pub total_blocks: usize,
+    /// Free blocks after the run drains (== total when leak-free).
+    pub end_free_blocks: usize,
+}
+
+/// One queued/active sequence: its live curve and (when active) its table.
+struct SeqSim {
+    prompt_tokens: usize,
+    live_curve: Vec<usize>,
+}
+
+struct ActiveSeq {
+    idx: usize,
+    cursor: usize,
+    table: BlockTable,
+    admit_seq: u64,
+}
+
+/// Replay `n_requests` traces through `spec.policy`, then pack the live
+/// curves into the fixed pool. Deterministic for a given spec.
+pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
+    let wp = dataset_profile(&spec.dataset);
+    let mp = model_profile(&spec.model);
+    let params = PolicyParams {
+        window: spec.window,
+        recent: spec.window,
+        ..PolicyParams::default()
+    };
+    let policy = eviction::build(&spec.policy, &params)?;
+
+    let mut seqs = Vec::with_capacity(spec.n_requests);
+    for i in 0..spec.n_requests {
+        let tr = generate(
+            &wp,
+            &mp,
+            spec.seed.wrapping_mul(7919).wrapping_add(i as u64),
+        );
+        let mut cfg = ReplayConfig::new(spec.budget, spec.window + wp.locality + 2, spec.alpha);
+        cfg.record_live = true;
+        let r = replay(&tr, policy.as_ref(), cfg);
+        seqs.push(SeqSim {
+            prompt_tokens: tr.prompt_len as usize,
+            live_curve: r.live_curve,
+        });
+    }
+
+    let mut pool = BlockPool::new(spec.pool.clone())?;
+    let mut rep = CapacityReport {
+        total_blocks: pool.total_blocks(),
+        ..CapacityReport::default()
+    };
+
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for (i, s) in seqs.iter().enumerate() {
+        // a sequence whose peak demand exceeds the whole pool can never run
+        let peak = s.live_curve.iter().copied().max().unwrap_or(0).max(s.prompt_tokens);
+        if pool.blocks_for(peak + 1) > pool.total_blocks() {
+            rep.failed += 1;
+        } else {
+            queue.push_back(i);
+        }
+    }
+
+    let mut active: Vec<ActiveSeq> = Vec::new();
+    let mut admit_seq = 0u64;
+    let mut conc_sum = 0u64;
+
+    while !(queue.is_empty() && active.is_empty()) {
+        // iteration-level admission, watermark-reserved unless idle
+        while active.len() < spec.max_rows {
+            let Some(&next) = queue.front() else { break };
+            let needed = pool.blocks_for(seqs[next].prompt_tokens + 1);
+            let reserve = if active.is_empty() {
+                0
+            } else {
+                spec.pool.low_watermark
+            };
+            if pool.free_blocks() < needed + reserve {
+                break;
+            }
+            queue.pop_front();
+            let mut table = BlockTable::new(pool.block_size());
+            let mut ok = true;
+            for _ in 0..seqs[next].prompt_tokens {
+                if !table.push_token(&mut pool) {
+                    ok = false;
+                    break;
+                }
+            }
+            debug_assert!(ok, "admission check covered the prompt");
+            if !ok {
+                table.release_all(&mut pool);
+                break;
+            }
+            active.push(ActiveSeq {
+                idx: next,
+                cursor: 0,
+                table,
+                admit_seq,
+            });
+            admit_seq += 1;
+        }
+        if active.is_empty() {
+            // queue non-empty but nothing admissible even at zero reserve:
+            // impossible for per-seq-fitting traces with all blocks free,
+            // kept as a hard stop against livelock
+            if queue.pop_front().is_some() {
+                rep.failed += 1;
+            }
+            continue;
+        }
+
+        // one decode step, oldest row first (preemption victims are always
+        // younger rows that have not advanced yet this step)
+        active.sort_by_key(|a| a.admit_seq);
+        let mut advanced = 0usize;
+        let mut r = 0usize;
+        while r < active.len() {
+            let target = {
+                let a = &active[r];
+                seqs[a.idx].live_curve[a.cursor].max(1)
+            };
+            // shrink first: eviction reclaims whole blocks
+            if target <= active[r].table.len() {
+                active[r].table.truncate(target, &mut pool);
+            }
+            let mut preempted_self = false;
+            while active[r].table.len() < target {
+                if active[r].table.push_token(&mut pool) {
+                    continue;
+                }
+                if r == active.len() - 1 {
+                    // this row is the youngest: preempt it
+                    let mut v = active.remove(r);
+                    v.table.release_all(&mut pool);
+                    queue.push_front(v.idx);
+                    rep.preemptions += 1;
+                    preempted_self = true;
+                    break;
+                }
+                // preempt the youngest (last after the sort) and retry
+                let mut v = active.pop().expect("len > r + 1");
+                v.table.release_all(&mut pool);
+                queue.push_front(v.idx);
+                rep.preemptions += 1;
+            }
+            if preempted_self {
+                continue; // active[r] is now the next row (or none)
+            }
+            let a = &mut active[r];
+            a.cursor += 1;
+            advanced += 1;
+            if a.cursor >= seqs[a.idx].live_curve.len() {
+                a.table.release_all(&mut pool);
+                rep.completed += 1;
+                active.remove(r);
+            } else {
+                r += 1;
+            }
+        }
+        rep.steps += 1;
+        conc_sum += advanced as u64;
+        rep.peak_concurrency = rep.peak_concurrency.max(advanced);
+        rep.peak_used_blocks = rep.peak_used_blocks.max(pool.used_blocks());
+    }
+
+    rep.mean_concurrency = if rep.steps == 0 {
+        0.0
+    } else {
+        conc_sum as f64 / rep.steps as f64
+    };
+    rep.end_free_blocks = pool.free_blocks();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(policy: &str) -> CapacitySpec {
+        let mut s = CapacitySpec::new(policy, 10);
+        // small but representative: pool fits ~4 full sequences' worth of
+        // lazy-compressed state, or ~1.5 uncompressed ones
+        s.pool.n_blocks = 64;
+        s
+    }
+
+    #[test]
+    fn all_requests_complete_and_pool_drains() {
+        for policy in ["full", "lazy"] {
+            let r = run_capacity(&spec(policy)).unwrap();
+            assert_eq!(r.failed, 0, "{policy}: nothing should be unservable");
+            assert_eq!(r.completed, 10, "{policy}: all requests complete");
+            assert_eq!(
+                r.end_free_blocks, r.total_blocks,
+                "{policy}: pool must drain leak-free"
+            );
+            assert!(r.peak_used_blocks <= r.total_blocks);
+        }
+    }
+
+    #[test]
+    fn lazy_sustains_at_least_full_batch() {
+        // The acceptance headline: under the same global budget, lagged
+        // eviction (live ≈ B+W) sustains at least the concurrency of
+        // FullKV's unbounded growth — in practice several times more.
+        let lazy = run_capacity(&spec("lazy")).unwrap();
+        let full = run_capacity(&spec("full")).unwrap();
+        assert!(
+            lazy.mean_concurrency >= full.mean_concurrency,
+            "lazy {} < full {}",
+            lazy.mean_concurrency,
+            full.mean_concurrency
+        );
+        assert!(
+            lazy.peak_used_blocks <= lazy.total_blocks,
+            "peak accounting out of range"
+        );
+    }
+
+    #[test]
+    fn tighter_pool_preempts_or_serializes() {
+        // 30 blocks (480 tokens): a single full-cache sequence (~300-570
+        // tokens) barely fits; concurrency collapses toward 1 and the run
+        // still completes everything that can fit alone
+        let mut s = spec("full");
+        s.pool.n_blocks = 30;
+        let r = run_capacity(&s).unwrap();
+        assert_eq!(r.completed + r.failed, 10);
+        assert!(r.mean_concurrency <= 3.0, "mean {}", r.mean_concurrency);
+        assert_eq!(r.end_free_blocks, r.total_blocks);
+    }
+}

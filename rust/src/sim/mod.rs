@@ -3,9 +3,15 @@
 //! fidelity (Eq. 4 proxy) and task accuracy. This powers the big table
 //! sweeps (Tables 1–5, 9, 10; Figs. 2, 5) where thousands of full real-model
 //! generations per cell would be prohibitive (DESIGN.md §5.3).
+//!
+//! `capacity` is the serving-scale replay mode: per-policy live curves from
+//! `replay` packed into one fixed `kvpool` block budget, reporting the
+//! sustained concurrent batch each policy achieves (benches/pool.rs).
 
 pub mod accuracy;
+pub mod capacity;
 pub mod replay;
 
 pub use accuracy::{accuracy_over, AccuracyModel};
+pub use capacity::{run_capacity, CapacityReport, CapacitySpec};
 pub use replay::{replay, ReplayConfig, ReplayResult};

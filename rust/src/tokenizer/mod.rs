@@ -9,13 +9,26 @@ pub struct Tokenizer {
     lookup: HashMap<char, u32>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TokenizerError {
-    #[error("character {0:?} is not in the model charset")]
     UnknownChar(char),
-    #[error("token id {0} out of range (vocab {1})")]
     BadId(u32, usize),
 }
+
+impl std::fmt::Display for TokenizerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TokenizerError::UnknownChar(c) => {
+                write!(f, "character {c:?} is not in the model charset")
+            }
+            TokenizerError::BadId(id, vocab) => {
+                write!(f, "token id {id} out of range (vocab {vocab})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TokenizerError {}
 
 impl Tokenizer {
     pub fn new(charset: &str) -> Tokenizer {

@@ -1,0 +1,141 @@
+//! End-to-end paged-KV serving over localhost TCP — no artifacts needed:
+//! the engine runs the deterministic sim backend. Six concurrent clients
+//! contend for a 12-block pool behind a batch-2 engine, which drives the
+//! serve loop past the admission watermark (and through preemption when
+//! two rows' growth collides); every client must still get a well-formed
+//! response carrying the pool gauges.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use lazyeviction::coordinator::{Engine, EngineConfig};
+use lazyeviction::kvpool::PoolConfig;
+use lazyeviction::util::json::Json;
+
+fn sim_engine() -> Engine {
+    let mut cfg = EngineConfig {
+        batch: 2,
+        cache: 64,
+        budget: 40,
+        policy: "lazy".into(),
+        record_live: false,
+        pool: Some(PoolConfig {
+            block_size: 8,
+            n_blocks: 12,
+            low_watermark: 2,
+            high_watermark: 4,
+        }),
+        ..Default::default()
+    };
+    cfg.params.window = 8;
+    cfg.params.recent = 8;
+    Engine::new_sim(cfg).expect("sim engine")
+}
+
+#[test]
+fn pooled_serve_past_admission_watermark() {
+    let addr = "127.0.0.1:8953";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    {
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            let engine = sim_engine();
+            let _ = lazyeviction::server::serve(engine, addr, shutdown);
+        });
+    }
+    // wait for the listener
+    let mut probe = None;
+    for _ in 0..200 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                probe = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    drop(probe.expect("server did not come up within 4s"));
+
+    // 6 concurrent requests: 2 rows, ~6 blocks each near budget — far more
+    // demand than 12 blocks admit at once, so the watermark holds the queue
+    let mut handles = Vec::new();
+    for c in 0..6u32 {
+        handles.push(std::thread::spawn(move || -> String {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            writeln!(&stream, r#"{{"prompt":"#A={c};B=7;\n>","max_new":48}}"#).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line
+        }));
+    }
+
+    let mut served = 0;
+    for h in handles {
+        let line = h.join().unwrap();
+        let j = Json::parse(&line).expect("json response line");
+        assert!(
+            j.get("error").is_none(),
+            "server returned an error: {line}"
+        );
+        assert_eq!(j.usize_at("tokens").unwrap(), 48);
+        assert_eq!(j.str_at("finish").unwrap(), "max_tokens");
+        let pool = j.req("pool").expect("pool gauges attached in paged mode");
+        assert_eq!(pool.usize_at("total_blocks").unwrap(), 12);
+        assert!(pool.usize_at("free_blocks").unwrap() <= 12);
+        let util = pool.f64_at("utilization").unwrap();
+        assert!((0.0..=1.0).contains(&util), "utilization {util}");
+        served += 1;
+    }
+    assert_eq!(served, 6);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn malformed_and_clamped_requests_get_deterministic_lines() {
+    let addr = "127.0.0.1:8954";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    {
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            let engine = sim_engine();
+            let _ = lazyeviction::server::serve(engine, addr, shutdown);
+        });
+    }
+    let mut stream = None;
+    for _ in 0..200 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    let stream = stream.expect("server did not come up within 4s");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // bad json → error line, connection stays usable
+    writeln!(&stream, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("error").is_some());
+
+    // max_new 0 → rejected before it reaches the scheduler
+    writeln!(&stream, r#"{{"prompt":"#A=1;\n>","max_new":0}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.str_at("error").unwrap().contains("max_new"));
+
+    // a good request on the same connection still completes
+    writeln!(&stream, r#"{{"prompt":"#A=1;\n>","max_new":8}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("error").is_none(), "line: {line}");
+    assert_eq!(j.usize_at("tokens").unwrap(), 8);
+    shutdown.store(true, Ordering::Relaxed);
+}

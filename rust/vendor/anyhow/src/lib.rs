@@ -1,0 +1,262 @@
+//! Offline shim for the `anyhow` crate: the subset of its API this workspace
+//! uses — `Result`/`Error`, the `anyhow!`/`bail!`/`ensure!` macros, and the
+//! `Context` extension trait over `Result` and `Option`. The build
+//! environment has no registry access, so this path dependency stands in for
+//! the real crate; swap the `[dependencies]` entry for crates.io `anyhow`
+//! and everything keeps compiling (the API shapes match).
+
+use std::fmt::{self, Display};
+
+/// Drop-in alias matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a human-readable context chain. Like `anyhow::Error`, it
+/// deliberately does NOT implement `std::error::Error` — that is what makes
+/// the blanket `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first (`{:#}` renders `msg: cause: cause`).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a displayable message (what `anyhow!` expands to).
+    pub fn msg(m: impl Display) -> Error {
+        Error {
+            msg: m.to_string(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Build from a standard error, capturing its source chain.
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error {
+            msg: e.to_string(),
+            chain,
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl Display) -> Error {
+        let old = std::mem::replace(&mut self.msg, c.to_string());
+        self.chain.insert(0, old);
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain_strings(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(|s| s.as_str()))
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for c in &self.chain {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.chain.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for c in &self.chain {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `anyhow::Context`: attach context to the error variant of a `Result`, or
+/// turn a `None` into an error.
+pub trait Context<T, E>: Sized {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+// Coherent alongside the impl above because `Error` does not implement
+// `std::error::Error` (the same trick the real anyhow uses).
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!`: format a message into an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// `bail!`: early-return an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!`: early-return an error when the condition is false. With no
+/// message, the stringified condition is the message (matching anyhow).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: `{}`",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Error::new(io_err()).context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: disk on fire");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "disk on fire");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: disk on fire");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        assert_eq!(Some(3).context("present").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn check(x: usize) -> Result<usize> {
+            ensure!(x > 1, "x too small: {x}");
+            ensure!(x < 100);
+            if x == 13 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(2).unwrap(), 2);
+        assert_eq!(format!("{}", check(0).unwrap_err()), "x too small: 0");
+        assert_eq!(
+            format!("{}", check(200).unwrap_err()),
+            "condition failed: `x < 100`"
+        );
+        assert_eq!(format!("{}", check(13).unwrap_err()), "unlucky");
+        let e = anyhow!("plain {}", "fmt");
+        assert_eq!(format!("{e}"), "plain fmt");
+    }
+
+    #[test]
+    fn error_chain_iterates() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        let chain: Vec<&str> = e.chain_strings().collect();
+        assert_eq!(chain, vec!["outer", "mid", "inner"]);
+    }
+}
