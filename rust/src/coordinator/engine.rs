@@ -8,15 +8,24 @@
 //! `kvpool::PoolConfig` in the engine config, rows stop assuming dedicated
 //! capacity and instead allocate KV blocks from a shared pool:
 //!
-//! * `submit` admits a request only when enough free blocks cover its
-//!   prompt (+1 headroom block) — otherwise it reports "not admitted" and
-//!   the scheduler keeps it queued;
+//! * `submit` consults the prompt-prefix cache first: an identical prompt
+//!   header forks the donor's whole blocks for free, and admission only has
+//!   to cover the *private* remainder (+1 headroom block) — stale cache
+//!   pins are shed LRU-first before a request is declined;
 //! * before each decode step the engine ensures every active row can map
-//!   one more token; if the pool is dry it **preempts the youngest row**
-//!   (highest admission ticket): blocks are returned, the request is handed
-//!   back via [`Engine::take_preempted`] for re-prefill;
-//! * the eviction pass (`apply_keep_pooled`) returns whole freed blocks to
-//!   the pool — lagged eviction becomes cross-sequence capacity.
+//!   one more token; if the pool is dry it sheds cache pins, then
+//!   **preempts the youngest row** (highest admission ticket): blocks are
+//!   returned, the request is handed back via [`Engine::take_preempted`]
+//!   for re-prefill;
+//! * the eviction pass privatizes a row's shared blocks (copy-on-write)
+//!   before compacting, so a donor's mapping is never mutated, and
+//!   (`apply_keep_pooled`) returns whole freed blocks to the pool — lagged
+//!   eviction becomes cross-sequence capacity.
+//!
+//! Scope note (same as `kvpool`): K/V tensors still live in per-row device
+//! buffers, so a prefix hit shares the *logical* block budget (admission
+//! capacity), not physical memory — prefill still runs per row. True paged
+//! attention on device is the recorded follow-up in ROADMAP.md.
 
 use std::time::Instant;
 
@@ -27,7 +36,7 @@ use crate::coordinator::row::RowState;
 use crate::coordinator::{EngineConfig, Request, Response};
 use crate::eviction::{self, Policy};
 use crate::kvcache::TokenRecord;
-use crate::kvpool::{BlockPool, BlockTable, PoolPressure};
+use crate::kvpool::{BlockPool, BlockTable, PoolPressure, PrefixCache};
 use crate::metrics::{EngineMetrics, PoolGauges, RequestMetrics};
 use crate::runtime::{Client, DecodeBackend, Manifest, ModelExecutor, SimBackend};
 use crate::tokenizer::Tokenizer;
@@ -40,6 +49,8 @@ pub struct Engine {
     rows: Vec<Option<RowState>>,
     /// Shared block pool (present iff cfg.pool is set).
     pool: Option<BlockPool>,
+    /// Prompt-prefix cache (present iff pool + cfg.prefix_cache are set).
+    prefix_cache: Option<PrefixCache>,
     /// Requests preempted since the last `take_preempted` drain.
     preempted: Vec<Request>,
     /// Next admission ticket (monotone; youngest row = max ticket).
@@ -83,6 +94,10 @@ impl Engine {
             Some(pc) => Some(BlockPool::new(pc.clone())?),
             None => None,
         };
+        let prefix_cache = match (&pool, &cfg.prefix_cache) {
+            (Some(_), Some(pc)) => Some(PrefixCache::new(pc.clone())),
+            _ => None,
+        };
         let (b, s) = (cfg.batch, cfg.cache);
         Ok(Engine {
             vocab: exec.dims().vocab,
@@ -90,6 +105,7 @@ impl Engine {
             policy,
             rows: (0..b).map(|_| None).collect(),
             pool,
+            prefix_cache,
             preempted: Vec::new(),
             admit_seq: 0,
             metrics: EngineMetrics::default(),
@@ -126,12 +142,48 @@ impl Engine {
 
     /// Pool gauges for metrics export / server responses.
     pub fn pool_gauges(&self) -> Option<PoolGauges> {
-        self.pool.as_ref().map(|p| PoolGauges {
-            free_blocks: p.free_blocks(),
-            total_blocks: p.total_blocks(),
-            utilization: p.utilization(),
-            preemptions: self.metrics.preemptions,
+        self.pool.as_ref().map(|p| {
+            let mut g = PoolGauges {
+                free_blocks: p.free_blocks(),
+                total_blocks: p.total_blocks(),
+                utilization: p.utilization(),
+                preemptions: self.metrics.preemptions,
+                shared_blocks: p.shared_blocks(),
+                ..PoolGauges::default()
+            };
+            if let Some(pc) = &self.prefix_cache {
+                g.prefix_hits = pc.hits;
+                g.prefix_misses = pc.misses;
+                g.prefix_entries = pc.len();
+                g.prefix_pinned_blocks = pc.pinned_blocks();
+            }
+            g
         })
+    }
+
+    /// Drop every prompt-prefix cache entry, releasing its block pins
+    /// (admin reset; also lets tests assert the pool drains to fully free).
+    pub fn clear_prefix_cache(&mut self) {
+        if let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) {
+            pc.clear(pool);
+        }
+    }
+
+    /// Shed prefix-cache pins (LRU-first) until free blocks reach the
+    /// pool's high watermark or the cache is empty. The serve loop calls
+    /// this when admission is gated but *nothing is decoding*: with no row
+    /// left to finish and free more blocks, stale pins are the only thing
+    /// keeping the latch closed, and without this valve the queue would
+    /// hang forever.
+    pub fn shed_prefix_to_high_watermark(&mut self) {
+        let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) else {
+            return;
+        };
+        while pool.free_blocks() < pool.config().high_watermark {
+            if !pc.shed_lru_reclaimable(pool) {
+                break;
+            }
+        }
     }
 
     /// Drain the requests preempted since the last call; the caller re-runs
@@ -196,13 +248,43 @@ impl Engine {
             ids.len(),
             self.cfg.budget
         );
-        // pressure-driven admission: the prompt (plus one headroom block for
-        // the first decode token) must fit in the free part of the pool
-        if let Some(pool) = self.pool.as_ref() {
-            if pool.free_blocks() < pool.blocks_for(ids.len() + 1) {
+        // pressure-driven admission. With a prefix-cache hit the row's
+        // leading whole blocks are forked from the donor for free, so only
+        // the *private* remainder (plus one headroom block for the first
+        // decode token) must fit in the free part of the pool. Stale cache
+        // pins are shed LRU-first before declining, so a cache-heavy pool
+        // can never starve admissions.
+        let mut fork: Option<BlockTable> = None;
+        if let Some(pool) = self.pool.as_mut() {
+            if let Some(pc) = self.prefix_cache.as_mut() {
+                if let Some(donor) = pc.lookup(&ids, pool.block_size()) {
+                    fork = Some(BlockTable::fork_prefix(donor, ids.len(), pool));
+                }
+            }
+            let shared = fork.as_ref().map_or(0, |t| t.n_blocks());
+            let needed = pool.blocks_for(ids.len() + 1).saturating_sub(shared);
+            if let Some(pc) = self.prefix_cache.as_mut() {
+                // only entries whose shedding actually frees blocks help
+                // here, and only when the total reclaimable pins can cover
+                // the shortfall — otherwise a too-big request would wipe
+                // the cache and be declined anyway, costing every later
+                // identical-prompt admission its sharing for nothing
+                if pool.free_blocks() + pc.reclaimable_blocks(pool) >= needed {
+                    while pool.free_blocks() < needed {
+                        if !pc.shed_lru_reclaimable(pool) {
+                            break;
+                        }
+                    }
+                }
+            }
+            if pool.free_blocks() < needed {
+                if let Some(mut t) = fork.take() {
+                    t.release_all(pool);
+                }
                 return Ok(false);
             }
         }
+        let prefix_hit = fork.is_some();
 
         let t0 = Instant::now();
         let mut toks = vec![0i32; p_bucket];
@@ -211,15 +293,33 @@ impl Engine {
             toks[i] = id as i32;
             valid[i] = 1.0;
         }
-        let out = self.exec.prefill(&toks, &valid)?;
-        self.exec.insert(&out.k_seq, &out.v_seq, row_idx)?;
+        // a backend error must not leak the fork's block references
+        let release_fork = |slf: &mut Engine, fork: &mut Option<BlockTable>| {
+            if let (Some(pool), Some(mut t)) = (slf.pool.as_mut(), fork.take()) {
+                t.release_all(pool);
+            }
+        };
+        let out = match self.exec.prefill(&toks, &valid) {
+            Ok(o) => o,
+            Err(e) => {
+                release_fork(self, &mut fork);
+                return Err(e);
+            }
+        };
+        if let Err(e) = self.exec.insert(&out.k_seq, &out.v_seq, row_idx) {
+            release_fork(self, &mut fork);
+            return Err(e);
+        }
         self.metrics.record_prefill(t0.elapsed());
 
         let mut row = RowState::new(req, self.cfg.cache, queued_s);
         row.admit_seq = self.admit_seq;
         self.admit_seq += 1;
         if let Some(pool) = self.pool.as_ref() {
-            row.seq.attach_block_table(BlockTable::new(pool.block_size()));
+            let table = fork
+                .take()
+                .unwrap_or_else(|| BlockTable::new(pool.block_size()));
+            row.seq.attach_block_table(table);
         }
         let p = ids.len();
         let d = self.exec.dims();
@@ -244,6 +344,20 @@ impl Engine {
                 None => {
                     row.seq.push(rec);
                 }
+            }
+        }
+        // the admission actually went through: settle the hit/miss counters
+        // (a lookup whose admission was declined counts as neither), and
+        // register this prompt's whole-block prefix so later identical
+        // headers fork it (no-op if an entry already covers it)
+        if let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) {
+            if prefix_hit {
+                pc.hits += 1;
+            } else {
+                pc.misses += 1;
+            }
+            if let Some(t) = row.seq.block_table() {
+                pc.insert(&ids, t, pool);
             }
         }
         // one observation from the last prompt row's attention
@@ -286,11 +400,12 @@ impl Engine {
         self.preempted.push(row.req);
     }
 
-    /// Make sure every active row can map one more token this step; preempt
-    /// youngest rows while the pool cannot cover the demand. Terminates:
-    /// each round either satisfies the demand or removes a row, and config
-    /// validation guarantees a solo row always fits
-    /// (`n_blocks * block_size >= cache`).
+    /// Make sure every active row can map one more token this step. When
+    /// the pool cannot cover the demand, shed prefix-cache pins LRU-first,
+    /// then preempt youngest rows. Terminates: each round either satisfies
+    /// the demand, sheds a (finite) cache entry, or removes a row, and
+    /// config validation guarantees a solo row with no stale pins always
+    /// fits (`n_blocks * block_size >= cache`).
     fn ensure_block_headroom(&mut self) {
         loop {
             let Some(pool) = self.pool.as_ref() else { return };
@@ -299,10 +414,18 @@ impl Engine {
                 .rows
                 .iter()
                 .flatten()
-                .filter(|r| r.seq.needs_block_for_next())
+                .filter(|r| r.seq.needs_block_for_next(pool))
                 .count();
             if needed <= free {
                 return;
+            }
+            // stale cache pins go before live rows — but only pins whose
+            // shedding actually frees blocks; still-shared entries would
+            // relieve nothing and are kept for future admissions
+            if let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) {
+                if pc.shed_lru_reclaimable(pool) {
+                    continue;
+                }
             }
             let victim = self
                 .rows
@@ -314,6 +437,53 @@ impl Engine {
             match victim {
                 Some(i) => self.preempt_row(i),
                 None => return,
+            }
+        }
+    }
+
+    /// Copy-on-write row `i`'s shared blocks so an eviction pass can mutate
+    /// its mapping. Allocation pressure is resolved by shedding prefix-cache
+    /// pins LRU-first, then preempting the youngest *other* row (whose
+    /// released references often privatize `i`'s blocks with no allocation
+    /// at all). Returns false only when the row still shares blocks and
+    /// nothing is left to shed or preempt — the caller skips the eviction
+    /// pass for that row this step and retries next step.
+    fn make_row_private(&mut self, i: usize) -> bool {
+        loop {
+            let shared_ids = {
+                let Some(pool) = self.pool.as_mut() else { return true };
+                let Some(row) = self.rows[i].as_mut() else { return true };
+                if row.seq.make_private(pool) {
+                    return true;
+                }
+                row.seq
+                    .block_table()
+                    .map(|t| t.shared_block_ids(pool))
+                    .unwrap_or_default()
+            };
+            if let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) {
+                // first drop cache entries holding *this row's* shared
+                // blocks — that lowers their refcount directly, often
+                // privatizing the row with no allocation at all...
+                if pc.shed_lru_overlapping(&shared_ids, pool) {
+                    continue;
+                }
+                // ...then entries whose shedding frees blocks for the copy
+                if pc.shed_lru_reclaimable(pool) {
+                    continue;
+                }
+            }
+            let victim = self
+                .rows
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .filter_map(|(j, r)| r.as_ref().map(|row| (row.admit_seq, j)))
+                .max_by_key(|&(seq, _)| seq)
+                .map(|(_, j)| j);
+            match victim {
+                Some(j) => self.preempt_row(j),
+                None => return false,
             }
         }
     }
@@ -437,6 +607,10 @@ impl Engine {
                 None => false,
             };
             let range = i * s..(i + 1) * s;
+            // CoW before compaction: eviction reorders slot contents, so a
+            // row still sharing prefix blocks must detach them first. If
+            // privatization is impossible right now, defer this row's pass.
+            let wants = wants && (self.pool.is_none() || self.make_row_private(i));
             if wants {
                 let row = self.rows[i].as_mut().unwrap();
                 let keep =
@@ -628,10 +802,15 @@ mod tests {
         assert_eq!(g0.free_blocks, 16);
         let r = e.run_all(vec![req(1, 40)]).unwrap();
         assert_eq!(r[0].metrics.tokens_out, 40);
-        // drained: every block returned
+        // drained up to the prefix cache's pin on the prompt's whole block
         let g = e.pool_gauges().unwrap();
-        assert_eq!(g.free_blocks, 16);
+        assert_eq!(g.prefix_entries, 1);
+        assert_eq!(g.prefix_pinned_blocks, 1); // 11-token prompt, 8-block
+        assert_eq!(g.free_blocks, 15);
         assert_eq!(g.preemptions, 0);
+        // clearing the cache releases the pin: fully free again
+        e.clear_prefix_cache();
+        assert_eq!(e.pool_gauges().unwrap().free_blocks, 16);
     }
 
     #[test]
@@ -659,7 +838,8 @@ mod tests {
             e.metrics.preemptions >= 1,
             "two 6-block rows in a 9-block pool must preempt"
         );
-        // leak-free: the drained pool is fully free again
+        // leak-free: beyond the cache pin the drained pool is fully free
+        e.clear_prefix_cache();
         assert_eq!(e.pool_gauges().unwrap().free_blocks, 9);
     }
 
@@ -681,10 +861,22 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![1, 2]);
         assert_eq!(e.active(), 0);
-        // aborted rows returned their blocks; nothing was re-queued
+        // aborted rows returned their blocks; nothing was re-queued. Only
+        // the prefix cache's pin on the shared prompt block remains.
+        e.clear_prefix_cache();
         assert_eq!(e.pool_gauges().unwrap().free_blocks, 16);
         assert!(e.take_preempted().is_empty());
         assert!(e.abort_rows().is_empty());
+    }
+
+    // 19-token prompt: private admission needs blocks_for(20) = 3 free blocks
+    fn big(id: u64) -> Request {
+        Request {
+            id,
+            prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
+            template: String::new(),
+            max_new: 50,
+        }
     }
 
     #[test]
@@ -695,14 +887,10 @@ mod tests {
             low_watermark: 0,
             high_watermark: 0,
         };
-        let mut e = Engine::new_sim(sim_cfg(2, Some(pool))).unwrap();
-        // 19-token prompt: admission needs blocks_for(20) = 3 free blocks
-        let big = |id: u64| Request {
-            id,
-            prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
-            template: String::new(),
-            max_new: 50,
-        };
+        // prefix sharing off: this is the private-allocation admission path
+        let mut cfg = sim_cfg(2, Some(pool));
+        cfg.prefix_cache = None;
+        let mut e = Engine::new_sim(cfg).unwrap();
         assert!(e.submit(big(1), 0.0).unwrap());
         // 25 decode steps: row 1 is at live = 19 + 25 = 44 tokens = 6 of the
         // 8 blocks (first lazy eviction only lands at pos 48), so free = 2
@@ -716,5 +904,146 @@ mod tests {
         );
         assert!(e.has_free_row(), "the decline must come from the pool, not rows");
         assert_eq!(e.pool_gauges().unwrap().free_blocks, 2);
+    }
+
+    #[test]
+    fn prefix_sharing_admits_where_private_allocation_cannot() {
+        // Same shape as pool_admission_defers_when_free_blocks_short, but
+        // with the prefix cache on: the identical prompt's two whole blocks
+        // are forked from the first row, so the second admission only needs
+        // one private block — and 2 are free.
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 8,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(2, Some(pool))).unwrap();
+        assert!(e.submit(big(1), 0.0).unwrap());
+        for _ in 0..25 {
+            e.step().unwrap();
+        }
+        let g = e.pool_gauges().unwrap();
+        assert_eq!(g.prefix_entries, 1);
+        assert_eq!(g.prefix_misses, 1);
+        assert!(
+            e.submit(big(2), 0.0).unwrap(),
+            "an identical prompt must be admitted through block sharing"
+        );
+        assert_eq!(e.active(), 2);
+        let g = e.pool_gauges().unwrap();
+        assert_eq!(g.prefix_hits, 1);
+        assert!(g.shared_blocks >= 2, "prompt blocks shared: {g:?}");
+        // both requests complete (one may preempt and retry under this
+        // tight pool) and the pool drains once the cache pin is released
+        let mut done: Vec<u64> = Vec::new();
+        let mut pending: Vec<Request> = Vec::new();
+        for _ in 0..10_000 {
+            done.extend(e.step().unwrap().into_iter().map(|r| r.id));
+            pending.extend(e.take_preempted());
+            while let Some(r) = pending.pop() {
+                if !e.submit(r.clone(), 0.0).unwrap() {
+                    pending.push(r);
+                    break;
+                }
+            }
+            if e.active() == 0 && pending.is_empty() {
+                break;
+            }
+        }
+        done.sort_unstable();
+        assert_eq!(done, vec![1, 2]);
+        e.clear_prefix_cache();
+        assert_eq!(e.pool_gauges().unwrap().free_blocks, 8);
+    }
+
+    #[test]
+    fn stale_pins_shed_to_reopen_admission() {
+        // Five distinct prompts each leave a one-block cache pin behind.
+        // With the engine drained, those pins are the only pool pressure;
+        // the relief valve must restore free blocks to the high watermark
+        // so the serve loop's admission latch can reopen.
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 8,
+            low_watermark: 2,
+            high_watermark: 6,
+        };
+        let mut e = Engine::new_sim(sim_cfg(1, Some(pool))).unwrap();
+        for (i, p) in ["#A=1;B=2;\n>", "#A=2;B=3;\n>", "#A=3;B=4;\n>", "#A=4;B=5;\n>", "#A=5;B=6;\n>"]
+            .iter()
+            .enumerate()
+        {
+            let r = e
+                .run_all(vec![Request {
+                    id: i as u64,
+                    prompt: (*p).into(),
+                    template: String::new(),
+                    max_new: 8,
+                }])
+                .unwrap();
+            assert_eq!(r.len(), 1);
+        }
+        let g = e.pool_gauges().unwrap();
+        assert_eq!(g.prefix_entries, 5);
+        assert_eq!(g.prefix_pinned_blocks, 5);
+        assert_eq!(g.free_blocks, 3); // below the high watermark of 6
+        e.shed_prefix_to_high_watermark();
+        let g = e.pool_gauges().unwrap();
+        assert!(g.free_blocks >= 6, "valve must reach the high watermark");
+        assert_eq!(g.prefix_entries, 2);
+    }
+
+    #[test]
+    fn divergent_tails_copy_on_write_without_corruption() {
+        // Prompts share their first whole block (8 identical chars) then
+        // diverge. Under sharing, each row's output must match the output
+        // of a solo, sharing-free run of the same prompt — byte for byte.
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let prompts = ["#A=3;B=7;C=2;\n>", "#A=3;B=7;D=9;\n>", "#A=3;B=7;E=1;\n>"];
+        let solo: Vec<String> = prompts
+            .iter()
+            .map(|p| {
+                let mut cfg = sim_cfg(1, None);
+                cfg.prefix_cache = None;
+                let mut e = Engine::new_sim(cfg).unwrap();
+                let r = e
+                    .run_all(vec![Request {
+                        id: 0,
+                        prompt: (*p).into(),
+                        template: String::new(),
+                        max_new: 40,
+                    }])
+                    .unwrap();
+                r[0].text.clone()
+            })
+            .collect();
+
+        let mut e = Engine::new_sim(sim_cfg(2, Some(pool))).unwrap();
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request {
+                id: i as u64,
+                prompt: (*p).into(),
+                template: String::new(),
+                max_new: 40,
+            })
+            .collect();
+        let mut rs = e.run_all(reqs).unwrap();
+        rs.sort_by_key(|r| r.id);
+        assert_eq!(rs.len(), 3);
+        for (r, want) in rs.iter().zip(solo.iter()) {
+            assert_eq!(&r.text, want, "request {} corrupted under sharing", r.id);
+        }
+        let g = e.pool_gauges().unwrap();
+        assert!(g.prefix_hits >= 2, "later prompts must hit the shared block");
+        e.clear_prefix_cache();
+        assert_eq!(e.pool_gauges().unwrap().free_blocks, 16);
     }
 }

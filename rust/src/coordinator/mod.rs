@@ -7,7 +7,7 @@ pub mod row;
 pub use engine::Engine;
 
 use crate::eviction::PolicyParams;
-use crate::kvpool::PoolConfig;
+use crate::kvpool::{PoolConfig, PrefixCacheConfig};
 use crate::metrics::RequestMetrics;
 
 /// Engine configuration (one engine = one compiled (batch, cache) shape).
@@ -37,6 +37,10 @@ pub struct EngineConfig {
     /// a global budget, with pressure-driven admission and youngest-row
     /// preemption when it runs dry.
     pub pool: Option<PoolConfig>,
+    /// Prompt-prefix block sharing across rows (paged mode only; ignored
+    /// without `pool`). On by default: identical prompt headers fork whole
+    /// blocks instead of re-allocating them. `None` disables sharing.
+    pub prefix_cache: Option<PrefixCacheConfig>,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +56,7 @@ impl Default for EngineConfig {
             collect_sketches: false,
             record_live: true,
             pool: None,
+            prefix_cache: Some(PrefixCacheConfig::default()),
         }
     }
 }
@@ -88,6 +93,12 @@ impl EngineConfig {
                 p.block_size,
                 self.cache
             );
+            if let Some(pc) = &self.prefix_cache {
+                anyhow::ensure!(
+                    pc.max_entries >= 1,
+                    "prefix cache needs max_entries >= 1 (use None to disable)"
+                );
+            }
         }
         Ok(())
     }

@@ -100,12 +100,20 @@ impl SeqKv {
         }
     }
 
-    /// Attach a (fresh) paged-view block table. Must happen before tokens
-    /// are pushed, so table length and record count stay in lockstep.
+    /// Attach a paged-view block table before any token is pushed. The
+    /// table is either fresh (empty) or a prefix fork whose whole-block
+    /// mapping the prompt's leading records will fill in — in the forked
+    /// case `push_pooled` consumes the premapped slots without allocating,
+    /// and once `records.len()` catches up the two grow in lockstep again.
     pub fn attach_block_table(&mut self, table: BlockTable) {
         assert!(
-            self.records.is_empty() && table.len() == self.records.len(),
+            self.records.is_empty(),
             "block table must be attached to an empty sequence"
+        );
+        assert!(
+            table.len() % table.block_size() == 0,
+            "prefix forks premap whole blocks only (len {})",
+            table.len()
         );
         self.block_table = Some(table);
     }
@@ -114,24 +122,44 @@ impl SeqKv {
         self.block_table.as_ref()
     }
 
-    /// Will the next pooled push need a fresh block from the pool?
-    pub fn needs_block_for_next(&self) -> bool {
+    /// Will the next pooled push need a fresh block from the pool? True at
+    /// block boundaries and when the push would copy-on-write a shared tail
+    /// block (both paths call `BlockPool::alloc`).
+    pub fn needs_block_for_next(&self, pool: &BlockPool) -> bool {
         match &self.block_table {
-            Some(t) => t.at_block_boundary(),
+            Some(t) => {
+                if self.records.len() < t.len() {
+                    false // premapped by a prefix fork: no allocation
+                } else {
+                    t.at_block_boundary() || t.tail_is_shared(pool)
+                }
+            }
             None => false,
         }
     }
 
     /// `push` through the paged view: maps one more token in the block
-    /// table first (allocating at block boundaries). Returns `None` with
-    /// state unchanged when the pool is exhausted.
+    /// table first (allocating at block boundaries, or consuming a slot a
+    /// prefix fork premapped). Returns `None` with state unchanged when the
+    /// pool is exhausted.
     pub fn push_pooled(&mut self, rec: TokenRecord, pool: &mut BlockPool) -> Option<usize> {
         if let Some(t) = self.block_table.as_mut() {
-            if !t.push_token(pool) {
+            if self.records.len() >= t.len() && !t.push_token(pool) {
                 return None;
             }
         }
         Some(self.push(rec))
+    }
+
+    /// Copy-on-write every shared block so compaction/eviction can mutate
+    /// the mapping freely. True when the table is fully private (or absent);
+    /// false when the pool could not supply replacement blocks — the table
+    /// stays consistent and the call can be retried after shedding/preempting.
+    pub fn make_private(&mut self, pool: &mut BlockPool) -> bool {
+        match self.block_table.as_mut() {
+            Some(t) => t.ensure_private(pool),
+            None => true,
+        }
     }
 
     /// `apply_keep` through the paged view: compaction shrinks the live set
@@ -352,11 +380,45 @@ mod tests {
         assert_eq!(t.len(), s.len());
         assert_eq!(t.n_blocks(), 3);
         assert_eq!(pool.used_blocks(), 3);
-        assert!(!s.needs_block_for_next()); // 9 < 12
+        assert!(!s.needs_block_for_next(&pool)); // 9 < 12
         for i in 9..12 {
             s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
         }
-        assert!(s.needs_block_for_next());
+        assert!(s.needs_block_for_next(&pool));
+    }
+
+    #[test]
+    fn prefix_fork_premaps_prompt_slots() {
+        use crate::kvpool::BlockTable;
+        let (mut donor, mut pool) = pooled_pair();
+        for i in 0..8 {
+            donor.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        assert_eq!(pool.used_blocks(), 2);
+        // fork the donor's 2 whole blocks into a new sequence
+        let fork = BlockTable::fork_prefix(donor.block_table().unwrap(), 8, &mut pool);
+        let mut s = SeqKv::new(32);
+        s.attach_block_table(fork);
+        assert!(!s.needs_block_for_next(&pool));
+        // the first 8 records consume premapped slots: no allocation
+        for i in 0..8 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        assert_eq!(pool.used_blocks(), 2, "shared prefix allocated nothing");
+        assert_eq!(s.block_table().unwrap().len(), 8);
+        // caught up: the 9th record grows the table privately again
+        assert!(s.needs_block_for_next(&pool));
+        s.push_pooled(TokenRecord::new(8, 8), &mut pool).unwrap();
+        assert_eq!(pool.used_blocks(), 3);
+        assert_eq!(s.block_table().unwrap().len(), 9);
+        // CoW before compaction: the shared prefix becomes private
+        assert_eq!(s.block_table().unwrap().n_shared_blocks(&pool), 2);
+        assert!(s.make_private(&mut pool));
+        assert_eq!(s.block_table().unwrap().n_shared_blocks(&pool), 0);
+        assert_eq!(pool.used_blocks(), 5);
+        s.release_blocks(&mut pool);
+        donor.release_blocks(&mut pool);
+        assert_eq!(pool.free_blocks(), 8);
     }
 
     #[test]
@@ -403,7 +465,7 @@ mod tests {
         use crate::kvpool::{BlockPool, PoolConfig};
         let mut pool = BlockPool::new(PoolConfig::default()).unwrap();
         let mut s = seq_with(6);
-        assert!(!s.needs_block_for_next());
+        assert!(!s.needs_block_for_next(&pool));
         let (evicted, freed) = s.apply_keep_pooled(&[0, 1], 9, &mut pool);
         assert_eq!(evicted.len(), 4);
         assert_eq!(freed, 0);

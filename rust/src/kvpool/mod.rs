@@ -21,7 +21,10 @@
 //!
 //! Refcounts let identical prompt prefixes share whole blocks across a batch
 //! ([`BlockTable::fork_prefix`]); copy-on-write (`ensure_private`) detaches a
-//! table before its contents diverge under compaction.
+//! table before its contents diverge under compaction. The [`prefix`] module
+//! is the serving-path entry point: a prompt-hash → donor-table cache with
+//! pressure-driven LRU invalidation that `Engine::submit` consults so
+//! identical prompt headers across requests are admitted for free.
 //!
 //! Scope note: the tensors themselves still live in the per-row device cache
 //! buffers of `runtime::ModelExecutor`; the pool governs the *logical* block
@@ -29,7 +32,9 @@
 //! layout to true paged attention is the recorded follow-up in ROADMAP.md.
 
 pub mod pool;
+pub mod prefix;
 pub mod table;
 
 pub use pool::{BlockId, BlockPool, PoolConfig, PoolPressure};
+pub use prefix::{PrefixCache, PrefixCacheConfig};
 pub use table::BlockTable;

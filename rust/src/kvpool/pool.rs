@@ -167,14 +167,26 @@ impl BlockPool {
         *rc += 1;
     }
 
-    /// Drop one reference; the block returns to the free list at zero.
-    pub fn release(&mut self, b: BlockId) {
+    /// Drop one reference. Returns true when this was the last reference and
+    /// the block actually went back to the free list — callers accounting
+    /// freed capacity (e.g. `BlockTable::truncate`) must count only those,
+    /// since releasing a shared block changes nothing about pool pressure.
+    pub fn release(&mut self, b: BlockId) -> bool {
         let rc = &mut self.refcount[b as usize];
         assert!(*rc > 0, "double free of block {b}");
         *rc -= 1;
         if *rc == 0 {
             self.free.push(b);
+            true
+        } else {
+            false
         }
+    }
+
+    /// Number of blocks currently shared (refcount > 1) — prefix-cache /
+    /// CoW visibility for gauges and tests.
+    pub fn shared_blocks(&self) -> usize {
+        self.refcount.iter().filter(|&&rc| rc > 1).count()
     }
 
     pub fn refcount(&self, b: BlockId) -> u32 {
@@ -233,11 +245,15 @@ mod tests {
         p.retain(b);
         p.retain(b);
         assert_eq!(p.refcount(b), 3);
-        p.release(b);
-        p.release(b);
+        assert_eq!(p.shared_blocks(), 1);
+        // dropping a shared reference frees nothing
+        assert!(!p.release(b));
+        assert!(!p.release(b));
         assert_eq!(p.free_blocks(), 1); // still held once
         assert_eq!(p.refcount(b), 1);
-        p.release(b);
+        assert_eq!(p.shared_blocks(), 0);
+        // the last reference actually returns the block
+        assert!(p.release(b));
         assert_eq!(p.free_blocks(), 2);
         assert_eq!(p.refcount(b), 0);
     }

@@ -1,0 +1,482 @@
+//! Prompt-prefix cache: cross-sequence block sharing for identical prompt
+//! headers (system prompts, few-shot preambles).
+//!
+//! Serving traffic that matters at scale repeats the same prompt prefix
+//! across many requests. The block pool already supports refcounted sharing
+//! ([`BlockTable::fork_prefix`]); this cache is the lookup structure that
+//! turns it on in the serving path: `Engine::submit` hashes the incoming
+//! prompt's token ids at block boundaries, and on a hit the new row's table
+//! is forked from the cached donor — the shared whole blocks cost the pool
+//! nothing, so admission only has to cover the row's *private* tail.
+//!
+//! ## Ownership
+//!
+//! Each entry owns a [`BlockTable`] fork of its donor (refcounts bumped at
+//! insert time), so entries never dangle: the donor row can finish, be
+//! preempted, or be evicted down to nothing and the cached blocks stay
+//! alive under the cache's own references. The flip side is that cached
+//! entries *pin* pool blocks (a block whose only holder is the cache is not
+//! on the free list), which is why invalidation is pressure-driven.
+//!
+//! ## Invalidation rules
+//!
+//! 1. **Capacity (LRU)** — at most `max_entries` entries; inserting past
+//!    the cap sheds the least-recently-used entry first
+//!    ([`PrefixCache::shed_lru`] — unconditional, something must go).
+//! 2. **Pool pressure (targeted LRU)** — when the engine cannot cover an
+//!    admission or per-step block headroom, it sheds only entries whose
+//!    release actually returns blocks to the free list
+//!    ([`PrefixCache::shed_lru_reclaimable`]): destroying an entry whose
+//!    blocks are still shared with live rows would free nothing while
+//!    costing future admissions their sharing. Copy-on-write privatization
+//!    additionally sheds entries holding the row's own shared blocks
+//!    ([`PrefixCache::shed_lru_overlapping`]) — that lowers their refcount
+//!    directly and often privatizes the row with no allocation at all.
+//!    Blocks whose refcount drops to zero return to the free list
+//!    immediately, so a cache-pinned pool can always be drained back to
+//!    fully free.
+//! 3. **Never by donor lifecycle** — entries hold their own references, so
+//!    no invalidation is needed when donor blocks are "freed" by their row;
+//!    the row merely drops its reference and the cache keeps the content.
+//!
+//! Lookups verify token ids (not just the 64-bit FNV hash), so a hash
+//! collision can never splice the wrong prefix into a row.
+
+use super::pool::{BlockId, BlockPool};
+use super::table::BlockTable;
+
+/// Sizing/behavior knobs for the [`PrefixCache`].
+#[derive(Clone, Debug)]
+pub struct PrefixCacheConfig {
+    /// Maximum cached prefixes; LRU-shed beyond this.
+    pub max_entries: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig { max_entries: 64 }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a step: mix a token id into the running hash. `prefix_hash`
+/// and `boundary_hashes` must stay bit-identical (entry keys come from the
+/// former, probe keys from the latter), so both go through this.
+#[inline]
+fn fnv_mix(mut h: u64, id: u32) -> u64 {
+    for byte in id.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// 64-bit FNV-1a over a token-id slice (the block-boundary prefix key).
+pub fn prefix_hash(ids: &[u32]) -> u64 {
+    ids.iter().fold(FNV_OFFSET, |h, &id| fnv_mix(h, id))
+}
+
+/// Rolling FNV-1a snapshots at every block boundary: `out[k]` is
+/// `prefix_hash(&ids[..k * block_size])`. One O(len) pass, so a lookup
+/// hashes the prompt once no matter how many entries it is checked against.
+fn boundary_hashes(ids: &[u32], block_size: usize) -> Vec<u64> {
+    let n_bounds = ids.len() / block_size;
+    let mut out = Vec::with_capacity(n_bounds + 1);
+    let mut h = FNV_OFFSET;
+    out.push(h);
+    for (i, &id) in ids[..n_bounds * block_size].iter().enumerate() {
+        h = fnv_mix(h, id);
+        if (i + 1) % block_size == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+struct Entry {
+    hash: u64,
+    /// Exact token ids covered (always a whole number of blocks).
+    tokens: Vec<u32>,
+    /// Cache-owned fork pinning the blocks.
+    table: BlockTable,
+    last_used: u64,
+}
+
+/// Prompt-hash → donor block table map with LRU invalidation (module docs).
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    entries: Vec<Entry>,
+    clock: u64,
+    /// Admissions that reused a cached prefix (whole blocks actually
+    /// forked into a row). Maintained by the engine at admission time, so
+    /// a lookup whose admission is then declined inflates nothing.
+    pub hits: u64,
+    /// Admissions that found nothing to share.
+    pub misses: u64,
+    /// Entries ever inserted.
+    pub insertions: u64,
+    /// Entries shed (capacity or pool pressure).
+    pub invalidations: u64,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> PrefixCache {
+        PrefixCache {
+            cfg,
+            entries: Vec::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            invalidations: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Distinct blocks referenced by cache entries (overlapping entries —
+    /// a shorter and a longer fork of the same header — share blocks, which
+    /// must not be double-counted in the exported gauge).
+    pub fn pinned_blocks(&self) -> usize {
+        let mut ids: Vec<BlockId> = self
+            .entries
+            .iter()
+            .flat_map(|e| e.table.blocks().iter().copied())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// Blocks that shedding the whole cache would return to the free list
+    /// right now (blocks the cache is the sole holder of — refcount 1, so
+    /// each is referenced by exactly one entry and counting is exact). The
+    /// engine uses this to decide whether shedding can cover a demand at
+    /// all before destroying any entry.
+    pub fn reclaimable_blocks(&self, pool: &BlockPool) -> usize {
+        self.entries
+            .iter()
+            .flat_map(|e| e.table.blocks().iter())
+            .filter(|&&b| pool.refcount(b) == 1)
+            .count()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest cached prefix of `ids`, by whole blocks of `block_size`.
+    /// Bumps the matched entry's recency; hit/miss counters are the
+    /// caller's to update once the admission outcome is known. The prompt
+    /// is hashed once (rolling, at block boundaries); the hash pre-filters
+    /// candidates and a token comparison confirms, so a collision can never
+    /// serve the wrong prefix. The returned table is the donor to
+    /// [`BlockTable::fork_prefix`] from.
+    pub fn lookup(&mut self, ids: &[u32], block_size: usize) -> Option<&BlockTable> {
+        let now = self.tick();
+        let bounds = boundary_hashes(ids, block_size);
+        let mut best: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let k = e.tokens.len() / block_size;
+            if k < bounds.len()
+                && e.tokens.len() <= ids.len()
+                && best.map_or(true, |b| e.tokens.len() > self.entries[b].tokens.len())
+                && e.hash == bounds[k]
+                && ids.starts_with(&e.tokens)
+            {
+                best = Some(i);
+            }
+        }
+        let i = best?;
+        self.entries[i].last_used = now;
+        Some(&self.entries[i].table)
+    }
+
+    /// Register the whole-block prefix of a freshly-admitted row. `ids` is
+    /// the full prompt; `donor` the row's block table (its first
+    /// `len/block_size` blocks hold exactly `ids`' leading tokens). No-op
+    /// when the prefix spans no whole block or is already cached; sheds LRU
+    /// entries past `max_entries`.
+    pub fn insert(&mut self, ids: &[u32], donor: &BlockTable, pool: &mut BlockPool) {
+        let bs = donor.block_size();
+        let covered = (ids.len().min(donor.len()) / bs) * bs;
+        if covered == 0 {
+            return;
+        }
+        let tokens = &ids[..covered];
+        if self
+            .entries
+            .iter()
+            .any(|e| e.tokens.len() == covered && e.tokens == tokens)
+        {
+            return;
+        }
+        let table = BlockTable::fork_prefix(donor, covered, pool);
+        debug_assert_eq!(table.len(), covered);
+        let now = self.tick();
+        self.entries.push(Entry {
+            hash: prefix_hash(tokens),
+            tokens: tokens.to_vec(),
+            table,
+            last_used: now,
+        });
+        self.insertions += 1;
+        while self.entries.len() > self.cfg.max_entries {
+            self.shed_lru(pool);
+        }
+    }
+
+    /// Invalidate the least-recently-used entry, releasing its block
+    /// references. Returns false when the cache is already empty.
+    pub fn shed_lru(&mut self, pool: &mut BlockPool) -> bool {
+        let idx = self.lru_where(|_| true);
+        self.shed_entry(idx, pool)
+    }
+
+    /// Invalidate the LRU entry whose shedding would actually return at
+    /// least one block to the free list (a block the cache is the sole
+    /// holder of). Returns false when no entry frees anything — shedding
+    /// further would destroy reusable entries without relieving pressure,
+    /// so the engine's allocation-pressure loops stop here and move on to
+    /// preemption.
+    pub fn shed_lru_reclaimable(&mut self, pool: &mut BlockPool) -> bool {
+        let idx = self.lru_where(|e| e.table.blocks().iter().any(|&b| pool.refcount(b) == 1));
+        self.shed_entry(idx, pool)
+    }
+
+    /// Invalidate the LRU entry referencing any of `blocks` — used by
+    /// copy-on-write privatization to drop the cache's share of exactly the
+    /// row's shared blocks (which frees nothing but lowers their refcount,
+    /// often privatizing the row with no allocation at all). Returns false
+    /// when no entry overlaps.
+    pub fn shed_lru_overlapping(&mut self, blocks: &[BlockId], pool: &mut BlockPool) -> bool {
+        let idx = self.lru_where(|e| e.table.blocks().iter().any(|b| blocks.contains(b)));
+        self.shed_entry(idx, pool)
+    }
+
+    fn lru_where(&self, keep: impl Fn(&Entry) -> bool) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| keep(e))
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+    }
+
+    fn shed_entry(&mut self, idx: Option<usize>, pool: &mut BlockPool) -> bool {
+        let Some(i) = idx else { return false };
+        let mut e = self.entries.swap_remove(i);
+        e.table.release_all(pool);
+        self.invalidations += 1;
+        true
+    }
+
+    /// Drop every entry (shutdown / tests / admin reset).
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        while self.shed_lru(pool) {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::PoolConfig;
+
+    fn pool(n: usize) -> BlockPool {
+        BlockPool::new(PoolConfig {
+            block_size: 4,
+            n_blocks: n,
+            low_watermark: 0,
+            high_watermark: 0,
+        })
+        .unwrap()
+    }
+
+    fn table_for(ids_len: usize, pool: &mut BlockPool) -> BlockTable {
+        let mut t = BlockTable::new(pool.block_size());
+        for _ in 0..ids_len {
+            assert!(t.push_token(pool));
+        }
+        t
+    }
+
+    #[test]
+    fn miss_then_insert_then_hit() {
+        let mut p = pool(16);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let ids: Vec<u32> = (0..10).collect(); // 2 whole blocks + partial
+        assert!(c.lookup(&ids, 4).is_none());
+
+        let donor = table_for(10, &mut p);
+        c.insert(&ids, &donor, &mut p);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.pinned_blocks(), 2); // whole blocks only
+        assert_eq!(p.used_blocks(), 3); // sharing allocated nothing
+
+        let hit = c.lookup(&ids, 4).expect("hit");
+        assert_eq!(hit.len(), 8);
+        // a prompt sharing only the first block's worth of tokens misses
+        // (entries are keyed on their full whole-block prefix)
+        let other: Vec<u32> = (0..4).chain([99, 98, 97, 96]).collect();
+        assert!(c.lookup(&other, 4).is_none());
+    }
+
+    #[test]
+    fn longest_matching_prefix_wins() {
+        let mut p = pool(16);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let long: Vec<u32> = (0..12).collect();
+        let donor_short = table_for(4, &mut p);
+        let donor_long = table_for(12, &mut p);
+        c.insert(&long[..4], &donor_short, &mut p);
+        c.insert(&long, &donor_long, &mut p);
+        assert_eq!(c.len(), 2);
+        let hit = c.lookup(&long, 4).unwrap();
+        assert_eq!(hit.len(), 12);
+        // a prompt extending only the short entry matches the short one
+        let mid: Vec<u32> = (0..4).chain([50, 51]).collect();
+        assert_eq!(c.lookup(&mid, 4).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn overlapping_entries_pin_distinct_blocks_once() {
+        // A short and a long fork of the same header share their leading
+        // blocks; the pinned-blocks gauge must count each block once.
+        let mut p = pool(16);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let long: Vec<u32> = (0..12).collect();
+        let donor = table_for(12, &mut p);
+        c.insert(&long[..4], &donor, &mut p); // pins block 0
+        c.insert(&long, &donor, &mut p); // pins blocks 0, 1, 2
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.pinned_blocks(), 3, "block 0 must not be double-counted");
+    }
+
+    #[test]
+    fn hash_collision_cannot_serve_wrong_tokens() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let ids: Vec<u32> = (0..4).collect();
+        let donor = table_for(4, &mut p);
+        c.insert(&ids, &donor, &mut p);
+        // force the stored hash to collide with a different prompt
+        c.entries[0].hash = prefix_hash(&[9, 9, 9, 9]);
+        assert!(
+            c.lookup(&[9, 9, 9, 9], 4).is_none(),
+            "token check must reject"
+        );
+    }
+
+    #[test]
+    fn boundary_hashes_match_prefix_hash() {
+        let ids: Vec<u32> = (0..11).collect();
+        let bh = boundary_hashes(&ids, 4);
+        assert_eq!(bh.len(), 3); // k = 0, 1, 2 (partial third block excluded)
+        assert_eq!(bh[0], prefix_hash(&[]));
+        assert_eq!(bh[1], prefix_hash(&ids[..4]));
+        assert_eq!(bh[2], prefix_hash(&ids[..8]));
+    }
+
+    #[test]
+    fn entries_pin_blocks_past_donor_release() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let ids: Vec<u32> = (0..8).collect();
+        let mut donor = table_for(8, &mut p);
+        c.insert(&ids, &donor, &mut p);
+        donor.release_all(&mut p); // donor row finishes
+        assert_eq!(p.used_blocks(), 2, "cache keeps the blocks alive");
+        assert!(c.lookup(&ids, 4).is_some(), "entry survives its donor");
+        c.clear(&mut p);
+        assert_eq!(p.free_blocks(), 8, "clearing drains the pins");
+    }
+
+    #[test]
+    fn capacity_sheds_lru_first() {
+        let mut p = pool(32);
+        let mut c = PrefixCache::new(PrefixCacheConfig { max_entries: 2 });
+        let a: Vec<u32> = (0..4).collect();
+        let b: Vec<u32> = (10..14).collect();
+        let d: Vec<u32> = (20..24).collect();
+        let ta = table_for(4, &mut p);
+        let tb = table_for(4, &mut p);
+        let td = table_for(4, &mut p);
+        c.insert(&a, &ta, &mut p);
+        c.insert(&b, &tb, &mut p);
+        assert!(c.lookup(&a, 4).is_some()); // refresh a: b is now LRU
+        c.insert(&d, &td, &mut p);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.invalidations, 1);
+        assert!(c.lookup(&b, 4).is_none(), "LRU entry b was shed");
+        assert!(c.lookup(&a, 4).is_some());
+        assert!(c.lookup(&d, 4).is_some());
+    }
+
+    #[test]
+    fn shed_frees_unshared_blocks() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let ids: Vec<u32> = (0..8).collect();
+        let mut donor = table_for(8, &mut p);
+        c.insert(&ids, &donor, &mut p);
+        donor.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 6);
+        assert!(c.shed_lru(&mut p));
+        assert_eq!(p.free_blocks(), 8, "sole-owner pins return to the pool");
+        assert!(!c.shed_lru(&mut p), "empty cache has nothing to shed");
+    }
+
+    #[test]
+    fn reclaimable_shed_skips_entries_that_free_nothing() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        // entry A: blocks shared with a live "row" (donor kept) — frees 0
+        let ids_a: Vec<u32> = (0..4).collect();
+        let donor_a = table_for(4, &mut p); // stays alive: rc 2 after insert
+        c.insert(&ids_a, &donor_a, &mut p);
+        // entry B: donor released — the cache is sole holder, frees 1
+        let ids_b: Vec<u32> = (10..14).collect();
+        let mut donor_b = table_for(4, &mut p);
+        c.insert(&ids_b, &donor_b, &mut p);
+        donor_b.release_all(&mut p);
+        // make A the LRU so a naive shed would pick it
+        assert!(c.lookup(&ids_b, 4).is_some());
+        let free_before = p.free_blocks();
+        assert_eq!(c.reclaimable_blocks(&p), 1, "only B's block is sole-held");
+        assert!(c.shed_lru_reclaimable(&mut p));
+        assert_eq!(p.free_blocks(), free_before + 1, "must shed B, not A");
+        assert!(c.lookup(&ids_a, 4).is_some(), "useless-to-shed A survives");
+        // A is still pinned by its donor: nothing reclaimable remains
+        assert!(!c.shed_lru_reclaimable(&mut p));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn overlapping_shed_targets_the_shared_blocks() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let ids_a: Vec<u32> = (0..4).collect();
+        let ids_b: Vec<u32> = (10..14).collect();
+        let donor_a = table_for(4, &mut p);
+        let donor_b = table_for(4, &mut p);
+        c.insert(&ids_a, &donor_a, &mut p);
+        c.insert(&ids_b, &donor_b, &mut p);
+        let target = donor_b.blocks().to_vec();
+        assert!(c.shed_lru_overlapping(&target, &mut p));
+        assert!(c.lookup(&ids_b, 4).is_none(), "overlapping entry shed");
+        assert!(c.lookup(&ids_a, 4).is_some(), "unrelated entry survives");
+        assert!(
+            !c.shed_lru_overlapping(&target, &mut p),
+            "no entry references those blocks any more"
+        );
+        assert_eq!(p.refcount(target[0]), 1, "donor is sole holder again");
+    }
+}

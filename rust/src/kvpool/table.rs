@@ -65,8 +65,22 @@ impl BlockTable {
         Some((self.blocks[slot / self.block_size], slot % self.block_size))
     }
 
-    /// Map one more token, allocating a block at boundaries. Returns false
-    /// (state unchanged) when the pool is exhausted.
+    /// Is the partially-filled tail block (the one the next in-block push
+    /// would write into) shared with other holders?
+    pub fn tail_is_shared(&self, pool: &BlockPool) -> bool {
+        if self.at_block_boundary() {
+            return false;
+        }
+        self.blocks
+            .last()
+            .map_or(false, |&b| pool.refcount(b) > 1)
+    }
+
+    /// Map one more token, allocating a block at boundaries. A push that
+    /// would land inside a *shared* tail block (possible after truncating
+    /// into a forked prefix) copies-on-write first: the shared block is
+    /// swapped for a fresh private one, so the donor's mapping is never
+    /// mutated. Returns false (state unchanged) when the pool is exhausted.
     pub fn push_token(&mut self, pool: &mut BlockPool) -> bool {
         debug_assert_eq!(self.block_size, pool.block_size(), "table/pool block size");
         if self.at_block_boundary() {
@@ -74,21 +88,34 @@ impl BlockTable {
                 Some(b) => self.blocks.push(b),
                 None => return false,
             }
+        } else if self.tail_is_shared(pool) {
+            match pool.alloc() {
+                Some(fresh) => {
+                    let tail = self.blocks.last_mut().expect("non-boundary ⇒ tail");
+                    pool.release(*tail);
+                    *tail = fresh;
+                }
+                None => return false,
+            }
         }
         self.len += 1;
         true
     }
 
-    /// Shrink to `new_len` tokens, releasing whole trailing blocks. Returns
-    /// how many blocks this table let go of.
+    /// Shrink to `new_len` tokens, dropping references to whole trailing
+    /// blocks. A shared trailing block (refcount > 1) only loses this
+    /// table's reference — it stays allocated for its other holders and is
+    /// NOT handed back to the free list. Returns how many blocks actually
+    /// returned to the free list (the capacity an eviction pass reclaimed).
     pub fn truncate(&mut self, new_len: usize, pool: &mut BlockPool) -> usize {
         assert!(new_len <= self.len, "truncate {} > len {}", new_len, self.len);
         self.len = new_len;
         let needed = (new_len + self.block_size - 1) / self.block_size;
         let mut released = 0;
         while self.blocks.len() > needed {
-            pool.release(self.blocks.pop().expect("blocks non-empty"));
-            released += 1;
+            if pool.release(self.blocks.pop().expect("blocks non-empty")) {
+                released += 1;
+            }
         }
         released
     }
@@ -121,6 +148,17 @@ impl BlockTable {
             .iter()
             .filter(|&&b| pool.refcount(b) > 1)
             .count()
+    }
+
+    /// Ids of the blocks this table shares with other holders — the
+    /// targets a copy-on-write pass wants other holders (e.g. the prefix
+    /// cache) to release first.
+    pub fn shared_block_ids(&self, pool: &BlockPool) -> Vec<BlockId> {
+        self.blocks
+            .iter()
+            .copied()
+            .filter(|&b| pool.refcount(b) > 1)
+            .collect()
     }
 
     /// Copy-on-write: replace every shared block with a freshly-allocated
@@ -257,6 +295,72 @@ mod tests {
         a.release_all(&mut p);
         b.release_all(&mut p);
         assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn truncate_on_shared_blocks_drops_refs_not_capacity() {
+        let mut p = pool(8);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 12, &mut p); // 3 blocks
+        let mut b = BlockTable::fork_prefix(&a, 12, &mut p); // shares all 3
+        assert_eq!(p.used_blocks(), 3);
+        let free_before = p.free_blocks();
+        // truncating the fork through two shared blocks must not free them —
+        // the donor still holds both — and must not count them as released
+        let released = b.truncate(2, &mut p);
+        assert_eq!(released, 0, "shared blocks are not reclaimed capacity");
+        assert_eq!(p.free_blocks(), free_before);
+        assert_eq!(b.n_blocks(), 1);
+        // the donor's mapping is fully intact
+        assert_eq!(a.n_blocks(), 3);
+        assert_eq!(a.len(), 12);
+        assert_eq!(p.refcount(a.blocks()[1]), 1);
+        assert_eq!(p.refcount(a.blocks()[2]), 1);
+        assert_eq!(p.refcount(a.blocks()[0]), 2); // still shared with b
+        a.release_all(&mut p);
+        b.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn push_into_shared_tail_copies_on_write() {
+        let mut p = pool(8);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 8, &mut p); // 2 full blocks
+        let mut b = BlockTable::fork_prefix(&a, 8, &mut p);
+        // truncate into the middle of the shared prefix: tail now shared+partial
+        b.truncate(2, &mut p);
+        assert!(b.tail_is_shared(&p));
+        let donor_block = a.blocks()[0];
+        assert_eq!(b.blocks()[0], donor_block);
+        // the next push would write slot 2 of the shared block → must CoW
+        assert!(b.push_token(&mut p));
+        assert_ne!(b.blocks()[0], donor_block, "shared tail must be copied");
+        assert!(!b.tail_is_shared(&p));
+        assert_eq!(p.refcount(donor_block), 1); // donor sole owner again
+        assert_eq!(b.len(), 3);
+        // donor untouched throughout, and nothing of it is shared any more
+        // (the truncate dropped b's ref on block 1, the CoW on block 0)
+        assert_eq!(a.len(), 8);
+        assert_eq!(a.n_shared_blocks(&p), 0);
+        a.release_all(&mut p);
+        b.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn cow_push_fails_cleanly_when_pool_dry() {
+        let mut p = pool(2);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 8, &mut p); // both blocks
+        let mut b = BlockTable::fork_prefix(&a, 8, &mut p);
+        b.truncate(1, &mut p); // shared partial tail, pool has no spare
+        assert!(!b.push_token(&mut p), "CoW with a dry pool must fail");
+        assert_eq!(b.len(), 1, "failed push leaves state unchanged");
+        assert_eq!(b.blocks()[0], a.blocks()[0]);
+        b.release_all(&mut p);
+        a.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 2);
     }
 
     #[test]

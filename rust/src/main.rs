@@ -10,7 +10,9 @@
 //!
 //! Paged-KV pool flags (serve/sim-serve): --pool-blocks N enables a shared
 //! block pool (0 = per-row capacity, the default), --block-size (16),
-//! --pool-low / --pool-high admission watermarks in blocks.
+//! --pool-low / --pool-high admission watermarks in blocks. With a pool,
+//! prompt-prefix block sharing is on by default: --prefix-entries caps the
+//! cache (64), --no-prefix-cache disables sharing entirely.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -19,7 +21,7 @@ use anyhow::{Context, Result};
 use lazyeviction::bench_harness::{artifacts_dir, table::Table};
 use lazyeviction::coordinator::{Engine, EngineConfig, Request};
 use lazyeviction::eviction::PolicyParams;
-use lazyeviction::kvpool::PoolConfig;
+use lazyeviction::kvpool::{PoolConfig, PrefixCacheConfig};
 use lazyeviction::runtime::{Client, Manifest};
 use lazyeviction::trace::workload::{
     dataset_profile, gen_reasoning_sample, model_profile, score_sample,
@@ -42,6 +44,8 @@ fn engine_config_from(args: &Args) -> EngineConfig {
         stop_char: '\0',
         collect_sketches: false,
         record_live: !args.bool_flag("no-record-live"),
+        pool: None,
+        prefix_cache: None,
     };
     cfg.collect_sketches = cfg.policy.starts_with("rkv");
     if args.bool_flag("stop-newline") {
@@ -55,6 +59,12 @@ fn engine_config_from(args: &Args) -> EngineConfig {
             low_watermark: args.usize_or("pool-low", 4),
             high_watermark: args.usize_or("pool-high", 8),
         });
+        // prompt-prefix block sharing rides on the pool; on by default
+        if !args.bool_flag("no-prefix-cache") {
+            cfg.prefix_cache = Some(PrefixCacheConfig {
+                max_entries: args.usize_or("prefix-entries", 64),
+            });
+        }
     }
     cfg
 }
@@ -215,7 +225,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: lazyevictiond <serve|sim-serve|generate|eval|suggest-w|info> [--flags]\n\
                  common flags: --artifacts DIR --policy P --budget B --cache S --batch N --window W\n\
-                 pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8"
+                 pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8\n\
+                 prefix flags: --prefix-entries 64 --no-prefix-cache"
             );
             std::process::exit(2);
         }

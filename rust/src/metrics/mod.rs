@@ -94,6 +94,16 @@ pub struct PoolGauges {
     pub utilization: f64,
     /// Cumulative preemption count for the engine.
     pub preemptions: u64,
+    /// Blocks currently referenced more than once (prefix sharing / CoW).
+    pub shared_blocks: usize,
+    /// Cumulative prompt-prefix cache hits (a hit = whole blocks reused).
+    pub prefix_hits: u64,
+    /// Cumulative prompt-prefix cache misses.
+    pub prefix_misses: u64,
+    /// Live prefix-cache entries.
+    pub prefix_entries: usize,
+    /// Blocks the prefix cache currently pins (refs held by the cache).
+    pub prefix_pinned_blocks: usize,
 }
 
 #[cfg(test)]

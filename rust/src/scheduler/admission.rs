@@ -92,6 +92,55 @@ mod tests {
     }
 
     #[test]
+    fn exact_boundary_semantics() {
+        // The contract, bit-exact: hold strictly below low, resume at
+        // exactly high. free == low must stay open, free == high must
+        // reopen, free == high - 1 must not.
+        let mut a = AdmissionController::new();
+        assert!(a.allow(&pressure(3))); // == low: open
+        assert!(!a.allow(&pressure(2))); // == low - 1: close
+        assert!(!a.allow(&pressure(5))); // == high - 1: still closed
+        assert!(a.allow(&pressure(6))); // == high: reopen
+        assert!(a.allow(&pressure(3))); // == low again: still open
+        assert_eq!(a.hold_transitions, 1);
+    }
+
+    #[test]
+    fn equal_watermarks_degenerate_to_a_threshold() {
+        // low == high is a plain threshold latch with no hysteresis band
+        let p = |free: usize| PoolPressure {
+            free,
+            total: 16,
+            low_watermark: 4,
+            high_watermark: 4,
+        };
+        let mut a = AdmissionController::new();
+        assert!(a.allow(&p(4)));
+        assert!(!a.allow(&p(3)));
+        assert!(a.allow(&p(4)), "free == low == high must reopen");
+        assert_eq!(a.hold_transitions, 1);
+    }
+
+    #[test]
+    fn non_monotonic_free_counts_resolve_by_level_not_direction() {
+        // With prefix sharing, releasing blocks may not raise `free` (the
+        // refs were shared) and CoW can drop it abruptly. The latch must
+        // react to levels only, never to deltas: a flat free count while
+        // holding stays held; a single-step jump across both marks reopens.
+        let mut a = AdmissionController::new();
+        assert!(!a.allow(&pressure(1)));
+        // shared-block releases: free stays flat below high — still held
+        for _ in 0..5 {
+            assert!(!a.allow(&pressure(1)));
+        }
+        // one recovery step jumps from under low to over high: reopens
+        assert!(a.allow(&pressure(10)));
+        // and an abrupt CoW drop from over high to under low: closes again
+        assert!(!a.allow(&pressure(0)));
+        assert_eq!(a.hold_transitions, 2);
+    }
+
+    #[test]
     fn zero_watermarks_never_hold() {
         let mut a = AdmissionController::new();
         let p = PoolPressure {

@@ -6,8 +6,10 @@
 //!   → {"prompt": "...", "template": "...", "max_new": 256}
 //!   ← {"id": 1, "text": "...", "holes": "…", "finish": "max_tokens",
 //!      "ttft_ms": 12.3, "total_ms": 456.7, "tokens": 256, "evictions": 3,
-//!      "pool": {"free_blocks": 9, "total_blocks": 64,
-//!               "utilization": 0.86, "preemptions": 2}}   // paged mode only
+//!      "pool": {"free_blocks": 9, "total_blocks": 64,        // paged mode
+//!               "utilization": 0.86, "preemptions": 2,       // only
+//!               "shared_blocks": 3, "prefix_hits": 5, "prefix_misses": 2,
+//!               "prefix_entries": 1, "prefix_pinned_blocks": 3}}
 //!   ← {"error": "..."}                                    // on any failure
 //!
 //! `max_new` is clamped: 0 is rejected, values above [`MAX_MAX_NEW`] are
@@ -75,6 +77,11 @@ pub fn pool_gauges_to_json(g: &PoolGauges) -> Json {
         .set("total_blocks", g.total_blocks)
         .set("utilization", g.utilization)
         .set("preemptions", g.preemptions as f64)
+        .set("shared_blocks", g.shared_blocks)
+        .set("prefix_hits", g.prefix_hits as f64)
+        .set("prefix_misses", g.prefix_misses as f64)
+        .set("prefix_entries", g.prefix_entries)
+        .set("prefix_pinned_blocks", g.prefix_pinned_blocks)
 }
 
 pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
@@ -162,10 +169,19 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
     let mut admission = AdmissionController::new();
     while !shutdown.load(Ordering::Relaxed) {
         let mut idle = true;
-        let admit_open = match engine.pool_pressure() {
+        let mut admit_open = match engine.pool_pressure() {
             Some(p) => admission.allow(&p),
             None => true,
         };
+        if !admit_open && engine.active() == 0 && !queue.is_empty() {
+            // Nothing is decoding, so nothing will ever free blocks on its
+            // own — stale prefix-cache pins are all that holds the latch
+            // closed. Release them and re-evaluate, or the queue hangs.
+            engine.shed_prefix_to_high_watermark();
+            if let Some(p) = engine.pool_pressure() {
+                admit_open = admission.allow(&p);
+            }
+        }
         while admit_open && engine.has_free_row() {
             let Some(q) = queue.try_pop() else { break };
             let queued_s = q.queued_at.elapsed().as_secs_f64();
@@ -363,6 +379,11 @@ mod tests {
             total_blocks: 64,
             utilization: 0.859,
             preemptions: 2,
+            shared_blocks: 3,
+            prefix_hits: 5,
+            prefix_misses: 2,
+            prefix_entries: 1,
+            prefix_pinned_blocks: 3,
         };
         let j = pool_gauges_to_json(&g);
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -370,5 +391,10 @@ mod tests {
         assert_eq!(parsed.usize_at("total_blocks").unwrap(), 64);
         assert_eq!(parsed.usize_at("preemptions").unwrap(), 2);
         assert!((parsed.f64_at("utilization").unwrap() - 0.859).abs() < 1e-9);
+        assert_eq!(parsed.usize_at("shared_blocks").unwrap(), 3);
+        assert_eq!(parsed.usize_at("prefix_hits").unwrap(), 5);
+        assert_eq!(parsed.usize_at("prefix_misses").unwrap(), 2);
+        assert_eq!(parsed.usize_at("prefix_entries").unwrap(), 1);
+        assert_eq!(parsed.usize_at("prefix_pinned_blocks").unwrap(), 3);
     }
 }

@@ -34,6 +34,16 @@ pub struct CapacitySpec {
     /// Engine row cap (compiled batch dimension analog).
     pub max_rows: usize,
     pub seed: u64,
+    /// Identical system-prompt header prepended to every request (tokens).
+    /// The header stays resident for a sequence's lifetime (sink-style);
+    /// eviction operates on the reasoning tail as before. 0 = none.
+    pub shared_prefix_tokens: usize,
+    /// Serve the header through prefix sharing: one donor table holds the
+    /// header's whole blocks for the whole run (the prefix-cache pin) and
+    /// every admission forks it, so only the header remainder + tail are
+    /// paid privately. false = every row pays for the header itself — the
+    /// PR-1 baseline the sharing win is measured against.
+    pub share_prefix: bool,
 }
 
 impl CapacitySpec {
@@ -54,6 +64,8 @@ impl CapacitySpec {
             },
             max_rows: 16,
             seed: 7,
+            shared_prefix_tokens: 0,
+            share_prefix: false,
         }
     }
 }
@@ -73,6 +85,10 @@ pub struct CapacityReport {
     pub total_blocks: usize,
     /// Free blocks after the run drains (== total when leak-free).
     pub end_free_blocks: usize,
+    /// Whole blocks the shared header pins for the run (0 without sharing).
+    pub shared_header_blocks: usize,
+    /// Admissions that forked the shared header instead of paying for it.
+    pub prefix_forks: u64,
 }
 
 /// One queued/active sequence: its live curve and (when active) its table.
@@ -122,10 +138,32 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         ..CapacityReport::default()
     };
 
+    // The shared header: one donor table pins its whole blocks for the run
+    // (the prefix-cache pin) and every admission forks it. The header's
+    // partial trailing block — and the whole header without sharing — is
+    // paid per-row.
+    let header = spec.shared_prefix_tokens;
+    let mut donor: Option<BlockTable> = None;
+    if spec.share_prefix && header >= pool.block_size() {
+        let whole = (header / pool.block_size()) * pool.block_size();
+        let mut t = BlockTable::new(pool.block_size());
+        for _ in 0..whole {
+            anyhow::ensure!(
+                t.push_token(&mut pool),
+                "pool of {} blocks cannot hold the {}-token shared header",
+                pool.total_blocks(),
+                header
+            );
+        }
+        rep.shared_header_blocks = t.n_blocks();
+        donor = Some(t);
+    }
+
     let mut queue: VecDeque<usize> = VecDeque::new();
     for (i, s) in seqs.iter().enumerate() {
         // a sequence whose peak demand exceeds the whole pool can never run
-        let peak = s.live_curve.iter().copied().max().unwrap_or(0).max(s.prompt_tokens);
+        let peak =
+            header + s.live_curve.iter().copied().max().unwrap_or(0).max(s.prompt_tokens);
         if pool.blocks_for(peak + 1) > pool.total_blocks() {
             rep.failed += 1;
         } else {
@@ -138,10 +176,15 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
     let mut conc_sum = 0u64;
 
     while !(queue.is_empty() && active.is_empty()) {
-        // iteration-level admission, watermark-reserved unless idle
+        // iteration-level admission, watermark-reserved unless idle. With
+        // sharing, the forked header blocks are free — only the private
+        // remainder of header+prompt (plus the decode block) is demanded.
         while active.len() < spec.max_rows {
             let Some(&next) = queue.front() else { break };
-            let needed = pool.blocks_for(seqs[next].prompt_tokens + 1);
+            let shared = donor.as_ref().map_or(0, |d| d.n_blocks());
+            let needed = pool
+                .blocks_for(header + seqs[next].prompt_tokens + 1)
+                .saturating_sub(shared);
             let reserve = if active.is_empty() {
                 0
             } else {
@@ -151,9 +194,16 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
                 break;
             }
             queue.pop_front();
-            let mut table = BlockTable::new(pool.block_size());
+            let mut table = match donor.as_ref() {
+                Some(d) => {
+                    rep.prefix_forks += 1;
+                    BlockTable::fork_prefix(d, header, &mut pool)
+                }
+                None => BlockTable::new(pool.block_size()),
+            };
+            let prompt_total = header + seqs[next].prompt_tokens;
             let mut ok = true;
-            for _ in 0..seqs[next].prompt_tokens {
+            while table.len() < prompt_total {
                 if !table.push_token(&mut pool) {
                     ok = false;
                     break;
@@ -188,9 +238,11 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         let mut advanced = 0usize;
         let mut r = 0usize;
         while r < active.len() {
+            // the resident header rides on top of the tail's live target, so
+            // a shrink never dips into the shared whole-block region
             let target = {
                 let a = &active[r];
-                seqs[a.idx].live_curve[a.cursor].max(1)
+                header + seqs[a.idx].live_curve[a.cursor].max(1)
             };
             // shrink first: eviction reclaims whole blocks
             if target <= active[r].table.len() {
@@ -241,6 +293,10 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
     } else {
         conc_sum as f64 / rep.steps as f64
     };
+    // drop the run-lifetime header pin before the leak check
+    if let Some(mut d) = donor {
+        d.release_all(&mut pool);
+    }
     rep.end_free_blocks = pool.free_blocks();
     Ok(rep)
 }
@@ -288,6 +344,49 @@ mod tests {
             lazy.peak_used_blocks <= lazy.total_blocks,
             "peak accounting out of range"
         );
+    }
+
+    #[test]
+    fn shared_prefix_sustains_strictly_more_rows() {
+        // The PR acceptance headline: under the same fixed block budget and
+        // the same per-request work (a 64-token system header + reasoning
+        // tail), serving the header through prefix sharing sustains
+        // strictly more concurrent rows than each row paying for it.
+        let mut base = spec("lazy");
+        base.shared_prefix_tokens = 64;
+        base.share_prefix = false;
+        let mut shared = base.clone();
+        shared.share_prefix = true;
+        let b = run_capacity(&base).unwrap();
+        let s = run_capacity(&shared).unwrap();
+        assert_eq!(b.failed, 0);
+        assert_eq!(s.failed, 0);
+        assert_eq!(b.completed, 10);
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.shared_header_blocks, 4); // 64 tokens / 16 per block
+        assert_eq!(s.prefix_forks, 10 + s.preemptions);
+        assert!(
+            s.mean_concurrency > b.mean_concurrency,
+            "sharing must strictly beat the private baseline: {} <= {}",
+            s.mean_concurrency,
+            b.mean_concurrency
+        );
+        // both leak-free, including the donor pin
+        assert_eq!(b.end_free_blocks, b.total_blocks);
+        assert_eq!(s.end_free_blocks, s.total_blocks);
+        assert!(s.peak_used_blocks <= s.total_blocks);
+    }
+
+    #[test]
+    fn shared_header_smaller_than_a_block_shares_nothing() {
+        let mut s = spec("lazy");
+        s.shared_prefix_tokens = 10; // < block_size 16: no whole block
+        s.share_prefix = true;
+        let r = run_capacity(&s).unwrap();
+        assert_eq!(r.shared_header_blocks, 0);
+        assert_eq!(r.prefix_forks, 0);
+        assert_eq!(r.completed, 10);
+        assert_eq!(r.end_free_blocks, r.total_blocks);
     }
 
     #[test]
