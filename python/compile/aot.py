@@ -52,12 +52,14 @@ def param_specs_jax(cfg: ModelConfig):
     return [_spec(s) for _, s in cfg.param_specs()]
 
 
-def build_variant(cfg: ModelConfig, kind: str, batch: int, cache: int, prefill: int):
+def build_variant(cfg: ModelConfig, kind: str, batch: int, cache: int, prefill: int,
+                  blocks: int = 0, block: int = 0):
     """Return (fn, arg_specs) for one artifact variant."""
     B, S, P = batch, cache, prefill
     L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
     i32 = jnp.int32
     cache_spec = _spec((B, L, H, S, dh))
+    arena_spec = _spec((blocks, block, L, H, dh))
     if kind in ("step", "stepf", "trace"):
         full = kind == "trace"
         use_pallas = kind != "stepf"
@@ -92,6 +94,28 @@ def build_variant(cfg: ModelConfig, kind: str, batch: int, cache: int, prefill: 
     if kind == "insert":
         fn = model.cache_insert
         return fn, [cache_spec, _spec((L, H, S, dh)), _spec((), i32)]
+    if kind == "stepp":
+        # paged step: K/V gathered through [B, MB] block tables + [B] lens
+        MB = S // block
+
+        def fn(*args):
+            params = args[:-6]
+            k_arena, v_arena, tables, lens, token, pos = args[-6:]
+            return model.decode_step_paged(
+                cfg, params, k_arena, v_arena, tables, lens, token, pos,
+            )
+
+        specs = param_specs_jax(cfg) + [
+            arena_spec, arena_spec, _spec((B, MB), i32), _spec((B,), i32),
+            _spec((B,), i32), _spec((B,), i32),
+        ]
+        return fn, specs
+    if kind == "blockw":
+        fn = model.arena_row_write
+        return fn, [arena_spec, _spec((L, H, dh)), _spec((), i32)]
+    if kind == "blockg":
+        fn = model.arena_row_gather
+        return fn, [arena_spec, _spec((blocks * block,), i32)]
     raise ValueError(kind)
 
 
@@ -114,6 +138,17 @@ SIGNATURES = {
     "append": {"inputs": ["cache", "new[B,L,H,dh]", "idx[B]i32"], "outputs": ["cache"]},
     "gather": {"inputs": ["cache", "idx[B,S]i32"], "outputs": ["cache"]},
     "insert": {"inputs": ["cache", "seq[L,H,S,dh]", "b[]i32"], "outputs": ["cache"]},
+    "stepp": {
+        "inputs": ["params...", "k_arena[N,bs,L,H,dh]", "v_arena[N,bs,L,H,dh]",
+                   "block_tables[B,MB]i32", "seq_lens[B]i32", "token[B]i32",
+                   "pos[B]i32"],
+        "outputs": ["logits[B,V]", "attn_agg[B,MB*bs]", "k_new[B,L,H,dh]",
+                    "v_new[B,L,H,dh]"],
+    },
+    "blockw": {"inputs": ["arena[N,bs,L,H,dh]", "row[L,H,dh]", "slot[]i32"],
+               "outputs": ["arena"]},
+    "blockg": {"inputs": ["arena[N,bs,L,H,dh]", "idx[N*bs]i32"],
+               "outputs": ["arena"]},
 }
 
 
@@ -157,14 +192,16 @@ def main():
         variants_meta.append({
             "kind": v.kind, "name": v.name, "file": v.name + ".hlo.txt",
             "batch": v.batch, "cache": v.cache, "prefill": v.prefill,
+            "blocks": v.blocks, "block": v.block,
         })
         if only and v.name not in only:
             continue
         if os.path.exists(path):
             print(f"  {v.name}: cached")
             continue
-        fn, specs = build_variant(cfg, v.kind, v.batch, v.cache, v.prefill)
-        single = v.kind in ("append", "gather", "insert")
+        fn, specs = build_variant(cfg, v.kind, v.batch, v.cache, v.prefill,
+                                  v.blocks, v.block)
+        single = v.kind in ("append", "gather", "insert", "blockw", "blockg")
         text = to_hlo_text(fn, *specs, return_tuple=not single)
         with open(path, "w") as f:
             f.write(text)

@@ -64,15 +64,21 @@ class ModelConfig:
 class ArtifactVariant:
     """One compiled executable variant."""
 
-    kind: str  # step | append | gather | insert | prefill | trace
+    kind: str  # step | stepp | append | gather | insert | prefill | trace | blockw | blockg
     batch: int
     cache: int  # number of KV slots S
     prefill: int = 0  # prompt bucket length P (prefill only)
+    blocks: int = 0  # paged arena: number of blocks N (stepp/blockw/blockg)
+    block: int = 0  # paged arena: tokens per block
 
     @property
     def name(self) -> str:
         if self.kind == "prefill":
             return f"prefill_b{self.batch}_s{self.cache}_p{self.prefill}"
+        if self.kind == "stepp":
+            return f"stepp_b{self.batch}_s{self.cache}_n{self.blocks}x{self.block}"
+        if self.kind in ("blockw", "blockg"):
+            return f"{self.kind}_n{self.blocks}x{self.block}"
         return f"{self.kind}_b{self.batch}_s{self.cache}"
 
 
@@ -87,6 +93,10 @@ class BuildConfig:
     )
     prefill_bucket: int = 64
     trace_cache: int = 512
+    # Paged-KV arena geometry: tokens per block, and pool size as a multiple
+    # of the dense per-shape footprint (blocks = batch * cache / block_size,
+    # i.e. the same bytes the removed worst-case buffers would have held).
+    pool_block_size: int = 16
 
     def variants(self) -> List[ArtifactVariant]:
         out: List[ArtifactVariant] = []
@@ -100,8 +110,18 @@ class BuildConfig:
             out.append(ArtifactVariant("gather", b, s))
             out.append(ArtifactVariant("insert", b, s))
             out.append(ArtifactVariant("prefill", 1, s, self.prefill_bucket))
+            # paged-KV executables for this shape: arena sized to the same
+            # bytes as the dense caches it replaces (block_size must divide
+            # the cache so MB * block_size == S)
+            bs = self.pool_block_size
+            assert s % bs == 0, f"block size {bs} must divide cache {s}"
+            n_blocks = b * s // bs
+            out.append(ArtifactVariant("stepp", b, s, 0, n_blocks, bs))
+            out.append(ArtifactVariant("blockw", 0, 0, 0, n_blocks, bs))
+            out.append(ArtifactVariant("blockg", 0, 0, 0, n_blocks, bs))
         out.append(ArtifactVariant("trace", 1, self.trace_cache))
-        # Dedup (prefill shared across batches with same cache).
+        # Dedup (prefill shared across batches with same cache; blockw/blockg
+        # shared across shapes with the same arena geometry).
         seen, uniq = set(), []
         for v in out:
             if v.name not in seen:

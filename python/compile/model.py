@@ -176,6 +176,43 @@ def decode_step(cfg: ModelConfig, params, k_cache, v_cache, slot_mask, token, po
     return logits, attn_agg, k_new, v_new
 
 
+def decode_step_paged(cfg: ModelConfig, params, k_arena, v_arena, block_tables,
+                      seq_lens, token, pos, *, use_pallas: bool = True):
+    """One decode step reading K/V through per-row block tables (paged KV).
+
+    Args:
+      k_arena:      [N, bs, L, H, dh] pool-shaped key storage.
+      v_arena:      [N, bs, L, H, dh].
+      block_tables: [B, MB] int32 block ids per row (entries past a row's
+                    mapped blocks may be -1; they are clipped, and their
+                    rows masked out via seq_lens).
+      seq_lens:     [B] int32 live token count per row (0 = inactive).
+      token/pos:    as decode_step.
+
+    Returns the decode_step outputs with S = MB * bs: the device-side
+    gather materializes each row's view from the arena, then the same
+    attention path (Pallas kernel included) runs over it. `bs` must divide
+    the engine cache size so MB * bs == S.
+    """
+    N, bs, L, H, dh = k_arena.shape
+    B, MB = block_tables.shape
+    S = MB * bs
+    tbl = jnp.clip(block_tables, 0, N - 1).reshape(-1)  # [B*MB]
+
+    def through_tables(arena):
+        g = jnp.take(arena, tbl, axis=0)                # [B*MB, bs, L, H, dh]
+        g = g.reshape(B, S, L, H, dh)
+        return g.transpose(0, 2, 3, 1, 4)               # [B, L, H, S, dh]
+
+    k_cache = through_tables(k_arena)
+    v_cache = through_tables(v_arena)
+    slot_mask = (
+        jnp.arange(S, dtype=jnp.int32)[None, :] < seq_lens[:, None]
+    ).astype(jnp.float32)                               # [B, S]
+    return decode_step(cfg, params, k_cache, v_cache, slot_mask, token, pos,
+                       use_pallas=use_pallas)
+
+
 # ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------
@@ -269,6 +306,27 @@ def cache_insert(cache, seq, b):
     return jax.lax.dynamic_update_slice(
         cache, seq[None], (b, 0, 0, 0, 0)
     )
+
+
+def arena_row_write(arena, row, slot):
+    """Write one [L, H, dh] K or V row at linear slot block*bs + off of a
+    [N, bs, L, H, dh] arena. Single-output (device-chainable buffer)."""
+    N, bs, L, H, dh = arena.shape
+    flat = arena.reshape(N * bs, L, H, dh)
+    out = jax.lax.dynamic_update_slice(flat, row[None], (slot, 0, 0, 0))
+    return out.reshape(N, bs, L, H, dh)
+
+
+def arena_row_gather(arena, idx):
+    """Permute arena rows by a [N*bs] linear index: out[j] = in[idx[j]].
+
+    One executable serves both copy-on-write block duplication (idx maps the
+    fresh block's rows to the shared source's) and eviction compaction (idx
+    relocates every surviving row); gather reads the whole input before the
+    output exists, so overlapping src/dst need no two-phase staging."""
+    N, bs, L, H, dh = arena.shape
+    flat = arena.reshape(N * bs, L, H, dh)
+    return jnp.take(flat, idx, axis=0).reshape(N, bs, L, H, dh)
 
 
 # ---------------------------------------------------------------------------

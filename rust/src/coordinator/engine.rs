@@ -19,13 +19,21 @@
 //!   for re-prefill;
 //! * the eviction pass privatizes a row's shared blocks (copy-on-write)
 //!   before compacting, so a donor's mapping is never mutated, and
-//!   (`apply_keep_pooled`) returns whole freed blocks to the pool — lagged
-//!   eviction becomes cross-sequence capacity.
+//!   (`apply_keep_pooled_moves`) returns whole freed blocks to the pool —
+//!   lagged eviction becomes cross-sequence capacity.
 //!
-//! Scope note (same as `kvpool`): K/V tensors still live in per-row device
-//! buffers, so a prefix hit shares the *logical* block budget (admission
-//! capacity), not physical memory — prefill still runs per row. True paged
-//! attention on device is the recorded follow-up in ROADMAP.md.
+//! With a pool the paging is *physical*: `init_paged` swaps the backend's
+//! per-row worst-case `[B, L, H, S, dh]` caches for pool-shaped block
+//! arenas, prefill/decode K/V rows are written through each row's block
+//! table, the decode step gathers context via `step_paged`, CoW duplicates
+//! real bytes (`copy_block`) and compaction relocates them
+//! (`gather_kv_rows`). A full-prompt prefix-cache hit therefore skips the
+//! prefill executable entirely: the donor's blocks *are* the prompt K/V,
+//! and the entry's [`PrefillSeed`] supplies the tail rows, tracker seed and
+//! first prediction (disabled under `collect_sketches`, which needs the
+//! prompt keys host-side). Ordering contract with the backend: CoW copies
+//! are applied before the next row write, compaction moves before the next
+//! pool allocation.
 
 use std::time::Instant;
 
@@ -36,7 +44,9 @@ use crate::coordinator::row::RowState;
 use crate::coordinator::{EngineConfig, Request, Response};
 use crate::eviction::{self, Policy};
 use crate::kvcache::TokenRecord;
-use crate::kvpool::{BlockPool, BlockTable, PoolPressure, PrefixCache};
+use crate::kvpool::{
+    BlockCopy, BlockPool, BlockTable, PoolPressure, PrefillSeed, PrefixCache, RowMove,
+};
 use crate::metrics::{EngineMetrics, PoolGauges, RequestMetrics};
 use crate::runtime::{Client, DecodeBackend, Manifest, ModelExecutor, SimBackend};
 use crate::tokenizer::Tokenizer;
@@ -57,12 +67,21 @@ pub struct Engine {
     admit_seq: u64,
     pub metrics: EngineMetrics,
     vocab: usize,
+    /// Max blocks a row's table can hold (paged staging width).
+    blocks_per_row: usize,
     // staging buffers reused across steps (no per-step allocation)
     mask_buf: Vec<f32>,
     tok_buf: Vec<i32>,
     pos_buf: Vec<i32>,
     idx_buf: Vec<i32>,
     gather_buf: Vec<i32>,
+    /// Paged staging: flattened `[B, blocks_per_row]` block tables + lens.
+    tbl_buf: Vec<i32>,
+    len_buf: Vec<i32>,
+    /// Pending physical CoW copies / compaction moves (drained to the
+    /// backend immediately after the logical op that produced them).
+    copy_buf: Vec<BlockCopy>,
+    move_buf: Vec<RowMove>,
 }
 
 impl Engine {
@@ -82,8 +101,10 @@ impl Engine {
     }
 
     /// Engine over any backend (the two constructors above delegate here).
+    /// With a pool configured, the backend is switched to physical paging
+    /// here — before any request touches it.
     pub fn with_backend(
-        exec: Box<dyn DecodeBackend>,
+        mut exec: Box<dyn DecodeBackend>,
         charset: &str,
         cfg: EngineConfig,
     ) -> Result<Engine> {
@@ -94,6 +115,12 @@ impl Engine {
             Some(pc) => Some(BlockPool::new(pc.clone())?),
             None => None,
         };
+        let mut blocks_per_row = 0;
+        if let Some(p) = &pool {
+            exec.init_paged(p.total_blocks(), p.block_size())
+                .context("switching backend to paged KV")?;
+            blocks_per_row = p.blocks_for(cfg.cache);
+        }
         let prefix_cache = match (&pool, &cfg.prefix_cache) {
             (Some(_), Some(pc)) => Some(PrefixCache::new(pc.clone())),
             _ => None,
@@ -109,11 +136,16 @@ impl Engine {
             preempted: Vec::new(),
             admit_seq: 0,
             metrics: EngineMetrics::default(),
+            blocks_per_row,
             mask_buf: vec![0.0; b * s],
             tok_buf: vec![0; b],
             pos_buf: vec![0; b],
             idx_buf: vec![0; b],
             gather_buf: vec![0; b * s],
+            tbl_buf: vec![-1; b * blocks_per_row],
+            len_buf: vec![0; b],
+            copy_buf: Vec::new(),
+            move_buf: Vec::new(),
             exec,
             cfg,
         })
@@ -143,12 +175,21 @@ impl Engine {
     /// Pool gauges for metrics export / server responses.
     pub fn pool_gauges(&self) -> Option<PoolGauges> {
         self.pool.as_ref().map(|p| {
+            // physical bytes: the whole arena, and the live-block share
+            let kv_arena_bytes = self.exec.device_cache_bytes();
+            let block_bytes = if p.total_blocks() == 0 {
+                0
+            } else {
+                kv_arena_bytes / p.total_blocks()
+            };
             let mut g = PoolGauges {
                 free_blocks: p.free_blocks(),
                 total_blocks: p.total_blocks(),
                 utilization: p.utilization(),
                 preemptions: self.metrics.preemptions,
                 shared_blocks: p.shared_blocks(),
+                kv_arena_bytes,
+                kv_bytes_in_use: p.used_blocks() * block_bytes,
                 ..PoolGauges::default()
             };
             if let Some(pc) = &self.prefix_cache {
@@ -156,9 +197,51 @@ impl Engine {
                 g.prefix_misses = pc.misses;
                 g.prefix_entries = pc.len();
                 g.prefix_pinned_blocks = pc.pinned_blocks();
+                g.prefix_prefill_skips = self.metrics.prefill_skips;
             }
             g
         })
+    }
+
+    /// Test/debug passthrough: the K/V bytes the backend stores at an arena
+    /// location (paged mode, host-readable backends only).
+    pub fn backend_kv_row(&self, block: u32, offset: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.exec.debug_kv_row(block, offset)
+    }
+
+    /// Drain pending physical CoW copies to the backend. Must run after any
+    /// logical op that may have pushed into `copy_buf`, before the next
+    /// K/V row write. A single copy (the common shared-tail case) goes
+    /// through `copy_block`; several (multi-block privatization) are merged
+    /// into one row-relocation pass — on the device backend that is one
+    /// arena permute instead of one whole-arena pass per copied block.
+    fn flush_block_copies(&mut self) -> Result<()> {
+        match self.copy_buf.len() {
+            0 => Ok(()),
+            1 => {
+                let c = self.copy_buf.pop().expect("len checked");
+                self.exec.copy_block(c)
+            }
+            _ => {
+                let copies = std::mem::take(&mut self.copy_buf);
+                let moves: Vec<RowMove> = copies
+                    .iter()
+                    .flat_map(|c| {
+                        (0..c.rows).map(move |r| RowMove {
+                            src_block: c.src,
+                            src_off: r,
+                            dst_block: c.dst,
+                            dst_off: r,
+                        })
+                    })
+                    .collect();
+                self.exec.gather_kv_rows(&moves)?;
+                // keep the buffer's allocation across steps
+                self.copy_buf = copies;
+                self.copy_buf.clear();
+                Ok(())
+            }
+        }
     }
 
     /// Drop every prompt-prefix cache entry, releasing its block pins
@@ -255,10 +338,15 @@ impl Engine {
         // pins are shed LRU-first before declining, so a cache-heavy pool
         // can never starve admissions.
         let mut fork: Option<BlockTable> = None;
+        let mut full_hit = false;
         if let Some(pool) = self.pool.as_mut() {
             if let Some(pc) = self.prefix_cache.as_mut() {
-                if let Some(donor) = pc.lookup(&ids, pool.block_size()) {
-                    fork = Some(BlockTable::fork_prefix(donor, ids.len(), pool));
+                if let Some(hit) = pc.lookup(&ids, pool.block_size()) {
+                    // a seed for this exact prompt lets prefill be skipped —
+                    // unless sketches are collected (rkv needs the prompt
+                    // keys host-side, which only a real prefill produces)
+                    full_hit = hit.seed.is_some() && !self.cfg.collect_sketches;
+                    fork = Some(BlockTable::fork_prefix(hit.table, ids.len(), pool));
                 }
             }
             let shared = fork.as_ref().map_or(0, |t| t.n_blocks());
@@ -285,32 +373,71 @@ impl Engine {
             }
         }
         let prefix_hit = fork.is_some();
+        let premapped = fork.as_ref().map_or(0, |t| t.len());
+        let p = ids.len();
+        let d = self.exec.dims().clone();
+        let row_elems = d.n_layers * d.n_heads * d.d_head;
 
-        let t0 = Instant::now();
-        let mut toks = vec![0i32; p_bucket];
-        let mut valid = vec![0f32; p_bucket];
-        for (i, &id) in ids.iter().enumerate() {
-            toks[i] = id as i32;
-            valid[i] = 1.0;
-        }
         // a backend error must not leak the fork's block references
         let release_fork = |slf: &mut Engine, fork: &mut Option<BlockTable>| {
             if let (Some(pool), Some(mut t)) = (slf.pool.as_mut(), fork.take()) {
                 t.release_all(pool);
             }
         };
-        let out = match self.exec.prefill(&toks, &valid) {
-            Ok(o) => o,
-            Err(e) => {
-                release_fork(self, &mut fork);
-                return Err(e);
-            }
-        };
-        if let Err(e) = self.exec.insert(&out.k_seq, &out.v_seq, row_idx) {
-            release_fork(self, &mut fork);
-            return Err(e);
+
+        // Where the prompt's K/V, tracker seed and first logits came from:
+        // Seeded  — full-prompt prefix hit under physical paging: the
+        //           donor's blocks hold the prompt K/V, zero model compute;
+        // Rows    — paged prefill (token-major rows, no worst-case buffer);
+        // Dense   — dense prefill + device insert (no pool configured).
+        enum Prefilled {
+            Seeded(PrefillSeed),
+            Rows(crate::runtime::PrefillRows),
+            Dense(crate::runtime::PrefillOut),
         }
-        self.metrics.record_prefill(t0.elapsed());
+        // the seed can only have vanished if admission shedding destroyed
+        // the entry — impossible while our fork pins its blocks, but a
+        // prefill fallback is cheaper than an invariant panic
+        let seed_opt = if full_hit {
+            self.prefix_cache
+                .as_ref()
+                .and_then(|pc| pc.seed_for(&ids))
+                .cloned()
+        } else {
+            None
+        };
+        let pre = if let Some(seed) = seed_opt {
+            self.metrics.prefill_skips += 1;
+            Prefilled::Seeded(seed)
+        } else {
+            let t0 = Instant::now();
+            let mut toks = vec![0i32; p_bucket];
+            let mut valid = vec![0f32; p_bucket];
+            for (i, &id) in ids.iter().enumerate() {
+                toks[i] = id as i32;
+                valid[i] = 1.0;
+            }
+            let prefilled = if self.pool.is_some() {
+                self.exec.prefill_rows(&toks, &valid).map(Prefilled::Rows)
+            } else {
+                self.exec.prefill(&toks, &valid).map(Prefilled::Dense)
+            };
+            let out = match prefilled {
+                Ok(o) => o,
+                Err(e) => {
+                    release_fork(self, &mut fork);
+                    return Err(e);
+                }
+            };
+            if let Prefilled::Dense(o) = &out {
+                if let Err(e) = self.exec.insert(&o.k_seq, &o.v_seq, row_idx) {
+                    release_fork(self, &mut fork);
+                    return Err(e);
+                }
+            }
+            self.metrics.record_prefill(t0.elapsed());
+            out
+        };
 
         let mut row = RowState::new(req, self.cfg.cache, queued_s);
         row.admit_seq = self.admit_seq;
@@ -321,19 +448,26 @@ impl Engine {
                 .unwrap_or_else(|| BlockTable::new(pool.block_size()));
             row.seq.attach_block_table(table);
         }
-        let p = ids.len();
-        let d = self.exec.dims();
-        let h_stride = self.cfg.cache; // k_seq is [L, H, S, dh]
+        let h_stride = self.cfg.cache; // dense k_seq is [L, H, S, dh]
         let sketch_span = d.n_heads * h_stride * d.d_head;
-        for (i, _) in ids.iter().enumerate() {
+        for i in 0..p {
             let mut rec = TokenRecord::new(i as u32, i as u32);
             rec.last_attn = 1.0;
             if self.cfg.collect_sketches {
-                rec.key_sketch = self.sketch_from(&out.k_seq[..sketch_span], h_stride, i);
+                rec.key_sketch = match &pre {
+                    Prefilled::Dense(o) => {
+                        self.sketch_from(&o.k_seq[..sketch_span], h_stride, i)
+                    }
+                    // token-major row i, layer 0 = leading H·dh lanes
+                    Prefilled::Rows(r) => {
+                        r.k_rows[i * row_elems..i * row_elems + d.n_heads * d.d_head].to_vec()
+                    }
+                    Prefilled::Seeded(_) => unreachable!("skip disabled under sketches"),
+                };
             }
             match self.pool.as_mut() {
                 Some(pool) => {
-                    if row.seq.push_pooled(rec, pool).is_none() {
+                    if row.seq.push_pooled_cow(rec, pool, &mut self.copy_buf).is_none() {
                         // Free-count was checked above; this is unreachable
                         // in the single-threaded loop, but stay safe: give
                         // the blocks back and leave the request queued.
@@ -346,10 +480,46 @@ impl Engine {
                 }
             }
         }
+        debug_assert!(
+            self.copy_buf.is_empty(),
+            "admission pushes premap or allocate at boundaries — never CoW"
+        );
+
+        // physical paging: scatter the prompt's K/V rows into the row's
+        // private blocks. Slots below `premapped` already hold the donor's
+        // bytes (and writing into those shared blocks would corrupt it).
+        if self.pool.is_some() {
+            let (k_rows, v_rows, src_base): (&[f32], &[f32], usize) = match &pre {
+                Prefilled::Rows(r) => (&r.k_rows, &r.v_rows, 0),
+                // seed tail rows start exactly at the entry's coverage
+                Prefilled::Seeded(s) => (&s.tail_k, &s.tail_v, premapped),
+                Prefilled::Dense(_) => unreachable!("pooled engines prefill rows"),
+            };
+            let mut i = premapped;
+            while i < p {
+                let (blk, off, run) = {
+                    let t = row.seq.block_table().expect("pooled row has a table");
+                    let (blk, off) = t.locate(i).expect("prompt slot mapped");
+                    (blk, off, (t.block_size() - off).min(p - i))
+                };
+                let a = (i - src_base) * row_elems;
+                let b = a + run * row_elems;
+                if let Err(e) = self.exec.write_kv_rows(blk, off, &k_rows[a..b], &v_rows[a..b]) {
+                    if let Some(pool) = self.pool.as_mut() {
+                        row.seq.release_blocks(pool);
+                    }
+                    return Err(e);
+                }
+                i += run;
+            }
+        }
+
         // the admission actually went through: settle the hit/miss counters
         // (a lookup whose admission was declined counts as neither), and
         // register this prompt's whole-block prefix so later identical
-        // headers fork it (no-op if an entry already covers it)
+        // headers fork it (no-op if an entry already covers it). Under
+        // physical paging a fresh prefill also leaves its seed behind, so
+        // the *next* identical prompt skips prefill entirely.
         if let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) {
             if prefix_hit {
                 pc.hits += 1;
@@ -357,13 +527,31 @@ impl Engine {
                 pc.misses += 1;
             }
             if let Some(t) = row.seq.block_table() {
-                pc.insert(&ids, t, pool);
+                let seed = match &pre {
+                    Prefilled::Rows(r) => {
+                        let covered = (p.min(t.len()) / pool.block_size()) * pool.block_size();
+                        Some(PrefillSeed {
+                            prompt: ids.clone(),
+                            tail_k: r.k_rows[covered * row_elems..p * row_elems].to_vec(),
+                            tail_v: r.v_rows[covered * row_elems..p * row_elems].to_vec(),
+                            attn_last: r.attn_last.clone(),
+                            logits_last: r.logits_last.clone(),
+                        })
+                    }
+                    _ => None,
+                };
+                pc.insert(&ids, t, seed, pool);
             }
         }
         // one observation from the last prompt row's attention
+        let (attn_seed, logits_seed): (&[f32], &[f32]) = match &pre {
+            Prefilled::Seeded(s) => (&s.attn_last, &s.logits_last),
+            Prefilled::Rows(r) => (&r.attn_last, &r.logits_last),
+            Prefilled::Dense(o) => (&o.attn_last, &o.logits_last),
+        };
         observe(
             row.seq.records_mut(),
-            &out.attn_last[..p],
+            &attn_seed[..p],
             (p - 1) as u32,
             TrackerConfig {
                 alpha: self.cfg.alpha,
@@ -371,8 +559,8 @@ impl Engine {
         );
         row.pos = p as u32;
 
-        // first prediction comes from the prefill logits
-        let pred_id = argmax(&out.logits_last);
+        // first prediction comes from the prefill (or seeded) logits
+        let pred_id = argmax(logits_seed);
         let pred = self.tokenizer.char_of(pred_id as u32).unwrap_or(' ');
         match row.advance_with_prediction(pred, self.cfg.stop_char) {
             Some(c) => {
@@ -445,22 +633,32 @@ impl Engine {
     /// its mapping. Allocation pressure is resolved by shedding prefix-cache
     /// pins LRU-first, then preempting the youngest *other* row (whose
     /// released references often privatize `i`'s blocks with no allocation
-    /// at all). Returns false only when the row still shares blocks and
-    /// nothing is left to shed or preempt — the caller skips the eviction
-    /// pass for that row this step and retries next step.
-    fn make_row_private(&mut self, i: usize) -> bool {
+    /// at all). The physical byte duplications every logical swap implies
+    /// are applied to the backend immediately — including on the partial
+    /// progress of a failed attempt, whose swapped blocks are already live.
+    /// Returns Ok(false) only when the row still shares blocks and nothing
+    /// is left to shed or preempt — the caller skips the eviction pass for
+    /// that row this step and retries next step.
+    fn make_row_private(&mut self, i: usize) -> Result<bool> {
         loop {
-            let shared_ids = {
-                let Some(pool) = self.pool.as_mut() else { return true };
-                let Some(row) = self.rows[i].as_mut() else { return true };
-                if row.seq.make_private(pool) {
-                    return true;
+            let (done, shared_ids) = {
+                let Some(pool) = self.pool.as_mut() else { return Ok(true) };
+                let Some(row) = self.rows[i].as_mut() else { return Ok(true) };
+                if row.seq.make_private_cow(pool, &mut self.copy_buf) {
+                    (true, Vec::new())
+                } else {
+                    let ids = row
+                        .seq
+                        .block_table()
+                        .map(|t| t.shared_block_ids(pool))
+                        .unwrap_or_default();
+                    (false, ids)
                 }
-                row.seq
-                    .block_table()
-                    .map(|t| t.shared_block_ids(pool))
-                    .unwrap_or_default()
             };
+            self.flush_block_copies()?;
+            if done {
+                return Ok(true);
+            }
             if let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) {
                 // first drop cache entries holding *this row's* shared
                 // blocks — that lowers their refcount directly, often
@@ -483,7 +681,7 @@ impl Engine {
                 .map(|(_, j)| j);
             match victim {
                 Some(j) => self.preempt_row(j),
-                None => return false,
+                None => return Ok(false),
             }
         }
     }
@@ -515,24 +713,52 @@ impl Engine {
         }
 
         let t0 = Instant::now();
-        // stage inputs
-        self.mask_buf.fill(0.0);
+        let paged = self.pool.is_some();
+        // stage inputs: block tables + lens (paged) or slot masks (dense)
         self.tok_buf.fill(0);
         self.pos_buf.fill(0);
-        self.idx_buf.fill(0);
+        if paged {
+            self.tbl_buf.fill(-1);
+            self.len_buf.fill(0);
+        } else {
+            self.mask_buf.fill(0.0);
+            self.idx_buf.fill(0);
+        }
         let mut active = 0u64;
         for i in 0..b {
             if let Some(row) = &self.rows[i] {
-                row.seq.slot_mask(&mut self.mask_buf[i * s..(i + 1) * s]);
+                if paged {
+                    let t = row.seq.block_table().expect("pooled row has a table");
+                    let bpr = self.blocks_per_row;
+                    for (j, &blk) in t.blocks().iter().enumerate() {
+                        self.tbl_buf[i * bpr + j] = blk as i32;
+                    }
+                    self.len_buf[i] = row.seq.len() as i32;
+                } else {
+                    row.seq.slot_mask(&mut self.mask_buf[i * s..(i + 1) * s]);
+                    self.idx_buf[i] = row.seq.len() as i32;
+                }
                 self.tok_buf[i] = row.next_token as i32;
                 self.pos_buf[i] = row.pos as i32;
-                self.idx_buf[i] = row.seq.len() as i32;
                 active += 1;
             }
         }
 
-        let out = self.exec.step(&self.mask_buf, &self.tok_buf, &self.pos_buf)?;
-        self.exec.append(&out.k_new, &out.v_new, &self.idx_buf)?;
+        let out = if paged {
+            // K/V context is gathered through the block tables on the
+            // backend; the new rows come back for table-routed appends
+            self.exec.step_paged(
+                &self.tbl_buf,
+                self.blocks_per_row,
+                &self.len_buf,
+                &self.tok_buf,
+                &self.pos_buf,
+            )?
+        } else {
+            let o = self.exec.step(&self.mask_buf, &self.tok_buf, &self.pos_buf)?;
+            self.exec.append(&o.k_new, &o.v_new, &self.idx_buf)?;
+            o
+        };
 
         let d = self.exec.dims().clone();
         let (nh, dh, nl) = (d.n_heads, d.d_head, d.n_layers);
@@ -543,54 +769,78 @@ impl Engine {
 
         // per-row: observe attention, record the new token, pick next input
         for i in 0..b {
-            let Some(row) = self.rows[i].as_mut() else {
-                continue;
+            // phase 1 (row borrow): tracker update + logical push + output
+            let write_at = {
+                let Some(row) = self.rows[i].as_mut() else {
+                    continue;
+                };
+                let step_t = row.pos;
+                let live = row.seq.len();
+                let attn_row = &out.attn[i * s..i * s + live];
+                observe(row.seq.records_mut(), attn_row, step_t, alpha_cfg);
+
+                let mut rec = TokenRecord::new(step_t, step_t);
+                rec.last_attn = 1.0; // self-attention at birth; overwritten next step
+                if self.cfg.collect_sketches {
+                    // k_new row layout: [L, H, dh] for this batch row
+                    let base = i * per_row_new;
+                    let mut sk = Vec::with_capacity(nh * dh);
+                    for head in 0..nh {
+                        let off = base + head * dh; // layer 0
+                        sk.extend_from_slice(&out.k_new[off..off + dh]);
+                    }
+                    rec.key_sketch = sk;
+                }
+                match self.pool.as_mut() {
+                    Some(pool) => {
+                        row.seq
+                            .push_pooled_cow(rec, pool, &mut self.copy_buf)
+                            .expect("block headroom ensured before step");
+                    }
+                    None => {
+                        row.seq.push(rec);
+                    }
+                }
+                if self.cfg.record_live {
+                    row.live_curve.push(row.seq.len());
+                }
+                row.pos += 1;
+
+                let logits = &out.logits[i * self.vocab..(i + 1) * self.vocab];
+                let pred = self
+                    .tokenizer
+                    .char_of(argmax(logits) as u32)
+                    .unwrap_or(' ');
+                if let Some(c) = row.advance_with_prediction(pred, self.cfg.stop_char) {
+                    row.next_token = self.tokenizer.id(c).unwrap_or(0);
+                }
+                if paged {
+                    let slot = row.seq.len() - 1;
+                    let t = row.seq.block_table().expect("pooled row has a table");
+                    Some(t.locate(slot).expect("just pushed ⇒ mapped"))
+                } else {
+                    None
+                }
             };
-            let step_t = row.pos;
-            let live = row.seq.len();
-            let attn_row = &out.attn[i * s..i * s + live];
-            observe(row.seq.records_mut(), attn_row, step_t, alpha_cfg);
-
-            let mut rec = TokenRecord::new(step_t, step_t);
-            rec.last_attn = 1.0; // self-attention at birth; overwritten next step
-            if self.cfg.collect_sketches {
-                // k_new row layout: [L, H, dh] for this batch row
+            // phase 2 (backend): any shared-tail CoW copy lands first, then
+            // the new token's K/V row goes to its table-mapped location
+            if let Some((blk, off)) = write_at {
+                self.flush_block_copies()?;
                 let base = i * per_row_new;
-                let mut sk = Vec::with_capacity(nh * dh);
-                for head in 0..nh {
-                    let off = base + head * dh; // layer 0
-                    sk.extend_from_slice(&out.k_new[off..off + dh]);
-                }
-                rec.key_sketch = sk;
-            }
-            match self.pool.as_mut() {
-                Some(pool) => {
-                    row.seq
-                        .push_pooled(rec, pool)
-                        .expect("block headroom ensured before step");
-                }
-                None => {
-                    row.seq.push(rec);
-                }
-            }
-            if self.cfg.record_live {
-                row.live_curve.push(row.seq.len());
-            }
-            row.pos += 1;
-
-            let logits = &out.logits[i * self.vocab..(i + 1) * self.vocab];
-            let pred = self
-                .tokenizer
-                .char_of(argmax(logits) as u32)
-                .unwrap_or(' ');
-            if let Some(c) = row.advance_with_prediction(pred, self.cfg.stop_char) {
-                row.next_token = self.tokenizer.id(c).unwrap_or(0);
+                self.exec.write_kv_rows(
+                    blk,
+                    off,
+                    &out.k_new[base..base + per_row_new],
+                    &out.v_new[base..base + per_row_new],
+                )?;
             }
         }
         self.metrics.record_step(t0.elapsed(), active);
 
         // eviction pass (lagged or greedy per policy; forced at capacity).
-        // In paged mode compaction also returns whole freed blocks.
+        // In paged mode compaction also returns whole freed blocks, and the
+        // surviving rows' bytes are relocated between blocks immediately —
+        // before any later row's CoW could reuse the freed blocks.
         let te = Instant::now();
         let mut any_evict = false;
         for i in 0..b {
@@ -610,32 +860,49 @@ impl Engine {
             // CoW before compaction: eviction reorders slot contents, so a
             // row still sharing prefix blocks must detach them first. If
             // privatization is impossible right now, defer this row's pass.
-            let wants = wants && (self.pool.is_none() || self.make_row_private(i));
+            let wants = wants && (self.pool.is_none() || self.make_row_private(i)?);
             if wants {
-                let row = self.rows[i].as_mut().unwrap();
-                let keep =
-                    self.policy
-                        .select_keep(row.seq.records(), self.cfg.budget, row.pos);
-                row.evictions += row.seq.len() - keep.len();
-                match self.pool.as_mut() {
-                    Some(pool) => {
-                        row.seq.apply_keep_pooled(&keep, row.pos, pool);
-                    }
-                    None => {
-                        row.seq.apply_keep(&keep, row.pos);
+                {
+                    let row = self.rows[i].as_mut().unwrap();
+                    let keep =
+                        self.policy
+                            .select_keep(row.seq.records(), self.cfg.budget, row.pos);
+                    row.evictions += row.seq.len() - keep.len();
+                    match self.pool.as_mut() {
+                        Some(pool) => {
+                            self.move_buf.clear();
+                            row.seq.apply_keep_pooled_moves(
+                                &keep,
+                                row.pos,
+                                pool,
+                                &mut self.move_buf,
+                            );
+                        }
+                        None => {
+                            row.seq.apply_keep(&keep, row.pos);
+                            let idx = row.seq.gather_indices(&keep);
+                            self.gather_buf[range].copy_from_slice(&idx);
+                        }
                     }
                 }
-                let idx = row.seq.gather_indices(&keep);
-                self.gather_buf[range].copy_from_slice(&idx);
+                if paged && !self.move_buf.is_empty() {
+                    // keep the buffer's allocation across steps
+                    let moves = std::mem::take(&mut self.move_buf);
+                    self.exec.gather_kv_rows(&moves)?;
+                    self.move_buf = moves;
+                    self.move_buf.clear();
+                }
                 any_evict = true;
-            } else {
+            } else if !paged {
                 for (j, v) in self.gather_buf[range].iter_mut().enumerate() {
                     *v = j as i32;
                 }
             }
         }
         if any_evict {
-            self.exec.gather(&self.gather_buf)?;
+            if !paged {
+                self.exec.gather(&self.gather_buf)?;
+            }
             self.metrics.record_eviction(te.elapsed());
         }
 
@@ -955,6 +1222,79 @@ mod tests {
         assert_eq!(done, vec![1, 2]);
         e.clear_prefix_cache();
         assert_eq!(e.pool_gauges().unwrap().free_blocks, 8);
+    }
+
+    #[test]
+    fn prefix_hit_skips_prefill_entirely() {
+        // The physical-paging acceptance test: an identical prompt's second
+        // admission runs ZERO prefill executions — the cached blocks are the
+        // data and the seed supplies tail rows + tracker + first logits —
+        // and the generated text is byte-identical to the cold run.
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(1, Some(pool))).unwrap();
+        let r1 = e.run_all(vec![req(1, 24)]).unwrap();
+        assert_eq!(e.exec_counts().prefill, 1);
+        assert_eq!(e.pool_gauges().unwrap().prefix_prefill_skips, 0);
+        let r2 = e.run_all(vec![req(2, 24)]).unwrap();
+        assert_eq!(
+            e.exec_counts().prefill,
+            1,
+            "identical prompt must not prefill again"
+        );
+        let g = e.pool_gauges().unwrap();
+        assert_eq!(g.prefix_prefill_skips, 1);
+        assert_eq!(g.prefix_hits, 1);
+        assert_eq!(r1[0].text, r2[0].text, "seeded admission changed output");
+        // a prompt with the same whole-block header but a divergent tail
+        // gets the block sharing — and MUST still run its own prefill
+        let r3 = e
+            .run_all(vec![Request {
+                id: 3,
+                prompt: "#A=3;B=7;\n?".into(), // last char differs (slot 10)
+                template: String::new(),
+                max_new: 24,
+            }])
+            .unwrap();
+        assert_eq!(r3.len(), 1);
+        assert_eq!(e.exec_counts().prefill, 2, "divergent tail must prefill");
+        let g = e.pool_gauges().unwrap();
+        assert_eq!(g.prefix_hits, 2, "the shared header still counts as a hit");
+        assert_eq!(g.prefix_prefill_skips, 1, "but not as a prefill skip");
+    }
+
+    #[test]
+    fn arena_rows_track_records_through_eviction() {
+        // End-to-end physical consistency: after admissions, CoW and several
+        // eviction compactions, every live slot's stored K bytes must still
+        // encode the token the records say lives there (the sim writes the
+        // birth position into k_row[0]).
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(1, Some(pool))).unwrap();
+        assert!(e.submit(req(1, 60), 0.0).unwrap());
+        for _ in 0..45 {
+            e.step().unwrap();
+        }
+        let row = e.rows[0].as_ref().expect("row still decoding");
+        assert!(row.evictions > 0, "test must cross an eviction pass");
+        let t = row.seq.block_table().unwrap();
+        for (slot, rec) in row.seq.records().iter().enumerate() {
+            let (blk, off) = t.locate(slot).unwrap();
+            let (k, _) = e.backend_kv_row(blk, off).expect("sim arena readable");
+            assert_eq!(
+                k[0] as u32, rec.pos,
+                "slot {slot}: stored bytes diverged from records after compaction"
+            );
+        }
     }
 
     #[test]

@@ -10,10 +10,17 @@
 //! `SeqKv` additionally carries a `BlockTable` view (slot → block/offset):
 //! `push_pooled` grows it a block at a time and `apply_keep_pooled` returns
 //! whole freed blocks to the pool after compaction.
+//!
+//! With *physical* paging (K/V bytes in pool-shaped backend storage), the
+//! `_cow`/`_moves` method variants additionally report what the logical
+//! mutation implies for the bytes: a shared-tail push or privatization
+//! emits [`BlockCopy`] descriptors, a compaction emits the [`RowMove`] list
+//! relocating every surviving row. Callers must apply those to the backend
+//! storage before the next write/allocation, or live tables read stale rows.
 
 pub mod memory;
 
-use crate::kvpool::{BlockPool, BlockTable};
+use crate::kvpool::{BlockCopy, BlockId, BlockPool, BlockTable, RowMove};
 
 /// Per-token tracking state. All per-token signals any of the implemented
 /// policies need are kept here so that compaction reorders them uniformly.
@@ -143,9 +150,37 @@ impl SeqKv {
     /// prefix fork premapped). Returns `None` with state unchanged when the
     /// pool is exhausted.
     pub fn push_pooled(&mut self, rec: TokenRecord, pool: &mut BlockPool) -> Option<usize> {
+        self.push_pooled_inner(rec, pool, None)
+    }
+
+    /// [`push_pooled`](Self::push_pooled) for physical paging: a push that
+    /// copy-on-writes a shared tail block reports the implied [`BlockCopy`]
+    /// so the caller can duplicate the K/V rows in backend storage before
+    /// writing the new token's row.
+    pub fn push_pooled_cow(
+        &mut self,
+        rec: TokenRecord,
+        pool: &mut BlockPool,
+        copies: &mut Vec<BlockCopy>,
+    ) -> Option<usize> {
+        self.push_pooled_inner(rec, pool, Some(copies))
+    }
+
+    fn push_pooled_inner(
+        &mut self,
+        rec: TokenRecord,
+        pool: &mut BlockPool,
+        copies: Option<&mut Vec<BlockCopy>>,
+    ) -> Option<usize> {
         if let Some(t) = self.block_table.as_mut() {
-            if self.records.len() >= t.len() && !t.push_token(pool) {
-                return None;
+            if self.records.len() >= t.len() {
+                let pushed = match copies {
+                    Some(c) => t.push_token_cow(pool, c),
+                    None => t.push_token(pool),
+                };
+                if !pushed {
+                    return None;
+                }
             }
         }
         Some(self.push(rec))
@@ -158,6 +193,19 @@ impl SeqKv {
     pub fn make_private(&mut self, pool: &mut BlockPool) -> bool {
         match self.block_table.as_mut() {
             Some(t) => t.ensure_private(pool),
+            None => true,
+        }
+    }
+
+    /// [`make_private`](Self::make_private) for physical paging: reports one
+    /// [`BlockCopy`] per privatized block. Copies already reported remain
+    /// valid (and must be applied) even on a `false` return — they describe
+    /// blocks that *were* swapped. (The bodies differ only in which
+    /// `BlockTable` variant they call, which already deduplicates the real
+    /// logic via `ensure_private_inner`.)
+    pub fn make_private_cow(&mut self, pool: &mut BlockPool, copies: &mut Vec<BlockCopy>) -> bool {
+        match self.block_table.as_mut() {
+            Some(t) => t.ensure_private_cow(pool, copies),
             None => true,
         }
     }
@@ -176,6 +224,49 @@ impl SeqKv {
             Some(t) => t.truncate(self.records.len(), pool),
             None => 0,
         };
+        (evicted, freed)
+    }
+
+    /// [`apply_keep_pooled`](Self::apply_keep_pooled) for physical paging:
+    /// appends to `moves` the relocation of every surviving K/V row from its
+    /// pre-compaction to its post-compaction arena location (identity moves
+    /// are skipped). The caller MUST apply the moves to backend storage
+    /// before the next pool allocation — sources may sit in blocks this
+    /// compaction just freed, whose bytes are only valid until reuse. The
+    /// table must already be private (see
+    /// [`make_private_cow`](Self::make_private_cow)); moving rows inside
+    /// shared blocks would corrupt the other holders.
+    pub fn apply_keep_pooled_moves(
+        &mut self,
+        keep: &[u32],
+        step: u32,
+        pool: &mut BlockPool,
+        moves: &mut Vec<RowMove>,
+    ) -> (Vec<u32>, usize) {
+        let srcs: Option<Vec<(BlockId, usize)>> = self.block_table.as_ref().map(|t| {
+            debug_assert_eq!(t.n_shared_blocks(pool), 0, "compaction over shared blocks");
+            keep.iter()
+                .map(|&k| t.locate(k as usize).expect("keep slot is mapped"))
+                .collect()
+        });
+        let evicted = self.apply_keep(keep, step);
+        let freed = match self.block_table.as_mut() {
+            Some(t) => t.truncate(self.records.len(), pool),
+            None => 0,
+        };
+        if let (Some(srcs), Some(t)) = (srcs, self.block_table.as_ref()) {
+            for (j, (sb, so)) in srcs.into_iter().enumerate() {
+                let (db, doff) = t.locate(j).expect("kept slot stays mapped");
+                if (sb, so) != (db, doff) {
+                    moves.push(RowMove {
+                        src_block: sb,
+                        src_off: so,
+                        dst_block: db,
+                        dst_off: doff,
+                    });
+                }
+            }
+        }
         (evicted, freed)
     }
 
@@ -437,6 +528,39 @@ mod tests {
         // block table stays consistent with the compacted layout
         assert_eq!(s.block_table().unwrap().locate(4).unwrap().1, 0);
         assert!(s.block_table().unwrap().locate(5).is_none());
+    }
+
+    #[test]
+    fn pooled_apply_keep_reports_row_moves() {
+        let (mut s, mut pool) = pooled_pair(); // block_size 4
+        for i in 0..16 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        let t = s.block_table().unwrap();
+        let (b0, b1, b3) = (t.blocks()[0], t.blocks()[1], t.blocks()[3]);
+        let keep = vec![0u32, 5, 14];
+        let mut moves = Vec::new();
+        let (evicted, freed) = s.apply_keep_pooled_moves(&keep, 20, &mut pool, &mut moves);
+        assert_eq!(evicted.len(), 13);
+        assert_eq!(freed, 3); // 3 survivors need 1 block
+        // slot 0 stays put (identity skipped); 5 → slot 1, 14 → slot 2
+        assert_eq!(
+            moves,
+            vec![
+                crate::kvpool::RowMove {
+                    src_block: b1,
+                    src_off: 1,
+                    dst_block: b0,
+                    dst_off: 1
+                },
+                crate::kvpool::RowMove {
+                    src_block: b3,
+                    src_off: 2,
+                    dst_block: b0,
+                    dst_off: 2
+                },
+            ]
+        );
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Host-side physical K/V block storage: the byte-level half of paging.
+//!
+//! [`BlockPool`](super::BlockPool) and [`BlockTable`](super::BlockTable) are
+//! purely *logical* — ids, refcounts, slot→(block, offset) maps. This module
+//! holds the actual numbers: a [`KvArena`] is a `[n_blocks, block_size,
+//! row_elems]` slab (one for K, one for V) where `row_elems = L · H · dh` is
+//! one token's per-layer/head K or V footprint. Every physical byte of paged
+//! KV lives in exactly one arena row, addressed only through a block table —
+//! there is no per-sequence worst-case buffer anywhere.
+//!
+//! Ownership: the arena belongs to the *backend* (`SimBackend` holds one on
+//! the host; `ModelExecutor` holds the same layout as device buffers), not to
+//! the pool — the pool must stay a cheap, copyable bookkeeping structure the
+//! scheduler and simulators can drive without touching tensors.
+//!
+//! The copy/move descriptor types here ([`BlockCopy`], [`RowMove`]) are how
+//! the logical layer tells the physical layer what bytes to touch:
+//!
+//! * a [`BlockCopy`] is emitted by `BlockTable` copy-on-write (a shared
+//!   block's occupied rows must be duplicated into the fresh private block
+//!   *before* the next write lands, or the fork would read garbage and the
+//!   donor could be clobbered);
+//! * a [`RowMove`] list is emitted by `SeqKv::apply_keep_pooled` compaction
+//!   (eviction reorders live slots, so surviving rows relocate between
+//!   blocks). Moves are applied **two-phase** (gather all sources, then
+//!   write) because a kept row's destination may overlap another kept row's
+//!   source — see [`KvArena::gather_rows`].
+//!
+//! Failure modes worth knowing: rows in freed blocks are *not* zeroed — the
+//! logical layer guarantees a block is re-written before it is re-read, so
+//! stale bytes are unreachable through any live table (asserted end-to-end
+//! by the divergent-tail engine tests and `tests/paged_kv.rs`).
+
+use super::pool::BlockId;
+
+/// One token's K (or V) element count: `n_layers * n_heads * d_head`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+}
+
+impl KvLayout {
+    pub fn row_elems(&self) -> usize {
+        self.n_layers * self.n_heads * self.d_head
+    }
+}
+
+/// Copy-on-write descriptor: duplicate the first `rows` occupied rows of
+/// block `src` into block `dst` (both K and V).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockCopy {
+    pub src: BlockId,
+    pub dst: BlockId,
+    pub rows: usize,
+}
+
+/// Compaction descriptor: the row at `(src_block, src_off)` survives an
+/// eviction pass and now lives at `(dst_block, dst_off)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowMove {
+    pub src_block: BlockId,
+    pub src_off: usize,
+    pub dst_block: BlockId,
+    pub dst_off: usize,
+}
+
+/// Pool-shaped physical K/V storage (see module docs).
+#[derive(Clone, Debug)]
+pub struct KvArena {
+    n_blocks: usize,
+    block_size: usize,
+    row_elems: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvArena {
+    pub fn new(n_blocks: usize, block_size: usize, layout: KvLayout) -> KvArena {
+        let row_elems = layout.row_elems();
+        let n = n_blocks * block_size * row_elems;
+        KvArena {
+            n_blocks,
+            block_size,
+            row_elems,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    /// Total bytes the arena occupies (K + V) — the *whole* physical KV
+    /// footprint of a paged engine, independent of batch or max length.
+    pub fn bytes(&self) -> usize {
+        2 * self.k.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes held by `used_blocks` live blocks — the in-use share of
+    /// [`bytes`](Self::bytes).
+    pub fn bytes_for_blocks(&self, used_blocks: usize) -> usize {
+        2 * used_blocks * self.block_size * self.row_elems * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn at(&self, block: BlockId, off: usize) -> usize {
+        debug_assert!((block as usize) < self.n_blocks, "block {block} out of range");
+        debug_assert!(off < self.block_size, "offset {off} out of range");
+        (block as usize * self.block_size + off) * self.row_elems
+    }
+
+    pub fn k_row(&self, block: BlockId, off: usize) -> &[f32] {
+        let i = self.at(block, off);
+        &self.k[i..i + self.row_elems]
+    }
+
+    pub fn v_row(&self, block: BlockId, off: usize) -> &[f32] {
+        let i = self.at(block, off);
+        &self.v[i..i + self.row_elems]
+    }
+
+    /// Write `n` consecutive rows starting at `(block, off)`; `k_rows` and
+    /// `v_rows` are token-major `[n, row_elems]`. The span must not cross
+    /// the block boundary — callers write block by block, exactly as the
+    /// block table maps tokens.
+    pub fn write_rows(&mut self, block: BlockId, off: usize, k_rows: &[f32], v_rows: &[f32]) {
+        let n = k_rows.len() / self.row_elems;
+        assert_eq!(k_rows.len(), n * self.row_elems, "ragged k rows");
+        assert_eq!(v_rows.len(), k_rows.len(), "k/v row count mismatch");
+        assert!(off + n <= self.block_size, "write crosses block boundary");
+        let i = self.at(block, off);
+        self.k[i..i + k_rows.len()].copy_from_slice(k_rows);
+        self.v[i..i + v_rows.len()].copy_from_slice(v_rows);
+    }
+
+    /// Apply a copy-on-write: duplicate `copy.rows` leading rows of the
+    /// shared source block into the fresh private destination.
+    pub fn copy_block(&mut self, copy: BlockCopy) {
+        assert!(copy.rows <= self.block_size, "copy rows exceed block");
+        let n = copy.rows * self.row_elems;
+        let s = self.at(copy.src, 0);
+        let d = self.at(copy.dst, 0);
+        self.k.copy_within(s..s + n, d);
+        self.v.copy_within(s..s + n, d);
+    }
+
+    /// Apply a compaction: every surviving row moves from its old to its new
+    /// location. Two-phase (read everything, then write) so overlapping
+    /// source/destination rows — keep-lists reorder slots arbitrarily — can
+    /// never read a half-updated arena.
+    pub fn gather_rows(&mut self, moves: &[RowMove]) {
+        let re = self.row_elems;
+        let mut k_tmp = vec![0.0f32; moves.len() * re];
+        let mut v_tmp = vec![0.0f32; moves.len() * re];
+        for (j, m) in moves.iter().enumerate() {
+            let s = self.at(m.src_block, m.src_off);
+            k_tmp[j * re..(j + 1) * re].copy_from_slice(&self.k[s..s + re]);
+            v_tmp[j * re..(j + 1) * re].copy_from_slice(&self.v[s..s + re]);
+        }
+        for (j, m) in moves.iter().enumerate() {
+            let d = self.at(m.dst_block, m.dst_off);
+            self.k[d..d + re].copy_from_slice(&k_tmp[j * re..(j + 1) * re]);
+            self.v[d..d + re].copy_from_slice(&v_tmp[j * re..(j + 1) * re]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> KvArena {
+        // 4 blocks x 2 tokens, 3 elems per row
+        KvArena::new(
+            4,
+            2,
+            KvLayout {
+                n_layers: 1,
+                n_heads: 1,
+                d_head: 3,
+            },
+        )
+    }
+
+    fn row(x: f32) -> Vec<f32> {
+        vec![x, x + 0.1, x + 0.2]
+    }
+
+    #[test]
+    fn write_and_read_rows() {
+        let mut a = arena();
+        let k: Vec<f32> = [row(1.0), row(2.0)].concat();
+        let v: Vec<f32> = [row(-1.0), row(-2.0)].concat();
+        a.write_rows(3, 0, &k, &v);
+        assert_eq!(a.k_row(3, 0), &row(1.0)[..]);
+        assert_eq!(a.k_row(3, 1), &row(2.0)[..]);
+        assert_eq!(a.v_row(3, 1), &row(-2.0)[..]);
+        assert_eq!(a.k_row(0, 0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "crosses block boundary")]
+    fn write_cannot_cross_blocks() {
+        let mut a = arena();
+        let k: Vec<f32> = [row(1.0), row(2.0)].concat();
+        a.write_rows(0, 1, &k, &k);
+    }
+
+    #[test]
+    fn copy_block_duplicates_occupied_prefix() {
+        let mut a = arena();
+        a.write_rows(1, 0, &row(5.0), &row(6.0));
+        a.write_rows(1, 1, &row(7.0), &row(8.0));
+        a.copy_block(BlockCopy { src: 1, dst: 2, rows: 1 });
+        assert_eq!(a.k_row(2, 0), &row(5.0)[..]);
+        assert_eq!(a.v_row(2, 0), &row(6.0)[..]);
+        // only the occupied prefix was copied
+        assert_eq!(a.k_row(2, 1), &[0.0, 0.0, 0.0]);
+        // source untouched
+        assert_eq!(a.k_row(1, 1), &row(7.0)[..]);
+    }
+
+    #[test]
+    fn gather_rows_is_two_phase() {
+        let mut a = arena();
+        a.write_rows(0, 0, &row(1.0), &row(1.5));
+        a.write_rows(0, 1, &row(2.0), &row(2.5));
+        // swap the two rows: naive in-order copy would clobber a source
+        a.gather_rows(&[
+            RowMove { src_block: 0, src_off: 0, dst_block: 0, dst_off: 1 },
+            RowMove { src_block: 0, src_off: 1, dst_block: 0, dst_off: 0 },
+        ]);
+        assert_eq!(a.k_row(0, 0), &row(2.0)[..]);
+        assert_eq!(a.k_row(0, 1), &row(1.0)[..]);
+        assert_eq!(a.v_row(0, 0), &row(2.5)[..]);
+    }
+
+    #[test]
+    fn byte_accounting_scales_with_blocks_not_rows() {
+        let a = arena();
+        assert_eq!(a.bytes(), 2 * 4 * 2 * 3 * 4);
+        assert_eq!(a.bytes_for_blocks(1), 2 * 2 * 3 * 4);
+        assert_eq!(a.bytes_for_blocks(4), a.bytes());
+    }
+}

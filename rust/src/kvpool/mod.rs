@@ -26,15 +26,24 @@
 //! pressure-driven LRU invalidation that `Engine::submit` consults so
 //! identical prompt headers across requests are admitted for free.
 //!
-//! Scope note: the tensors themselves still live in the per-row device cache
-//! buffers of `runtime::ModelExecutor`; the pool governs the *logical* block
-//! budget (admission, preemption, capacity accounting). Swapping the device
-//! layout to true paged attention is the recorded follow-up in ROADMAP.md.
+//! Physical paging: the pool/table layer above is deliberately *logical*
+//! (ids, refcounts, maps), so the capacity simulator and scheduler can drive
+//! it without tensors. The physical half lives in [`arena`]: block-shaped
+//! K/V storage (`[n_blocks, block_size, L·H·dh]`) that backends own — the
+//! sim backend as a host [`KvArena`], the PJRT executor as device buffers of
+//! the same layout — plus the [`BlockCopy`]/[`RowMove`] descriptors through
+//! which table CoW and `SeqKv` compaction tell the storage which bytes to
+//! duplicate or relocate. In paged mode every K/V byte is addressed through
+//! a block table; there is no per-row worst-case buffer anywhere, a prefix
+//! hit reuses the donor's bytes (prefill is skipped), and whole blocks freed
+//! by eviction become cross-sequence physical capacity, not just accounting.
 
+pub mod arena;
 pub mod pool;
 pub mod prefix;
 pub mod table;
 
+pub use arena::{BlockCopy, KvArena, KvLayout, RowMove};
 pub use pool::{BlockId, BlockPool, PoolConfig, PoolPressure};
-pub use prefix::{PrefixCache, PrefixCacheConfig};
+pub use prefix::{PrefillSeed, PrefixCache, PrefixCacheConfig, PrefixHit};
 pub use table::BlockTable;

@@ -1,4 +1,31 @@
 //! The fixed-size block allocator: free list + per-block refcounts.
+//!
+//! ## Invariants
+//!
+//! * **Conservation** — every block is either on the free list (refcount 0)
+//!   or held by at least one reference; `free_blocks() + used_blocks() ==
+//!   n_blocks` at all times. Double-free and retain-of-free are programming
+//!   errors and panic (they would silently corrupt another holder's data
+//!   once physical storage is attached).
+//! * **Release reports physical reclamation** — [`BlockPool::release`]
+//!   returns `true` only when the last reference dropped and the block
+//!   actually rejoined the free list. Dropping a *shared* reference changes
+//!   nothing about pool pressure; callers accounting freed capacity
+//!   (`BlockTable::truncate`, eviction passes) must count only `true`
+//!   returns, or forked rows inflate the reclaimed-capacity numbers.
+//! * **Single-owner mutation** — the pool is `&mut`-threaded through one
+//!   engine's decode loop; there is no interior locking. Cloning the pool
+//!   clones *bookkeeping only* (simulators do this); physical K/V storage
+//!   lives with the backend, never here, so a clone can never alias tensors.
+//!
+//! ## Failure modes
+//!
+//! Exhaustion is a normal state, not an error: [`BlockPool::alloc`] returns
+//! `None` (and counts `failed_allocs`), and the engine responds by shedding
+//! prefix-cache pins, then preempting the youngest row. The [`PoolPressure`]
+//! snapshot carries the configured watermarks so the scheduler's admission
+//! latch (`scheduler::admission`) can hold the queue *before* exhaustion
+//! turns into preemption thrash.
 
 /// Index of a block inside one [`BlockPool`].
 pub type BlockId = u32;

@@ -41,6 +41,20 @@
 //!
 //! Lookups verify token ids (not just the 64-bit FNV hash), so a hash
 //! collision can never splice the wrong prefix into a row.
+//!
+//! ## Prefill skipping (physical paging)
+//!
+//! With physical K/V in pool-owned block storage, a cached prefix's blocks
+//! *are* the data — so an admission whose **entire prompt** matches a cached
+//! entry does not need to run the prefill executable at all. The cached
+//! whole blocks carry the prompt's leading K/V; everything else a prefill
+//! would have produced is a small host-side [`PrefillSeed`] stored on the
+//! entry at insert time: the partial-tail-block K/V rows (which cannot be
+//! block-shared), the last-row attention (seeds TS/MRI tracking), and the
+//! last-position logits (the first prediction). A seed is only served when
+//! the probe's *full* token sequence equals the seed's — two prompts that
+//! share a whole-block header but diverge in the tail get block sharing,
+//! never each other's seed.
 
 use super::pool::{BlockId, BlockPool};
 use super::table::BlockTable;
@@ -94,12 +108,42 @@ fn boundary_hashes(ids: &[u32], block_size: usize) -> Vec<u64> {
     out
 }
 
+/// Host-side copy of everything a prefill produced that does NOT live in the
+/// entry's shared whole blocks — enough, together with those blocks, to admit
+/// an identical prompt with zero prefill compute (see module docs).
+#[derive(Clone, Debug)]
+pub struct PrefillSeed {
+    /// The complete prompt these outputs belong to (exact-match key).
+    pub prompt: Vec<u32>,
+    /// Token-major `[prompt.len() - covered, L·H·dh]` K rows for the prompt
+    /// remainder past the entry's whole-block coverage (may be empty).
+    pub tail_k: Vec<f32>,
+    pub tail_v: Vec<f32>,
+    /// Last-prompt-row aggregated attention over all prompt tokens
+    /// (`[prompt.len()]`) — initializes the recurrence tracker.
+    pub attn_last: Vec<f32>,
+    /// Logits at the last prompt position (`[vocab]`) — the first prediction.
+    pub logits_last: Vec<f32>,
+}
+
+/// A successful [`PrefixCache::lookup`].
+pub struct PrefixHit<'a> {
+    /// Donor block table to [`BlockTable::fork_prefix`] from.
+    pub table: &'a BlockTable,
+    /// Present iff the probe's full prompt equals the entry's seed prompt —
+    /// the admission may skip prefill entirely.
+    pub seed: Option<&'a PrefillSeed>,
+}
+
 struct Entry {
     hash: u64,
     /// Exact token ids covered (always a whole number of blocks).
     tokens: Vec<u32>,
     /// Cache-owned fork pinning the blocks.
     table: BlockTable,
+    /// Prefill outputs for one full prompt extending `tokens` (kept from the
+    /// first admission that inserted/updated this entry).
+    seed: Option<PrefillSeed>,
     last_used: u64,
 }
 
@@ -178,9 +222,10 @@ impl PrefixCache {
     /// caller's to update once the admission outcome is known. The prompt
     /// is hashed once (rolling, at block boundaries); the hash pre-filters
     /// candidates and a token comparison confirms, so a collision can never
-    /// serve the wrong prefix. The returned table is the donor to
-    /// [`BlockTable::fork_prefix`] from.
-    pub fn lookup(&mut self, ids: &[u32], block_size: usize) -> Option<&BlockTable> {
+    /// serve the wrong prefix. The hit carries the donor table to
+    /// [`BlockTable::fork_prefix`] from, plus the entry's [`PrefillSeed`]
+    /// when (and only when) its full prompt equals `ids` exactly.
+    pub fn lookup(&mut self, ids: &[u32], block_size: usize) -> Option<PrefixHit<'_>> {
         let now = self.tick();
         let bounds = boundary_hashes(ids, block_size);
         let mut best: Option<usize> = None;
@@ -197,26 +242,60 @@ impl PrefixCache {
         }
         let i = best?;
         self.entries[i].last_used = now;
-        Some(&self.entries[i].table)
+        let e = &self.entries[i];
+        Some(PrefixHit {
+            table: &e.table,
+            seed: e.seed.as_ref().filter(|s| s.prompt == ids),
+        })
+    }
+
+    /// The seed a full-prompt hit on `ids` would serve (exact match only).
+    /// Read-only companion to [`lookup`](Self::lookup) for callers that need
+    /// the seed data after the hit's borrow has ended. Deliberately a
+    /// rescan by prompt rather than an entry index: pressure shedding
+    /// (`swap_remove`) can reorder entries between the lookup and this
+    /// call, so an index would be unsound. Must stay consistent with
+    /// `lookup`'s seed rule: the entry's tokens prefix `ids` and the seed's
+    /// full prompt equals `ids`.
+    pub fn seed_for(&self, ids: &[u32]) -> Option<&PrefillSeed> {
+        self.entries
+            .iter()
+            .filter(|e| ids.starts_with(&e.tokens))
+            .find_map(|e| e.seed.as_ref().filter(|s| s.prompt == ids))
     }
 
     /// Register the whole-block prefix of a freshly-admitted row. `ids` is
     /// the full prompt; `donor` the row's block table (its first
-    /// `len/block_size` blocks hold exactly `ids`' leading tokens). No-op
-    /// when the prefix spans no whole block or is already cached; sheds LRU
-    /// entries past `max_entries`.
-    pub fn insert(&mut self, ids: &[u32], donor: &BlockTable, pool: &mut BlockPool) {
+    /// `len/block_size` blocks hold exactly `ids`' leading tokens); `seed`
+    /// the admission's prefill outputs when the caller runs physical paging
+    /// (None keeps the entry share-only). An entry already covering the
+    /// prefix is kept — but gains the seed if it had none. No-op when the
+    /// prefix spans no whole block (entries are keyed by their whole-block
+    /// header, so sub-block prompts are never cached — nor prefill-skipped).
+    /// Sheds LRU entries past `max_entries`.
+    pub fn insert(
+        &mut self,
+        ids: &[u32],
+        donor: &BlockTable,
+        seed: Option<PrefillSeed>,
+        pool: &mut BlockPool,
+    ) {
         let bs = donor.block_size();
         let covered = (ids.len().min(donor.len()) / bs) * bs;
         if covered == 0 {
             return;
         }
         let tokens = &ids[..covered];
-        if self
+        if let Some(e) = self
             .entries
-            .iter()
-            .any(|e| e.tokens.len() == covered && e.tokens == tokens)
+            .iter_mut()
+            .find(|e| e.tokens.len() == covered && e.tokens == tokens)
         {
+            // first seed wins: later different-tail prompts sharing this
+            // header must not thrash the stored outputs
+            if e.seed.is_none() {
+                e.seed = seed;
+            }
             return;
         }
         let table = BlockTable::fork_prefix(donor, covered, pool);
@@ -226,6 +305,7 @@ impl PrefixCache {
             hash: prefix_hash(tokens),
             tokens: tokens.to_vec(),
             table,
+            seed,
             last_used: now,
         });
         self.insertions += 1;
@@ -316,13 +396,13 @@ mod tests {
         assert!(c.lookup(&ids, 4).is_none());
 
         let donor = table_for(10, &mut p);
-        c.insert(&ids, &donor, &mut p);
+        c.insert(&ids, &donor, None, &mut p);
         assert_eq!(c.len(), 1);
         assert_eq!(c.pinned_blocks(), 2); // whole blocks only
         assert_eq!(p.used_blocks(), 3); // sharing allocated nothing
 
         let hit = c.lookup(&ids, 4).expect("hit");
-        assert_eq!(hit.len(), 8);
+        assert_eq!(hit.table.len(), 8);
         // a prompt sharing only the first block's worth of tokens misses
         // (entries are keyed on their full whole-block prefix)
         let other: Vec<u32> = (0..4).chain([99, 98, 97, 96]).collect();
@@ -336,14 +416,14 @@ mod tests {
         let long: Vec<u32> = (0..12).collect();
         let donor_short = table_for(4, &mut p);
         let donor_long = table_for(12, &mut p);
-        c.insert(&long[..4], &donor_short, &mut p);
-        c.insert(&long, &donor_long, &mut p);
+        c.insert(&long[..4], &donor_short, None, &mut p);
+        c.insert(&long, &donor_long, None, &mut p);
         assert_eq!(c.len(), 2);
         let hit = c.lookup(&long, 4).unwrap();
-        assert_eq!(hit.len(), 12);
+        assert_eq!(hit.table.len(), 12);
         // a prompt extending only the short entry matches the short one
         let mid: Vec<u32> = (0..4).chain([50, 51]).collect();
-        assert_eq!(c.lookup(&mid, 4).unwrap().len(), 4);
+        assert_eq!(c.lookup(&mid, 4).unwrap().table.len(), 4);
     }
 
     #[test]
@@ -354,10 +434,64 @@ mod tests {
         let mut c = PrefixCache::new(PrefixCacheConfig::default());
         let long: Vec<u32> = (0..12).collect();
         let donor = table_for(12, &mut p);
-        c.insert(&long[..4], &donor, &mut p); // pins block 0
-        c.insert(&long, &donor, &mut p); // pins blocks 0, 1, 2
+        c.insert(&long[..4], &donor, None, &mut p); // pins block 0
+        c.insert(&long, &donor, None, &mut p); // pins blocks 0, 1, 2
         assert_eq!(c.len(), 2);
         assert_eq!(c.pinned_blocks(), 3, "block 0 must not be double-counted");
+    }
+
+    fn seed_for_prompt(ids: &[u32]) -> PrefillSeed {
+        PrefillSeed {
+            prompt: ids.to_vec(),
+            tail_k: vec![1.0; (ids.len() % 4) * 3],
+            tail_v: vec![2.0; (ids.len() % 4) * 3],
+            attn_last: vec![0.5; ids.len()],
+            logits_last: vec![0.0; 8],
+        }
+    }
+
+    #[test]
+    fn seed_served_only_on_exact_full_prompt() {
+        let mut p = pool(16);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let ids: Vec<u32> = (0..10).collect(); // 2 whole blocks + 2-token tail
+        let donor = table_for(10, &mut p);
+        c.insert(&ids, &donor, Some(seed_for_prompt(&ids)), &mut p);
+        // exact prompt: the hit carries the seed (prefill skippable)
+        let hit = c.lookup(&ids, 4).unwrap();
+        assert!(hit.seed.is_some());
+        assert_eq!(hit.seed.unwrap().attn_last.len(), 10);
+        // same whole-block header, divergent tail: sharing only, never the seed
+        let mut other = ids.clone();
+        other[9] = 99;
+        let hit = c.lookup(&other, 4).unwrap();
+        assert_eq!(hit.table.len(), 8);
+        assert!(hit.seed.is_none(), "a divergent tail must not get the seed");
+        assert!(c.seed_for(&ids).is_some());
+        assert!(c.seed_for(&other).is_none());
+        c.clear(&mut p);
+    }
+
+    #[test]
+    fn first_seed_wins_and_seedless_entries_upgrade() {
+        let mut p = pool(16);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let a: Vec<u32> = (0..10).collect();
+        let mut b = a.clone();
+        b[9] = 99; // same 8-token header, different tail
+        let donor = table_for(10, &mut p);
+        // share-only insert first (e.g. a non-paged engine), then seeded
+        c.insert(&a, &donor, None, &mut p);
+        assert_eq!(c.len(), 1);
+        c.insert(&a, &donor, Some(seed_for_prompt(&a)), &mut p);
+        assert_eq!(c.len(), 1, "same header re-insert must not duplicate");
+        assert!(c.seed_for(&a).is_some(), "seedless entry gains the seed");
+        // a different-tail prompt maps to the same entry: seed is kept as-is
+        c.insert(&b, &donor, Some(seed_for_prompt(&b)), &mut p);
+        assert_eq!(c.len(), 1);
+        assert!(c.seed_for(&a).is_some(), "first seed survives");
+        assert!(c.seed_for(&b).is_none());
+        c.clear(&mut p);
     }
 
     #[test]
@@ -366,7 +500,7 @@ mod tests {
         let mut c = PrefixCache::new(PrefixCacheConfig::default());
         let ids: Vec<u32> = (0..4).collect();
         let donor = table_for(4, &mut p);
-        c.insert(&ids, &donor, &mut p);
+        c.insert(&ids, &donor, None, &mut p);
         // force the stored hash to collide with a different prompt
         c.entries[0].hash = prefix_hash(&[9, 9, 9, 9]);
         assert!(
@@ -391,7 +525,7 @@ mod tests {
         let mut c = PrefixCache::new(PrefixCacheConfig::default());
         let ids: Vec<u32> = (0..8).collect();
         let mut donor = table_for(8, &mut p);
-        c.insert(&ids, &donor, &mut p);
+        c.insert(&ids, &donor, None, &mut p);
         donor.release_all(&mut p); // donor row finishes
         assert_eq!(p.used_blocks(), 2, "cache keeps the blocks alive");
         assert!(c.lookup(&ids, 4).is_some(), "entry survives its donor");
@@ -409,10 +543,10 @@ mod tests {
         let ta = table_for(4, &mut p);
         let tb = table_for(4, &mut p);
         let td = table_for(4, &mut p);
-        c.insert(&a, &ta, &mut p);
-        c.insert(&b, &tb, &mut p);
+        c.insert(&a, &ta, None, &mut p);
+        c.insert(&b, &tb, None, &mut p);
         assert!(c.lookup(&a, 4).is_some()); // refresh a: b is now LRU
-        c.insert(&d, &td, &mut p);
+        c.insert(&d, &td, None, &mut p);
         assert_eq!(c.len(), 2);
         assert_eq!(c.invalidations, 1);
         assert!(c.lookup(&b, 4).is_none(), "LRU entry b was shed");
@@ -426,7 +560,7 @@ mod tests {
         let mut c = PrefixCache::new(PrefixCacheConfig::default());
         let ids: Vec<u32> = (0..8).collect();
         let mut donor = table_for(8, &mut p);
-        c.insert(&ids, &donor, &mut p);
+        c.insert(&ids, &donor, None, &mut p);
         donor.release_all(&mut p);
         assert_eq!(p.free_blocks(), 6);
         assert!(c.shed_lru(&mut p));
@@ -441,11 +575,11 @@ mod tests {
         // entry A: blocks shared with a live "row" (donor kept) — frees 0
         let ids_a: Vec<u32> = (0..4).collect();
         let donor_a = table_for(4, &mut p); // stays alive: rc 2 after insert
-        c.insert(&ids_a, &donor_a, &mut p);
+        c.insert(&ids_a, &donor_a, None, &mut p);
         // entry B: donor released — the cache is sole holder, frees 1
         let ids_b: Vec<u32> = (10..14).collect();
         let mut donor_b = table_for(4, &mut p);
-        c.insert(&ids_b, &donor_b, &mut p);
+        c.insert(&ids_b, &donor_b, None, &mut p);
         donor_b.release_all(&mut p);
         // make A the LRU so a naive shed would pick it
         assert!(c.lookup(&ids_b, 4).is_some());
@@ -467,8 +601,8 @@ mod tests {
         let ids_b: Vec<u32> = (10..14).collect();
         let donor_a = table_for(4, &mut p);
         let donor_b = table_for(4, &mut p);
-        c.insert(&ids_a, &donor_a, &mut p);
-        c.insert(&ids_b, &donor_b, &mut p);
+        c.insert(&ids_a, &donor_a, None, &mut p);
+        c.insert(&ids_b, &donor_b, None, &mut p);
         let target = donor_b.blocks().to_vec();
         assert!(c.shed_lru_overlapping(&target, &mut p));
         assert!(c.lookup(&ids_b, 4).is_none(), "overlapping entry shed");

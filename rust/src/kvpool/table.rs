@@ -6,7 +6,32 @@
 //! (after an eviction pass) releases whole trailing blocks back to the pool
 //! — that reclamation is what turns lagged eviction into cross-sequence
 //! serving capacity.
+//!
+//! ## Invariants
+//!
+//! * **Dense mapping** — `len` tokens always occupy the leading `len` slots
+//!   of the held blocks, in order; only the tail block may be partial.
+//! * **Shared blocks are immutable** — a block with refcount > 1 (prefix
+//!   fork / cache pin) is never written through this table. Any operation
+//!   that would (a push into a shared partial tail, an eviction compaction
+//!   over shared blocks) swaps in a fresh private block first
+//!   (copy-on-write). The *logical* swap happens here; when physical K/V
+//!   storage is attached, the byte duplication it implies is reported as a
+//!   [`BlockCopy`] through the `_cow` method variants, and the caller must
+//!   apply it to the storage **before the next write** or the new private
+//!   block reads as garbage. Callers with no physical storage (capacity
+//!   simulation, logical-only tests) use the plain variants, which drop the
+//!   descriptors.
+//! * **Exhaustion is non-destructive** — every allocating operation returns
+//!   `false` with the table unchanged when the pool is dry; callers shed
+//!   cache pins or preempt and retry. A partially-completed
+//!   [`ensure_private`](BlockTable::ensure_private) keeps its progress
+//!   (already-privatized blocks stay private) and is safe to retry.
+//! * **Release accounting is physical** — `truncate`/`release_all` count
+//!   only blocks that actually returned to the free list; dropping a shared
+//!   reference frees nothing and must not be reported as reclaimed capacity.
 
+use super::arena::BlockCopy;
 use super::pool::{BlockId, BlockPool};
 
 #[derive(Clone, Debug)]
@@ -81,7 +106,22 @@ impl BlockTable {
     /// into a forked prefix) copies-on-write first: the shared block is
     /// swapped for a fresh private one, so the donor's mapping is never
     /// mutated. Returns false (state unchanged) when the pool is exhausted.
+    ///
+    /// Logical-only variant: any CoW byte duplication the swap implies is
+    /// dropped. Callers with attached physical storage must use
+    /// [`push_token_cow`](Self::push_token_cow).
     pub fn push_token(&mut self, pool: &mut BlockPool) -> bool {
+        self.push_inner(pool, None)
+    }
+
+    /// [`push_token`](Self::push_token) that reports the [`BlockCopy`] a
+    /// shared-tail copy-on-write implies, so the caller can duplicate the
+    /// occupied K/V rows into the fresh block before anything reads it.
+    pub fn push_token_cow(&mut self, pool: &mut BlockPool, copies: &mut Vec<BlockCopy>) -> bool {
+        self.push_inner(pool, Some(copies))
+    }
+
+    fn push_inner(&mut self, pool: &mut BlockPool, copies: Option<&mut Vec<BlockCopy>>) -> bool {
         debug_assert_eq!(self.block_size, pool.block_size(), "table/pool block size");
         if self.at_block_boundary() {
             match pool.alloc() {
@@ -91,7 +131,12 @@ impl BlockTable {
         } else if self.tail_is_shared(pool) {
             match pool.alloc() {
                 Some(fresh) => {
+                    // rows already occupied in the (partial) shared tail
+                    let rows = self.len - (self.blocks.len() - 1) * self.block_size;
                     let tail = self.blocks.last_mut().expect("non-boundary ⇒ tail");
+                    if let Some(c) = copies {
+                        c.push(BlockCopy { src: *tail, dst: fresh, rows });
+                    }
                     pool.release(*tail);
                     *tail = fresh;
                 }
@@ -166,12 +211,40 @@ impl BlockTable {
     /// stays consistent — already-privatized blocks keep their new ids,
     /// remaining shared blocks are untouched; safe to retry after blocks
     /// free up).
+    ///
+    /// Logical-only variant; see [`ensure_private_cow`](Self::ensure_private_cow)
+    /// when physical K/V storage is attached.
     pub fn ensure_private(&mut self, pool: &mut BlockPool) -> bool {
+        self.ensure_private_inner(pool, None)
+    }
+
+    /// [`ensure_private`](Self::ensure_private) that reports one
+    /// [`BlockCopy`] per replaced block (occupied rows only), so the caller
+    /// can duplicate the K/V bytes into each fresh private block. On a
+    /// `false` return the copies already pushed are still valid — they
+    /// describe the blocks that *were* privatized — and must be applied.
+    pub fn ensure_private_cow(
+        &mut self,
+        pool: &mut BlockPool,
+        copies: &mut Vec<BlockCopy>,
+    ) -> bool {
+        self.ensure_private_inner(pool, Some(copies))
+    }
+
+    fn ensure_private_inner(
+        &mut self,
+        pool: &mut BlockPool,
+        mut copies: Option<&mut Vec<BlockCopy>>,
+    ) -> bool {
         for i in 0..self.blocks.len() {
             let b = self.blocks[i];
             if pool.refcount(b) > 1 {
                 match pool.alloc() {
                     Some(fresh) => {
+                        let rows = (self.len - i * self.block_size).min(self.block_size);
+                        if let Some(c) = copies.as_mut() {
+                            c.push(BlockCopy { src: b, dst: fresh, rows });
+                        }
                         pool.release(b);
                         self.blocks[i] = fresh;
                     }
@@ -343,6 +416,47 @@ mod tests {
         // (the truncate dropped b's ref on block 1, the CoW on block 0)
         assert_eq!(a.len(), 8);
         assert_eq!(a.n_shared_blocks(&p), 0);
+        a.release_all(&mut p);
+        b.release_all(&mut p);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn cow_push_reports_the_block_copy() {
+        let mut p = pool(8);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 8, &mut p);
+        let mut b = BlockTable::fork_prefix(&a, 8, &mut p);
+        b.truncate(2, &mut p); // shared partial tail: 2 occupied rows
+        let donor_block = a.blocks()[0];
+        let mut copies = Vec::new();
+        assert!(b.push_token_cow(&mut p, &mut copies));
+        assert_eq!(copies.len(), 1, "one shared tail ⇒ one copy");
+        assert_eq!(copies[0].src, donor_block);
+        assert_eq!(copies[0].dst, b.blocks()[0]);
+        assert_eq!(copies[0].rows, 2, "only pre-push occupied rows copy");
+        // an ordinary boundary push reports nothing
+        copies.clear();
+        grow(&mut b, 1, &mut p);
+        assert!(b.push_token_cow(&mut p, &mut copies));
+        assert!(copies.is_empty());
+        a.release_all(&mut p);
+        b.release_all(&mut p);
+    }
+
+    #[test]
+    fn ensure_private_cow_reports_occupied_rows_per_block() {
+        let mut p = pool(8);
+        let mut a = BlockTable::new(4);
+        grow(&mut a, 8, &mut p); // 2 full blocks
+        let mut b = BlockTable::fork_prefix(&a, 8, &mut p);
+        let mut copies = Vec::new();
+        assert!(b.ensure_private_cow(&mut p, &mut copies));
+        assert_eq!(copies.len(), 2);
+        assert_eq!(copies[0].src, a.blocks()[0]);
+        assert_eq!(copies[0].dst, b.blocks()[0]);
+        assert_eq!(copies[0].rows, 4, "full block copies block_size rows");
+        assert_eq!(copies[1].rows, 4);
         a.release_all(&mut p);
         b.release_all(&mut p);
         assert_eq!(p.free_blocks(), 8);

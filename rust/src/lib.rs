@@ -12,7 +12,9 @@
 //!   and the `DecodeBackend` abstraction (PJRT or the artifact-free sim)
 //! * [`kvcache`] + [`attention`] — slot records, TS/MRI tracking (Eq. 1)
 //! * [`kvpool`] — shared paged-KV block pool: refcounted fixed-size blocks,
-//!   per-sequence block tables, pressure watermarks (admission/preemption)
+//!   per-sequence block tables, pressure watermarks (admission/preemption),
+//!   and the physical side — pool-shaped K/V arenas + prompt-prefix cache
+//!   whose full-prompt hits skip prefill outright (see ARCHITECTURE.md)
 //! * [`eviction`] — LazyEviction (Eq. 2/5) and baselines
 //! * [`scheduler`] + [`coordinator`] + [`server`] — continuous batching
 //!   with pool-pressure admission control, decode loop with youngest-row

@@ -226,7 +226,8 @@ fn main() -> Result<()> {
                 "usage: lazyevictiond <serve|sim-serve|generate|eval|suggest-w|info> [--flags]\n\
                  common flags: --artifacts DIR --policy P --budget B --cache S --batch N --window W\n\
                  pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8\n\
-                 prefix flags: --prefix-entries 64 --no-prefix-cache"
+                 prefix flags: --prefix-entries 64 --no-prefix-cache\n\
+                 every flag and the server's pool gauge fields: docs/serving.md"
             );
             std::process::exit(2);
         }

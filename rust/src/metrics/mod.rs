@@ -16,6 +16,9 @@ pub struct EngineMetrics {
     pub eviction_count: u64,
     /// Rows preempted because the shared block pool ran dry (paged mode).
     pub preemptions: u64,
+    /// Admissions that skipped the prefill executable entirely because a
+    /// prefix-cache entry covered the full prompt (physical paging).
+    pub prefill_skips: u64,
     /// Tokens produced (all rows).
     pub tokens_out: u64,
     /// Live-token counts sampled per step (for memory curves), per row.
@@ -104,6 +107,13 @@ pub struct PoolGauges {
     pub prefix_entries: usize,
     /// Blocks the prefix cache currently pins (refs held by the cache).
     pub prefix_pinned_blocks: usize,
+    /// Cumulative admissions that skipped prefill via a full-prompt hit.
+    pub prefix_prefill_skips: u64,
+    /// Total physical K/V bytes of the backend's block arenas (K + V) —
+    /// fixed by pool geometry, independent of batch × max_len.
+    pub kv_arena_bytes: usize,
+    /// The share of `kv_arena_bytes` in live (allocated) blocks right now.
+    pub kv_bytes_in_use: usize,
 }
 
 #[cfg(test)]

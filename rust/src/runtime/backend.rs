@@ -1,39 +1,149 @@
 //! The model-execution surface the coordinator drives, abstracted from PJRT.
 //!
-//! `coordinator::Engine` needs five operations (prefill, step, and the three
-//! device-side cache maintenance calls) plus shape metadata. Factoring them
-//! into [`DecodeBackend`] lets the same decode loop, eviction pass, block
-//! pool and scheduler run over:
+//! `coordinator::Engine` needs prefill, a decode step, and cache
+//! maintenance, plus shape metadata. Factoring them into [`DecodeBackend`]
+//! lets the same decode loop, eviction pass, block pool and scheduler run
+//! over:
 //!
 //! * [`ModelExecutor`](super::executor::ModelExecutor) — the real AOT/PJRT
 //!   path (needs compiled artifacts);
 //! * [`SimBackend`] — a deterministic, artifact-free toy backend whose
 //!   attention statistics are rich enough to exercise TS/MRI tracking,
 //!   every eviction policy, pool preemption, and the TCP server end to end.
+//!
+//! ## Two physical layouts, one trait
+//!
+//! The trait carries both K/V layouts the engine can run:
+//!
+//! * **Dense (seed layout)** — per-row `[B, L, H, S, dh]` worst-case cache
+//!   buffers; `insert`/`append`/`gather`/`step` address slots directly.
+//!   This is the only layout when no block pool is configured.
+//! * **Paged** — pool-shaped `[n_blocks, block_size, L, H, dh]` arenas
+//!   ([`kvpool::KvArena`](crate::kvpool::KvArena) on the host for the sim,
+//!   device buffers of the same shape for PJRT), activated once by
+//!   [`DecodeBackend::init_paged`]. Every byte is addressed through a
+//!   sequence's block table: rows land block-by-block
+//!   ([`write_kv_rows`](DecodeBackend::write_kv_rows)), copy-on-write
+//!   duplicates occupied rows ([`copy_block`](DecodeBackend::copy_block)),
+//!   eviction compaction relocates survivors
+//!   ([`gather_kv_rows`](DecodeBackend::gather_kv_rows) — two-phase, since
+//!   keep-lists reorder arbitrarily), and the decode step gathers context
+//!   through the flattened block tables
+//!   ([`step_paged`](DecodeBackend::step_paged)).
+//!
+//! ## Invariants / failure modes
+//!
+//! * A backend in paged mode must not allocate (or keep) any per-row
+//!   worst-case K/V buffer — the arena IS the physical KV footprint, and
+//!   [`device_cache_bytes`](DecodeBackend::device_cache_bytes) must report
+//!   it, so capacity accounting scales with pool blocks rather than
+//!   `batch × max_len`.
+//! * The engine guarantees ordering: CoW copies are applied before the next
+//!   row write, compaction moves before the next pool allocation. Backends
+//!   may therefore assume a mapped row's bytes are always current, and the
+//!   sim backend *does* — its paged attention derives each slot's identity
+//!   from the stored key bytes, so a mis-routed block table or a missed
+//!   copy shows up as divergent recurrence tracking in tests rather than
+//!   passing silently.
+//! * `init_paged` is called at most once, before any prefill/step; calling
+//!   dense cache ops (`insert`/`append`/`gather`/`step`) after it is a
+//!   contract violation (the sim backend rejects the mixed mode it can
+//!   detect cheaply; the executor has no dense buffers to serve them).
 
 use anyhow::Result;
 
 use super::executor::{ExecCounts, PrefillOut, StepOut};
 use super::manifest::ModelDims;
+use crate::kvpool::{BlockCopy, BlockId, KvArena, KvLayout, RowMove};
+
+/// Prefill outputs in token-major row form for the paged path: row `i` of
+/// `k_rows`/`v_rows` is token `i`'s `[L, H, dh]` K/V — ready to scatter into
+/// arena blocks through a block table (no `[L, H, S, dh]` worst-case buffer).
+#[derive(Debug)]
+pub struct PrefillRows {
+    /// `[p, L·H·dh]` token-major keys (RoPE applied).
+    pub k_rows: Vec<f32>,
+    pub v_rows: Vec<f32>,
+    /// `[p]` last-prompt-row aggregated attention.
+    pub attn_last: Vec<f32>,
+    /// `[V]` logits at the last prompt position.
+    pub logits_last: Vec<f32>,
+}
 
 /// One engine shape's model-execution backend (see module docs).
 pub trait DecodeBackend: Send {
     fn dims(&self) -> &ModelDims;
     /// Padded prompt bucket of the prefill executable.
     fn prefill_bucket(&self) -> usize;
-    /// Run the batch-1 prefill over a padded prompt.
+    /// Run the batch-1 prefill over a padded prompt (dense layout).
     fn prefill(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillOut>;
-    /// Insert a prefilled sequence cache at batch row `row`.
+    /// Insert a prefilled sequence cache at batch row `row` (dense layout).
     fn insert(&mut self, k_seq: &[f32], v_seq: &[f32], row: usize) -> Result<()>;
-    /// One decode step over all rows.
+    /// One decode step over all rows (dense layout).
     fn step(&mut self, slot_mask: &[f32], tokens: &[i32], pos: &[i32]) -> Result<StepOut>;
-    /// Append this step's K/V rows at per-row slot indices.
+    /// Append this step's K/V rows at per-row slot indices (dense layout).
     fn append(&mut self, k_new: &[f32], v_new: &[f32], idx: &[i32]) -> Result<()>;
-    /// Compact/permute cache slots (the eviction gather).
+    /// Compact/permute cache slots (the eviction gather, dense layout).
     fn gather(&mut self, idx: &[i32]) -> Result<()>;
     fn exec_counts(&self) -> ExecCounts;
-    /// KV bytes the device-resident caches occupy for this engine.
+    /// KV bytes the device-resident caches occupy for this engine — the
+    /// whole arena in paged mode, the dense buffers otherwise.
     fn device_cache_bytes(&self) -> usize;
+
+    // --- physical paging (see module docs) ---
+
+    /// Switch to pool-shaped K/V storage: allocate the
+    /// `[n_blocks, block_size, L, H, dh]` arenas and retire any dense
+    /// per-row buffers. Called once, before any prefill or step.
+    fn init_paged(&mut self, n_blocks: usize, block_size: usize) -> Result<()>;
+
+    /// Has `init_paged` been applied?
+    fn is_paged(&self) -> bool;
+
+    /// Paged prefill: token-major rows instead of a worst-case `[L,H,S,dh]`
+    /// buffer. The caller scatters the rows through the row's block table.
+    fn prefill_rows(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillRows>;
+
+    /// Write token-major `[n, L·H·dh]` K/V rows at `(block, offset)`.
+    /// The span must stay inside the block.
+    fn write_kv_rows(
+        &mut self,
+        block: BlockId,
+        offset: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()>;
+
+    /// Apply a copy-on-write: duplicate `copy.rows` leading rows of block
+    /// `copy.src` into `copy.dst`.
+    fn copy_block(&mut self, copy: BlockCopy) -> Result<()>;
+
+    /// Apply an eviction compaction: relocate every surviving row. Two-phase
+    /// (all sources read before any destination is written).
+    fn gather_kv_rows(&mut self, moves: &[RowMove]) -> Result<()>;
+
+    /// One decode step reading K/V through per-row block tables.
+    /// `block_tables` is `[B, blocks_per_row]` row-major (block ids; entries
+    /// past a row's mapped blocks are ignored), `seq_lens[r]` the row's live
+    /// token count (0 = inactive row). Output shapes match
+    /// [`step`](DecodeBackend::step) (attention padded to `[B, S]`, live
+    /// slots `[0, len)`).
+    fn step_paged(
+        &mut self,
+        block_tables: &[i32],
+        blocks_per_row: usize,
+        seq_lens: &[i32],
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<StepOut>;
+
+    /// Test/debug introspection: the K/V bytes stored at an arena location,
+    /// when the backend can read them cheaply (`None` otherwise — e.g. a
+    /// device-resident arena off the hot path).
+    fn debug_kv_row(&self, block: BlockId, offset: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        let _ = (block, offset);
+        None
+    }
 }
 
 /// Charset of the sim backend (a superset of the reasoning-sample grammar in
@@ -43,15 +153,21 @@ pub const SIM_CHARSET: &str = "#>=;?+*-.0123456789ABCDEFGHIJKLMNOPQRSTUVWXYZ \n"
 /// Deterministic artifact-free backend. The "model" is a hash: the next
 /// token is a fixed function of (current token, position), and per-slot
 /// attention mixes a sub-α floor with sparse super-α spikes, so recurrence
-/// tracking and every eviction policy see non-degenerate signals. No PJRT,
-/// no weights, no tensors — K/V payloads are zeros (the engine only routes
-/// them; policies act on the attention metadata).
+/// tracking and every eviction policy see non-degenerate signals. No PJRT
+/// and no weights, but K/V payloads are *real bytes*: each token's row is a
+/// deterministic function of (token, birth position), with the birth
+/// position recoverable from `k_row[0]`. In paged mode the rows live in a
+/// pool-shaped [`KvArena`] and the step's attention reads each slot's
+/// identity back out of the stored keys — so block-table routing, CoW and
+/// compaction are load-bearing, not decorative.
 pub struct SimBackend {
     batch: usize,
     cache: usize,
     bucket: usize,
     dims: ModelDims,
     counts: ExecCounts,
+    /// Physical paged K/V storage (present iff `init_paged` ran).
+    arena: Option<KvArena>,
 }
 
 impl SimBackend {
@@ -70,11 +186,16 @@ impl SimBackend {
                 rope_base: 10000.0,
             },
             counts: ExecCounts::default(),
+            arena: None,
         }
     }
 
     pub fn charset(&self) -> &'static str {
         SIM_CHARSET
+    }
+
+    fn row_elems(&self) -> usize {
+        self.dims.n_layers * self.dims.n_heads * self.dims.d_head
     }
 
     /// Next-token id as a fixed hash of (token, position).
@@ -85,11 +206,12 @@ impl SimBackend {
         ((x >> 17) % self.dims.vocab as u64) as usize
     }
 
-    /// Aggregated attention for a live slot at absolute position `pos`:
-    /// ~9% of (slot, pos) pairs spike well above any α, the rest sit on a
-    /// sub-α noise floor.
-    fn attn_at(slot: usize, pos: i32) -> f32 {
-        let x = (slot as u64)
+    /// Aggregated attention paid at query position `pos` to the token *born*
+    /// at `birth`: ~9% of pairs spike well above any α, the rest sit on a
+    /// sub-α noise floor. (Dense mode keys this by slot index; before any
+    /// eviction the two coincide.)
+    fn attn_at(birth: usize, pos: i32) -> f32 {
+        let x = (birth as u64)
             .wrapping_mul(2654435761)
             .wrapping_add((pos as u64).wrapping_mul(40503));
         let h = x ^ (x >> 13);
@@ -100,10 +222,65 @@ impl SimBackend {
         }
     }
 
+    fn fill(tok: i32, pos: i32, j: usize, salt: u64) -> f32 {
+        let x = (tok as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((pos as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            .wrapping_add((j as u64).wrapping_mul(0x1656_67B1_9E37_79F9))
+            .wrapping_add(salt);
+        let h = (x ^ (x >> 29)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        ((h >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+    }
+
+    /// Fill one token's `[L, H, dh]` K and V rows. `k[0]` carries the birth
+    /// position (the identity paged attention recovers from storage),
+    /// `k[1]` the token id; everything else is hash noise.
+    fn kv_row_into(k: &mut [f32], v: &mut [f32], tok: i32, pos: i32) {
+        for (j, x) in k.iter_mut().enumerate() {
+            *x = Self::fill(tok, pos, j, 0x51);
+        }
+        k[0] = pos as f32;
+        k[1] = tok as f32;
+        for (j, x) in v.iter_mut().enumerate() {
+            *x = Self::fill(tok, pos, j, 0xA7);
+        }
+    }
+
     fn one_hot(&self, out: &mut [f32], id: usize) {
         debug_assert_eq!(out.len(), self.dims.vocab);
         out.fill(0.0);
         out[id] = 1.0;
+    }
+
+    /// Shared prefill math: per-token rows + last-row attention + logits.
+    fn prefill_core(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillRows> {
+        anyhow::ensure!(tokens.len() == self.bucket && valid.len() == self.bucket);
+        self.counts.prefill += 1;
+        let n = valid.iter().filter(|&&v| v > 0.0).count().max(1);
+        let re = self.row_elems();
+        let mut k_rows = vec![0f32; n * re];
+        let mut v_rows = vec![0f32; n * re];
+        for i in 0..n {
+            Self::kv_row_into(
+                &mut k_rows[i * re..(i + 1) * re],
+                &mut v_rows[i * re..(i + 1) * re],
+                tokens[i],
+                i as i32,
+            );
+        }
+        let mut attn_last = vec![0f32; n];
+        for (i, a) in attn_last.iter_mut().enumerate() {
+            *a = Self::attn_at(i, (n - 1) as i32);
+        }
+        let mut logits_last = vec![0f32; self.dims.vocab];
+        let id = self.next_id(tokens[n - 1], (n - 1) as i32);
+        self.one_hot(&mut logits_last, id);
+        Ok(PrefillRows {
+            k_rows,
+            v_rows,
+            attn_last,
+            logits_last,
+        })
     }
 }
 
@@ -117,26 +294,37 @@ impl DecodeBackend for SimBackend {
     }
 
     fn prefill(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillOut> {
-        anyhow::ensure!(tokens.len() == self.bucket && valid.len() == self.bucket);
-        self.counts.prefill += 1;
-        let n = valid.iter().filter(|&&v| v > 0.0).count().max(1);
-        let mut attn_last = vec![0f32; self.bucket];
-        for (i, a) in attn_last.iter_mut().enumerate().take(n) {
-            *a = Self::attn_at(i, (n - 1) as i32);
+        anyhow::ensure!(self.arena.is_none(), "dense prefill on a paged backend");
+        let rows = self.prefill_core(tokens, valid)?;
+        let n = rows.attn_last.len();
+        let (l, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        let s = self.cache;
+        let re = self.row_elems();
+        // scatter token-major rows into the dense [L, H, S, dh] layout
+        let mut k_seq = vec![0f32; l * h * s * dh];
+        let mut v_seq = vec![0f32; l * h * s * dh];
+        for i in 0..n {
+            for li in 0..l {
+                for hi in 0..h {
+                    let src = i * re + (li * h + hi) * dh;
+                    let dst = ((li * h + hi) * s + i) * dh;
+                    k_seq[dst..dst + dh].copy_from_slice(&rows.k_rows[src..src + dh]);
+                    v_seq[dst..dst + dh].copy_from_slice(&rows.v_rows[src..src + dh]);
+                }
+            }
         }
-        let mut logits_last = vec![0f32; self.dims.vocab];
-        let id = self.next_id(tokens[n - 1], (n - 1) as i32);
-        self.one_hot(&mut logits_last, id);
-        let cache_elems = self.dims.n_layers * self.dims.n_heads * self.cache * self.dims.d_head;
+        let mut attn_last = vec![0f32; self.bucket];
+        attn_last[..n].copy_from_slice(&rows.attn_last);
         Ok(PrefillOut {
-            k_seq: vec![0.0; cache_elems],
-            v_seq: vec![0.0; cache_elems],
+            k_seq,
+            v_seq,
             attn_last,
-            logits_last,
+            logits_last: rows.logits_last,
         })
     }
 
     fn insert(&mut self, k_seq: &[f32], v_seq: &[f32], row: usize) -> Result<()> {
+        anyhow::ensure!(self.arena.is_none(), "dense insert on a paged backend");
         let cache_elems = self.dims.n_layers * self.dims.n_heads * self.cache * self.dims.d_head;
         anyhow::ensure!(k_seq.len() == cache_elems && v_seq.len() == cache_elems);
         anyhow::ensure!(row < self.batch, "insert row {row} out of range");
@@ -145,6 +333,7 @@ impl DecodeBackend for SimBackend {
     }
 
     fn step(&mut self, slot_mask: &[f32], tokens: &[i32], pos: &[i32]) -> Result<StepOut> {
+        anyhow::ensure!(self.arena.is_none(), "dense step on a paged backend");
         let (b, s) = (self.batch, self.cache);
         anyhow::ensure!(slot_mask.len() == b * s && tokens.len() == b && pos.len() == b);
         self.counts.step += 1;
@@ -160,24 +349,35 @@ impl DecodeBackend for SimBackend {
                 }
             }
         }
-        let new_elems = b * self.dims.n_layers * self.dims.n_heads * self.dims.d_head;
+        let re = self.row_elems();
+        let mut k_new = vec![0f32; b * re];
+        let mut v_new = vec![0f32; b * re];
+        for row in 0..b {
+            Self::kv_row_into(
+                &mut k_new[row * re..(row + 1) * re],
+                &mut v_new[row * re..(row + 1) * re],
+                tokens[row],
+                pos[row],
+            );
+        }
         Ok(StepOut {
             logits,
             attn,
-            k_new: vec![0.0; new_elems],
-            v_new: vec![0.0; new_elems],
+            k_new,
+            v_new,
         })
     }
 
     fn append(&mut self, k_new: &[f32], _v_new: &[f32], idx: &[i32]) -> Result<()> {
-        let new_elems =
-            self.batch * self.dims.n_layers * self.dims.n_heads * self.dims.d_head;
+        anyhow::ensure!(self.arena.is_none(), "dense append on a paged backend");
+        let new_elems = self.batch * self.row_elems();
         anyhow::ensure!(idx.len() == self.batch && k_new.len() == new_elems);
         self.counts.append += 2;
         Ok(())
     }
 
     fn gather(&mut self, idx: &[i32]) -> Result<()> {
+        anyhow::ensure!(self.arena.is_none(), "dense gather on a paged backend");
         anyhow::ensure!(idx.len() == self.batch * self.cache);
         self.counts.gather += 2;
         Ok(())
@@ -188,12 +388,131 @@ impl DecodeBackend for SimBackend {
     }
 
     fn device_cache_bytes(&self) -> usize {
-        2 * self.batch
-            * self.dims.n_layers
-            * self.dims.n_heads
-            * self.cache
-            * self.dims.d_head
-            * 4
+        match &self.arena {
+            // paged: the arena is the entire physical KV footprint
+            Some(a) => a.bytes(),
+            None => {
+                2 * self.batch
+                    * self.dims.n_layers
+                    * self.dims.n_heads
+                    * self.cache
+                    * self.dims.d_head
+                    * 4
+            }
+        }
+    }
+
+    fn init_paged(&mut self, n_blocks: usize, block_size: usize) -> Result<()> {
+        anyhow::ensure!(self.arena.is_none(), "init_paged called twice");
+        self.arena = Some(KvArena::new(
+            n_blocks,
+            block_size,
+            KvLayout {
+                n_layers: self.dims.n_layers,
+                n_heads: self.dims.n_heads,
+                d_head: self.dims.d_head,
+            },
+        ));
+        Ok(())
+    }
+
+    fn is_paged(&self) -> bool {
+        self.arena.is_some()
+    }
+
+    fn prefill_rows(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillRows> {
+        anyhow::ensure!(self.arena.is_some(), "prefill_rows before init_paged");
+        self.prefill_core(tokens, valid)
+    }
+
+    fn write_kv_rows(
+        &mut self,
+        block: BlockId,
+        offset: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()> {
+        let re = self.row_elems();
+        let arena = self.arena.as_mut().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        arena.write_rows(block, offset, k_rows, v_rows);
+        self.counts.row_writes += (k_rows.len() / re) as u64;
+        Ok(())
+    }
+
+    fn copy_block(&mut self, copy: BlockCopy) -> Result<()> {
+        let arena = self.arena.as_mut().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        arena.copy_block(copy);
+        self.counts.block_copies += 1;
+        Ok(())
+    }
+
+    fn gather_kv_rows(&mut self, moves: &[RowMove]) -> Result<()> {
+        let arena = self.arena.as_mut().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        arena.gather_rows(moves);
+        self.counts.row_moves += moves.len() as u64;
+        Ok(())
+    }
+
+    fn step_paged(
+        &mut self,
+        block_tables: &[i32],
+        blocks_per_row: usize,
+        seq_lens: &[i32],
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<StepOut> {
+        let (b, s) = (self.batch, self.cache);
+        anyhow::ensure!(
+            block_tables.len() == b * blocks_per_row
+                && seq_lens.len() == b
+                && tokens.len() == b
+                && pos.len() == b
+        );
+        let arena = self.arena.as_ref().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        let bs = arena.block_size();
+        self.counts.step += 1;
+        let v = self.dims.vocab;
+        let mut logits = vec![0f32; b * v];
+        let mut attn = vec![0f32; b * s];
+        for row in 0..b {
+            let id = self.next_id(tokens[row], pos[row]);
+            logits[row * v + id] = 1.0;
+            let len = seq_lens[row] as usize;
+            anyhow::ensure!(len <= s, "row {row} len {len} exceeds cache {s}");
+            anyhow::ensure!(len <= blocks_per_row * bs, "row {row} len {len} unmapped");
+            for j in 0..len {
+                let bi = block_tables[row * blocks_per_row + j / bs];
+                anyhow::ensure!(bi >= 0, "row {row} slot {j}: unmapped block");
+                // the slot's identity comes from the STORED key bytes — the
+                // whole point: a wrong block table or missed CoW/compaction
+                // copy changes the attention signal and fails tests
+                let birth = arena.k_row(bi as BlockId, j % bs)[0] as usize;
+                attn[row * s + j] = Self::attn_at(birth, pos[row]);
+            }
+        }
+        let re = self.row_elems();
+        let mut k_new = vec![0f32; b * re];
+        let mut v_new = vec![0f32; b * re];
+        for row in 0..b {
+            Self::kv_row_into(
+                &mut k_new[row * re..(row + 1) * re],
+                &mut v_new[row * re..(row + 1) * re],
+                tokens[row],
+                pos[row],
+            );
+        }
+        Ok(StepOut {
+            logits,
+            attn,
+            k_new,
+            v_new,
+        })
+    }
+
+    fn debug_kv_row(&self, block: BlockId, offset: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.arena
+            .as_ref()
+            .map(|a| (a.k_row(block, offset).to_vec(), a.v_row(block, offset).to_vec()))
     }
 }
 
@@ -260,5 +579,116 @@ mod tests {
         assert_eq!(out.attn_last.len(), p);
         let d = b.dims();
         assert_eq!(out.k_seq.len(), d.n_layers * d.n_heads * 32 * d.d_head);
+        // K rows carry real bytes now: slot 3's layer-0 head-0 lane encodes
+        // (pos, token) — the identity the paged path reads back from storage
+        let s = 32;
+        let dh = d.d_head;
+        let slot3_l0h0 = &out.k_seq[3 * dh..3 * dh + dh];
+        assert_eq!(slot3_l0h0[0], 3.0, "k_row[0] = birth pos");
+        assert_eq!(slot3_l0h0[1], 3.0, "k_row[1] = token id");
+        // padding slots stay zero
+        assert!(out.k_seq[7 * dh..s * dh].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn paged_rows_match_dense_prefill_bytes() {
+        // the same prompt must produce identical K/V bytes through either
+        // layout — that equality is what lets a partial prefix hit skip
+        // re-writing the shared blocks
+        let mut dense = SimBackend::new(1, 32);
+        let mut paged = SimBackend::new(1, 32);
+        paged.init_paged(4, 8).unwrap();
+        let p = dense.prefill_bucket();
+        let mut toks = vec![0i32; p];
+        let mut valid = vec![0f32; p];
+        for i in 0..5 {
+            toks[i] = (i + 2) as i32;
+            valid[i] = 1.0;
+        }
+        let d = dense.prefill(&toks, &valid).unwrap();
+        let r = paged.prefill_rows(&toks, &valid).unwrap();
+        assert_eq!(r.attn_last.len(), 5);
+        assert_eq!(&d.attn_last[..5], &r.attn_last[..]);
+        assert_eq!(d.logits_last, r.logits_last);
+        let dims = dense.dims().clone();
+        let (h, dh, s) = (dims.n_heads, dims.d_head, 32);
+        let re = dims.n_layers * h * dh;
+        // token 4, layer 1, head 1 must match across layouts
+        let (li, hi, i) = (1, 1, 4);
+        let from_rows = &r.k_rows[i * re + (li * h + hi) * dh..][..dh];
+        let from_seq = &d.k_seq[((li * h + hi) * s + i) * dh..][..dh];
+        assert_eq!(from_rows, from_seq);
+    }
+
+    #[test]
+    fn paged_step_reads_identity_through_block_table() {
+        let mut b = SimBackend::new(1, 16);
+        b.init_paged(4, 4).unwrap();
+        let re = b.row_elems();
+        // write 6 tokens through a table mapping blocks [2, 0]
+        for i in 0..6 {
+            let mut k = vec![0f32; re];
+            let mut v = vec![0f32; re];
+            SimBackend::kv_row_into(&mut k, &mut v, 9, i as i32);
+            let (blk, off) = if i < 4 { (2u32, i) } else { (0u32, i - 4) };
+            b.write_kv_rows(blk, off, &k, &v).unwrap();
+        }
+        let tables = vec![2i32, 0, -1, -1];
+        let out = b.step_paged(&tables, 4, &[6], &[3], &[6]).unwrap();
+        for j in 0..6 {
+            assert_eq!(out.attn[j], SimBackend::attn_at(j, 6), "slot {j}");
+        }
+        assert!(out.attn[6..].iter().all(|&x| x == 0.0));
+        // identical to a dense step over the same live set (pre-eviction)
+        let mut dense = SimBackend::new(1, 16);
+        let mut mask = vec![0f32; 16];
+        mask[..6].fill(1.0);
+        let od = dense.step(&mask, &[3], &[6]).unwrap();
+        assert_eq!(od.attn, out.attn);
+        assert_eq!(od.logits, out.logits);
+        assert_eq!(od.k_new, out.k_new);
+    }
+
+    #[test]
+    fn paged_copy_and_gather_move_real_bytes() {
+        let mut b = SimBackend::new(1, 16);
+        b.init_paged(4, 4).unwrap();
+        let re = b.row_elems();
+        let mk = |tok: i32, pos: i32| {
+            let mut k = vec![0f32; re];
+            let mut v = vec![0f32; re];
+            SimBackend::kv_row_into(&mut k, &mut v, tok, pos);
+            (k, v)
+        };
+        let (k0, v0) = mk(1, 0);
+        let (k1, v1) = mk(2, 1);
+        b.write_kv_rows(0, 0, &k0, &v0).unwrap();
+        b.write_kv_rows(0, 1, &k1, &v1).unwrap();
+        b.copy_block(BlockCopy { src: 0, dst: 3, rows: 2 }).unwrap();
+        assert_eq!(b.debug_kv_row(3, 1).unwrap().0, k1);
+        b.gather_kv_rows(&[RowMove {
+            src_block: 3,
+            src_off: 1,
+            dst_block: 3,
+            dst_off: 0,
+        }])
+        .unwrap();
+        assert_eq!(b.debug_kv_row(3, 0).unwrap().0, k1);
+        assert_eq!(b.debug_kv_row(3, 0).unwrap().1, v1);
+        // the original block is untouched
+        assert_eq!(b.debug_kv_row(0, 0).unwrap().0, k0);
+        let c = b.exec_counts();
+        assert_eq!(c.block_copies, 1);
+        assert_eq!(c.row_moves, 1);
+    }
+
+    #[test]
+    fn paged_backend_rejects_dense_ops() {
+        let mut b = SimBackend::new(1, 16);
+        b.init_paged(4, 4).unwrap();
+        assert!(b.step(&[0f32; 16], &[0], &[0]).is_err());
+        assert!(b.gather(&[0i32; 16]).is_err());
+        // arena bytes replace the dense worst-case in accounting
+        assert_eq!(b.device_cache_bytes(), 2 * 4 * 4 * (2 * 2 * 4) * 4);
     }
 }

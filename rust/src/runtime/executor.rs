@@ -7,12 +7,29 @@
 //! host round-trip. Only small tensors cross the host boundary each step:
 //! slot_mask/token/pos up; logits + aggregated attention + per-layer new K/V
 //! rows down. This is the L3 hot path.
+//!
+//! ## Paged mode
+//!
+//! With a block pool, `init_paged` swaps the dense per-row `[B, L, H, S,
+//! dh]` caches (which are then never allocated — allocation is lazy, on
+//! first dense use) for pool-shaped `[n_blocks, block_size, L, H, dh]`
+//! arena buffers plus three extra executables from the manifest:
+//! `stepp` (decode step reading K/V through `[B, max_blocks]` block tables
+//! + `[B]` lens — the Pallas/XLA paged-attention path), `blockw` (write one
+//! `[L, H, dh]` row at a linear arena slot), and `blockg` (permute all
+//! arena rows by a linear index vector — serving both CoW block copies and
+//! eviction compaction in a single device pass, with gather's functional
+//! output giving the required two-phase semantics for free). Artifacts are
+//! emitted per arena geometry by `python/compile/aot.py`; a manifest
+//! predating paged variants makes `init_paged` fail with a regenerate hint
+//! rather than silently falling back to worst-case buffers.
 
 use anyhow::{Context, Result};
 
-use super::backend::DecodeBackend;
+use super::backend::{DecodeBackend, PrefillRows};
 use super::client::Client;
 use super::manifest::{Manifest, Variant, VariantKind};
+use crate::kvpool::{BlockCopy, BlockId, RowMove};
 
 /// Host-side copy of one decode step's outputs.
 #[derive(Clone, Debug)]
@@ -40,11 +57,25 @@ pub struct PrefillOut {
     pub logits_last: Vec<f32>,
 }
 
+/// Device-side paged-KV state: block arenas + the executables that serve
+/// them (see module docs §Paged mode).
+struct PagedExec {
+    n_blocks: usize,
+    block_size: usize,
+    step_exe: xla::PjRtLoadedExecutable,
+    write_exe: xla::PjRtLoadedExecutable,
+    gather_exe: xla::PjRtLoadedExecutable,
+    k_arena: xla::PjRtBuffer,
+    v_arena: xla::PjRtBuffer,
+}
+
 pub struct ModelExecutor {
     pub batch: usize,
     pub cache: usize,
     pub prefill_bucket: usize,
     dims: super::manifest::ModelDims,
+    /// Kept for paged-executable compilation at `init_paged` time.
+    manifest: Manifest,
 
     client: xla::PjRtClient,
     step_exe: xla::PjRtLoadedExecutable,
@@ -54,8 +85,11 @@ pub struct ModelExecutor {
     prefill_exe: xla::PjRtLoadedExecutable,
 
     weights: Vec<xla::PjRtBuffer>,
-    k_cache: xla::PjRtBuffer,
-    v_cache: xla::PjRtBuffer,
+    /// Dense per-row caches — allocated lazily on first dense-layout use, so
+    /// a paged engine never holds the worst-case `[B, L, H, S, dh]` buffers.
+    k_cache: Option<xla::PjRtBuffer>,
+    v_cache: Option<xla::PjRtBuffer>,
+    paged: Option<PagedExec>,
 
     /// Cumulative count of PJRT executions, by kind (perf accounting).
     pub exec_counts: ExecCounts,
@@ -68,6 +102,12 @@ pub struct ExecCounts {
     pub gather: u64,
     pub insert: u64,
     pub prefill: u64,
+    /// Paged mode: K/V rows written into arena blocks.
+    pub row_writes: u64,
+    /// Paged mode: copy-on-write block duplications.
+    pub block_copies: u64,
+    /// Paged mode: rows relocated by eviction compaction.
+    pub row_moves: u64,
 }
 
 fn take_single(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<xla::PjRtBuffer> {
@@ -135,18 +175,12 @@ impl ModelExecutor {
             weights.push(client.upload_f32(data, &p.shape)?);
         }
 
-        let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.d_head);
-        let cache_len = batch * l * h * cache * dh;
-        let cache_dims = [batch, l, h, cache, dh];
-        let zeros = vec![0f32; cache_len];
-        let k_cache = client.upload_f32(&zeros, &cache_dims)?;
-        let v_cache = client.upload_f32(&zeros, &cache_dims)?;
-
         Ok(ModelExecutor {
             batch,
             cache,
             prefill_bucket: prefill_v.prefill,
             dims,
+            manifest: manifest.clone(),
             client: client.raw().clone(),
             step_exe: compile(step_v)?,
             append_exe: compile(append_v)?,
@@ -154,24 +188,63 @@ impl ModelExecutor {
             insert_exe: compile(insert_v)?,
             prefill_exe: compile(prefill_v)?,
             weights,
-            k_cache,
-            v_cache,
+            k_cache: None,
+            v_cache: None,
+            paged: None,
             exec_counts: ExecCounts::default(),
         })
+    }
+
+    /// Allocate the dense per-row caches on first dense-layout use (never in
+    /// paged mode — the arenas are the only physical KV there).
+    fn ensure_dense_caches(&mut self) -> Result<()> {
+        anyhow::ensure!(self.paged.is_none(), "dense cache op on a paged executor");
+        if self.k_cache.is_some() {
+            return Ok(());
+        }
+        let (l, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        let cache_dims = [self.batch, l, h, self.cache, dh];
+        let zeros = vec![0f32; self.batch * l * h * self.cache * dh];
+        self.k_cache = Some(
+            self.client
+                .buffer_from_host_buffer(&zeros, &cache_dims, None)?,
+        );
+        self.v_cache = Some(
+            self.client
+                .buffer_from_host_buffer(&zeros, &cache_dims, None)?,
+        );
+        Ok(())
+    }
+
+    fn compile_artifact(&self, v: &Variant) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.dir.join(&v.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        self.client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling {}", path.display()))
     }
 
     pub fn dims(&self) -> &super::manifest::ModelDims {
         &self.dims
     }
 
-    /// KV bytes held on device for this engine (both caches).
+    fn row_elems(&self) -> usize {
+        self.dims.n_layers * self.dims.n_heads * self.dims.d_head
+    }
+
+    /// KV bytes held on device for this engine: the block arenas in paged
+    /// mode, the dense caches once allocated, zero before first use.
     pub fn device_cache_bytes(&self) -> usize {
-        2 * self.batch
-            * self.dims.n_layers
-            * self.dims.n_heads
-            * self.cache
-            * self.dims.d_head
-            * 4
+        if let Some(p) = &self.paged {
+            2 * p.n_blocks * p.block_size * self.row_elems() * 4
+        } else if self.k_cache.is_some() {
+            2 * self.batch * self.cache * self.row_elems() * 4
+        } else {
+            0
+        }
     }
 
     /// Run one decode step. `slot_mask` is [B*S] (1.0 = live slot),
@@ -179,14 +252,15 @@ impl ModelExecutor {
     pub fn step(&mut self, slot_mask: &[f32], tokens: &[i32], pos: &[i32]) -> Result<StepOut> {
         let (b, s) = (self.batch, self.cache);
         anyhow::ensure!(slot_mask.len() == b * s && tokens.len() == b && pos.len() == b);
+        self.ensure_dense_caches()?;
         // kImmutableOnlyDuringCall semantics: synchronous copies (see client.rs)
         let mask_buf = self.client.buffer_from_host_buffer(slot_mask, &[b, s], None)?;
         let tok_buf = self.client.buffer_from_host_buffer(tokens, &[b], None)?;
         let pos_buf = self.client.buffer_from_host_buffer(pos, &[b], None)?;
 
         let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
-        args.push(&self.k_cache);
-        args.push(&self.v_cache);
+        args.push(self.k_cache.as_ref().expect("ensured"));
+        args.push(self.v_cache.as_ref().expect("ensured"));
         args.push(&mask_buf);
         args.push(&tok_buf);
         args.push(&pos_buf);
@@ -213,16 +287,21 @@ impl ModelExecutor {
             self.dims.d_head,
         );
         anyhow::ensure!(idx.len() == b && k_new.len() == b * l * h * dh);
+        self.ensure_dense_caches()?;
         let new_dims = [b, l, h, dh];
         let idx_buf = self.client.buffer_from_host_buffer(idx, &[b], None)?;
 
         let kn = self.client.buffer_from_host_buffer(k_new, &new_dims, None)?;
-        let out = self.append_exe.execute_b(&[&self.k_cache, &kn, &idx_buf])?;
-        self.k_cache = take_single(out)?;
+        let out = self
+            .append_exe
+            .execute_b(&[self.k_cache.as_ref().expect("ensured"), &kn, &idx_buf])?;
+        self.k_cache = Some(take_single(out)?);
 
         let vn = self.client.buffer_from_host_buffer(v_new, &new_dims, None)?;
-        let out = self.append_exe.execute_b(&[&self.v_cache, &vn, &idx_buf])?;
-        self.v_cache = take_single(out)?;
+        let out = self
+            .append_exe
+            .execute_b(&[self.v_cache.as_ref().expect("ensured"), &vn, &idx_buf])?;
+        self.v_cache = Some(take_single(out)?);
         self.exec_counts.append += 2;
         Ok(())
     }
@@ -231,11 +310,16 @@ impl ModelExecutor {
     pub fn gather(&mut self, idx: &[i32]) -> Result<()> {
         let (b, s) = (self.batch, self.cache);
         anyhow::ensure!(idx.len() == b * s);
+        self.ensure_dense_caches()?;
         let idx_buf = self.client.buffer_from_host_buffer(idx, &[b, s], None)?;
-        let out = self.gather_exe.execute_b(&[&self.k_cache, &idx_buf])?;
-        self.k_cache = take_single(out)?;
-        let out = self.gather_exe.execute_b(&[&self.v_cache, &idx_buf])?;
-        self.v_cache = take_single(out)?;
+        let out = self
+            .gather_exe
+            .execute_b(&[self.k_cache.as_ref().expect("ensured"), &idx_buf])?;
+        self.k_cache = Some(take_single(out)?);
+        let out = self
+            .gather_exe
+            .execute_b(&[self.v_cache.as_ref().expect("ensured"), &idx_buf])?;
+        self.v_cache = Some(take_single(out)?);
         self.exec_counts.gather += 2;
         Ok(())
     }
@@ -270,26 +354,50 @@ impl ModelExecutor {
             self.dims.d_head,
         );
         anyhow::ensure!(k_seq.len() == l * h * s * dh && row < self.batch);
+        self.ensure_dense_caches()?;
         let seq_dims = [l, h, s, dh];
         let row_buf = self.client.buffer_from_host_buffer(&[row as i32], &[], None)?;
 
         let ks = self.client.buffer_from_host_buffer(k_seq, &seq_dims, None)?;
-        let out = self.insert_exe.execute_b(&[&self.k_cache, &ks, &row_buf])?;
-        self.k_cache = take_single(out)?;
+        let out = self
+            .insert_exe
+            .execute_b(&[self.k_cache.as_ref().expect("ensured"), &ks, &row_buf])?;
+        self.k_cache = Some(take_single(out)?);
 
         let vs = self.client.buffer_from_host_buffer(v_seq, &seq_dims, None)?;
-        let out = self.insert_exe.execute_b(&[&self.v_cache, &vs, &row_buf])?;
-        self.v_cache = take_single(out)?;
+        let out = self
+            .insert_exe
+            .execute_b(&[self.v_cache.as_ref().expect("ensured"), &vs, &row_buf])?;
+        self.v_cache = Some(take_single(out)?);
         self.exec_counts.insert += 2;
         Ok(())
     }
 
     /// Download both caches to host (test/debug only — not on the hot path).
     pub fn download_caches(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (k, v) = match (&self.k_cache, &self.v_cache) {
+            (Some(k), Some(v)) => (k, v),
+            _ => anyhow::bail!("dense caches not allocated (paged mode or unused)"),
+        };
         Ok((
-            self.k_cache.to_literal_sync()?.to_vec::<f32>()?,
-            self.v_cache.to_literal_sync()?.to_vec::<f32>()?,
+            k.to_literal_sync()?.to_vec::<f32>()?,
+            v.to_literal_sync()?.to_vec::<f32>()?,
         ))
+    }
+
+    /// Permute both arena buffers by a full linear row index (out[j] =
+    /// in[idx[j]]) — the single device pass behind CoW copies and
+    /// compaction moves.
+    fn arena_permute(&mut self, idx: &[i32]) -> Result<()> {
+        let p = self.paged.as_mut().expect("paged");
+        let idx_buf = self
+            .client
+            .buffer_from_host_buffer(idx, &[idx.len()], None)?;
+        let out = p.gather_exe.execute_b(&[&p.k_arena, &idx_buf])?;
+        p.k_arena = take_single(out)?;
+        let out = p.gather_exe.execute_b(&[&p.v_arena, &idx_buf])?;
+        p.v_arena = take_single(out)?;
+        Ok(())
     }
 }
 
@@ -331,5 +439,188 @@ impl DecodeBackend for ModelExecutor {
 
     fn device_cache_bytes(&self) -> usize {
         ModelExecutor::device_cache_bytes(self)
+    }
+
+    fn init_paged(&mut self, n_blocks: usize, block_size: usize) -> Result<()> {
+        anyhow::ensure!(self.paged.is_none(), "init_paged called twice");
+        anyhow::ensure!(
+            self.k_cache.is_none(),
+            "init_paged after dense caches were allocated"
+        );
+        let find = |kind: VariantKind, batch: usize| -> Result<Variant> {
+            self.manifest
+                .find_paged(kind.clone(), batch, n_blocks, block_size)
+                .cloned()
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "manifest has no {kind:?} paged variant for b{batch} \
+                         {n_blocks}x{block_size} — regenerate artifacts \
+                         (python -m compile.aot emits stepp/blockw/blockg)"
+                    )
+                })
+        };
+        let step_v = find(VariantKind::StepPaged, self.batch)?;
+        let write_v = find(VariantKind::BlockWrite, 0)?;
+        let gather_v = find(VariantKind::BlockGather, 0)?;
+        let step_exe = self.compile_artifact(&step_v)?;
+        let write_exe = self.compile_artifact(&write_v)?;
+        let gather_exe = self.compile_artifact(&gather_v)?;
+        let (l, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        let arena_dims = [n_blocks, block_size, l, h, dh];
+        let zeros = vec![0f32; n_blocks * block_size * l * h * dh];
+        let k_arena = self.client.buffer_from_host_buffer(&zeros, &arena_dims, None)?;
+        let v_arena = self.client.buffer_from_host_buffer(&zeros, &arena_dims, None)?;
+        self.paged = Some(PagedExec {
+            n_blocks,
+            block_size,
+            step_exe,
+            write_exe,
+            gather_exe,
+            k_arena,
+            v_arena,
+        });
+        Ok(())
+    }
+
+    fn is_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    fn prefill_rows(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillRows> {
+        // same executable as the dense path; only the host-side layout of
+        // the returned K/V differs (token-major rows, valid prefix only)
+        let out = ModelExecutor::prefill(self, tokens, valid)?;
+        let n = valid.iter().filter(|&&v| v > 0.0).count().max(1);
+        let (l, h, dh, s) = (
+            self.dims.n_layers,
+            self.dims.n_heads,
+            self.dims.d_head,
+            self.cache,
+        );
+        let re = self.row_elems();
+        let mut k_rows = vec![0f32; n * re];
+        let mut v_rows = vec![0f32; n * re];
+        for i in 0..n {
+            for li in 0..l {
+                for hi in 0..h {
+                    let src = ((li * h + hi) * s + i) * dh;
+                    let dst = i * re + (li * h + hi) * dh;
+                    k_rows[dst..dst + dh].copy_from_slice(&out.k_seq[src..src + dh]);
+                    v_rows[dst..dst + dh].copy_from_slice(&out.v_seq[src..src + dh]);
+                }
+            }
+        }
+        Ok(PrefillRows {
+            k_rows,
+            v_rows,
+            attn_last: out.attn_last[..n].to_vec(),
+            logits_last: out.logits_last,
+        })
+    }
+
+    fn write_kv_rows(
+        &mut self,
+        block: BlockId,
+        offset: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()> {
+        let re = self.row_elems();
+        let (l, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        let n = k_rows.len() / re;
+        anyhow::ensure!(k_rows.len() == n * re && v_rows.len() == k_rows.len());
+        let p = self.paged.as_mut().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        anyhow::ensure!(offset + n <= p.block_size, "write crosses block boundary");
+        for i in 0..n {
+            let slot = (block as usize * p.block_size + offset + i) as i32;
+            let slot_buf = self.client.buffer_from_host_buffer(&[slot], &[], None)?;
+            let kr = self.client.buffer_from_host_buffer(
+                &k_rows[i * re..(i + 1) * re],
+                &[l, h, dh],
+                None,
+            )?;
+            let out = p.write_exe.execute_b(&[&p.k_arena, &kr, &slot_buf])?;
+            p.k_arena = take_single(out)?;
+            let vr = self.client.buffer_from_host_buffer(
+                &v_rows[i * re..(i + 1) * re],
+                &[l, h, dh],
+                None,
+            )?;
+            let out = p.write_exe.execute_b(&[&p.v_arena, &vr, &slot_buf])?;
+            p.v_arena = take_single(out)?;
+        }
+        self.exec_counts.row_writes += n as u64;
+        Ok(())
+    }
+
+    fn copy_block(&mut self, copy: BlockCopy) -> Result<()> {
+        let p = self.paged.as_ref().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        let (bs, total) = (p.block_size, p.n_blocks * p.block_size);
+        anyhow::ensure!(copy.rows <= bs, "copy rows exceed block");
+        let mut idx: Vec<i32> = (0..total as i32).collect();
+        for r in 0..copy.rows {
+            idx[copy.dst as usize * bs + r] = (copy.src as usize * bs + r) as i32;
+        }
+        self.arena_permute(&idx)?;
+        self.exec_counts.block_copies += 1;
+        Ok(())
+    }
+
+    fn gather_kv_rows(&mut self, moves: &[RowMove]) -> Result<()> {
+        let p = self.paged.as_ref().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        let (bs, total) = (p.block_size, p.n_blocks * p.block_size);
+        // gather is functional (reads the whole input buffer, then produces
+        // a new one), so arbitrary src/dst overlap is safe in one pass
+        let mut idx: Vec<i32> = (0..total as i32).collect();
+        for m in moves {
+            idx[m.dst_block as usize * bs + m.dst_off] =
+                (m.src_block as usize * bs + m.src_off) as i32;
+        }
+        self.arena_permute(&idx)?;
+        self.exec_counts.row_moves += moves.len() as u64;
+        Ok(())
+    }
+
+    fn step_paged(
+        &mut self,
+        block_tables: &[i32],
+        blocks_per_row: usize,
+        seq_lens: &[i32],
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<StepOut> {
+        let b = self.batch;
+        anyhow::ensure!(
+            block_tables.len() == b * blocks_per_row
+                && seq_lens.len() == b
+                && tokens.len() == b
+                && pos.len() == b
+        );
+        anyhow::ensure!(self.paged.is_some(), "step_paged before init_paged");
+        let tbl_buf = self
+            .client
+            .buffer_from_host_buffer(block_tables, &[b, blocks_per_row], None)?;
+        let len_buf = self.client.buffer_from_host_buffer(seq_lens, &[b], None)?;
+        let tok_buf = self.client.buffer_from_host_buffer(tokens, &[b], None)?;
+        let pos_buf = self.client.buffer_from_host_buffer(pos, &[b], None)?;
+        let p = self.paged.as_ref().expect("checked");
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&p.k_arena);
+        args.push(&p.v_arena);
+        args.push(&tbl_buf);
+        args.push(&len_buf);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        let out = p.step_exe.execute_b(&args)?;
+        self.exec_counts.step += 1;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "stepp: expected 4 outputs");
+        Ok(StepOut {
+            logits: parts[0].to_vec::<f32>()?,
+            attn: parts[1].to_vec::<f32>()?,
+            k_new: parts[2].to_vec::<f32>()?,
+            v_new: parts[3].to_vec::<f32>()?,
+        })
     }
 }

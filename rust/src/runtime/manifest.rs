@@ -30,11 +30,19 @@ pub enum VariantKind {
     Step,
     /// XLA-fused-attention step (CPU fast path; see EXPERIMENTS §Perf).
     StepFused,
+    /// Paged step: K/V read from `[n_blocks, block_size, L, H, dh]` arenas
+    /// through per-row block tables (`blocks`/`block` fields set).
+    StepPaged,
     Trace,
     Prefill,
     Append,
     Gather,
     Insert,
+    /// Paged arena row write: DUS of one `[L, H, dh]` row at a linear slot.
+    BlockWrite,
+    /// Paged arena row gather: permute all `n_blocks * block_size` rows by a
+    /// linear index vector (serves both CoW block copies and compaction).
+    BlockGather,
 }
 
 impl VariantKind {
@@ -42,11 +50,14 @@ impl VariantKind {
         Ok(match s {
             "step" => VariantKind::Step,
             "stepf" => VariantKind::StepFused,
+            "stepp" => VariantKind::StepPaged,
             "trace" => VariantKind::Trace,
             "prefill" => VariantKind::Prefill,
             "append" => VariantKind::Append,
             "gather" => VariantKind::Gather,
             "insert" => VariantKind::Insert,
+            "blockw" => VariantKind::BlockWrite,
+            "blockg" => VariantKind::BlockGather,
             other => anyhow::bail!("unknown variant kind '{other}'"),
         })
     }
@@ -60,6 +71,9 @@ pub struct Variant {
     pub batch: usize,
     pub cache: usize,
     pub prefill: usize,
+    /// Paged variants only: arena geometry (0 elsewhere).
+    pub blocks: usize,
+    pub block: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -116,6 +130,9 @@ impl Manifest {
                 batch: v.usize_at("batch")?,
                 cache: v.usize_at("cache")?,
                 prefill: v.usize_at("prefill")?,
+                // paged-geometry fields are absent in pre-paging manifests
+                blocks: v.get("blocks").and_then(|x| x.as_usize()).unwrap_or(0),
+                block: v.get("block").and_then(|x| x.as_usize()).unwrap_or(0),
             });
         }
 
@@ -137,6 +154,21 @@ impl Manifest {
         self.variants
             .iter()
             .find(|v| v.kind == kind && v.batch == batch && v.cache == cache)
+    }
+
+    /// Find a paged variant by kind + arena geometry (`batch` is matched for
+    /// the step; row write/gather executables are batch-free, registered
+    /// with batch 0).
+    pub fn find_paged(
+        &self,
+        kind: VariantKind,
+        batch: usize,
+        n_blocks: usize,
+        block_size: usize,
+    ) -> Option<&Variant> {
+        self.variants.iter().find(|v| {
+            v.kind == kind && v.batch == batch && v.blocks == n_blocks && v.block == block_size
+        })
     }
 
     /// All distinct (batch, cache) engine shapes that have a full executable

@@ -14,7 +14,7 @@ pub mod client;
 pub mod executor;
 pub mod manifest;
 
-pub use backend::{DecodeBackend, SimBackend, SIM_CHARSET};
+pub use backend::{DecodeBackend, PrefillRows, SimBackend, SIM_CHARSET};
 pub use client::Client;
 pub use executor::{ModelExecutor, PrefillOut, StepOut};
 pub use manifest::{Manifest, ModelDims, Variant, VariantKind};

@@ -8,6 +8,29 @@
 //! pool recovers to `high_watermark` — leaving the freed blocks to the rows
 //! already decoding (who finish and release more), rather than feeding an
 //! admission/preemption cycle.
+//!
+//! ## Invariants
+//!
+//! * **Exact boundary semantics** — hold while `free < low`, resume at
+//!   `free >= high`; `free == low` stays open and `free == high` reopens.
+//!   `low == high` degenerates to a plain threshold latch. (Regression
+//!   tests pin all four boundaries.)
+//! * **Level-triggered, never edge-triggered** — the latch reacts to the
+//!   *current* free count only, never to deltas. This matters with prefix
+//!   sharing: releasing a shared block leaves `free` flat, and a
+//!   copy-on-write burst can drop it several blocks in one step; a
+//!   direction-sensitive latch would mis-handle both.
+//! * **One controller per engine loop** — state is a single bool; the serve
+//!   loop evaluates it once per iteration against a fresh
+//!   [`PoolPressure`] snapshot. There is no cross-thread sharing.
+//!
+//! ## Failure modes
+//!
+//! The latch can wedge closed when *nothing is decoding*: no row will ever
+//! finish and free blocks, so if stale prefix-cache pins hold `free` below
+//! `high`, the queue would hang forever. The serve loop owns the escape
+//! valve (`Engine::shed_prefix_to_high_watermark`) — the controller itself
+//! deliberately knows nothing about where blocks are pinned.
 
 use crate::kvpool::PoolPressure;
 

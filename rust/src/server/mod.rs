@@ -82,6 +82,9 @@ pub fn pool_gauges_to_json(g: &PoolGauges) -> Json {
         .set("prefix_misses", g.prefix_misses as f64)
         .set("prefix_entries", g.prefix_entries)
         .set("prefix_pinned_blocks", g.prefix_pinned_blocks)
+        .set("prefix_prefill_skips", g.prefix_prefill_skips as f64)
+        .set("kv_arena_bytes", g.kv_arena_bytes)
+        .set("kv_bytes_in_use", g.kv_bytes_in_use)
 }
 
 pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
@@ -384,6 +387,9 @@ mod tests {
             prefix_misses: 2,
             prefix_entries: 1,
             prefix_pinned_blocks: 3,
+            prefix_prefill_skips: 4,
+            kv_arena_bytes: 131072,
+            kv_bytes_in_use: 112640,
         };
         let j = pool_gauges_to_json(&g);
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -396,5 +402,8 @@ mod tests {
         assert_eq!(parsed.usize_at("prefix_misses").unwrap(), 2);
         assert_eq!(parsed.usize_at("prefix_entries").unwrap(), 1);
         assert_eq!(parsed.usize_at("prefix_pinned_blocks").unwrap(), 3);
+        assert_eq!(parsed.usize_at("prefix_prefill_skips").unwrap(), 4);
+        assert_eq!(parsed.usize_at("kv_arena_bytes").unwrap(), 131072);
+        assert_eq!(parsed.usize_at("kv_bytes_in_use").unwrap(), 112640);
     }
 }

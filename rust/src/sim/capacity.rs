@@ -13,6 +13,7 @@
 use std::collections::VecDeque;
 
 use crate::eviction::{self, PolicyParams};
+use crate::kvcache::memory::KvCost;
 use crate::kvpool::{BlockPool, BlockTable, PoolConfig};
 use crate::sim::replay::{replay, ReplayConfig};
 use crate::trace::generator::generate;
@@ -44,6 +45,9 @@ pub struct CapacitySpec {
     /// paid privately. false = every row pays for the header itself — the
     /// PR-1 baseline the sharing win is measured against.
     pub share_prefix: bool,
+    /// Per-token KV footprint used to report physical bytes (paper scale by
+    /// default, so the reclaimed memory reads in real GB).
+    pub kv_cost: KvCost,
 }
 
 impl CapacitySpec {
@@ -66,6 +70,7 @@ impl CapacitySpec {
             seed: 7,
             shared_prefix_tokens: 0,
             share_prefix: false,
+            kv_cost: KvCost::paper_7b(),
         }
     }
 }
@@ -89,6 +94,14 @@ pub struct CapacityReport {
     pub shared_header_blocks: usize,
     /// Admissions that forked the shared header instead of paying for it.
     pub prefix_forks: u64,
+    /// Peak physical KV bytes actually held in live blocks — what a paged
+    /// arena must really store at the worst moment.
+    pub peak_kv_bytes: usize,
+    /// The paged arena's fixed physical footprint (total_blocks worth).
+    pub arena_kv_bytes: usize,
+    /// The per-row worst-case baseline this PR removed: `max_rows` dense
+    /// `[L, H, S, dh]` buffers sized to the replay cache cap.
+    pub dense_kv_bytes: usize,
 }
 
 /// One queued/active sequence: its live curve and (when active) its table.
@@ -116,6 +129,9 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
     };
     let policy = eviction::build(&spec.policy, &params)?;
 
+    // per-row replay cache cap — also the dense per-row provisioning the
+    // physical-bytes baseline charges (keep the two derived from one place)
+    let replay_headroom = spec.window + wp.locality + 2;
     let mut seqs = Vec::with_capacity(spec.n_requests);
     for i in 0..spec.n_requests {
         let tr = generate(
@@ -123,7 +139,7 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
             &mp,
             spec.seed.wrapping_mul(7919).wrapping_add(i as u64),
         );
-        let mut cfg = ReplayConfig::new(spec.budget, spec.window + wp.locality + 2, spec.alpha);
+        let mut cfg = ReplayConfig::new(spec.budget, replay_headroom, spec.alpha);
         cfg.record_live = true;
         let r = replay(&tr, policy.as_ref(), cfg);
         seqs.push(SeqSim {
@@ -293,6 +309,13 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
     } else {
         conc_sum as f64 / rep.steps as f64
     };
+    // physical-memory accounting: live blocks vs the fixed arena vs the
+    // removed per-row worst-case provisioning (replay cache cap per row)
+    let block_bytes = spec.pool.block_size * spec.kv_cost.bytes_per_token();
+    rep.peak_kv_bytes = rep.peak_used_blocks * block_bytes;
+    rep.arena_kv_bytes = rep.total_blocks * block_bytes;
+    rep.dense_kv_bytes =
+        spec.max_rows * spec.kv_cost.bytes_for(spec.budget + replay_headroom.max(1));
     // drop the run-lifetime header pin before the leak check
     if let Some(mut d) = donor {
         d.release_all(&mut pool);
@@ -325,6 +348,25 @@ mod tests {
             );
             assert!(r.peak_used_blocks <= r.total_blocks);
         }
+    }
+
+    #[test]
+    fn physical_bytes_scale_with_live_blocks_not_rows() {
+        let r = run_capacity(&spec("lazy")).unwrap();
+        assert!(r.peak_kv_bytes <= r.arena_kv_bytes);
+        assert_eq!(
+            r.peak_kv_bytes,
+            r.peak_used_blocks * 16 * KvCost::paper_7b().bytes_per_token()
+        );
+        // 64 blocks x 16 tokens = 1024 pooled tokens vs 16 rows x 118-token
+        // dense caches = 1888 worst-case tokens: the arena is strictly
+        // smaller than what per-row provisioning would have reserved
+        assert!(
+            r.arena_kv_bytes < r.dense_kv_bytes,
+            "arena {} must undercut dense worst case {}",
+            r.arena_kv_bytes,
+            r.dense_kv_bytes
+        );
     }
 
     #[test]

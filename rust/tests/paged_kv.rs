@@ -1,0 +1,130 @@
+//! Physical paged-KV regression tests (public API, sim backend).
+//!
+//! The two properties this file pins down:
+//!  1. a prefix-cache hit performs ZERO prefill backend executions, and
+//!  2. a copy-on-write of a shared partial tail block duplicates the real
+//!     K/V bytes — so after one appended token the fork's tail block
+//!     diverges from the donor's, while the donor's bytes are untouched.
+
+use lazyeviction::coordinator::{Engine, EngineConfig, Request};
+use lazyeviction::kvpool::{BlockPool, BlockTable, PoolConfig};
+use lazyeviction::runtime::{DecodeBackend, SimBackend};
+
+fn pool(n_blocks: usize, block_size: usize) -> BlockPool {
+    BlockPool::new(PoolConfig {
+        block_size,
+        n_blocks,
+        low_watermark: 0,
+        high_watermark: 0,
+    })
+    .unwrap()
+}
+
+/// Distinct, recognizable rows for slot `i` of a test sequence.
+fn row_for(re: usize, tag: f32, i: usize) -> (Vec<f32>, Vec<f32>) {
+    let k: Vec<f32> = (0..re).map(|j| tag + i as f32 + j as f32 * 0.01).collect();
+    let v: Vec<f32> = k.iter().map(|x| -x).collect();
+    (k, v)
+}
+
+#[test]
+fn cow_tail_block_bytes_diverge_from_donor_after_one_push() {
+    let mut backend = SimBackend::new(1, 32);
+    backend.init_paged(8, 4).unwrap();
+    let re = backend.dims().n_layers * backend.dims().n_heads * backend.dims().d_head;
+    let mut p = pool(8, 4);
+
+    // donor: 8 tokens = 2 full blocks, bytes written through its table
+    let mut donor = BlockTable::new(4);
+    for i in 0..8 {
+        assert!(donor.push_token(&mut p));
+        let (blk, off) = donor.locate(i).unwrap();
+        let (k, v) = row_for(re, 100.0, i);
+        backend.write_kv_rows(blk, off, &k, &v).unwrap();
+    }
+    let donor_blk0 = donor.blocks()[0];
+
+    // fork the whole prefix, then truncate into the middle of block 0:
+    // the tail block is now shared AND partial
+    let mut fork = BlockTable::fork_prefix(&donor, 8, &mut p);
+    fork.truncate(2, &mut p);
+    assert!(fork.tail_is_shared(&p));
+
+    // one appended token: the push CoWs the shared tail and reports the
+    // byte duplication; apply it, then write the new token's row
+    let mut copies = Vec::new();
+    assert!(fork.push_token_cow(&mut p, &mut copies));
+    assert_eq!(copies.len(), 1);
+    assert_eq!(copies[0].src, donor_blk0);
+    assert_eq!(copies[0].rows, 2, "only the occupied prefix is duplicated");
+    let fork_blk = copies[0].dst;
+    assert_ne!(fork_blk, donor_blk0);
+    backend.copy_block(copies[0]).unwrap();
+    let (k_new, v_new) = row_for(re, 500.0, 2);
+    backend.write_kv_rows(fork_blk, 2, &k_new, &v_new).unwrap();
+
+    // the shared prefix rows were copied byte-for-byte...
+    for i in 0..2 {
+        let (dk, dv) = backend.debug_kv_row(donor_blk0, i).unwrap();
+        let (fk, fv) = backend.debug_kv_row(fork_blk, i).unwrap();
+        assert_eq!(dk, fk, "prefix row {i} must match after CoW");
+        assert_eq!(dv, fv);
+    }
+    // ...the appended row makes the fork's tail block diverge...
+    let (dk2, dv2) = backend.debug_kv_row(donor_blk0, 2).unwrap();
+    let (fk2, fv2) = backend.debug_kv_row(fork_blk, 2).unwrap();
+    assert_ne!(dk2, fk2, "fork tail K must diverge after one appended token");
+    assert_ne!(dv2, fv2, "fork tail V must diverge after one appended token");
+    // ...and the donor's bytes are exactly what was written originally
+    let (want_k, want_v) = row_for(re, 100.0, 2);
+    assert_eq!(dk2, want_k, "donor bytes must be untouched by the fork");
+    assert_eq!(dv2, want_v);
+
+    fork.release_all(&mut p);
+    donor.release_all(&mut p);
+    assert_eq!(p.free_blocks(), 8);
+}
+
+#[test]
+fn prefix_hit_runs_zero_prefill_backend_calls() {
+    let cfg = EngineConfig {
+        batch: 2,
+        cache: 64,
+        budget: 48,
+        pool: Some(PoolConfig {
+            block_size: 8,
+            n_blocks: 24,
+            low_watermark: 0,
+            high_watermark: 0,
+        }),
+        ..Default::default()
+    };
+    let mut e = Engine::new_sim(cfg).unwrap();
+    let req = |id| Request {
+        id,
+        prompt: "#A=3;B=7;C=2;\n>".into(),
+        template: String::new(),
+        max_new: 24,
+    };
+    let cold = e.run_all(vec![req(1)]).unwrap();
+    let after_cold = e.exec_counts();
+    assert_eq!(after_cold.prefill, 1);
+    assert!(after_cold.row_writes > 0, "paged prefill scatters K/V rows");
+
+    // three identical admissions: every one skips prefill
+    let warm = e.run_all(vec![req(2), req(3), req(4)]).unwrap();
+    let after_warm = e.exec_counts();
+    assert_eq!(
+        after_warm.prefill, 1,
+        "prefix hits must perform zero prefill backend calls"
+    );
+    let g = e.pool_gauges().unwrap();
+    assert_eq!(g.prefix_prefill_skips, 3);
+    for w in &warm {
+        assert_eq!(w.text, cold[0].text, "request {} diverged", w.id);
+    }
+    // physical byte accounting rides the pool, not batch x max_len:
+    // 24 blocks x 8 tokens x (2 layers * 2 heads * 4 dh) x 2 (K+V) x 4 bytes
+    assert_eq!(g.kv_arena_bytes, 24 * 8 * 16 * 2 * 4);
+    assert!(g.kv_bytes_in_use <= g.kv_arena_bytes);
+}
