@@ -56,6 +56,7 @@ fn main() -> Result<()> {
                     prompt: s.prompt.clone(),
                     template: s.template.clone(),
                     max_new: s.template.chars().count() + 2,
+                    resume: None,
                 })
                 .collect();
             let responses = engine.run_all(reqs)?;

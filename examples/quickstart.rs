@@ -28,6 +28,7 @@ fn main() -> Result<()> {
         prompt: "#A=3;B=7;C=2;\n>".into(),
         template: "A=?;B=?;A+B=?;\n".into(),
         max_new: 64,
+        resume: None,
     }])?;
     eprintln!("[4] generation done");
     for r in &responses {

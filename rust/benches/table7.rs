@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
             template: String::new(),
             max_new: gen_len,
+            resume: None,
         }])?;
         let lat = &engine.metrics.step_latencies;
         let mut row = vec![name.to_string()];

@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
                 prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
                 template: String::new(),
                 max_new: gen_len,
+                resume: None,
             }])?;
             let thr = engine.metrics.throughput();
             let lat = engine.metrics.avg_latency_ms();

@@ -15,8 +15,11 @@
 //! * before each decode step the engine ensures every active row can map
 //!   one more token; if the pool is dry it sheds cache pins, then
 //!   **preempts the youngest row** (highest admission ticket): blocks are
-//!   returned, the request is handed back via [`Engine::take_preempted`]
-//!   for re-prefill;
+//!   returned and the request is handed back via [`Engine::take_preempted`]
+//!   (oldest victim first) carrying a full decode-state snapshot, so its
+//!   re-admission **resumes** the row — one batched recompute prefill of
+//!   prompt + generated tokens, tracker records restored verbatim —
+//!   byte-identical to a never-preempted run (vLLM-style recompute mode);
 //! * the eviction pass privatizes a row's shared blocks (copy-on-write)
 //!   before compacting, so a donor's mapping is never mutated, and
 //!   (`apply_keep_pooled_moves`) returns whole freed blocks to the pool —
@@ -41,7 +44,7 @@ use anyhow::{Context, Result};
 
 use crate::attention::{observe, TrackerConfig};
 use crate::coordinator::row::RowState;
-use crate::coordinator::{EngineConfig, Request, Response};
+use crate::coordinator::{EngineConfig, PreemptedState, Request, Response};
 use crate::eviction::{self, Policy};
 use crate::kvcache::TokenRecord;
 use crate::kvpool::{
@@ -61,8 +64,10 @@ pub struct Engine {
     pool: Option<BlockPool>,
     /// Prompt-prefix cache (present iff pool + cfg.prefix_cache are set).
     prefix_cache: Option<PrefixCache>,
-    /// Requests preempted since the last `take_preempted` drain.
-    preempted: Vec<Request>,
+    /// Requests preempted since the last `take_preempted` drain, each
+    /// tagged with the victim row's admission ticket so the drain can hand
+    /// them back oldest-first.
+    preempted: Vec<(u64, Request)>,
     /// Next admission ticket (monotone; youngest row = max ticket).
     admit_seq: u64,
     pub metrics: EngineMetrics,
@@ -187,6 +192,8 @@ impl Engine {
                 total_blocks: p.total_blocks(),
                 utilization: p.utilization(),
                 preemptions: self.metrics.preemptions,
+                resumes: self.metrics.resumes,
+                recomputed_tokens: self.metrics.recomputed_tokens,
                 shared_blocks: p.shared_blocks(),
                 kv_arena_bytes,
                 kv_bytes_in_use: p.used_blocks() * block_bytes,
@@ -269,10 +276,18 @@ impl Engine {
         }
     }
 
-    /// Drain the requests preempted since the last call; the caller re-runs
-    /// them from their (preserved) prompts — typically at the queue front.
+    /// Drain the requests preempted since the last call, **oldest victim
+    /// first** (ascending admission ticket). Each carries its
+    /// [`PreemptedState`] in `Request::resume`, so re-submitting it makes
+    /// the engine *resume* the row (recompute mode) rather than restart it.
+    /// Callers must keep this order when re-queuing — put the whole batch
+    /// at the queue front in slice order (`RequestQueue::push_front_all`);
+    /// a per-request `push_front` loop would reverse it and let the
+    /// youngest victim resume ahead of rows preempted before it.
     pub fn take_preempted(&mut self) -> Vec<Request> {
-        std::mem::take(&mut self.preempted)
+        let mut v = std::mem::take(&mut self.preempted);
+        v.sort_by_key(|&(ticket, _)| ticket);
+        v.into_iter().map(|(_, r)| r).collect()
     }
 
     /// Error recovery: drop every active row, returning blocks to the pool
@@ -307,9 +322,16 @@ impl Engine {
     }
 
     /// Admit a request into a free row: prefill, insert, initialize records.
-    /// Returns false (request untouched) when no row is free, or when the
-    /// block pool cannot cover the prompt — the scheduler holds it queued.
-    pub fn submit(&mut self, req: Request, queued_s: f64) -> Result<bool> {
+    /// Returns false (caller's request untouched) when no row is free, or
+    /// when the block pool cannot cover the prompt — the scheduler holds it
+    /// queued. A request carrying a [`PreemptedState`] snapshot is *resumed*
+    /// instead (recompute mode — see [`Engine::submit_resumed`]); its
+    /// effective queue wait is computed from the snapshot, so `queued_s` is
+    /// ignored for it.
+    pub fn submit(&mut self, mut req: Request, queued_s: f64) -> Result<bool> {
+        if let Some(st) = req.resume.take() {
+            return self.submit_resumed(req, st);
+        }
         let Some(row_idx) = self.rows.iter().position(|r| r.is_none()) else {
             return Ok(false);
         };
@@ -339,34 +361,24 @@ impl Engine {
         // can never starve admissions.
         let mut fork: Option<BlockTable> = None;
         let mut full_hit = false;
-        if let Some(pool) = self.pool.as_mut() {
-            if let Some(pc) = self.prefix_cache.as_mut() {
-                if let Some(hit) = pc.lookup(&ids, pool.block_size()) {
-                    // a seed for this exact prompt lets prefill be skipped —
-                    // unless sketches are collected (rkv needs the prompt
-                    // keys host-side, which only a real prefill produces)
-                    full_hit = hit.seed.is_some() && !self.cfg.collect_sketches;
-                    fork = Some(BlockTable::fork_prefix(hit.table, ids.len(), pool));
-                }
-            }
-            let shared = fork.as_ref().map_or(0, |t| t.n_blocks());
-            let needed = pool.blocks_for(ids.len() + 1).saturating_sub(shared);
-            if let Some(pc) = self.prefix_cache.as_mut() {
-                // only entries whose shedding actually frees blocks help
-                // here, and only when the total reclaimable pins can cover
-                // the shortfall — otherwise a too-big request would wipe
-                // the cache and be declined anyway, costing every later
-                // identical-prompt admission its sharing for nothing
-                if pool.free_blocks() + pc.reclaimable_blocks(pool) >= needed {
-                    while pool.free_blocks() < needed {
-                        if !pc.shed_lru_reclaimable(pool) {
-                            break;
-                        }
+        if self.pool.is_some() {
+            let needed = {
+                let pool = self.pool.as_mut().expect("checked");
+                if let Some(pc) = self.prefix_cache.as_mut() {
+                    if let Some(hit) = pc.lookup(&ids, pool.block_size()) {
+                        // a seed for this exact prompt lets prefill be
+                        // skipped — unless sketches are collected (rkv needs
+                        // the prompt keys host-side, which only a real
+                        // prefill produces)
+                        full_hit = hit.seed.is_some() && !self.cfg.collect_sketches;
+                        fork = Some(BlockTable::fork_prefix(hit.table, ids.len(), pool));
                     }
                 }
-            }
-            if pool.free_blocks() < needed {
-                if let Some(mut t) = fork.take() {
+                let shared = fork.as_ref().map_or(0, |t| t.n_blocks());
+                pool.blocks_for(ids.len() + 1).saturating_sub(shared)
+            };
+            if !self.shed_pins_to_cover(needed) {
+                if let (Some(pool), Some(mut t)) = (self.pool.as_mut(), fork.take()) {
                     t.release_all(pool);
                 }
                 return Ok(false);
@@ -411,12 +423,7 @@ impl Engine {
             Prefilled::Seeded(seed)
         } else {
             let t0 = Instant::now();
-            let mut toks = vec![0i32; p_bucket];
-            let mut valid = vec![0f32; p_bucket];
-            for (i, &id) in ids.iter().enumerate() {
-                toks[i] = id as i32;
-                valid[i] = 1.0;
-            }
+            let (toks, valid) = padded_tokens(&ids, p_bucket);
             let prefilled = if self.pool.is_some() {
                 self.exec.prefill_rows(&toks, &valid).map(Prefilled::Rows)
             } else {
@@ -575,8 +582,193 @@ impl Engine {
         Ok(true)
     }
 
+    /// Admission-side pool check shared by fresh and resumed submits: shed
+    /// reclaimable prefix-cache pins LRU-first — but only when the total
+    /// reclaimable pins can actually cover the shortfall, so a hopeless
+    /// demand never wipes the cache (and every later identical-prompt
+    /// admission's sharing) for nothing — then report whether `needed`
+    /// free blocks are available. Always true without a pool.
+    fn shed_pins_to_cover(&mut self, needed: usize) -> bool {
+        let Some(pool) = self.pool.as_mut() else {
+            return true;
+        };
+        if let Some(pc) = self.prefix_cache.as_mut() {
+            if pool.free_blocks() + pc.reclaimable_blocks(pool) >= needed {
+                while pool.free_blocks() < needed {
+                    if !pc.shed_lru_reclaimable(pool) {
+                        break;
+                    }
+                }
+            }
+        }
+        pool.free_blocks() >= needed
+    }
+
+    /// Resume a preempted row from its snapshot (vLLM-style recompute
+    /// mode). The fed-token stream the row had consumed — prompt plus every
+    /// emitted char except the pending one — is re-prefilled in **one
+    /// batched `prefill_rows` pass**; only the K/V rows the live keep-set
+    /// still references are written back through a fresh block table (the
+    /// recompute covers every position, so evicted slots simply are not
+    /// written). The tracker records are restored verbatim — the row's
+    /// observation history (TS/MRI) and therefore its future eviction
+    /// decisions are identical to a never-preempted run's. The recompute
+    /// pass's attention/logits are discarded: the snapshot already holds
+    /// the pending input token, so no `observe`/advance runs here.
+    ///
+    /// Falls back to a restart from the prompt (counted in
+    /// `resume_fallbacks`) when the stream has outgrown the prefill bucket
+    /// or the engine has no pool (preemption never produces the latter; the
+    /// guard keeps a hand-crafted request from wedging a dense engine).
+    /// Returns Ok(false) without consuming pool capacity when no row is
+    /// free or the pool cannot cover the live set — the caller still holds
+    /// its copy of the request (snapshot included) and retries later.
+    fn submit_resumed(&mut self, req: Request, st: std::sync::Arc<PreemptedState>) -> Result<bool> {
+        if self.rows.iter().all(|r| r.is_some()) {
+            return Ok(false);
+        }
+        // cumulative wait: everything queued before earlier admissions plus
+        // the wait since this preemption (re-queue happens at preemption)
+        let queued_s = st.queued_s + st.preempted_at.elapsed().as_secs_f64();
+        // finished-but-preempted (a mid-step privatization victim): nothing
+        // to recompute — restore the outputs and let step() collect it
+        if st.finish.is_some() {
+            let row_idx = self.rows.iter().position(|r| r.is_none()).expect("checked");
+            let mut row = RowState::resume(req, self.cfg.cache, queued_s, &st);
+            row.admit_seq = self.admit_seq;
+            self.admit_seq += 1;
+            self.metrics.resumes += 1;
+            self.rows[row_idx] = Some(row);
+            return Ok(true);
+        }
+        // the fed-token stream: prompt, then every emitted char except the
+        // last (that one is `next_token`, still pending its decode step)
+        let mut ids = self
+            .tokenizer
+            .encode(&req.prompt)
+            .map_err(|e| anyhow::anyhow!("prompt: {e}"))?;
+        for c in st.out_text.chars().take(st.produced.saturating_sub(1)) {
+            ids.push(self.tokenizer.id(c).unwrap_or(0));
+        }
+        anyhow::ensure!(
+            ids.len() == st.pos as usize,
+            "resume stream length {} != snapshot pos {}",
+            ids.len(),
+            st.pos
+        );
+        let p_bucket = self.exec.prefill_bucket();
+        if self.pool.is_none() || ids.len() > p_bucket {
+            // cannot recompute in one pass: restart from the prompt (the
+            // pre-resume behavior). Counted only when the restart actually
+            // admits — a decline leaves the snapshot with the caller, and
+            // its retries must not inflate the fallback metric.
+            let admitted = self.submit(req, queued_s)?;
+            if admitted {
+                self.metrics.resume_fallbacks += 1;
+                // the restart regenerates tokens, but the request's
+                // timeline is still the original one: keep the
+                // first-admission timestamps so ttft_s/total_s honor the
+                // documented "original admission" metrics contract
+                let ticket = self.admit_seq - 1;
+                if let Some(row) = self
+                    .rows
+                    .iter_mut()
+                    .flatten()
+                    .find(|r| r.admit_seq == ticket)
+                {
+                    row.admitted_at = st.admitted_at;
+                    row.first_token_at = st.first_token_at.or(row.first_token_at);
+                }
+            }
+            return Ok(admitted);
+        }
+        let n_live = st.records.len();
+        anyhow::ensure!(n_live > 0, "resume snapshot has an empty live set");
+        anyhow::ensure!(
+            st.records.iter().all(|r| (r.pos as usize) < ids.len()),
+            "resume record position outside the recompute stream"
+        );
+        // admission: the resumed row needs blocks for its live set plus one
+        // headroom block; stale prefix-cache pins are shed like any other
+        // admission, but the prefix cache is otherwise not consulted — a
+        // mid-sequence keep-set is not a shareable prompt prefix.
+        let needed = self
+            .pool
+            .as_ref()
+            .expect("checked above")
+            .blocks_for(n_live + 1);
+        if !self.shed_pins_to_cover(needed) {
+            return Ok(false);
+        }
+        // one batched recompute prefill over the whole fed stream — K/V for
+        // every position the keep-set might reference, no worst-case buffer
+        let t0 = Instant::now();
+        let (toks, valid) = padded_tokens(&ids, p_bucket);
+        let pre = self.exec.prefill_rows(&toks, &valid)?;
+        self.metrics.record_prefill(t0.elapsed());
+
+        let row_idx = self.rows.iter().position(|r| r.is_none()).expect("checked");
+        let mut row = RowState::resume(req, self.cfg.cache, queued_s, &st);
+        row.admit_seq = self.admit_seq;
+        self.admit_seq += 1;
+        {
+            let pool = self.pool.as_mut().expect("checked above");
+            row.seq
+                .attach_block_table(BlockTable::new(pool.block_size()));
+            if !row.seq.restore_pooled(&st.records, pool) {
+                // free count was checked above; unreachable single-threaded,
+                // but roll back safely and leave the request queued
+                row.seq.release_blocks(pool);
+                return Ok(false);
+            }
+        }
+        // scatter the surviving rows: slot j holds the token born at
+        // records[j].pos, whose recomputed K/V is row `pos` of the prefill
+        // output. Runs of consecutive positions within a block batch up.
+        let re = {
+            let d = self.exec.dims();
+            d.n_layers * d.n_heads * d.d_head
+        };
+        let positions: Vec<u32> = st.records.iter().map(|r| r.pos).collect();
+        let mut j = 0;
+        while j < n_live {
+            let (blk, off, run) = {
+                let t = row.seq.block_table().expect("pooled row has a table");
+                let (blk, off) = t.locate(j).expect("restored slot mapped");
+                let max_run = (t.block_size() - off).min(n_live - j);
+                let mut run = 1;
+                while run < max_run && positions[j + run] == positions[j] + run as u32 {
+                    run += 1;
+                }
+                (blk, off, run)
+            };
+            let a = positions[j] as usize * re;
+            let b = a + run * re;
+            if let Err(e) =
+                self.exec
+                    .write_kv_rows(blk, off, &pre.k_rows[a..b], &pre.v_rows[a..b])
+            {
+                if let Some(pool) = self.pool.as_mut() {
+                    row.seq.release_blocks(pool);
+                }
+                return Err(e);
+            }
+            j += run;
+        }
+        self.metrics.resumes += 1;
+        self.metrics.recomputed_tokens += ids.len() as u64;
+        self.rows[row_idx] = Some(row);
+        Ok(true)
+    }
+
     /// Preempt row `i`: return its blocks to the pool and queue its request
-    /// for re-prefill (prompt preserved; generated text is recomputed).
+    /// for re-admission with a full decode-state snapshot attached
+    /// (recompute mode). The snapshot carries the generated text, template
+    /// cursor, pending input token, the tracker records (TS/MRI observation
+    /// history — restored verbatim on resume, never re-initialized) and the
+    /// original admission timing, so the resumed row continues
+    /// byte-identically to a never-preempted run instead of regenerating
+    /// from the prompt.
     fn preempt_row(&mut self, i: usize) {
         let Some(mut row) = self.rows[i].take() else {
             return;
@@ -585,7 +777,27 @@ impl Engine {
             row.seq.release_blocks(pool);
         }
         self.metrics.preemptions += 1;
-        self.preempted.push(row.req);
+        let records = row.seq.take_records();
+        let mut req = row.req;
+        // a row preempted twice carries the freshest snapshot only
+        req.resume = Some(std::sync::Arc::new(PreemptedState {
+            records,
+            pos: row.pos,
+            next_token: row.next_token,
+            next_forced: row.next_forced,
+            template_cursor: row.template_cursor,
+            out_text: row.out_text,
+            hole_predictions: row.hole_predictions,
+            produced: row.produced,
+            finish: row.finish,
+            evictions: row.evictions,
+            live_curve: row.live_curve,
+            queued_s: row.queued_s,
+            admitted_at: row.admitted_at,
+            first_token_at: row.first_token_at,
+            preempted_at: Instant::now(),
+        }));
+        self.preempted.push((row.admit_seq, req));
     }
 
     /// Make sure every active row can map one more token this step. When
@@ -943,19 +1155,24 @@ impl Engine {
 
     /// Convenience driver: run a whole list of requests to completion with
     /// continuous batching. Preempted requests rejoin the front of the
-    /// pending queue. Returns responses in completion order.
+    /// pending queue oldest-victim-first and *resume* (recompute mode).
+    /// Returns responses in completion order. Queue waits are measured from
+    /// each request's enqueue, so `Response::metrics.queued_s` reports real
+    /// hold time under pool pressure rather than a hard-coded zero.
     pub fn run_all(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
-        let mut pending: std::collections::VecDeque<Request> = reqs.into();
+        let t0 = Instant::now();
+        let mut pending: std::collections::VecDeque<(Request, Instant)> =
+            reqs.into_iter().map(|r| (r, t0)).collect();
         let mut done = Vec::new();
         self.metrics.start();
         loop {
             while self.has_free_row() {
-                let Some(r) = pending.pop_front() else {
+                let Some((r, enq)) = pending.pop_front() else {
                     break;
                 };
-                if !self.submit(r.clone(), 0.0)? {
+                if !self.submit(r.clone(), enq.elapsed().as_secs_f64())? {
                     // pool pressure: hold it until blocks free up
-                    pending.push_front(r);
+                    pending.push_front((r, enq));
                     break;
                 }
             }
@@ -963,13 +1180,30 @@ impl Engine {
                 break;
             }
             done.extend(self.step()?);
-            for r in self.take_preempted() {
-                pending.push_front(r);
+            // oldest victim first: reverse-push so slice order survives the
+            // front insertion (resumed waits are tracked in the snapshot)
+            let now = Instant::now();
+            for r in self.take_preempted().into_iter().rev() {
+                pending.push_front((r, now));
             }
         }
         self.metrics.stop();
         Ok(done)
     }
+}
+
+/// Stage a token stream into the prefill executable's padded bucket:
+/// tokens at [0, n), zero padding and a matching validity mask beyond.
+/// Shared by fresh prefill and recompute-mode resume.
+fn padded_tokens(ids: &[u32], bucket: usize) -> (Vec<i32>, Vec<f32>) {
+    debug_assert!(ids.len() <= bucket);
+    let mut toks = vec![0i32; bucket];
+    let mut valid = vec![0f32; bucket];
+    for (i, &id) in ids.iter().enumerate() {
+        toks[i] = id as i32;
+        valid[i] = 1.0;
+    }
+    (toks, valid)
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -1017,6 +1251,7 @@ mod tests {
             prompt: "#A=3;B=7;\n>".into(),
             template: String::new(),
             max_new,
+            resume: None,
         }
     }
 
@@ -1049,6 +1284,7 @@ mod tests {
                 prompt: "#A=3;\n>".into(),
                 template: "A=?;".into(),
                 max_new: 32,
+                resume: None,
             }])
             .unwrap();
         assert_eq!(r[0].finish, FinishReason::TemplateDone);
@@ -1105,6 +1341,10 @@ mod tests {
             e.metrics.preemptions >= 1,
             "two 6-block rows in a 9-block pool must preempt"
         );
+        assert!(
+            e.metrics.resumes >= 1 && e.metrics.resume_fallbacks == 0,
+            "preempted rows must resume via recompute, not restart"
+        );
         // leak-free: beyond the cache pin the drained pool is fully free
         e.clear_prefix_cache();
         assert_eq!(e.pool_gauges().unwrap().free_blocks, 9);
@@ -1143,6 +1383,7 @@ mod tests {
             prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
             template: String::new(),
             max_new: 50,
+            resume: None,
         }
     }
 
@@ -1258,6 +1499,7 @@ mod tests {
                 prompt: "#A=3;B=7;\n?".into(), // last char differs (slot 10)
                 template: String::new(),
                 max_new: 24,
+                resume: None,
             }])
             .unwrap();
         assert_eq!(r3.len(), 1);
@@ -1320,6 +1562,7 @@ mod tests {
                     prompt: (*p).into(),
                     template: String::new(),
                     max_new: 8,
+                    resume: None,
                 }])
                 .unwrap();
             assert_eq!(r.len(), 1);
@@ -1358,6 +1601,7 @@ mod tests {
                         prompt: (*p).into(),
                         template: String::new(),
                         max_new: 40,
+                        resume: None,
                     }])
                     .unwrap();
                 r[0].text.clone()
@@ -1373,6 +1617,7 @@ mod tests {
                 prompt: (*p).into(),
                 template: String::new(),
                 max_new: 40,
+                resume: None,
             })
             .collect();
         let mut rs = e.run_all(reqs).unwrap();
@@ -1385,5 +1630,248 @@ mod tests {
         assert!(g.prefix_hits >= 2, "later prompts must hit the shared block");
         e.clear_prefix_cache();
         assert_eq!(e.pool_gauges().unwrap().free_blocks, 16);
+    }
+
+    fn policy_cfg(policy: &str) -> EngineConfig {
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut cfg = sim_cfg(1, Some(pool));
+        cfg.policy = policy.into();
+        cfg
+    }
+
+    #[test]
+    fn resume_preserves_tracker_and_output_across_policies() {
+        // The acceptance property: a preempted-and-resumed row is
+        // byte-identical to a never-preempted run — same output, same
+        // eviction keep-sets — because the tracker records (TS/MRI/H1/H2
+        // observation history) survive the round trip instead of being
+        // re-initialized. Checked for the lagged policy and three greedy
+        // baselines whose scores all read different record fields.
+        for policy in ["lazy", "h2o", "tova", "streaming"] {
+            let mut a = Engine::new_sim(policy_cfg(policy)).unwrap(); // never preempted
+            let mut b = Engine::new_sim(policy_cfg(policy)).unwrap(); // preempted at step 35
+            assert!(a.submit(req(1, 45), 0.0).unwrap());
+            assert!(b.submit(req(1, 45), 0.0).unwrap());
+            for _ in 0..35 {
+                a.step().unwrap();
+                b.step().unwrap();
+            }
+            b.preempt_row(0);
+            assert_eq!(b.active(), 0);
+            let mut pre = b.take_preempted();
+            assert_eq!(pre.len(), 1);
+            {
+                let st = pre[0].resume.as_ref().expect("snapshot attached");
+                assert!(st.finish.is_none());
+                assert!(st.produced > 1);
+                assert!(!st.records.is_empty());
+            }
+            assert!(b.submit(pre.pop().unwrap(), 0.0).unwrap());
+            assert_eq!(b.metrics.resumes, 1, "{policy}");
+            assert_eq!(
+                b.metrics.resume_fallbacks, 0,
+                "{policy}: must recompute, not restart"
+            );
+            assert!(b.metrics.recomputed_tokens > 0, "{policy}");
+            let same_records = |a: &Engine, b: &Engine, at: &str| {
+                let ra = a.rows[0].as_ref().unwrap().seq.records();
+                let rb = b.rows[0].as_ref().unwrap().seq.records();
+                assert_eq!(ra.len(), rb.len(), "{policy} ({at}): keep-set size");
+                for (x, y) in ra.iter().zip(rb.iter()) {
+                    assert_eq!(x.pos, y.pos, "{policy} ({at}): keep-set identity");
+                    assert_eq!(x.ts, y.ts, "{policy} ({at}): TS");
+                    assert_eq!(x.mri, y.mri, "{policy} ({at}): MRI must survive");
+                    assert_eq!(x.hits, y.hits, "{policy} ({at})");
+                    assert_eq!(x.last_attn, y.last_attn, "{policy} ({at})");
+                    assert_eq!(x.cum_attn, y.cum_attn, "{policy} ({at})");
+                }
+            };
+            // restored, not re-initialized: records match the control engine
+            // immediately after resume, and eviction decisions stay in
+            // lockstep over the following steps
+            same_records(&a, &b, "post-resume");
+            for _ in 0..5 {
+                a.step().unwrap();
+                b.step().unwrap();
+            }
+            same_records(&a, &b, "post-resume + 5 steps");
+            let finish = |e: &mut Engine| -> Vec<Response> {
+                let mut out = Vec::new();
+                for _ in 0..10_000 {
+                    out.extend(e.step().unwrap());
+                    if e.active() == 0 {
+                        break;
+                    }
+                }
+                out
+            };
+            let ra = finish(&mut a);
+            let rb = finish(&mut b);
+            assert_eq!(ra.len(), 1);
+            assert_eq!(rb.len(), 1);
+            assert_eq!(ra[0].text, rb[0].text, "{policy}: output diverged");
+            assert_eq!(
+                ra[0].metrics.evictions, rb[0].metrics.evictions,
+                "{policy}: eviction history diverged"
+            );
+            assert_eq!(ra[0].metrics.tokens_out, rb[0].metrics.tokens_out);
+            assert_eq!(ra[0].live_curve, rb[0].live_curve, "{policy}: live curves");
+        }
+    }
+
+    #[test]
+    fn same_step_preemption_victims_requeue_oldest_first() {
+        // Four rows in an 8-block pool: one long private row, one donor row
+        // and two pure prefix forks. When all three 16-token rows hit a
+        // block boundary in the same step with one free block, the two
+        // forks (whose releases free nothing — every block they hold is
+        // shared) are both preempted in ONE ensure_block_headroom pass.
+        // take_preempted must hand them back oldest victim first.
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 8,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(4, Some(pool))).unwrap();
+        let mk = |id: u64, prompt: &str| Request {
+            id,
+            prompt: prompt.into(),
+            template: String::new(),
+            max_new: 24,
+            resume: None,
+        };
+        let prompt_a = format!("#{}\n>", "A=1;".repeat(8)); // 35 chars → 5 blocks
+        let p16 = "#A=3;B=7;C=25;\n>"; // exactly 2 whole blocks
+        assert_eq!(p16.chars().count(), 16);
+        assert!(e.submit(mk(0, &prompt_a), 0.0).unwrap());
+        assert!(e.submit(mk(1, p16), 0.0).unwrap()); // donor: allocates 2
+        assert!(e.submit(mk(2, p16), 0.0).unwrap()); // fork: allocates 0
+        assert!(e.submit(mk(3, p16), 0.0).unwrap()); // fork: allocates 0
+        assert_eq!(e.active(), 4);
+        e.step().unwrap();
+        let pre = e.take_preempted();
+        assert_eq!(pre.len(), 2, "both forks must be preempted in one step");
+        assert_eq!(pre[0].id, 2, "oldest victim must drain first");
+        assert_eq!(pre[1].id, 3);
+        for r in &pre {
+            let st = r.resume.as_ref().expect("victims carry resume state");
+            assert_eq!(st.records.len(), 16);
+            assert!(st.finish.is_none());
+        }
+        // resubmit oldest-first and drive everything to completion: the
+        // resumed rows recompute (no fallback) and identical prompts still
+        // produce identical outputs
+        let mut pending: std::collections::VecDeque<Request> = pre.into_iter().collect();
+        let mut done: Vec<Response> = Vec::new();
+        for _ in 0..10_000 {
+            done.extend(e.step().unwrap());
+            for r in e.take_preempted().into_iter().rev() {
+                pending.push_front(r);
+            }
+            while e.has_free_row() {
+                let Some(r) = pending.pop_front() else { break };
+                if !e.submit(r.clone(), 0.0).unwrap() {
+                    pending.push_front(r);
+                    break;
+                }
+            }
+            if e.active() == 0 && pending.is_empty() {
+                break;
+            }
+        }
+        let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert!(e.metrics.resumes >= 2, "forks must resume, not restart");
+        assert_eq!(e.metrics.resume_fallbacks, 0);
+        assert!(e.metrics.recomputed_tokens >= 32);
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done[1].text, done[2].text, "resumed fork diverged");
+        assert_eq!(done[1].text, done[3].text, "resumed fork diverged");
+    }
+
+    #[test]
+    fn resume_accumulates_queue_wait_and_preserves_timing() {
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 0,
+            high_watermark: 0,
+        };
+        let mut e = Engine::new_sim(sim_cfg(1, Some(pool))).unwrap();
+        assert!(e.submit(req(1, 40), 0.25).unwrap());
+        for _ in 0..10 {
+            e.step().unwrap();
+        }
+        e.preempt_row(0);
+        let mut pre = e.take_preempted();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        // the 0.0 here is ignored: the resumed wait is the snapshot's
+        // accumulated 0.25 s plus the measured re-queue time
+        assert!(e.submit(pre.pop().unwrap(), 0.0).unwrap());
+        let mut resp = None;
+        for _ in 0..10_000 {
+            let done = e.step().unwrap();
+            if let Some(r) = done.into_iter().next() {
+                resp = Some(r);
+                break;
+            }
+        }
+        let r = resp.expect("resumed row completes");
+        assert!(
+            r.metrics.queued_s >= 0.28,
+            "queue wait must accumulate across preemption: {}",
+            r.metrics.queued_s
+        );
+        // TTFT is a first-admission property — it predates the preemption,
+        // so the 40 ms re-queue sleep must separate it from completion
+        // (a relative bound: an absolute one would flake on slow runners)
+        assert!(
+            r.metrics.total_s - r.metrics.ttft_s >= 0.035,
+            "ttft {} must not absorb the re-queue wait (total {})",
+            r.metrics.ttft_s,
+            r.metrics.total_s
+        );
+        assert!(r.metrics.total_s >= 0.04, "total {}", r.metrics.total_s);
+        assert_eq!(r.metrics.tokens_out, 40);
+        assert_eq!(e.metrics.resumes, 1);
+    }
+
+    #[test]
+    fn resume_falls_back_to_restart_when_stream_outgrows_bucket() {
+        // 11-token prompt + 56 generated tokens = a 67-token fed stream,
+        // past the sim's 64-token prefill bucket: recompute is impossible
+        // in one pass, so the resume restarts from the prompt (counted).
+        let solo = {
+            let mut e = Engine::new_sim(policy_cfg("lazy")).unwrap();
+            e.run_all(vec![req(1, 60)]).unwrap()[0].text.clone()
+        };
+        let mut e = Engine::new_sim(policy_cfg("lazy")).unwrap();
+        assert!(e.submit(req(1, 60), 0.0).unwrap());
+        for _ in 0..55 {
+            e.step().unwrap();
+        }
+        e.preempt_row(0);
+        let mut pre = e.take_preempted();
+        assert!(pre[0].resume.as_ref().unwrap().pos > 64);
+        assert!(e.submit(pre.pop().unwrap(), 0.0).unwrap());
+        assert_eq!(e.metrics.resume_fallbacks, 1);
+        assert_eq!(e.metrics.resumes, 0);
+        let mut done = Vec::new();
+        for _ in 0..10_000 {
+            done.extend(e.step().unwrap());
+            if e.active() == 0 {
+                break;
+            }
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].metrics.tokens_out, 60, "restart regenerates fully");
+        assert_eq!(done[0].text, solo, "restart output must still match");
     }
 }

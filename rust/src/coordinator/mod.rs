@@ -6,7 +6,11 @@ pub mod row;
 
 pub use engine::Engine;
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::eviction::PolicyParams;
+use crate::kvcache::TokenRecord;
 use crate::kvpool::{PoolConfig, PrefixCacheConfig};
 use crate::metrics::RequestMetrics;
 
@@ -113,6 +117,66 @@ pub struct Request {
     pub prompt: String,
     pub template: String,
     pub max_new: usize,
+    /// Recompute-mode resume state, present iff this request was preempted
+    /// mid-decode. The engine attaches it in `preempt_row`, it rides the
+    /// engine → server → queue → engine round trip unchanged, and the next
+    /// `Engine::submit` consumes it to *resume* the row (one batched
+    /// re-prefill of prompt + generated tokens, tracker records restored
+    /// verbatim) instead of restarting from the prompt. Always `None` for
+    /// fresh requests. `Arc` because admission under pressure retries:
+    /// every declined attempt clones the request, and the snapshot (live
+    /// records, sketches, generated text) must not be deep-copied per poll.
+    pub resume: Option<Arc<PreemptedState>>,
+}
+
+/// Full decode-state snapshot of a preempted row — everything a resumed row
+/// needs to continue byte-identically to a never-preempted run. The K/V
+/// bytes themselves are NOT snapshotted: they are deterministic functions of
+/// the fed-token stream, so resume recomputes them in one batched prefill of
+/// prompt + generated tokens and rewrites only the rows the live keep-set
+/// still references. The tracker records (TS/MRI/H1/H2 observation history)
+/// are restored as-is, never re-initialized — a resumed row's lagged
+/// eviction decisions therefore match a never-preempted run exactly.
+#[derive(Clone, Debug)]
+pub struct PreemptedState {
+    /// Live tracker records at preemption (the post-eviction keep-set, in
+    /// slot order). Restored verbatim on resume.
+    pub records: Vec<TokenRecord>,
+    /// Absolute position of the next input token.
+    pub pos: u32,
+    /// The token to feed at the next decode step.
+    pub next_token: u32,
+    /// Whether `next_token` was forced by the template.
+    pub next_forced: bool,
+    /// Chars of `req.template` already consumed.
+    pub template_cursor: usize,
+    /// Generated/forced chars emitted so far (every one except the last was
+    /// already fed back as an input — the recompute stream is
+    /// `prompt ++ out_text[..produced-1]`).
+    pub out_text: String,
+    /// Model predictions at `?` holes so far.
+    pub hole_predictions: Vec<char>,
+    /// Tokens produced so far.
+    pub produced: usize,
+    /// Set when the row finished in the same step it was preempted (it was
+    /// another row's privatization victim) — nothing left to recompute.
+    pub finish: Option<FinishReason>,
+    /// Evictions charged to the row so far.
+    pub evictions: usize,
+    /// Live-count curve so far (continues across the round trip).
+    pub live_curve: Vec<usize>,
+    /// Queue wait accumulated before (each) earlier admission, seconds.
+    /// The resumed admission adds the wait since `preempted_at`, so
+    /// wait-latency metrics cover the request's full queued time.
+    pub queued_s: f64,
+    /// First-admission timestamp — preserved so `total_s` spans the
+    /// request's real lifetime, preemptions included.
+    pub admitted_at: Instant,
+    /// First-token timestamp from the original admission (TTFT is a
+    /// first-admission property; resume must not reset it).
+    pub first_token_at: Option<Instant>,
+    /// When the row was preempted; the re-queue wait is measured from here.
+    pub preempted_at: Instant,
 }
 
 /// Why a row finished.

@@ -3,7 +3,7 @@
 
 use std::time::Instant;
 
-use crate::coordinator::{FinishReason, Request};
+use crate::coordinator::{FinishReason, PreemptedState, Request};
 use crate::kvcache::SeqKv;
 
 #[derive(Debug)]
@@ -53,6 +53,33 @@ impl RowState {
             queued_s,
             evictions: 0,
             live_curve: Vec::new(),
+            admit_seq: 0,
+        }
+    }
+
+    /// Rebuild a row from a preemption snapshot (recompute-mode resume).
+    /// Every decode-facing field — template cursor, outputs, position, the
+    /// pending input token, and the original admission/first-token
+    /// timestamps — continues exactly where the preempted row stopped. The
+    /// sequence records are restored separately by the engine (they must go
+    /// through the paged block-mapping path).
+    pub fn resume(req: Request, capacity: usize, queued_s: f64, st: &PreemptedState) -> RowState {
+        RowState {
+            req,
+            seq: SeqKv::new(capacity),
+            pos: st.pos,
+            next_token: st.next_token,
+            next_forced: st.next_forced,
+            template_cursor: st.template_cursor,
+            out_text: st.out_text.clone(),
+            hole_predictions: st.hole_predictions.clone(),
+            produced: st.produced,
+            finish: st.finish,
+            admitted_at: st.admitted_at,
+            first_token_at: st.first_token_at,
+            queued_s,
+            evictions: st.evictions,
+            live_curve: st.live_curve.clone(),
             admit_seq: 0,
         }
     }
@@ -109,6 +136,7 @@ mod tests {
             prompt: "#A=3;\n>".into(),
             template: template.into(),
             max_new,
+            resume: None,
         }
     }
 

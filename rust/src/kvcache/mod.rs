@@ -270,6 +270,45 @@ impl SeqKv {
         (evicted, freed)
     }
 
+    /// Tracker snapshot for recompute-mode preemption: hand the live
+    /// records (keep-set, in slot order) to the caller. The per-record
+    /// TS/MRI/attention history is the observation state the paper's lagged
+    /// eviction depends on — a preempted row carries it across the re-queue
+    /// round trip instead of losing it to re-initialization.
+    pub fn take_records(&mut self) -> Vec<TokenRecord> {
+        std::mem::take(&mut self.records)
+    }
+
+    /// Tracker restore for recompute-mode resume: map one paged slot per
+    /// record (block-at-a-time, like `push_pooled` — a fresh table never
+    /// CoWs), then install the records verbatim. No tracker field is
+    /// re-initialized. Returns `false` when the pool cannot cover the
+    /// mapping; the caller releases the partially grown table and retries
+    /// once capacity returns (records stay with the caller untouched —
+    /// they were not consumed).
+    pub fn restore_pooled(&mut self, recs: &[TokenRecord], pool: &mut BlockPool) -> bool {
+        assert!(
+            self.records.is_empty(),
+            "restore into a non-empty sequence"
+        );
+        assert!(
+            recs.len() <= self.capacity,
+            "restore overflow: {} records, capacity {}",
+            recs.len(),
+            self.capacity
+        );
+        if let Some(t) = self.block_table.as_mut() {
+            while t.len() < recs.len() {
+                if !t.push_token(pool) {
+                    return false;
+                }
+            }
+        }
+        self.records = recs.to_vec();
+        self.peak_live = self.peak_live.max(self.records.len());
+        true
+    }
+
     /// Return every held block to the pool (sequence finished or preempted).
     pub fn release_blocks(&mut self, pool: &mut BlockPool) -> usize {
         match self.block_table.as_mut() {
@@ -594,6 +633,62 @@ mod tests {
         assert_eq!(evicted.len(), 4);
         assert_eq!(freed, 0);
         assert_eq!(s.release_blocks(&mut pool), 0);
+    }
+
+    #[test]
+    fn take_and_restore_round_trip_preserves_tracker_state() {
+        let (mut s, mut pool) = pooled_pair();
+        for i in 0..9 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        // accumulate non-trivial tracker state, then evict to a keep-set
+        for r in s.records_mut() {
+            r.ts = r.pos + 3;
+            r.mri = 7;
+            r.cum_attn = 0.5;
+            r.hits = 2;
+        }
+        s.apply_keep_pooled(&[8, 0, 5], 12, &mut pool);
+        let snapshot = s.take_records();
+        assert_eq!(snapshot.len(), 3);
+        assert!(s.is_empty());
+        s.release_blocks(&mut pool);
+        assert_eq!(pool.free_blocks(), 8);
+
+        // restore into a fresh pooled sequence: same order, same state
+        let mut s2 = SeqKv::new(32);
+        s2.attach_block_table(crate::kvpool::BlockTable::new(pool.block_size()));
+        assert!(s2.restore_pooled(&snapshot, &mut pool));
+        assert_eq!(s2.len(), 3);
+        assert_eq!(s2.block_table().unwrap().len(), 3);
+        assert_eq!(pool.used_blocks(), 1);
+        for (a, b) in snapshot.iter().zip(s2.records().iter()) {
+            assert_eq!(a.pos, b.pos);
+            assert_eq!(a.ts, b.ts);
+            assert_eq!(a.mri, b.mri);
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.cum_attn, b.cum_attn);
+        }
+    }
+
+    #[test]
+    fn restore_pooled_fails_cleanly_on_exhaustion() {
+        use crate::kvpool::{BlockPool, BlockTable, PoolConfig};
+        let mut pool = BlockPool::new(PoolConfig {
+            block_size: 4,
+            n_blocks: 1,
+            low_watermark: 0,
+            high_watermark: 0,
+        })
+        .unwrap();
+        let recs: Vec<TokenRecord> = (0..6).map(|i| TokenRecord::new(i, i)).collect();
+        let mut s = SeqKv::new(32);
+        s.attach_block_table(BlockTable::new(4));
+        assert!(!s.restore_pooled(&recs, &mut pool));
+        assert!(s.is_empty(), "failed restore must not install records");
+        // caller releases the partially grown table
+        assert_eq!(s.release_blocks(&mut pool), 1);
+        assert_eq!(pool.free_blocks(), 1);
     }
 
     #[test]

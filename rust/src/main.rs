@@ -109,6 +109,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         prompt: prompt.clone(),
         template: args.str_or("template", ""),
         max_new,
+        resume: None,
     }])?;
     for r in responses {
         println!("prompt : {prompt:?}");
@@ -147,6 +148,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
             prompt: s.prompt.clone(),
             template: s.template.clone(),
             max_new: s.template.chars().count() + 4,
+            resume: None,
         });
         samples.push(s);
     }

@@ -16,6 +16,15 @@ pub struct EngineMetrics {
     pub eviction_count: u64,
     /// Rows preempted because the shared block pool ran dry (paged mode).
     pub preemptions: u64,
+    /// Preempted rows re-admitted in recompute mode: decode state and
+    /// tracker records restored, generation continued (not restarted).
+    pub resumes: u64,
+    /// Tokens re-prefilled by recompute-mode resumes (the one-pass prefill
+    /// cost paid instead of regenerating every token).
+    pub recomputed_tokens: u64,
+    /// Resumes that could not recompute (fed stream outgrew the prefill
+    /// bucket, or no pool) and fell back to a restart from the prompt.
+    pub resume_fallbacks: u64,
     /// Admissions that skipped the prefill executable entirely because a
     /// prefix-cache entry covered the full prompt (physical paging).
     pub prefill_skips: u64,
@@ -97,6 +106,11 @@ pub struct PoolGauges {
     pub utilization: f64,
     /// Cumulative preemption count for the engine.
     pub preemptions: u64,
+    /// Cumulative recompute-mode resumes (preempted rows that continued
+    /// where they stopped instead of restarting).
+    pub resumes: u64,
+    /// Cumulative tokens re-prefilled by those resumes.
+    pub recomputed_tokens: u64,
     /// Blocks currently referenced more than once (prefix sharing / CoW).
     pub shared_blocks: usize,
     /// Cumulative prompt-prefix cache hits (a hit = whole blocks reused).

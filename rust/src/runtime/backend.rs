@@ -102,6 +102,16 @@ pub trait DecodeBackend: Send {
 
     /// Paged prefill: token-major rows instead of a worst-case `[L,H,S,dh]`
     /// buffer. The caller scatters the rows through the row's block table.
+    ///
+    /// The token stream is NOT required to be a prompt: recompute-mode
+    /// preemption resume feeds `prompt ++ generated` through this same
+    /// entry point to re-materialize a mid-sequence row in one pass. Both
+    /// implementations honor that contract for free because prefill K/V is
+    /// a function of (token, position) only — row `i` of the output must be
+    /// byte-identical to what a decode step would have produced for the
+    /// same token at position `i` (the sim test
+    /// `prefill_rows_recompute_matches_decode_rows` pins this; on the PJRT
+    /// path both run the same RoPE/projection weights).
     fn prefill_rows(&mut self, tokens: &[i32], valid: &[f32]) -> Result<PrefillRows>;
 
     /// Write token-major `[n, L·H·dh]` K/V rows at `(block, offset)`.
@@ -680,6 +690,36 @@ mod tests {
         let c = b.exec_counts();
         assert_eq!(c.block_copies, 1);
         assert_eq!(c.row_moves, 1);
+    }
+
+    #[test]
+    fn prefill_rows_recompute_matches_decode_rows() {
+        // Recompute-mode resume re-prefills prompt + generated tokens in one
+        // pass; the rows it writes back must be byte-identical to the rows
+        // the original decode steps wrote. Decode writes kv_row_into(tok,
+        // pos) for the token fed at pos — so prefilling the same fed stream
+        // must reproduce exactly those bytes at every position.
+        let mut b = SimBackend::new(1, 32);
+        b.init_paged(8, 8).unwrap();
+        let p = b.prefill_bucket();
+        // a "mid-sequence" stream: 5 prompt tokens + 4 generated ones
+        let fed: Vec<i32> = vec![3, 9, 4, 1, 7, 22, 13, 8, 30];
+        let mut toks = vec![0i32; p];
+        let mut valid = vec![0f32; p];
+        for (i, &t) in fed.iter().enumerate() {
+            toks[i] = t;
+            valid[i] = 1.0;
+        }
+        let rows = b.prefill_rows(&toks, &valid).unwrap();
+        let re = b.row_elems();
+        assert_eq!(rows.k_rows.len(), fed.len() * re);
+        for (i, &t) in fed.iter().enumerate() {
+            let mut k = vec![0f32; re];
+            let mut v = vec![0f32; re];
+            SimBackend::kv_row_into(&mut k, &mut v, t, i as i32);
+            assert_eq!(&rows.k_rows[i * re..(i + 1) * re], &k[..], "K row {i}");
+            assert_eq!(&rows.v_rows[i * re..(i + 1) * re], &v[..], "V row {i}");
+        }
     }
 
     #[test]

@@ -9,8 +9,13 @@
 //!
 //! With a shared KV block pool, free rows are no longer sufficient: the
 //! `admission::AdmissionController` holds the queue while free blocks sit
-//! under the pool's low watermark (hysteresis up to the high watermark),
-//! and requests the engine preempts re-enter via `RequestQueue::push_front`.
+//! under the pool's low watermark (hysteresis up to the high watermark).
+//! Requests the engine preempts come back oldest-victim-first, each
+//! carrying its decode-state snapshot (`QueuedRequest::resume`), and
+//! re-enter via `RequestQueue::push_front_all` — one batch insertion that
+//! preserves that order, where a per-request `push_front` loop would
+//! reverse same-step victims. Their re-admission *resumes* generation
+//! (recompute mode) rather than restarting it.
 
 pub mod admission;
 pub mod queue;

@@ -2,8 +2,10 @@
 //! the engine thread (std sync primitives; tokio is not in the offline set).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+use crate::coordinator::PreemptedState;
 
 #[derive(Clone, Debug)]
 pub struct QueuedRequest {
@@ -14,7 +16,15 @@ pub struct QueuedRequest {
     /// Empty ⇒ free-running generation.
     pub template: String,
     pub max_new: usize,
+    /// When this request (re-)entered the queue. For a preempted request
+    /// this is the re-queue time; the wait accumulated before earlier
+    /// admissions travels inside `resume` (`PreemptedState::queued_s`), so
+    /// wait-latency metrics always cover the full queued time.
     pub queued_at: Instant,
+    /// Recompute-mode resume state for a preempted request (None for fresh
+    /// submissions). Rides the queue round trip back into `Engine::submit`;
+    /// `Arc` keeps the per-admission-attempt clone a refcount bump.
+    pub resume: Option<Arc<PreemptedState>>,
 }
 
 #[derive(Default)]
@@ -56,6 +66,22 @@ impl RequestQueue {
         let mut g = self.inner.lock().unwrap();
         g.q.push_front(req);
         self.cv.notify_one();
+    }
+
+    /// Put several requests at the front of the queue *preserving slice
+    /// order*: `reqs[0]` pops first. This is the re-queue path for
+    /// same-step preemption victims — `Engine::take_preempted` returns them
+    /// oldest-first, and calling `push_front` per request would reverse
+    /// that, letting the youngest victim jump the line it just lost.
+    pub fn push_front_all(&self, reqs: Vec<QueuedRequest>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for r in reqs.into_iter().rev() {
+            g.q.push_front(r);
+        }
+        self.cv.notify_all();
     }
 
     /// Non-blocking pop (engine polls between iterations).
@@ -107,6 +133,7 @@ mod tests {
             template: String::new(),
             max_new: 8,
             queued_at: Instant::now(),
+            resume: None,
         }
     }
 
@@ -129,6 +156,22 @@ mod tests {
         assert_eq!(q.try_pop().unwrap().id, 9);
         assert_eq!(q.try_pop().unwrap().id, 1);
         assert_eq!(q.try_pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn push_front_all_preserves_victim_order() {
+        let q = RequestQueue::new();
+        q.push(req(1));
+        // two same-step preemption victims, oldest (7) first — they must
+        // pop in exactly that order, ahead of the queued request
+        q.push_front_all(vec![req(7), req(8)]);
+        assert_eq!(q.try_pop().unwrap().id, 7);
+        assert_eq!(q.try_pop().unwrap().id, 8);
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert!(q.try_pop().is_none());
+        // empty batch is a no-op
+        q.push_front_all(Vec::new());
+        assert!(q.try_pop().is_none());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //!      "ttft_ms": 12.3, "total_ms": 456.7, "tokens": 256, "evictions": 3,
 //!      "pool": {"free_blocks": 9, "total_blocks": 64,        // paged mode
 //!               "utilization": 0.86, "preemptions": 2,       // only
+//!               "resumes": 2, "recomputed_tokens": 120,
 //!               "shared_blocks": 3, "prefix_hits": 5, "prefix_misses": 2,
 //!               "prefix_entries": 1, "prefix_pinned_blocks": 3}}
 //!   ← {"error": "..."}                                    // on any failure
@@ -21,11 +22,20 @@
 //! `AdmissionController` each iteration: while free blocks sit below the
 //! pool's low watermark the queue is held (requests wait, connections stay
 //! blocked on their reply channel) until the pool recovers past the high
-//! watermark. A request the engine declines (`submit -> Ok(false)`) or
-//! preempts mid-decode goes back to the *front* of the queue with its
-//! prompt intact and is re-prefilled when capacity returns — clients never
-//! see a preemption, only latency. Completed responses carry the pool
-//! gauges above so clients/scrapers observe global pressure.
+//! watermark. A request the engine declines (`submit -> Ok(false)`) goes
+//! back to the *front* of the queue untouched. A request preempted
+//! mid-decode comes back from `Engine::take_preempted` carrying its full
+//! decode-state snapshot (`Request::resume`); the serve loop re-queues the
+//! whole batch at the front **in the order the engine returned it — oldest
+//! victim first, via `RequestQueue::push_front_all`** (a per-request
+//! `push_front` loop would reverse same-step victims), and its re-admission
+//! *resumes* generation (recompute mode: one batched re-prefill, tracker
+//! state restored) instead of restarting it. Clients never see a
+//! preemption, only latency; the wait accumulated across the round trip is
+//! reported in the response's queue-wait metric (the snapshot carries the
+//! pre-preemption wait, so nothing is lost to the re-queue). Completed
+//! responses carry the pool gauges above — including `resumes` and
+//! `recomputed_tokens` — so clients/scrapers observe global pressure.
 //!
 //! ## Failure delivery
 //!
@@ -77,6 +87,8 @@ pub fn pool_gauges_to_json(g: &PoolGauges) -> Json {
         .set("total_blocks", g.total_blocks)
         .set("utilization", g.utilization)
         .set("preemptions", g.preemptions as f64)
+        .set("resumes", g.resumes as f64)
+        .set("recomputed_tokens", g.recomputed_tokens as f64)
         .set("shared_blocks", g.shared_blocks)
         .set("prefix_hits", g.prefix_hits as f64)
         .set("prefix_misses", g.prefix_misses as f64)
@@ -104,6 +116,7 @@ pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
             .to_string(),
         max_new: max_new.min(MAX_MAX_NEW),
         queued_at: Instant::now(),
+        resume: None,
     })
 }
 
@@ -193,6 +206,7 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
                 prompt: q.prompt.clone(),
                 template: q.template.clone(),
                 max_new: q.max_new,
+                resume: q.resume.clone(),
             };
             match engine.submit(req, queued_s) {
                 Ok(true) => {
@@ -234,16 +248,28 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
                     }
                 }
             }
-            // preempted rows: prompt preserved, first in line for re-prefill
-            for r in engine.take_preempted() {
-                queue.push_front(QueuedRequest {
-                    id: r.id,
-                    prompt: r.prompt,
-                    template: r.template,
-                    max_new: r.max_new,
-                    queued_at: Instant::now(),
-                });
-            }
+            // preempted rows: decode state preserved in `resume`, first in
+            // line for recompute re-admission. The batch keeps the engine's
+            // oldest-victim-first order (push_front_all; a per-request
+            // push_front here would reverse same-step victims). `queued_at`
+            // marks the re-queue time only — the wait accumulated before
+            // the preemption travels inside the snapshot, so the final
+            // queue-wait metric covers the request's full queued time.
+            let now = Instant::now();
+            queue.push_front_all(
+                engine
+                    .take_preempted()
+                    .into_iter()
+                    .map(|r| QueuedRequest {
+                        id: r.id,
+                        prompt: r.prompt,
+                        template: r.template,
+                        max_new: r.max_new,
+                        queued_at: now,
+                        resume: r.resume,
+                    })
+                    .collect(),
+            );
         }
         if idle {
             std::thread::sleep(std::time::Duration::from_millis(2));
@@ -382,6 +408,8 @@ mod tests {
             total_blocks: 64,
             utilization: 0.859,
             preemptions: 2,
+            resumes: 2,
+            recomputed_tokens: 120,
             shared_blocks: 3,
             prefix_hits: 5,
             prefix_misses: 2,
@@ -396,6 +424,8 @@ mod tests {
         assert_eq!(parsed.usize_at("free_blocks").unwrap(), 9);
         assert_eq!(parsed.usize_at("total_blocks").unwrap(), 64);
         assert_eq!(parsed.usize_at("preemptions").unwrap(), 2);
+        assert_eq!(parsed.usize_at("resumes").unwrap(), 2);
+        assert_eq!(parsed.usize_at("recomputed_tokens").unwrap(), 120);
         assert!((parsed.f64_at("utilization").unwrap() - 0.859).abs() < 1e-9);
         assert_eq!(parsed.usize_at("shared_blocks").unwrap(), 3);
         assert_eq!(parsed.usize_at("prefix_hits").unwrap(), 5);

@@ -4,8 +4,11 @@
 //! replayer ([`super::replay`]); this module packs them into one
 //! [`BlockPool`] with the same iteration-level mechanics as the engine:
 //! watermark-gated admission, block-at-a-time growth, whole-block
-//! reclamation after eviction, and youngest-first preemption with
-//! re-prefill when the pool runs dry. The headline metric is
+//! reclamation after eviction, and youngest-first preemption when the pool
+//! runs dry — with either recompute-mode resume (re-prefill the live set at
+//! the preemption cursor and continue; the engine's behavior) or
+//! restart-from-prompt (the pre-resume baseline) as the re-admission cost
+//! model, selected by `CapacitySpec::recompute_resume`. The headline metric is
 //! `mean_concurrency` — the sustained batch size under the budget; a policy
 //! whose live set collapses to ≈ B+W (LazyEviction) sustains several times
 //! the concurrency of FullKV's unbounded growth.
@@ -48,6 +51,16 @@ pub struct CapacitySpec {
     /// Per-token KV footprint used to report physical bytes (paper scale by
     /// default, so the reclaimed memory reads in real GB).
     pub kv_cost: KvCost,
+    /// Preemption cost model. `true` = recompute-mode resume (the engine's
+    /// behavior since the resume PR): a preempted sequence re-admits by
+    /// re-prefilling its live set at the preemption point in one pass
+    /// (`recomputed_tokens` counts that cost) and continues decoding at the
+    /// cursor it was stopped at. `false` = restart (the pre-resume
+    /// baseline): the sequence re-prefills the prompt only and replays its
+    /// whole live curve from step 0, throwing away `restarted_steps` of
+    /// decode work per preemption. Default `false` so baseline capacity
+    /// numbers stay comparable across PRs; the delta is the cost model.
+    pub recompute_resume: bool,
 }
 
 impl CapacitySpec {
@@ -71,6 +84,7 @@ impl CapacitySpec {
             shared_prefix_tokens: 0,
             share_prefix: false,
             kv_cost: KvCost::paper_7b(),
+            recompute_resume: false,
         }
     }
 }
@@ -102,6 +116,19 @@ pub struct CapacityReport {
     /// The per-row worst-case baseline this PR removed: `max_rows` dense
     /// `[L, H, S, dh]` buffers sized to the replay cache cap.
     pub dense_kv_bytes: usize,
+    /// Preempted sequences re-admitted in recompute mode.
+    pub resumes: u64,
+    /// Tokens re-prefilled by those resumes — prompt + generated-so-far per
+    /// resume, matching the engine's one-pass recompute prefill cost (NOT
+    /// the smaller post-eviction live set the re-admitted blocks hold).
+    pub recomputed_tokens: u64,
+    /// Decode steps thrown away by restart-mode preemptions (zero with
+    /// `recompute_resume`) — the work the resume path saves.
+    pub restarted_steps: u64,
+    /// Total per-sequence decode steps advanced. With recompute resume this
+    /// is exactly the sum of the live-curve lengths; with restarts it is
+    /// that plus `restarted_steps` — the identity the cost-model test pins.
+    pub decode_steps: u64,
 }
 
 /// One queued/active sequence: its live curve and (when active) its table.
@@ -175,7 +202,9 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         donor = Some(t);
     }
 
-    let mut queue: VecDeque<usize> = VecDeque::new();
+    // queue entries carry a resume cursor: 0 for fresh sequences, the
+    // preemption point for recompute-mode re-admissions
+    let mut queue: VecDeque<(usize, usize)> = VecDeque::new();
     for (i, s) in seqs.iter().enumerate() {
         // a sequence whose peak demand exceeds the whole pool can never run
         let peak =
@@ -183,7 +212,7 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         if pool.blocks_for(peak + 1) > pool.total_blocks() {
             rep.failed += 1;
         } else {
-            queue.push_back(i);
+            queue.push_back((i, 0));
         }
     }
 
@@ -195,12 +224,18 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         // iteration-level admission, watermark-reserved unless idle. With
         // sharing, the forked header blocks are free — only the private
         // remainder of header+prompt (plus the decode block) is demanded.
+        // A recompute-mode resume (cursor > 0) demands its live set at the
+        // preemption point instead of the prompt: that one-pass re-prefill
+        // is the resume cost, charged to `recomputed_tokens`.
         while active.len() < spec.max_rows {
-            let Some(&next) = queue.front() else { break };
+            let Some(&(next, cursor)) = queue.front() else { break };
+            let fill = if cursor > 0 {
+                header + seqs[next].live_curve[cursor].max(1)
+            } else {
+                header + seqs[next].prompt_tokens
+            };
             let shared = donor.as_ref().map_or(0, |d| d.n_blocks());
-            let needed = pool
-                .blocks_for(header + seqs[next].prompt_tokens + 1)
-                .saturating_sub(shared);
+            let needed = pool.blocks_for(fill + 1).saturating_sub(shared);
             let reserve = if active.is_empty() {
                 0
             } else {
@@ -217,22 +252,31 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
                 }
                 None => BlockTable::new(pool.block_size()),
             };
-            let prompt_total = header + seqs[next].prompt_tokens;
             let mut ok = true;
-            while table.len() < prompt_total {
+            while table.len() < fill {
                 if !table.push_token(&mut pool) {
                     ok = false;
                     break;
                 }
             }
-            debug_assert!(ok, "admission check covered the prompt");
+            debug_assert!(ok, "admission check covered the fill");
             if !ok {
                 table.release_all(&mut pool);
                 break;
             }
+            if cursor > 0 {
+                rep.resumes += 1;
+                // the engine's recompute prefill runs over the whole fed
+                // stream (prompt + tokens generated up to the preemption
+                // cursor), not just the surviving live set the blocks hold —
+                // charge the same so engine and sim `recomputed_tokens`
+                // stay comparable in one report
+                rep.recomputed_tokens +=
+                    (header + seqs[next].prompt_tokens + cursor) as u64;
+            }
             active.push(ActiveSeq {
                 idx: next,
-                cursor: 0,
+                cursor,
                 table,
                 admit_seq,
             });
@@ -264,6 +308,21 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
             if target <= active[r].table.len() {
                 active[r].table.truncate(target, &mut pool);
             }
+            // a preemption re-queues at the cursor (recompute resume) or at
+            // 0 (restart — the replayed steps are counted as thrown away)
+            let requeue = |v: &mut ActiveSeq,
+                           pool: &mut BlockPool,
+                           rep: &mut CapacityReport,
+                           queue: &mut VecDeque<(usize, usize)>| {
+                v.table.release_all(pool);
+                if spec.recompute_resume {
+                    queue.push_front((v.idx, v.cursor));
+                } else {
+                    rep.restarted_steps += v.cursor as u64;
+                    queue.push_front((v.idx, 0));
+                }
+                rep.preemptions += 1;
+            };
             let mut preempted_self = false;
             while active[r].table.len() < target {
                 if active[r].table.push_token(&mut pool) {
@@ -272,17 +331,13 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
                 if r == active.len() - 1 {
                     // this row is the youngest: preempt it
                     let mut v = active.remove(r);
-                    v.table.release_all(&mut pool);
-                    queue.push_front(v.idx);
-                    rep.preemptions += 1;
+                    requeue(&mut v, &mut pool, &mut rep, &mut queue);
                     preempted_self = true;
                     break;
                 }
                 // preempt the youngest (last after the sort) and retry
                 let mut v = active.pop().expect("len > r + 1");
-                v.table.release_all(&mut pool);
-                queue.push_front(v.idx);
-                rep.preemptions += 1;
+                requeue(&mut v, &mut pool, &mut rep, &mut queue);
             }
             if preempted_self {
                 continue; // active[r] is now the next row (or none)
@@ -304,6 +359,7 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         rep.peak_used_blocks = rep.peak_used_blocks.max(pool.used_blocks());
     }
 
+    rep.decode_steps = conc_sum;
     rep.mean_concurrency = if rep.steps == 0 {
         0.0
     } else {
@@ -429,6 +485,44 @@ mod tests {
         assert_eq!(r.prefix_forks, 0);
         assert_eq!(r.completed, 10);
         assert_eq!(r.end_free_blocks, r.total_blocks);
+    }
+
+    #[test]
+    fn recompute_resume_saves_exactly_the_restarted_steps() {
+        // The cost model's invariant: every sequence's live curve is walked
+        // exactly once under recompute resume, while restart mode re-walks
+        // the pre-preemption prefix. So across any schedule,
+        //   restart.decode_steps − restart.restarted_steps
+        //     == recompute.decode_steps,
+        // and the recompute run pays a bounded one-pass prefill cost
+        // (`recomputed_tokens`) instead.
+        let mut restart = spec("full"); // 64 blocks: full-KV rows collide
+        restart.n_requests = 10;
+        let mut recompute = restart.clone();
+        recompute.recompute_resume = true;
+        let a = run_capacity(&restart).unwrap();
+        let b = run_capacity(&recompute).unwrap();
+        assert_eq!(a.failed, 0);
+        assert_eq!(b.failed, 0);
+        assert_eq!(a.completed, 10);
+        assert_eq!(b.completed, 10);
+        assert!(a.preemptions > 0, "full-KV rows in 64 blocks must collide");
+        assert!(b.preemptions > 0);
+        assert!(a.restarted_steps > 0, "restart mode throws decode work away");
+        assert_eq!(b.restarted_steps, 0, "recompute throws nothing away");
+        // every mid-decode preemption resumes; a cursor-0 victim (preempted
+        // before its first step) re-admits as a fresh fill in either mode
+        assert!(b.resumes > 0 && b.resumes <= b.preemptions);
+        assert!(b.recomputed_tokens > 0);
+        assert_eq!(a.resumes, 0);
+        assert_eq!(
+            a.decode_steps - a.restarted_steps,
+            b.decode_steps,
+            "recompute must save exactly the restarted decode steps"
+        );
+        // both leak-free
+        assert_eq!(a.end_free_blocks, a.total_blocks);
+        assert_eq!(b.end_free_blocks, b.total_blocks);
     }
 
     #[test]

@@ -40,6 +40,7 @@ fn req(id: u64, prompt: &str, template: &str, max_new: usize) -> Request {
         prompt: prompt.into(),
         template: template.into(),
         max_new,
+        resume: None,
     }
 }
 

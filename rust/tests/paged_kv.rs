@@ -105,6 +105,7 @@ fn prefix_hit_runs_zero_prefill_backend_calls() {
         prompt: "#A=3;B=7;C=2;\n>".into(),
         template: String::new(),
         max_new: 24,
+        resume: None,
     };
     let cold = e.run_all(vec![req(1)]).unwrap();
     let after_cold = e.exec_counts();

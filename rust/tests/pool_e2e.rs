@@ -187,6 +187,7 @@ fn divergent_tails_match_solo_outputs_over_tcp() {
                     prompt: (*p).into(),
                     template: String::new(),
                     max_new: 32,
+                    resume: None,
                 }])
                 .unwrap();
             r[0].text.clone()
