@@ -36,7 +36,9 @@
 //! first prediction (disabled under `collect_sketches`, which needs the
 //! prompt keys host-side). Ordering contract with the backend: CoW copies
 //! are applied before the next row write, compaction moves before the next
-//! pool allocation.
+//! pool allocation — and, with a host tier, demotion swap-outs before the
+//! moves land (see `kvtier` for the demotion/promotion/swap lifecycle the
+//! engine drives on top of this).
 
 use std::time::Instant;
 
@@ -44,12 +46,14 @@ use anyhow::{Context, Result};
 
 use crate::attention::{observe, TrackerConfig};
 use crate::coordinator::row::RowState;
-use crate::coordinator::{EngineConfig, PreemptedState, Request, Response};
+use crate::coordinator::{EngineConfig, PreemptMode, PreemptedState, Request, Response};
+use crate::eviction::score::importance;
 use crate::eviction::{self, Policy};
 use crate::kvcache::TokenRecord;
 use crate::kvpool::{
-    BlockCopy, BlockPool, BlockTable, PoolPressure, PrefillSeed, PrefixCache, RowMove,
+    BlockCopy, BlockId, BlockPool, BlockTable, PoolPressure, PrefillSeed, PrefixCache, RowMove,
 };
+use crate::kvtier::{HostTier, ParkedEntry, SwappedBlock, TierBlockId};
 use crate::metrics::{EngineMetrics, PoolGauges, RequestMetrics};
 use crate::runtime::{Client, DecodeBackend, Manifest, ModelExecutor, SimBackend};
 use crate::tokenizer::Tokenizer;
@@ -64,6 +68,9 @@ pub struct Engine {
     pool: Option<BlockPool>,
     /// Prompt-prefix cache (present iff pool + cfg.prefix_cache are set).
     prefix_cache: Option<PrefixCache>,
+    /// Host spill tier (present iff pool + cfg.host_tier are set): parked
+    /// evicted blocks awaiting promotion, and swap-preempted tables.
+    tier: Option<HostTier>,
     /// Requests preempted since the last `take_preempted` drain, each
     /// tagged with the victim row's admission ticket so the drain can hand
     /// them back oldest-first.
@@ -87,6 +94,10 @@ pub struct Engine {
     /// backend immediately after the logical op that produced them).
     copy_buf: Vec<BlockCopy>,
     move_buf: Vec<RowMove>,
+    /// Demotion staging: the eviction pass's evicted rows — pre-compaction
+    /// arena location + frozen record — swapped out to the tier before the
+    /// compaction moves invalidate those locations.
+    demote_buf: Vec<(BlockId, usize, TokenRecord)>,
 }
 
 impl Engine {
@@ -130,6 +141,10 @@ impl Engine {
             (Some(_), Some(pc)) => Some(PrefixCache::new(pc.clone())),
             _ => None,
         };
+        let tier = match (&pool, &cfg.host_tier) {
+            (Some(_), Some(tc)) => Some(HostTier::new(tc.max_bytes)),
+            _ => None,
+        };
         let (b, s) = (cfg.batch, cfg.cache);
         Ok(Engine {
             vocab: exec.dims().vocab,
@@ -138,6 +153,7 @@ impl Engine {
             rows: (0..b).map(|_| None).collect(),
             pool,
             prefix_cache,
+            tier,
             preempted: Vec::new(),
             admit_seq: 0,
             metrics: EngineMetrics::default(),
@@ -151,6 +167,7 @@ impl Engine {
             len_buf: vec![0; b],
             copy_buf: Vec::new(),
             move_buf: Vec::new(),
+            demote_buf: Vec::new(),
             exec,
             cfg,
         })
@@ -206,8 +223,38 @@ impl Engine {
                 g.prefix_pinned_blocks = pc.pinned_blocks();
                 g.prefix_prefill_skips = self.metrics.prefill_skips;
             }
+            if let Some(t) = &self.tier {
+                g.parked_blocks = t.parked_blocks();
+                g.parked_bytes = t.bytes_in_use();
+                g.demoted_blocks = self.metrics.demoted_blocks;
+                g.promotions = self.metrics.promotions;
+                g.false_evictions_avoided = self.metrics.false_evictions_avoided;
+                g.swap_out_bytes = self.metrics.swap_out_bytes;
+                g.swap_in_bytes = self.metrics.swap_in_bytes;
+                g.swap_preempts = self.metrics.swap_preempts;
+                g.tier_shed_blocks = t.shed_blocks;
+            }
             g
         })
+    }
+
+    /// Test/debug introspection: `(pos, block, offset)` for every live slot
+    /// of row `i` (paged mode) — lets tier/e2e tests byte-compare a row's
+    /// stored K/V against a control engine position by position.
+    pub fn debug_row_slots(&self, i: usize) -> Option<Vec<(u32, BlockId, usize)>> {
+        let row = self.rows.get(i)?.as_ref()?;
+        let t = row.seq.block_table()?;
+        Some(
+            row.seq
+                .records()
+                .iter()
+                .enumerate()
+                .map(|(slot, r)| {
+                    let (b, o) = t.locate(slot).expect("live slot is mapped");
+                    (r.pos, b, o)
+                })
+                .collect(),
+        )
     }
 
     /// Test/debug passthrough: the K/V bytes the backend stores at an arena
@@ -301,6 +348,11 @@ impl Engine {
             if let Some(mut row) = slot.take() {
                 if let Some(pool) = self.pool.as_mut() {
                     row.seq.release_blocks(pool);
+                }
+                if let Some(tier) = self.tier.as_mut() {
+                    for e in row.parked.entries.drain(..) {
+                        tier.release(e.tier_id);
+                    }
                 }
                 ids.push(row.req.id);
             }
@@ -641,6 +693,11 @@ impl Engine {
             self.rows[row_idx] = Some(row);
             return Ok(true);
         }
+        // swap-mode snapshot: the K/V bytes are parked in the host tier —
+        // no fed-stream recompute, no prefill-bucket limit
+        if st.swapped.is_some() {
+            return self.submit_swapped(req, st, queued_s);
+        }
         // the fed-token stream: prompt, then every emitted char except the
         // last (that one is `next_token`, still pending its decode step)
         let mut ids = self
@@ -688,24 +745,65 @@ impl Engine {
             st.records.iter().all(|r| (r.pos as usize) < ids.len()),
             "resume record position outside the recompute stream"
         );
+        // a still-cached prompt prefix is re-forked instead of re-allocated
+        // privately: possible whenever the keep-set's leading slots hold
+        // exactly positions 0.. in order — true for any row preempted
+        // before its first eviction pass reordered the slots (the common
+        // case: preemption victims are the *youngest* rows). Counted under
+        // `prefix_hits`; the forked whole blocks already hold those
+        // positions' K/V, so the write-back below skips them — and when the
+        // fork covers the entire live set, the recompute prefill is skipped
+        // outright (counted under `prefill_skips`).
+        let mut fork: Option<BlockTable> = None;
+        if let (Some(pool), Some(pc)) = (self.pool.as_mut(), self.prefix_cache.as_mut()) {
+            let mut lead = 0usize;
+            while lead < n_live && st.records[lead].pos as usize == lead {
+                lead += 1;
+            }
+            if lead >= pool.block_size() {
+                if let Some(hit) = pc.lookup(&ids[..lead], pool.block_size()) {
+                    let t = BlockTable::fork_prefix(hit.table, lead, pool);
+                    if !t.is_empty() {
+                        fork = Some(t);
+                    }
+                }
+            }
+        }
+        let premapped = fork.as_ref().map_or(0, |t| t.len());
         // admission: the resumed row needs blocks for its live set plus one
-        // headroom block; stale prefix-cache pins are shed like any other
-        // admission, but the prefix cache is otherwise not consulted — a
-        // mid-sequence keep-set is not a shareable prompt prefix.
-        let needed = self
-            .pool
-            .as_ref()
-            .expect("checked above")
-            .blocks_for(n_live + 1);
+        // headroom block, minus whatever the fork shares; stale prefix-cache
+        // pins are shed like any other admission.
+        let needed = {
+            let pool = self.pool.as_ref().expect("checked above");
+            pool.blocks_for(n_live + 1)
+                .saturating_sub(fork.as_ref().map_or(0, |t| t.n_blocks()))
+        };
         if !self.shed_pins_to_cover(needed) {
+            if let (Some(pool), Some(mut t)) = (self.pool.as_mut(), fork.take()) {
+                t.release_all(pool);
+            }
             return Ok(false);
         }
         // one batched recompute prefill over the whole fed stream — K/V for
         // every position the keep-set might reference, no worst-case buffer
-        let t0 = Instant::now();
-        let (toks, valid) = padded_tokens(&ids, p_bucket);
-        let pre = self.exec.prefill_rows(&toks, &valid)?;
-        self.metrics.record_prefill(t0.elapsed());
+        let pre = if premapped < n_live {
+            let t0 = Instant::now();
+            let (toks, valid) = padded_tokens(&ids, p_bucket);
+            let out = match self.exec.prefill_rows(&toks, &valid) {
+                Ok(o) => o,
+                Err(e) => {
+                    if let (Some(pool), Some(mut t)) = (self.pool.as_mut(), fork.take()) {
+                        t.release_all(pool);
+                    }
+                    return Err(e);
+                }
+            };
+            self.metrics.record_prefill(t0.elapsed());
+            Some(out)
+        } else {
+            self.metrics.prefill_skips += 1;
+            None
+        };
 
         let row_idx = self.rows.iter().position(|r| r.is_none()).expect("checked");
         let mut row = RowState::resume(req, self.cfg.cache, queued_s, &st);
@@ -713,8 +811,10 @@ impl Engine {
         self.admit_seq += 1;
         {
             let pool = self.pool.as_mut().expect("checked above");
-            row.seq
-                .attach_block_table(BlockTable::new(pool.block_size()));
+            let table = fork
+                .take()
+                .unwrap_or_else(|| BlockTable::new(pool.block_size()));
+            row.seq.attach_block_table(table);
             if !row.seq.restore_pooled(&st.records, pool) {
                 // free count was checked above; unreachable single-threaded,
                 // but roll back safely and leave the request queued
@@ -725,12 +825,14 @@ impl Engine {
         // scatter the surviving rows: slot j holds the token born at
         // records[j].pos, whose recomputed K/V is row `pos` of the prefill
         // output. Runs of consecutive positions within a block batch up.
+        // Slots below `premapped` already hold the donor's bytes (and those
+        // shared blocks must never be written through this table).
         let re = {
             let d = self.exec.dims();
             d.n_layers * d.n_heads * d.d_head
         };
         let positions: Vec<u32> = st.records.iter().map(|r| r.pos).collect();
-        let mut j = 0;
+        let mut j = premapped;
         while j < n_live {
             let (blk, off, run) = {
                 let t = row.seq.block_table().expect("pooled row has a table");
@@ -744,9 +846,10 @@ impl Engine {
             };
             let a = positions[j] as usize * re;
             let b = a + run * re;
+            let rows = pre.as_ref().expect("prefill ran: premapped < n_live");
             if let Err(e) =
                 self.exec
-                    .write_kv_rows(blk, off, &pre.k_rows[a..b], &pre.v_rows[a..b])
+                    .write_kv_rows(blk, off, &rows.k_rows[a..b], &rows.v_rows[a..b])
             {
                 if let Some(pool) = self.pool.as_mut() {
                     row.seq.release_blocks(pool);
@@ -755,8 +858,109 @@ impl Engine {
             }
             j += run;
         }
+        if premapped > 0 {
+            if let Some(pc) = self.prefix_cache.as_mut() {
+                pc.hits += 1;
+            }
+        }
         self.metrics.resumes += 1;
-        self.metrics.recomputed_tokens += ids.len() as u64;
+        if pre.is_some() {
+            self.metrics.recomputed_tokens += ids.len() as u64;
+        }
+        self.rows[row_idx] = Some(row);
+        Ok(true)
+    }
+
+    /// Swap-mode resume: re-map the live set onto fresh blocks and copy the
+    /// parked bytes back from the host tier — no model compute at all, and
+    /// no prefill-bucket limit on the fed stream. The tracker records are
+    /// restored verbatim exactly as in recompute mode, so the resumed row's
+    /// decode and future eviction decisions are byte-identical to a
+    /// never-preempted run's. If the tier no longer holds every parked
+    /// block (possible only if the snapshot crossed engines), the pinned
+    /// entries are released and the resume falls back to a recompute
+    /// snapshot of the same state.
+    fn submit_swapped(
+        &mut self,
+        req: Request,
+        st: std::sync::Arc<PreemptedState>,
+        queued_s: f64,
+    ) -> Result<bool> {
+        let swapped = st.swapped.clone().expect("caller checked");
+        let n_live = st.records.len();
+        anyhow::ensure!(n_live > 0, "swap snapshot has an empty live set");
+        let resident = self.pool.is_some()
+            && match self.tier.as_ref() {
+                Some(t) => swapped.iter().all(|sw| t.contains(sw.tier_id)),
+                None => false,
+            };
+        if !resident {
+            if let Some(t) = self.tier.as_mut() {
+                for sw in &swapped {
+                    t.release(sw.tier_id);
+                }
+            }
+            let mut fallback = (*st).clone();
+            fallback.swapped = None;
+            return self.submit_resumed(req, std::sync::Arc::new(fallback));
+        }
+        let needed = self
+            .pool
+            .as_ref()
+            .expect("resident check covers the pool")
+            .blocks_for(n_live + 1);
+        if !self.shed_pins_to_cover(needed) {
+            return Ok(false); // snapshot and pinned tier entries stay intact
+        }
+        let row_idx = self.rows.iter().position(|r| r.is_none()).expect("checked");
+        let mut row = RowState::resume(req, self.cfg.cache, queued_s, &st);
+        row.admit_seq = self.admit_seq;
+        self.admit_seq += 1;
+        {
+            let pool = self.pool.as_mut().expect("checked above");
+            row.seq
+                .attach_block_table(BlockTable::new(pool.block_size()));
+            if !row.seq.restore_pooled(&st.records, pool) {
+                row.seq.release_blocks(pool);
+                return Ok(false);
+            }
+        }
+        debug_assert_eq!(
+            row.seq.block_table().map(|t| t.n_blocks()).unwrap_or(0),
+            swapped.len(),
+            "the parked table and the restored live set must agree"
+        );
+        let mut moved = 0usize;
+        for (bi, sw) in swapped.iter().enumerate() {
+            let blk = {
+                let t = row.seq.block_table().expect("attached above");
+                t.blocks()[bi]
+            };
+            let (k, v, rows) = self
+                .tier
+                .as_mut()
+                .expect("resident check covers the tier")
+                .take(sw.tier_id)
+                .expect("pinned entries cannot vanish mid-admission");
+            debug_assert_eq!(rows, sw.rows, "parked row count drifted");
+            moved += (k.len() + v.len()) * std::mem::size_of::<f32>();
+            if let Err(e) = self.exec.swap_in_block(blk, &k, &v) {
+                if let Some(pool) = self.pool.as_mut() {
+                    row.seq.release_blocks(pool);
+                }
+                // the request dies here (step error path): free the pinned
+                // entries not yet consumed, or they would shrink the tier
+                // budget for the engine's lifetime
+                if let Some(t) = self.tier.as_mut() {
+                    for later in &swapped[bi + 1..] {
+                        t.release(later.tier_id);
+                    }
+                }
+                return Err(e);
+            }
+        }
+        self.metrics.resumes += 1;
+        self.metrics.swap_in_bytes += moved as u64;
         self.rows[row_idx] = Some(row);
         Ok(true)
     }
@@ -773,15 +977,21 @@ impl Engine {
         let Some(mut row) = self.rows[i].take() else {
             return;
         };
+        self.metrics.preemptions += 1;
+        // swap mode: park the whole table before the blocks are released —
+        // `None` means the recompute snapshot below carries the row instead
+        let swapped = self.try_swap_out_row(&row);
         if let Some(pool) = self.pool.as_mut() {
             row.seq.release_blocks(pool);
         }
-        self.metrics.preemptions += 1;
         let records = row.seq.take_records();
+        let parked = std::mem::take(&mut row.parked);
         let mut req = row.req;
         // a row preempted twice carries the freshest snapshot only
         req.resume = Some(std::sync::Arc::new(PreemptedState {
             records,
+            swapped,
+            parked,
             pos: row.pos,
             next_token: row.next_token,
             next_forced: row.next_forced,
@@ -798,6 +1008,68 @@ impl Engine {
             preempted_at: Instant::now(),
         }));
         self.preempted.push((row.admit_seq, req));
+    }
+
+    /// Swap-mode half of [`preempt_row`]: copy every occupied row of the
+    /// row's table into pinned host-tier entries, one per block in table
+    /// order. Returns `None` — and releases any partial progress — whenever
+    /// the mode resolves to recompute, the row is already finished (nothing
+    /// left to serve), the engine has no tier, or the tier cannot hold the
+    /// whole table; the caller's recompute snapshot stays correct in every
+    /// fallback case.
+    fn try_swap_out_row(&mut self, row: &RowState) -> Option<Vec<SwappedBlock>> {
+        if row.finish.is_some() {
+            return None;
+        }
+        let live = row.seq.len();
+        if live == 0 {
+            return None;
+        }
+        let use_swap = match self.cfg.preempt_mode {
+            PreemptMode::Recompute => false,
+            PreemptMode::Swap => true,
+            PreemptMode::Auto => {
+                crate::scheduler::preempt::swap_beats_recompute(live, row.pos as usize)
+            }
+        };
+        if !use_swap || self.tier.is_none() {
+            return None;
+        }
+        let t = row.seq.block_table()?;
+        let bs = t.block_size();
+        let blocks: Vec<(BlockId, usize)> = t
+            .blocks()
+            .iter()
+            .enumerate()
+            .map(|(bi, &b)| (b, (live - bi * bs).min(bs)))
+            .collect();
+        let mut parked: Vec<SwappedBlock> = Vec::with_capacity(blocks.len());
+        let mut moved = 0usize;
+        for (blk, rows) in blocks {
+            let ok = match self.exec.swap_out_block(blk, rows) {
+                Ok((k, v)) => {
+                    moved += (k.len() + v.len()) * std::mem::size_of::<f32>();
+                    self.tier
+                        .as_mut()
+                        .expect("checked above")
+                        .park(k, v, rows, true)
+                        .map(|id| parked.push(SwappedBlock { tier_id: id, rows }))
+                        .is_some()
+                }
+                Err(_) => false,
+            };
+            if !ok {
+                let tier = self.tier.as_mut().expect("checked above");
+                for sw in parked {
+                    tier.release(sw.tier_id);
+                }
+                self.metrics.tier_rejects += 1;
+                return None;
+            }
+        }
+        self.metrics.swap_preempts += 1;
+        self.metrics.swap_out_bytes += moved as u64;
+        Some(parked)
     }
 
     /// Make sure every active row can map one more token this step. When
@@ -1074,6 +1346,7 @@ impl Engine {
             // privatization is impossible right now, defer this row's pass.
             let wants = wants && (self.pool.is_none() || self.make_row_private(i)?);
             if wants {
+                self.demote_buf.clear();
                 {
                     let row = self.rows[i].as_mut().unwrap();
                     let keep =
@@ -1083,12 +1356,24 @@ impl Engine {
                     match self.pool.as_mut() {
                         Some(pool) => {
                             self.move_buf.clear();
-                            row.seq.apply_keep_pooled_moves(
-                                &keep,
-                                row.pos,
-                                pool,
-                                &mut self.move_buf,
-                            );
+                            if self.tier.is_some() {
+                                // tiered: evicted rows demote to the host
+                                // tier instead of being destroyed
+                                row.seq.apply_keep_pooled_demote(
+                                    &keep,
+                                    row.pos,
+                                    pool,
+                                    &mut self.move_buf,
+                                    &mut self.demote_buf,
+                                );
+                            } else {
+                                row.seq.apply_keep_pooled_moves(
+                                    &keep,
+                                    row.pos,
+                                    pool,
+                                    &mut self.move_buf,
+                                );
+                            }
                         }
                         None => {
                             row.seq.apply_keep(&keep, row.pos);
@@ -1096,6 +1381,12 @@ impl Engine {
                             self.gather_buf[range].copy_from_slice(&idx);
                         }
                     }
+                }
+                // demotion swap-outs read the evicted rows at their
+                // pre-compaction locations — they must land before the
+                // compaction moves overwrite those rows below
+                if !self.demote_buf.is_empty() {
+                    self.park_demoted(i)?;
                 }
                 if paged && !self.move_buf.is_empty() {
                     // keep the buffer's allocation across steps
@@ -1118,6 +1409,14 @@ impl Engine {
             self.metrics.record_eviction(te.elapsed());
         }
 
+        // recurrence-driven promotion: a parked token whose importance score
+        // re-crossed the keep threshold brings its whole entry back
+        if self.tier.is_some() {
+            for i in 0..b {
+                self.promote_parked(i)?;
+            }
+        }
+
         // collect rows that finished this step
         for i in 0..b {
             if self.rows[i].as_ref().map(|r| r.finish.is_some()) == Some(true) {
@@ -1127,10 +1426,232 @@ impl Engine {
         Ok(finished)
     }
 
+    /// Park the eviction pass's demoted rows (`demote_buf`, slot order ⇒
+    /// same-block rows contiguous with ascending offsets) into the host
+    /// tier, one entry per source block, and record them in row `i`'s
+    /// ledger. Must run after the logical compaction but before its
+    /// `RowMove` list is applied (and before the next pool allocation) —
+    /// the moves/reuse are what invalidates the demoted bytes. A park the
+    /// tier refuses (budget full of pinned state) leaves that eviction
+    /// destructive, exactly the pre-tier behavior.
+    fn park_demoted(&mut self, i: usize) -> Result<()> {
+        if self.tier.is_none() {
+            self.demote_buf.clear();
+            return Ok(());
+        }
+        let step_t = self.rows[i].as_ref().map(|r| r.pos).unwrap_or(0);
+        let re = {
+            let d = self.exec.dims();
+            d.n_layers * d.n_heads * d.d_head
+        };
+        let demoted = std::mem::take(&mut self.demote_buf);
+        let mut gi = 0;
+        while gi < demoted.len() {
+            let blk = demoted[gi].0;
+            let mut ge = gi;
+            while ge < demoted.len() && demoted[ge].0 == blk {
+                ge += 1;
+            }
+            // offsets ascend within a block: the last one bounds the read
+            let (k_all, v_all) = self.exec.swap_out_block(blk, demoted[ge - 1].1 + 1)?;
+            let n = ge - gi;
+            let mut k = Vec::with_capacity(n * re);
+            let mut v = Vec::with_capacity(n * re);
+            let mut records = Vec::with_capacity(n);
+            for (_, off, rec) in &demoted[gi..ge] {
+                k.extend_from_slice(&k_all[off * re..(off + 1) * re]);
+                v.extend_from_slice(&v_all[off * re..(off + 1) * re]);
+                records.push(rec.clone());
+            }
+            let bytes = (k.len() + v.len()) * std::mem::size_of::<f32>();
+            match self
+                .tier
+                .as_mut()
+                .expect("checked above")
+                .park(k, v, n, false)
+            {
+                Some(id) => {
+                    self.metrics.demoted_blocks += 1;
+                    self.metrics.swap_out_bytes += bytes as u64;
+                    if let Some(row) = self.rows[i].as_mut() {
+                        row.parked.entries.push(ParkedEntry {
+                            tier_id: id,
+                            parked_at: step_t,
+                            records,
+                        });
+                    }
+                }
+                None => self.metrics.tier_rejects += 1,
+            }
+            gi = ge;
+        }
+        self.demote_buf = demoted;
+        self.demote_buf.clear();
+        Ok(())
+    }
+
+    /// Promote row `i`'s parked entries whose observed importance score
+    /// re-crossed the keep threshold — the weakest score the last eviction
+    /// pass retained over the non-recent (scored) portion of the keep-set.
+    /// A promoted entry's records are spliced back verbatim (the TS/MRI
+    /// observation history is never re-initialized) and its K/V bytes are
+    /// written at the freshly mapped slots, so from the next step on the
+    /// token is attended exactly as if it had never been evicted. Promotion
+    /// stays inside the lagged-design headroom (`live <= budget + W`) so it
+    /// can never force-finish a row by filling the physical cache.
+    fn promote_parked(&mut self, i: usize) -> Result<()> {
+        if self.tier.is_none() {
+            return Ok(());
+        }
+        // drop ledger refs to entries the tier shed under byte pressure —
+        // those demotions silently became plain evictions — and bump the
+        // recency of the survivors: this row is live and actively probing
+        // them, so under budget pressure the tier sheds entries whose rows
+        // are parked in the queue (nobody scoring them) first
+        {
+            let ids: Vec<TierBlockId> = {
+                let tier = self.tier.as_ref().expect("checked above");
+                let Some(row) = self.rows[i].as_mut() else {
+                    return Ok(());
+                };
+                row.parked.entries.retain(|e| tier.contains(e.tier_id));
+                row.parked.entries.iter().map(|e| e.tier_id).collect()
+            };
+            let tier = self.tier.as_mut().expect("checked above");
+            for id in ids {
+                tier.touch(id);
+            }
+        }
+        let score_cfg = self.cfg.params.score;
+        let w = self.cfg.params.window;
+        let (step_t, plan) = {
+            let Some(row) = self.rows[i].as_ref() else {
+                return Ok(());
+            };
+            if row.parked.entries.is_empty() || row.finish.is_some() {
+                return Ok(());
+            }
+            let step_t = row.pos;
+            let recs = row.seq.records();
+            let mut by_pos: Vec<u32> = recs.iter().map(|r| r.pos).collect();
+            by_pos.sort_unstable_by_key(|&p| std::cmp::Reverse(p));
+            if by_pos.len() <= w {
+                return Ok(()); // every live slot is the recent window
+            }
+            let cut = if w == 0 { u32::MAX } else { by_pos[w - 1] };
+            let threshold = recs
+                .iter()
+                .filter(|r| r.pos < cut)
+                .map(|r| importance(r, step_t, &score_cfg))
+                .fold(f64::INFINITY, f64::min);
+            let headroom_cap = (self.cfg.budget + w).min(self.cfg.cache.saturating_sub(1));
+            let mut room = headroom_cap.saturating_sub(recs.len());
+            let mut plan: Vec<TierBlockId> = Vec::new();
+            for e in &row.parked.entries {
+                if e.parked_at >= step_t || e.records.len() > room {
+                    continue; // parked this very pass, or no headroom left
+                }
+                if e.records
+                    .iter()
+                    .any(|r| importance(r, step_t, &score_cfg) >= threshold)
+                {
+                    room -= e.records.len();
+                    plan.push(e.tier_id);
+                }
+            }
+            (step_t, plan)
+        };
+        if plan.is_empty() {
+            return Ok(());
+        }
+        let re = {
+            let d = self.exec.dims();
+            d.n_layers * d.n_heads * d.d_head
+        };
+        for id in plan {
+            // pull the entry out of the ledger and its bytes out of the tier
+            let (records, k, v) = {
+                let row = self.rows[i].as_mut().expect("checked in planning");
+                let at = row
+                    .parked
+                    .entries
+                    .iter()
+                    .position(|e| e.tier_id == id)
+                    .expect("planned from this ledger");
+                let entry = row.parked.entries.remove(at);
+                let (k, v, rows) = self
+                    .tier
+                    .as_mut()
+                    .expect("checked above")
+                    .take(id)
+                    .expect("ledger retained only resident entries");
+                debug_assert_eq!(rows, entry.records.len());
+                (entry.records, k, v)
+            };
+            let n = records.len();
+            // the pool must cover the growth (plus a CoW of a shared tail,
+            // which allocates one extra block); if it cannot, the bytes go
+            // back to the tier untouched and promotion retries later
+            let can = {
+                let row = self.rows[i].as_ref().expect("checked");
+                let pool = self.pool.as_ref().expect("tier implies pool");
+                let t = row.seq.block_table().expect("pooled row has a table");
+                let cow = usize::from(t.tail_is_shared(pool));
+                let need = pool
+                    .blocks_for(row.seq.len() + n)
+                    .saturating_sub(t.n_blocks())
+                    + cow;
+                pool.free_blocks() >= need
+            };
+            if !can {
+                let row = self.rows[i].as_mut().expect("checked");
+                if let Some(nid) = self
+                    .tier
+                    .as_mut()
+                    .expect("checked above")
+                    .park(k, v, n, false)
+                {
+                    row.parked.entries.push(ParkedEntry {
+                        tier_id: nid,
+                        parked_at: step_t,
+                        records,
+                    });
+                }
+                break;
+            }
+            // splice: map one slot per record, then restore its exact bytes
+            let bytes = (k.len() + v.len()) * std::mem::size_of::<f32>();
+            for (j, rec) in records.into_iter().enumerate() {
+                let (blk, off) = {
+                    let row = self.rows[i].as_mut().expect("checked");
+                    let pool = self.pool.as_mut().expect("tier implies pool");
+                    let slot = row
+                        .seq
+                        .push_pooled_cow(rec, pool, &mut self.copy_buf)
+                        .expect("pool headroom checked above");
+                    let t = row.seq.block_table().expect("pooled row has a table");
+                    t.locate(slot).expect("just pushed ⇒ mapped")
+                };
+                self.flush_block_copies()?;
+                self.exec
+                    .write_kv_rows(blk, off, &k[j * re..(j + 1) * re], &v[j * re..(j + 1) * re])?;
+                self.metrics.false_evictions_avoided += 1;
+            }
+            self.metrics.promotions += 1;
+            self.metrics.swap_in_bytes += bytes as u64;
+        }
+        Ok(())
+    }
+
     fn finish_row(&mut self, i: usize) -> Response {
         let mut row = self.rows[i].take().expect("finish_row on empty row");
         if let Some(pool) = self.pool.as_mut() {
             row.seq.release_blocks(pool);
+        }
+        if let Some(tier) = self.tier.as_mut() {
+            for e in row.parked.entries.drain(..) {
+                tier.release(e.tier_id);
+            }
         }
         let total = row.admitted_at.elapsed().as_secs_f64();
         let ttft = row
@@ -1790,7 +2311,11 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2, 3]);
         assert!(e.metrics.resumes >= 2, "forks must resume, not restart");
         assert_eq!(e.metrics.resume_fallbacks, 0);
-        assert!(e.metrics.recomputed_tokens >= 32);
+        // the victims' live sets were pure cached-prefix forks when first
+        // preempted, so their resumes re-fork the entry (counted as prefix
+        // hits) — and a resume whose fork covers the whole live set skips
+        // the recompute prefill outright
+        assert!(e.pool_gauges().unwrap().prefix_hits >= 2);
         done.sort_by_key(|r| r.id);
         assert_eq!(done[1].text, done[2].text, "resumed fork diverged");
         assert_eq!(done[1].text, done[3].text, "resumed fork diverged");
@@ -1841,6 +2366,192 @@ mod tests {
         assert!(r.metrics.total_s >= 0.04, "total {}", r.metrics.total_s);
         assert_eq!(r.metrics.tokens_out, 40);
         assert_eq!(e.metrics.resumes, 1);
+    }
+
+    fn tier_cfg(policy: &str, mode: crate::coordinator::PreemptMode) -> EngineConfig {
+        use crate::kvtier::HostTierConfig;
+        let mut cfg = policy_cfg(policy);
+        cfg.host_tier = Some(HostTierConfig { max_bytes: 1 << 20 });
+        cfg.preempt_mode = mode;
+        cfg
+    }
+
+    #[test]
+    fn tier_demotes_and_promotes_recurring_tokens() {
+        use std::collections::HashMap;
+        // lazy + host tier: eviction passes park their evicted blocks, and
+        // tokens whose importance re-crosses the keep threshold come back.
+        let mut e = Engine::new_sim(tier_cfg("lazy", PreemptMode::Recompute)).unwrap();
+        assert!(e.submit(req(1, 60), 0.0).unwrap());
+        for _ in 0..52 {
+            e.step().unwrap();
+        }
+        assert!(e.metrics.demoted_blocks > 0, "evictions must park blocks");
+        assert!(
+            e.metrics.promotions > 0,
+            "recurring tokens must promote back from the tier"
+        );
+        assert!(e.metrics.false_evictions_avoided > 0);
+        assert_eq!(e.metrics.tier_rejects, 0, "1 MiB budget must suffice here");
+        let g = e.pool_gauges().unwrap();
+        assert!(g.swap_out_bytes > 0 && g.swap_in_bytes > 0);
+        // byte fidelity: every live slot — including every promoted one —
+        // must hold exactly the K/V a never-evicted FullKV control holds
+        // for the same position (the round trip preserved the bytes).
+        let mut c = Engine::new_sim(EngineConfig {
+            batch: 1,
+            cache: 128,
+            budget: 120,
+            policy: "full".into(),
+            pool: Some(PoolConfig {
+                block_size: 8,
+                n_blocks: 16,
+                low_watermark: 0,
+                high_watermark: 0,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(c.submit(req(1, 60), 0.0).unwrap());
+        for _ in 0..52 {
+            c.step().unwrap();
+        }
+        let control: HashMap<u32, (u32, usize)> = c
+            .debug_row_slots(0)
+            .unwrap()
+            .into_iter()
+            .map(|(pos, b, o)| (pos, (b, o)))
+            .collect();
+        let slots = e.debug_row_slots(0).unwrap();
+        assert!(!slots.is_empty());
+        for (pos, blk, off) in slots {
+            let (k, v) = e.backend_kv_row(blk, off).unwrap();
+            let &(cb, co) = control.get(&pos).expect("control keeps everything");
+            let (ck, cv) = c.backend_kv_row(cb, co).unwrap();
+            assert_eq!(k, ck, "pos {pos}: K bytes diverged across the tier");
+            assert_eq!(v, cv, "pos {pos}: V bytes diverged across the tier");
+        }
+        // and the generated text matches a tier-free run of the same config
+        let finish = |e: &mut Engine| -> String {
+            for _ in 0..10_000 {
+                let done = e.step().unwrap();
+                if let Some(r) = done.into_iter().next() {
+                    return r.text;
+                }
+            }
+            panic!("row never finished");
+        };
+        let tier_text = finish(&mut e);
+        let mut plain = Engine::new_sim(policy_cfg("lazy")).unwrap();
+        let plain_text = plain.run_all(vec![req(1, 60)]).unwrap()[0].text.clone();
+        assert_eq!(tier_text, plain_text, "the tier must not change outputs");
+    }
+
+    #[test]
+    fn swap_preemption_resumes_byte_identical_past_the_prefill_bucket() {
+        // Preempt at a fed-stream length past the prefill bucket: recompute
+        // mode would fall back to a restart here, swap mode must not — the
+        // parked bytes need no re-prefill. Control and victim run the same
+        // tiered config, so demotions/promotions stay in lockstep too.
+        let mut a = Engine::new_sim(tier_cfg("lazy", PreemptMode::Swap)).unwrap();
+        let mut b = Engine::new_sim(tier_cfg("lazy", PreemptMode::Swap)).unwrap();
+        assert!(a.submit(req(1, 70), 0.0).unwrap());
+        assert!(b.submit(req(1, 70), 0.0).unwrap());
+        for _ in 0..60 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        b.preempt_row(0);
+        assert_eq!(b.metrics.swap_preempts, 1, "swap mode must park the table");
+        let mut pre = b.take_preempted();
+        assert_eq!(pre.len(), 1);
+        {
+            let st = pre[0].resume.as_ref().expect("snapshot attached");
+            assert!(st.swapped.is_some(), "snapshot must carry the parked table");
+            assert!(
+                st.pos as usize > 64,
+                "the scenario must cross the prefill bucket (pos {})",
+                st.pos
+            );
+        }
+        assert!(b.submit(pre.pop().unwrap(), 0.0).unwrap());
+        assert_eq!(b.metrics.resumes, 1);
+        assert_eq!(
+            b.metrics.resume_fallbacks, 0,
+            "swap resume has no bucket cliff"
+        );
+        assert_eq!(
+            b.metrics.recomputed_tokens, 0,
+            "swap resume must not re-prefill"
+        );
+        assert!(b.metrics.swap_in_bytes > 0);
+        // records restored verbatim and in lockstep with the control
+        let same_records = |a: &Engine, b: &Engine, at: &str| {
+            let ra = a.rows[0].as_ref().unwrap().seq.records();
+            let rb = b.rows[0].as_ref().unwrap().seq.records();
+            assert_eq!(ra.len(), rb.len(), "({at}) keep-set size");
+            for (x, y) in ra.iter().zip(rb.iter()) {
+                assert_eq!(x.pos, y.pos, "({at}) keep-set identity");
+                assert_eq!(x.ts, y.ts, "({at}) TS");
+                assert_eq!(x.mri, y.mri, "({at}) MRI");
+            }
+        };
+        same_records(&a, &b, "post-resume");
+        let finish = |e: &mut Engine| -> Response {
+            for _ in 0..10_000 {
+                let done = e.step().unwrap();
+                if let Some(r) = done.into_iter().next() {
+                    return r;
+                }
+            }
+            panic!("row never finished");
+        };
+        let ra = finish(&mut a);
+        let rb = finish(&mut b);
+        assert_eq!(ra.text, rb.text, "swap resume diverged from the control");
+        assert_eq!(ra.metrics.tokens_out, rb.metrics.tokens_out);
+        assert_eq!(ra.live_curve, rb.live_curve);
+        // the pinned entries were consumed: nothing left but (possibly)
+        // demotion parks, which died with their rows
+        assert_eq!(b.pool_gauges().unwrap().parked_blocks, 0);
+    }
+
+    #[test]
+    fn resume_reforks_a_still_cached_prompt_prefix() {
+        // ROADMAP PR-4 refinement: a row preempted before its first
+        // eviction still has the prompt prefix as its leading slots, so its
+        // recompute resume re-forks the cached entry instead of allocating
+        // privately — counted under prefix_hits.
+        let solo = {
+            let mut e = Engine::new_sim(policy_cfg("lazy")).unwrap();
+            e.run_all(vec![req(1, 45)]).unwrap()[0].text.clone()
+        };
+        let mut e = Engine::new_sim(policy_cfg("lazy")).unwrap();
+        assert!(e.submit(req(1, 45), 0.0).unwrap());
+        for _ in 0..10 {
+            e.step().unwrap(); // well before the first eviction at pos 48
+        }
+        assert_eq!(e.pool_gauges().unwrap().prefix_hits, 0);
+        e.preempt_row(0);
+        let mut pre = e.take_preempted();
+        assert!(pre[0].resume.as_ref().unwrap().swapped.is_none());
+        assert!(e.submit(pre.pop().unwrap(), 0.0).unwrap());
+        let g = e.pool_gauges().unwrap();
+        assert_eq!(g.prefix_hits, 1, "the resume must re-fork the cached prefix");
+        assert!(
+            g.shared_blocks >= 1,
+            "the resumed row shares the entry's whole block: {g:?}"
+        );
+        assert!(e.metrics.recomputed_tokens > 0, "the tail still recomputes");
+        let mut out = None;
+        for _ in 0..10_000 {
+            let done = e.step().unwrap();
+            if let Some(r) = done.into_iter().next() {
+                out = Some(r);
+                break;
+            }
+        }
+        assert_eq!(out.expect("finishes").text, solo, "re-fork changed output");
     }
 
     #[test]

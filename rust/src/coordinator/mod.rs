@@ -12,7 +12,49 @@ use std::time::Instant;
 use crate::eviction::PolicyParams;
 use crate::kvcache::TokenRecord;
 use crate::kvpool::{PoolConfig, PrefixCacheConfig};
+use crate::kvtier::{HostTierConfig, ParkedBlocks, SwappedBlock};
 use crate::metrics::RequestMetrics;
+
+/// How a preempted row comes back (see `kvtier` for the swap machinery).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// vLLM-style recompute: drop the blocks, re-prefill prompt + generated
+    /// on resume (bounded by the prefill bucket — oversize streams restart).
+    Recompute,
+    /// Demote the row's whole block table to the host tier and resume by
+    /// swapping the bytes back in — no re-prefill, no bucket cliff.
+    /// Requires a pool and a host tier; falls back to recompute per-row
+    /// when the tier cannot hold the table.
+    Swap,
+    /// Per-row cost model (`scheduler::preempt`): swap when moving the live
+    /// set's bytes is cheaper than re-prefilling the fed stream.
+    Auto,
+}
+
+impl Default for PreemptMode {
+    fn default() -> Self {
+        PreemptMode::Recompute
+    }
+}
+
+impl PreemptMode {
+    pub fn parse(s: &str) -> Option<PreemptMode> {
+        Some(match s {
+            "recompute" => PreemptMode::Recompute,
+            "swap" => PreemptMode::Swap,
+            "auto" => PreemptMode::Auto,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PreemptMode::Recompute => "recompute",
+            PreemptMode::Swap => "swap",
+            PreemptMode::Auto => "auto",
+        }
+    }
+}
 
 /// Engine configuration (one engine = one compiled (batch, cache) shape).
 #[derive(Clone, Debug)]
@@ -45,6 +87,14 @@ pub struct EngineConfig {
     /// without `pool`). On by default: identical prompt headers fork whole
     /// blocks instead of re-allocating them. `None` disables sharing.
     pub prefix_cache: Option<PrefixCacheConfig>,
+    /// Host-memory spill tier (requires `pool`). `None` keeps evictions
+    /// destructive and preemption recompute-only; `Some` parks evicted
+    /// blocks for recurrence-driven promotion and enables swap-mode
+    /// preemption (see `kvtier`).
+    pub host_tier: Option<HostTierConfig>,
+    /// Preemption resume mode. `Swap` requires `host_tier`; `Auto` without
+    /// a tier degenerates to recompute.
+    pub preempt_mode: PreemptMode,
 }
 
 impl Default for EngineConfig {
@@ -61,6 +111,8 @@ impl Default for EngineConfig {
             record_live: true,
             pool: None,
             prefix_cache: Some(PrefixCacheConfig::default()),
+            host_tier: None,
+            preempt_mode: PreemptMode::Recompute,
         }
     }
 }
@@ -103,6 +155,19 @@ impl EngineConfig {
                     "prefix cache needs max_entries >= 1 (use None to disable)"
                 );
             }
+        }
+        if let Some(tc) = &self.host_tier {
+            tc.validate()?;
+            anyhow::ensure!(
+                self.pool.is_some(),
+                "host tier requires a block pool (set EngineConfig::pool)"
+            );
+        }
+        if self.preempt_mode == PreemptMode::Swap {
+            anyhow::ensure!(
+                self.host_tier.is_some(),
+                "preempt mode 'swap' requires a host tier (--host-tier-bytes)"
+            );
         }
         Ok(())
     }
@@ -177,6 +242,15 @@ pub struct PreemptedState {
     pub first_token_at: Option<Instant>,
     /// When the row was preempted; the re-queue wait is measured from here.
     pub preempted_at: Instant,
+    /// Swap-mode preemption: the row's whole block table parked in the host
+    /// tier, one pinned entry per block in table order. `None` means
+    /// recompute-mode (the K/V is re-prefilled from the fed stream). The
+    /// ids reference engine-owned tier state; resume consumes them.
+    pub swapped: Option<Vec<SwappedBlock>>,
+    /// The row's demotion ledger, carried across the round trip so parked
+    /// tokens stay promotable after a resume (entries are unpinned and may
+    /// be shed under tier pressure while the request is queued).
+    pub parked: ParkedBlocks,
 }
 
 /// Why a row finished.
@@ -244,6 +318,48 @@ mod tests {
         let mut cfg = EngineConfig::default();
         cfg.params.window = cfg.budget;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn tier_requires_pool_and_swap_requires_tier() {
+        use crate::kvtier::HostTierConfig;
+        let no_pool = EngineConfig {
+            host_tier: Some(HostTierConfig::default()),
+            ..Default::default()
+        };
+        assert!(no_pool.validate().is_err(), "tier without a pool");
+        let swap_no_tier = EngineConfig {
+            pool: Some(PoolConfig {
+                block_size: 16,
+                n_blocks: 16,
+                low_watermark: 2,
+                high_watermark: 4,
+            }),
+            preempt_mode: PreemptMode::Swap,
+            ..Default::default()
+        };
+        assert!(swap_no_tier.validate().is_err(), "swap without a tier");
+        let ok = EngineConfig {
+            pool: Some(PoolConfig {
+                block_size: 16,
+                n_blocks: 16,
+                low_watermark: 2,
+                high_watermark: 4,
+            }),
+            host_tier: Some(HostTierConfig::default()),
+            preempt_mode: PreemptMode::Swap,
+            ..Default::default()
+        };
+        ok.validate().unwrap();
+        // auto without a tier degenerates to recompute: valid
+        let auto = EngineConfig {
+            preempt_mode: PreemptMode::Auto,
+            ..Default::default()
+        };
+        auto.validate().unwrap();
+        assert_eq!(PreemptMode::parse("swap"), Some(PreemptMode::Swap));
+        assert_eq!(PreemptMode::parse("bogus"), None);
+        assert_eq!(PreemptMode::Auto.as_str(), "auto");
     }
 
     #[test]

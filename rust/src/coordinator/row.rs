@@ -5,6 +5,7 @@ use std::time::Instant;
 
 use crate::coordinator::{FinishReason, PreemptedState, Request};
 use crate::kvcache::SeqKv;
+use crate::kvtier::ParkedBlocks;
 
 #[derive(Debug)]
 pub struct RowState {
@@ -33,6 +34,9 @@ pub struct RowState {
     /// Monotone admission ticket from the engine; the *highest* ticket is
     /// the youngest row — the preemption victim when the pool runs dry.
     pub admit_seq: u64,
+    /// Demotion ledger: this row's evicted-but-parked blocks in the host
+    /// tier, awaiting recurrence-driven promotion (empty without a tier).
+    pub parked: ParkedBlocks,
 }
 
 impl RowState {
@@ -54,6 +58,7 @@ impl RowState {
             evictions: 0,
             live_curve: Vec::new(),
             admit_seq: 0,
+            parked: ParkedBlocks::default(),
         }
     }
 
@@ -81,6 +86,7 @@ impl RowState {
             evictions: st.evictions,
             live_curve: st.live_curve.clone(),
             admit_seq: 0,
+            parked: st.parked.clone(),
         }
     }
 

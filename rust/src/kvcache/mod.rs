@@ -270,6 +270,38 @@ impl SeqKv {
         (evicted, freed)
     }
 
+    /// [`apply_keep_pooled_moves`](Self::apply_keep_pooled_moves) that also
+    /// reports every *evicted* row as a demotion candidate: its
+    /// pre-compaction arena location plus a clone of its observation record
+    /// (the TS/MRI history the promotion pass scores). Entries are appended
+    /// in slot order, so rows from the same source block are contiguous —
+    /// the caller groups them into one host-tier entry per block. The
+    /// caller MUST read (swap out) the demoted bytes before applying the
+    /// `RowMove` list or allocating from the pool: compaction moves and
+    /// block reuse are exactly what invalidates those locations.
+    pub fn apply_keep_pooled_demote(
+        &mut self,
+        keep: &[u32],
+        step: u32,
+        pool: &mut BlockPool,
+        moves: &mut Vec<RowMove>,
+        demoted: &mut Vec<(BlockId, usize, TokenRecord)>,
+    ) -> (Vec<u32>, usize) {
+        if let Some(t) = self.block_table.as_ref() {
+            let mut kept = vec![false; self.records.len()];
+            for &k in keep {
+                kept[k as usize] = true;
+            }
+            for (slot, r) in self.records.iter().enumerate() {
+                if !kept[slot] {
+                    let (b, o) = t.locate(slot).expect("live slot is mapped");
+                    demoted.push((b, o, r.clone()));
+                }
+            }
+        }
+        self.apply_keep_pooled_moves(keep, step, pool, moves)
+    }
+
     /// Tracker snapshot for recompute-mode preemption: hand the live
     /// records (keep-set, in slot order) to the caller. The per-record
     /// TS/MRI/attention history is the observation state the paper's lagged
@@ -600,6 +632,41 @@ mod tests {
                 },
             ]
         );
+    }
+
+    #[test]
+    fn pooled_apply_keep_demote_reports_evicted_rows_in_slot_order() {
+        let (mut s, mut pool) = pooled_pair(); // block_size 4
+        for i in 0..16 {
+            s.push_pooled(TokenRecord::new(i, i), &mut pool).unwrap();
+        }
+        let t = s.block_table().unwrap();
+        let (b0, b1) = (t.blocks()[0], t.blocks()[1]);
+        let keep = vec![0u32, 5, 14];
+        let mut moves = Vec::new();
+        let mut demoted = Vec::new();
+        let (evicted, freed) =
+            s.apply_keep_pooled_demote(&keep, 20, &mut pool, &mut moves, &mut demoted);
+        assert_eq!(evicted.len(), 13);
+        assert_eq!(freed, 3);
+        assert_eq!(demoted.len(), 13, "every evicted row is a demotion candidate");
+        // slot order ⇒ same-block entries contiguous, offsets ascending
+        assert_eq!(demoted[0].0, b0);
+        assert_eq!(demoted[0].1, 1); // slot 1 (slot 0 kept)
+        assert_eq!(demoted[0].2.pos, 1);
+        assert_eq!((demoted[2].0, demoted[2].1, demoted[2].2.pos), (b0, 3, 3));
+        assert_eq!(demoted[3].0, b1);
+        assert_eq!(demoted[3].1, 0); // slot 4 (slot 5 kept)
+        assert_eq!(demoted[3].2.pos, 4);
+        for w in demoted.windows(2) {
+            let same_block = w[0].0 == w[1].0;
+            assert!(
+                !same_block || w[0].1 < w[1].1,
+                "offsets must ascend within a block"
+            );
+        }
+        // the move list is unchanged by the demote reporting
+        assert_eq!(moves.len(), 2);
     }
 
     #[test]

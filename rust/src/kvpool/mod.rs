@@ -37,6 +37,13 @@
 //! a block table; there is no per-row worst-case buffer anywhere, a prefix
 //! hit reuses the donor's bytes (prefill is skipped), and whole blocks freed
 //! by eviction become cross-sequence physical capacity, not just accounting.
+//!
+//! Below this pool sits an optional second memory tier
+//! ([`kvtier`](crate::kvtier)): eviction can *demote* dropped blocks into a
+//! byte-budgeted host arena instead of destroying them (recurrence promotes
+//! them back), and preemption can park a whole row's table there instead of
+//! recomputing it. The pool stays the single source of truth for device
+//! residency — tier entries hold byte copies, never block references.
 
 pub mod arena;
 pub mod pool;

@@ -1,0 +1,81 @@
+//! Per-row bookkeeping for tier-resident state: which parked entries belong
+//! to a row (demotions awaiting promotion), and which tier entries hold a
+//! swap-preempted row's whole table.
+
+use crate::kvcache::TokenRecord;
+
+use super::tier::TierBlockId;
+
+/// One demoted group: the evicted rows of one device block, parked together.
+/// `records[j]` is the frozen observation record (TS/MRI/attention history)
+/// of the token whose K/V occupies row `j` of the tier entry — exactly what
+/// the promotion pass scores, and what gets spliced back verbatim on a
+/// promotion (no tracker field is re-initialized).
+#[derive(Clone, Debug)]
+pub struct ParkedEntry {
+    pub tier_id: TierBlockId,
+    /// Row clock (`RowState::pos`) at the eviction pass that parked this
+    /// entry; promotion never fires in the same pass that demoted.
+    pub parked_at: u32,
+    pub records: Vec<TokenRecord>,
+}
+
+/// A row's demotion ledger. Entries reference *unpinned* tier state, so a
+/// lookup must tolerate ids the tier shed under byte pressure (the demotion
+/// silently became a plain eviction — the pre-tier behavior). The ledger
+/// travels with the row through preemption snapshots, so promotions remain
+/// possible after a resume.
+#[derive(Clone, Debug, Default)]
+pub struct ParkedBlocks {
+    pub entries: Vec<ParkedEntry>,
+}
+
+impl ParkedBlocks {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Parked tokens across all entries.
+    pub fn tokens(&self) -> usize {
+        self.entries.iter().map(|e| e.records.len()).sum()
+    }
+}
+
+/// Swap-mode preemption: one entry per block of the preempted row's table,
+/// in table order. These tier entries are *pinned* (never shed), so a
+/// resume can always find its bytes; if the tier cannot hold the whole
+/// table at preemption time, the engine falls back to the recompute
+/// snapshot instead of parking a partial table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SwappedBlock {
+    pub tier_id: TierBlockId,
+    /// Occupied rows in this block at preemption.
+    pub rows: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_counts_tokens_across_entries() {
+        let mut l = ParkedBlocks::default();
+        assert!(l.is_empty());
+        l.entries.push(ParkedEntry {
+            tier_id: 1,
+            parked_at: 10,
+            records: vec![TokenRecord::new(3, 3), TokenRecord::new(5, 5)],
+        });
+        l.entries.push(ParkedEntry {
+            tier_id: 2,
+            parked_at: 12,
+            records: vec![TokenRecord::new(9, 9)],
+        });
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.tokens(), 3);
+    }
+}

@@ -1,0 +1,55 @@
+//! Tiered KV store: a host-memory spill tier under the device block pool.
+//!
+//! LazyEviction's core finding is *Token Importance Recurrence* — evicted
+//! tokens frequently regain high attention many steps later — yet a plain
+//! paged pool still **destroys** K/V bytes the moment a policy's keep-set
+//! drops them, and preemption destroys a whole row's worth. This module adds
+//! the second memory tier that turns both from lossy restarts into cheap
+//! block moves:
+//!
+//! * **Demotion instead of destruction** — when an eviction pass drops rows,
+//!   the engine parks the evicted rows' bytes in the [`HostTier`] (grouped
+//!   by source block, at most one device block's worth per entry) instead of
+//!   letting the compaction moves overwrite them. Each row carries a
+//!   [`ParkedBlocks`] ledger mapping its parked token records to their tier
+//!   entries.
+//! * **Recurrence-driven promotion** — the lazy policy's observation records
+//!   (TS/MRI) travel with each parked token. Every step the engine
+//!   re-evaluates the parked records' importance scores (`eviction::score`);
+//!   when one re-crosses the keep threshold — the weakest score the last
+//!   eviction pass retained — its whole entry is swapped back in and spliced
+//!   into the row's block table. The paper's recurrence phenomenon becomes a
+//!   *served* behavior, measurable as the `promotions` /
+//!   `false_evictions_avoided` gauges.
+//! * **Swap-mode preemption** — instead of recompute-resume, `preempt_row`
+//!   can demote the row's entire block table to the tier
+//!   ([`SwappedBlock`] list in the preemption snapshot) and resume by
+//!   swapping the bytes back in: no re-prefill, no prefill-bucket cliff.
+//!   A per-row cost model (`scheduler::preempt`) picks swap vs recompute
+//!   under `--preempt-mode auto`.
+//!
+//! ## Ownership & budget
+//!
+//! The tier is byte-budgeted and owned by the engine (one tier per engine,
+//! `&mut`-threaded like the pool — no interior locking). Entries are
+//! refcount-lite: **unpinned** entries (demotions) are a best-effort cache,
+//! shed LRU-first when the budget overflows — losing one merely makes that
+//! eviction permanent, which is the pre-tier behavior. **Pinned** entries
+//! (swap-mode preemption state) are never shed; when the budget cannot hold
+//! a row's table the preemption falls back to the recompute snapshot
+//! instead, so a resume can never find its bytes missing.
+//!
+//! ## Ordering contract (extends the kvpool CoW/compaction contract)
+//!
+//! Demotion swap-outs read the evicted rows at their *pre-compaction* arena
+//! locations, so they must run after the logical `apply_keep` but **before**
+//! the compaction's `RowMove` list is applied to the backend (and before the
+//! next pool allocation) — the moves are exactly what overwrites those
+//! locations. Promotion swap-ins run like any other row write: after the
+//! flush of any pending CoW copies for the slot being written.
+
+pub mod ledger;
+pub mod tier;
+
+pub use ledger::{ParkedBlocks, ParkedEntry, SwappedBlock};
+pub use tier::{HostTier, HostTierConfig, TierBlockId};

@@ -1,0 +1,250 @@
+//! The host-side arena: byte-budgeted, LRU + pin-refcounted storage for
+//! parked K/V rows (see the module docs for the demotion/promotion/swap
+//! lifecycle and the shedding rules).
+//!
+//! An entry holds up to one device block's worth of token-major K and V rows
+//! (`[rows, L·H·dh]` each) — the tier mirrors the `kvpool::KvArena` geometry
+//! without pinning a fixed `[n_blocks, ...]` slab, because parked entries
+//! come and go at block granularity and the budget is the only hard bound.
+
+/// Identity of one parked entry. Monotone per tier; never reused, so a stale
+/// ledger reference can only *miss* (entry shed), never alias fresh bytes.
+pub type TierBlockId = u64;
+
+/// Host tier sizing.
+#[derive(Clone, Debug)]
+pub struct HostTierConfig {
+    /// Byte budget for parked K+V rows (the only hard bound).
+    pub max_bytes: usize,
+}
+
+impl Default for HostTierConfig {
+    fn default() -> Self {
+        HostTierConfig {
+            max_bytes: 64 << 20,
+        }
+    }
+}
+
+impl HostTierConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.max_bytes >= 1, "host tier needs a byte budget");
+        Ok(())
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    rows: usize,
+    /// Pinned entries (swap-mode preemption state) are never LRU-shed.
+    pinned: bool,
+    last_used: u64,
+}
+
+impl Entry {
+    fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Byte-budgeted host spill tier (module docs).
+#[derive(Debug)]
+pub struct HostTier {
+    max_bytes: usize,
+    entries: Vec<(TierBlockId, Entry)>,
+    next_id: TierBlockId,
+    clock: u64,
+    bytes: usize,
+    /// Unpinned entries destroyed to make room (the demotion became a plain
+    /// eviction after all).
+    pub shed_blocks: u64,
+}
+
+impl HostTier {
+    pub fn new(max_bytes: usize) -> HostTier {
+        HostTier {
+            max_bytes,
+            entries: Vec::new(),
+            next_id: 0,
+            clock: 0,
+            bytes: 0,
+            shed_blocks: 0,
+        }
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.bytes
+    }
+
+    /// Live parked entries (block-granular).
+    pub fn parked_blocks(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn contains(&self, id: TierBlockId) -> bool {
+        self.entries.iter().any(|(i, _)| *i == id)
+    }
+
+    /// Park one block's worth of token-major K/V rows. Sheds unpinned
+    /// entries LRU-first until the budget covers the newcomer; returns
+    /// `None` (bytes dropped, caller's eviction stays destructive / caller
+    /// falls back to recompute) when pinned entries alone overflow it.
+    pub fn park(
+        &mut self,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        rows: usize,
+        pinned: bool,
+    ) -> Option<TierBlockId> {
+        debug_assert_eq!(k.len(), v.len(), "K/V row payloads must match");
+        debug_assert!(rows >= 1, "parking an empty entry");
+        let need = (k.len() + v.len()) * std::mem::size_of::<f32>();
+        if need > self.max_bytes {
+            return None;
+        }
+        while self.bytes + need > self.max_bytes {
+            if !self.shed_lru_unpinned() {
+                return None;
+            }
+        }
+        self.clock += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.bytes += need;
+        self.entries.push((
+            id,
+            Entry {
+                k,
+                v,
+                rows,
+                pinned,
+                last_used: self.clock,
+            },
+        ));
+        Some(id)
+    }
+
+    /// Remove and return an entry's bytes: `(k_rows, v_rows, rows)`.
+    pub fn take(&mut self, id: TierBlockId) -> Option<(Vec<f32>, Vec<f32>, usize)> {
+        let at = self.entries.iter().position(|(i, _)| *i == id)?;
+        let (_, e) = self.entries.swap_remove(at);
+        self.bytes -= e.bytes();
+        Some((e.k, e.v, e.rows))
+    }
+
+    /// Drop an entry without reading it (row finished/aborted, snapshot
+    /// fell back). Missing ids are fine — unpinned entries may have been
+    /// shed under pressure already.
+    pub fn release(&mut self, id: TierBlockId) -> bool {
+        self.take(id).is_some()
+    }
+
+    /// Bump an entry's recency (a promotion probe found it relevant).
+    pub fn touch(&mut self, id: TierBlockId) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some((_, e)) = self.entries.iter_mut().find(|(i, _)| *i == id) {
+            e.last_used = clock;
+        }
+    }
+
+    fn shed_lru_unpinned(&mut self) -> bool {
+        let at = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, e))| !e.pinned)
+            .min_by_key(|(_, (_, e))| e.last_used)
+            .map(|(at, _)| at);
+        let Some(at) = at else { return false };
+        let (_, e) = self.entries.swap_remove(at);
+        self.bytes -= e.bytes();
+        self.shed_blocks += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize, x: f32) -> Vec<f32> {
+        vec![x; n * 4] // 4 elems per row
+    }
+
+    #[test]
+    fn park_take_round_trip() {
+        let mut t = HostTier::new(1 << 20);
+        let k = rows(3, 1.5);
+        let v = rows(3, -2.5);
+        let id = t.park(k.clone(), v.clone(), 3, false).unwrap();
+        assert!(t.contains(id));
+        assert_eq!(t.parked_blocks(), 1);
+        assert_eq!(t.bytes_in_use(), 2 * 3 * 4 * 4);
+        let (k2, v2, n) = t.take(id).unwrap();
+        assert_eq!(k2, k);
+        assert_eq!(v2, v);
+        assert_eq!(n, 3);
+        assert_eq!(t.bytes_in_use(), 0);
+        assert!(!t.contains(id));
+        assert!(t.take(id).is_none());
+    }
+
+    #[test]
+    fn ids_are_never_reused() {
+        let mut t = HostTier::new(1 << 20);
+        let a = t.park(rows(1, 0.0), rows(1, 0.0), 1, false).unwrap();
+        t.release(a);
+        let b = t.park(rows(1, 0.0), rows(1, 0.0), 1, false).unwrap();
+        assert_ne!(a, b, "stale ledger refs must miss, never alias");
+    }
+
+    #[test]
+    fn budget_sheds_lru_unpinned() {
+        // each entry: 2 * 2 rows * 4 elems * 4 bytes = 64 bytes; budget = 2
+        let mut t = HostTier::new(128);
+        let a = t.park(rows(2, 1.0), rows(2, 1.0), 2, false).unwrap();
+        let b = t.park(rows(2, 2.0), rows(2, 2.0), 2, false).unwrap();
+        t.touch(a); // b is now LRU
+        let c = t.park(rows(2, 3.0), rows(2, 3.0), 2, false).unwrap();
+        assert_eq!(t.parked_blocks(), 2);
+        assert_eq!(t.shed_blocks, 1);
+        assert!(t.contains(a) && t.contains(c));
+        assert!(!t.contains(b), "LRU entry must go first");
+        assert_eq!(t.bytes_in_use(), 128);
+    }
+
+    #[test]
+    fn pinned_entries_never_shed_and_can_refuse() {
+        let mut t = HostTier::new(128);
+        let a = t.park(rows(2, 1.0), rows(2, 1.0), 2, true).unwrap();
+        let b = t.park(rows(2, 2.0), rows(2, 2.0), 2, true).unwrap();
+        // budget full of pinned state: a third park must be refused, with
+        // both pinned entries intact (a resume can never lose its bytes)
+        assert!(t.park(rows(2, 3.0), rows(2, 3.0), 2, false).is_none());
+        assert!(t.contains(a) && t.contains(b));
+        assert_eq!(t.shed_blocks, 0);
+        // releasing one pinned entry reopens the budget
+        assert!(t.release(a));
+        assert!(t.park(rows(2, 3.0), rows(2, 3.0), 2, false).is_some());
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_outright() {
+        let mut t = HostTier::new(16);
+        assert!(t.park(rows(2, 0.0), rows(2, 0.0), 2, false).is_none());
+        assert_eq!(t.bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(HostTierConfig::default().validate().is_ok());
+        assert!(HostTierConfig { max_bytes: 0 }.validate().is_err());
+    }
+}

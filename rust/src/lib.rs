@@ -15,6 +15,9 @@
 //!   per-sequence block tables, pressure watermarks (admission/preemption),
 //!   and the physical side — pool-shaped K/V arenas + prompt-prefix cache
 //!   whose full-prompt hits skip prefill outright (see ARCHITECTURE.md)
+//! * [`kvtier`] — host-memory spill tier under the pool: eviction demotes
+//!   blocks instead of destroying them, recurrence promotes them back, and
+//!   preemption can swap a whole row out/in instead of recomputing it
 //! * [`eviction`] — LazyEviction (Eq. 2/5) and baselines
 //! * [`scheduler`] + [`coordinator`] + [`server`] — continuous batching
 //!   with pool-pressure admission control, decode loop with youngest-row
@@ -31,6 +34,7 @@ pub mod coordinator;
 pub mod eviction;
 pub mod kvcache;
 pub mod kvpool;
+pub mod kvtier;
 pub mod metrics;
 pub mod runtime;
 pub mod scheduler;

@@ -10,19 +10,26 @@
 //!
 //! Paged-KV pool flags (serve/sim-serve): --pool-blocks N enables a shared
 //! block pool (0 = per-row capacity, the default), --block-size (16),
-//! --pool-low / --pool-high admission watermarks in blocks. With a pool,
-//! prompt-prefix block sharing is on by default: --prefix-entries caps the
-//! cache (64), --no-prefix-cache disables sharing entirely.
+//! --pool-low / --pool-high admission watermarks in blocks (or
+//! --auto-watermarks to derive them from the policy's replay-measured
+//! live-set p50/p95). With a pool, prompt-prefix block sharing is on by
+//! default: --prefix-entries caps the cache (64), --no-prefix-cache
+//! disables sharing entirely. --host-tier-bytes N adds the host spill tier
+//! (demotion/promotion; see kvtier) and --preempt-mode
+//! recompute|swap|auto picks how preempted rows come back.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 use lazyeviction::bench_harness::{artifacts_dir, table::Table};
-use lazyeviction::coordinator::{Engine, EngineConfig, Request};
+use lazyeviction::coordinator::{Engine, EngineConfig, PreemptMode, Request};
 use lazyeviction::eviction::PolicyParams;
 use lazyeviction::kvpool::{PoolConfig, PrefixCacheConfig};
+use lazyeviction::kvtier::HostTierConfig;
 use lazyeviction::runtime::{Client, Manifest};
+use lazyeviction::scheduler::derive_watermarks;
+use lazyeviction::sim::replay::{replay, ReplayConfig};
 use lazyeviction::trace::workload::{
     dataset_profile, gen_reasoning_sample, model_profile, score_sample,
 };
@@ -46,6 +53,8 @@ fn engine_config_from(args: &Args) -> EngineConfig {
         record_live: !args.bool_flag("no-record-live"),
         pool: None,
         prefix_cache: None,
+        host_tier: None,
+        preempt_mode: PreemptMode::Recompute,
     };
     cfg.collect_sketches = cfg.policy.starts_with("rkv");
     if args.bool_flag("stop-newline") {
@@ -65,15 +74,67 @@ fn engine_config_from(args: &Args) -> EngineConfig {
                 max_entries: args.usize_or("prefix-entries", 64),
             });
         }
+        // host spill tier (demotion/promotion + swap-mode preemption)
+        let tier_bytes = args.usize_or("host-tier-bytes", 0);
+        if tier_bytes > 0 {
+            cfg.host_tier = Some(HostTierConfig {
+                max_bytes: tier_bytes,
+            });
+        }
+        let mode = args.str_or("preempt-mode", "recompute");
+        cfg.preempt_mode = match PreemptMode::parse(&mode) {
+            Some(m) => m,
+            None => {
+                eprintln!("unknown --preempt-mode '{mode}', using recompute");
+                PreemptMode::Recompute
+            }
+        };
     }
     cfg
+}
+
+/// `--auto-watermarks`: replace the static `--pool-low/--pool-high` values
+/// with ones derived from the configured policy's replay-measured live-set
+/// distribution (p50/p95 → `scheduler::derive_watermarks`). A policy whose
+/// live sets collapse to ≈ B + W gets a proportionally tighter band than
+/// FullKV's unbounded growth — the same pool, tuned to the policy.
+fn apply_auto_watermarks(args: &Args, cfg: &mut EngineConfig) -> Result<()> {
+    if !args.bool_flag("auto-watermarks") {
+        return Ok(());
+    }
+    let Some(pool) = cfg.pool.as_mut() else {
+        return Ok(());
+    };
+    let policy = lazyeviction::eviction::build(&cfg.policy, &cfg.params)?;
+    let wp = dataset_profile(&args.str_or("dataset", "gsm8k"));
+    let mp = model_profile(&args.str_or("model", "ds-llama-8b"));
+    let mut samples = Vec::new();
+    for seed in 0..args.u64_or("auto-watermark-samples", 8) {
+        let tr = generator::generate(&wp, &mp, 1000 + seed);
+        let mut rc = ReplayConfig::new(cfg.budget, cfg.params.window + 2, cfg.alpha);
+        rc.record_live = true;
+        samples.extend(replay(&tr, policy.as_ref(), rc).live_curve);
+    }
+    let (low, high) = derive_watermarks(&samples, pool.block_size, pool.n_blocks);
+    eprintln!(
+        "auto-watermarks: {} live-set samples for policy {} → low={low} high={high} \
+         (was {}/{})",
+        samples.len(),
+        cfg.policy,
+        pool.low_watermark,
+        pool.high_watermark
+    );
+    pool.low_watermark = low;
+    pool.high_watermark = high;
+    Ok(())
 }
 
 fn build_engine(args: &Args) -> Result<Engine> {
     let dir = args.str_or("artifacts", artifacts_dir().to_string_lossy().as_ref());
     let manifest = Manifest::load(&dir).context("loading manifest (run `make artifacts`)")?;
     let client = Client::cpu()?;
-    let cfg = engine_config_from(args);
+    let mut cfg = engine_config_from(args);
+    apply_auto_watermarks(args, &mut cfg)?;
     eprintln!(
         "engine: batch={} cache={} budget={} policy={}",
         cfg.batch, cfg.cache, cfg.budget, cfg.policy
@@ -89,7 +150,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_sim_serve(args: &Args) -> Result<()> {
-    let cfg = engine_config_from(args);
+    let mut cfg = engine_config_from(args);
+    apply_auto_watermarks(args, &mut cfg)?;
     eprintln!(
         "sim engine: batch={} cache={} budget={} policy={} (artifact-free backend)",
         cfg.batch, cfg.cache, cfg.budget, cfg.policy
@@ -227,8 +289,9 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: lazyevictiond <serve|sim-serve|generate|eval|suggest-w|info> [--flags]\n\
                  common flags: --artifacts DIR --policy P --budget B --cache S --batch N --window W\n\
-                 pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8\n\
+                 pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8 --auto-watermarks\n\
                  prefix flags: --prefix-entries 64 --no-prefix-cache\n\
+                 tier flags:   --host-tier-bytes N --preempt-mode recompute|swap|auto\n\
                  every flag and the server's pool gauge fields: docs/serving.md"
             );
             std::process::exit(2);

@@ -28,6 +28,24 @@ pub struct EngineMetrics {
     /// Admissions that skipped the prefill executable entirely because a
     /// prefix-cache entry covered the full prompt (physical paging).
     pub prefill_skips: u64,
+    /// Host tier: evicted-block groups parked instead of destroyed.
+    pub demoted_blocks: u64,
+    /// Host tier: parked entries swapped back in because a token's score
+    /// re-crossed the keep threshold (recurrence-driven promotion).
+    pub promotions: u64,
+    /// Host tier: tokens restored by those promotions — each one a K/V row
+    /// the paper's recurrence phenomenon would otherwise have lost.
+    pub false_evictions_avoided: u64,
+    /// Host tier: bytes copied device→host (demotions + swap preemptions).
+    pub swap_out_bytes: u64,
+    /// Host tier: bytes copied host→device (promotions + swap resumes).
+    pub swap_in_bytes: u64,
+    /// Preemptions that parked the row's whole table (swap mode) instead of
+    /// taking a recompute snapshot.
+    pub swap_preempts: u64,
+    /// Park attempts the tier refused (byte budget full of pinned state) —
+    /// those demotions stayed destructive / preemptions fell back.
+    pub tier_rejects: u64,
     /// Tokens produced (all rows).
     pub tokens_out: u64,
     /// Live-token counts sampled per step (for memory curves), per row.
@@ -128,6 +146,25 @@ pub struct PoolGauges {
     pub kv_arena_bytes: usize,
     /// The share of `kv_arena_bytes` in live (allocated) blocks right now.
     pub kv_bytes_in_use: usize,
+    /// Host tier: parked entries resident right now (0 without a tier).
+    pub parked_blocks: usize,
+    /// Host tier: bytes those entries occupy.
+    pub parked_bytes: usize,
+    /// Cumulative evicted-block groups parked instead of destroyed.
+    pub demoted_blocks: u64,
+    /// Cumulative recurrence-driven promotions (entries swapped back in).
+    pub promotions: u64,
+    /// Cumulative tokens restored by promotions.
+    pub false_evictions_avoided: u64,
+    /// Cumulative bytes copied device→host by the tier.
+    pub swap_out_bytes: u64,
+    /// Cumulative bytes copied host→device by the tier.
+    pub swap_in_bytes: u64,
+    /// Cumulative swap-mode preemptions (whole table parked, no recompute).
+    pub swap_preempts: u64,
+    /// Cumulative unpinned tier entries destroyed under byte pressure —
+    /// each one a demotion that silently became a plain eviction.
+    pub tier_shed_blocks: u64,
 }
 
 #[cfg(test)]

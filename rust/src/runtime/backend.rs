@@ -147,6 +147,23 @@ pub trait DecodeBackend: Send {
         pos: &[i32],
     ) -> Result<StepOut>;
 
+    // --- host tier (kvtier) swap surface ---
+
+    /// Read the leading `rows` occupied rows of a block out of the arena as
+    /// token-major `[rows, L·H·dh]` K and V payloads — the device→host half
+    /// of a demotion/swap-out. Must not mutate the arena; callers rely on
+    /// the bytes staying valid until the next write/move lands (the engine
+    /// swaps out *before* applying a compaction's `RowMove` list).
+    fn swap_out_block(&mut self, block: BlockId, rows: usize) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Write token-major `[rows, L·H·dh]` K/V payloads back into a block
+    /// starting at offset 0 — the host→device half of a promotion/swap-in.
+    /// Row count is implied by the payload length. A swap-in after a
+    /// swap-out of the same rows must be byte-identical (round-trip
+    /// contract; the sim backend's stored-key identity check makes a
+    /// corrupted round trip fail recurrence tests rather than pass silently).
+    fn swap_in_block(&mut self, block: BlockId, k_rows: &[f32], v_rows: &[f32]) -> Result<()>;
+
     /// Test/debug introspection: the K/V bytes stored at an arena location,
     /// when the backend can read them cheaply (`None` otherwise — e.g. a
     /// device-resident arena off the hot path).
@@ -519,6 +536,27 @@ impl DecodeBackend for SimBackend {
         })
     }
 
+    fn swap_out_block(&mut self, block: BlockId, rows: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let arena = self.arena.as_ref().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        anyhow::ensure!(rows <= arena.block_size(), "swap-out rows exceed block");
+        let re = arena.row_elems();
+        let mut k = Vec::with_capacity(rows * re);
+        let mut v = Vec::with_capacity(rows * re);
+        for off in 0..rows {
+            k.extend_from_slice(arena.k_row(block, off));
+            v.extend_from_slice(arena.v_row(block, off));
+        }
+        self.counts.block_swap_outs += 1;
+        Ok((k, v))
+    }
+
+    fn swap_in_block(&mut self, block: BlockId, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        let arena = self.arena.as_mut().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        arena.write_rows(block, 0, k_rows, v_rows);
+        self.counts.block_swap_ins += 1;
+        Ok(())
+    }
+
     fn debug_kv_row(&self, block: BlockId, offset: usize) -> Option<(Vec<f32>, Vec<f32>)> {
         self.arena
             .as_ref()
@@ -720,6 +758,42 @@ mod tests {
             assert_eq!(&rows.k_rows[i * re..(i + 1) * re], &k[..], "K row {i}");
             assert_eq!(&rows.v_rows[i * re..(i + 1) * re], &v[..], "V row {i}");
         }
+    }
+
+    #[test]
+    fn swap_round_trip_is_byte_identical() {
+        // the kvtier contract: swap_out → swap_in restores exactly the
+        // bytes, including the stored-key identity the paged attention
+        // reads back (k_row[0] = birth pos)
+        let mut b = SimBackend::new(1, 16);
+        b.init_paged(4, 4).unwrap();
+        let re = b.row_elems();
+        let mut want_k = Vec::new();
+        let mut want_v = Vec::new();
+        for i in 0..3 {
+            let mut k = vec![0f32; re];
+            let mut v = vec![0f32; re];
+            SimBackend::kv_row_into(&mut k, &mut v, 7 + i as i32, i as i32);
+            b.write_kv_rows(1, i, &k, &v).unwrap();
+            want_k.extend_from_slice(&k);
+            want_v.extend_from_slice(&v);
+        }
+        let (k, v) = b.swap_out_block(1, 3).unwrap();
+        assert_eq!(k, want_k);
+        assert_eq!(v, want_v);
+        // clobber the block, then swap the bytes back into another block
+        let junk = vec![9.0f32; re];
+        b.write_kv_rows(1, 0, &junk, &junk).unwrap();
+        b.swap_in_block(3, &k, &v).unwrap();
+        for i in 0..3 {
+            let (rk, rv) = b.debug_kv_row(3, i).unwrap();
+            assert_eq!(rk, want_k[i * re..(i + 1) * re]);
+            assert_eq!(rv, want_v[i * re..(i + 1) * re]);
+            assert_eq!(rk[0] as usize, i, "birth identity survives the trip");
+        }
+        let c = b.exec_counts();
+        assert_eq!(c.block_swap_outs, 1);
+        assert_eq!(c.block_swap_ins, 1);
     }
 
     #[test]

@@ -108,6 +108,10 @@ pub struct ExecCounts {
     pub block_copies: u64,
     /// Paged mode: rows relocated by eviction compaction.
     pub row_moves: u64,
+    /// Host tier: block payloads copied device→host (demotion / swap-out).
+    pub block_swap_outs: u64,
+    /// Host tier: block payloads copied host→device (promotion / swap-in).
+    pub block_swap_ins: u64,
 }
 
 fn take_single(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<xla::PjRtBuffer> {
@@ -578,6 +582,32 @@ impl DecodeBackend for ModelExecutor {
         }
         self.arena_permute(&idx)?;
         self.exec_counts.row_moves += moves.len() as u64;
+        Ok(())
+    }
+
+    fn swap_out_block(&mut self, block: BlockId, rows: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        // Device→host copy through the existing arena buffers. PJRT's
+        // literal download is whole-buffer, so this reads both arenas and
+        // slices out the block's rows; swap traffic is off the decode hot
+        // path (preemption/eviction time), and a dedicated block-slice
+        // executable can replace this without touching the trait.
+        let re = self.row_elems();
+        let p = self.paged.as_ref().ok_or_else(|| anyhow::anyhow!("not paged"))?;
+        anyhow::ensure!(rows <= p.block_size, "swap-out rows exceed block");
+        anyhow::ensure!((block as usize) < p.n_blocks, "swap-out block out of range");
+        let k_all = p.k_arena.to_literal_sync()?.to_vec::<f32>()?;
+        let v_all = p.v_arena.to_literal_sync()?.to_vec::<f32>()?;
+        let a = block as usize * p.block_size * re;
+        let b = a + rows * re;
+        self.exec_counts.block_swap_outs += 1;
+        Ok((k_all[a..b].to_vec(), v_all[a..b].to_vec()))
+    }
+
+    fn swap_in_block(&mut self, block: BlockId, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        // Host→device copy: the per-row arena write executable already does
+        // exactly this, one row at a time, starting at offset 0.
+        DecodeBackend::write_kv_rows(self, block, 0, k_rows, v_rows)?;
+        self.exec_counts.block_swap_ins += 1;
         Ok(())
     }
 

@@ -33,6 +33,41 @@
 //! deliberately knows nothing about where blocks are pinned.
 
 use crate::kvpool::PoolPressure;
+use crate::util::stats::percentile;
+
+/// Derive (low, high) watermarks from an observed per-row live-set
+/// distribution (`--auto-watermarks`; replay already measures per-policy
+/// live curves). The rule:
+///
+/// * `low` = the *growth headroom* between a typical row and a near-worst
+///   row, `blocks(p95) − blocks(p50)` — once free blocks dip under that,
+///   the rows already decoding plausibly need every remaining block to
+///   reach their own p95, so admitting more would only buy preemptions;
+/// * `high` = `blocks(p95)` — reopen only once a whole near-worst row fits,
+///   so a reopened latch does not immediately slam shut again.
+///
+/// Both clamp to `[1, n_blocks]` with `low <= high` (the `PoolConfig`
+/// validation contract). Empty samples fall back to a minimal (1, 2) band.
+pub fn derive_watermarks(
+    live_samples: &[usize],
+    block_size: usize,
+    n_blocks: usize,
+) -> (usize, usize) {
+    let bs = block_size.max(1);
+    let blocks_for = |tokens: f64| -> usize {
+        let t = tokens.max(0.0).ceil() as usize;
+        (t + bs - 1) / bs
+    };
+    if live_samples.is_empty() || n_blocks == 0 {
+        return (1.min(n_blocks), 2.min(n_blocks).max(1.min(n_blocks)));
+    }
+    let xs: Vec<f64> = live_samples.iter().map(|&x| x as f64).collect();
+    let b50 = blocks_for(percentile(&xs, 0.50));
+    let b95 = blocks_for(percentile(&xs, 0.95));
+    let low = b95.saturating_sub(b50).max(1).min(n_blocks);
+    let high = b95.clamp(low, n_blocks);
+    (low, high)
+}
 
 /// Hysteresis latch between the pool's low/high watermarks.
 #[derive(Debug, Default)]
@@ -161,6 +196,30 @@ mod tests {
         // and an abrupt CoW drop from over high to under low: closes again
         assert!(!a.allow(&pressure(0)));
         assert_eq!(a.hold_transitions, 2);
+    }
+
+    #[test]
+    fn derive_watermarks_pins_the_percentile_rule() {
+        // synthetic distribution: live sets uniform over 1..=100 tokens,
+        // 16-token blocks, 64-block pool. p50 = 50.5 → ceil 51 → 4 blocks;
+        // p95 = 95.05 → ceil 96 → 6 blocks. low = 6 − 4 = 2, high = 6.
+        let samples: Vec<usize> = (1..=100).collect();
+        assert_eq!(derive_watermarks(&samples, 16, 64), (2, 6));
+        // a tight distribution (every row identical) degenerates to a
+        // minimal one-block band at the row's own footprint
+        let flat = vec![32usize; 50];
+        assert_eq!(derive_watermarks(&flat, 16, 64), (1, 2));
+        // p95 beyond the pool clamps to it, low stays <= high
+        let huge = vec![10_000usize; 10];
+        let (low, high) = derive_watermarks(&huge, 16, 8);
+        assert!(low <= high && high <= 8);
+        // empty samples fall back to a minimal band
+        assert_eq!(derive_watermarks(&[], 16, 64), (1, 2));
+        // the result always satisfies PoolConfig::validate
+        for samples in [vec![1usize], vec![5, 9, 200], (1..=100).collect()] {
+            let (low, high) = derive_watermarks(&samples, 4, 16);
+            assert!(low <= high && high <= 16 && low >= 1, "{low}/{high}");
+        }
     }
 
     #[test]

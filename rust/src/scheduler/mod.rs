@@ -18,9 +18,10 @@
 //! (recompute mode) rather than restarting it.
 
 pub mod admission;
+pub mod preempt;
 pub mod queue;
 
-pub use admission::AdmissionController;
+pub use admission::{derive_watermarks, AdmissionController};
 pub use queue::{QueuedRequest, RequestQueue};
 
 /// Iteration-level admission decisions for a fixed-row engine.

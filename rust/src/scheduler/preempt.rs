@@ -1,0 +1,68 @@
+//! Per-row preemption cost model: recompute-resume vs swap-resume.
+//!
+//! A preempted row can come back two ways (`coordinator::PreemptMode`):
+//!
+//! * **recompute** — drop the blocks now (free), re-prefill the whole fed
+//!   stream (prompt + generated, `fed_tokens` positions of model compute)
+//!   at resume, then rewrite only the live keep-set's rows. Cost grows with
+//!   *sequence length*, and a stream past the prefill bucket falls off a
+//!   cliff (restart from the prompt).
+//! * **swap** — copy the live set's K/V rows device→host now and host→device
+//!   at resume (`2 × live_tokens` rows of interconnect traffic), no model
+//!   compute, no bucket cliff. Cost grows with the *live set*, which lagged
+//!   eviction pins near B + W regardless of length.
+//!
+//! Both costs are linear in token-rows, so the model compares token counts
+//! with a traffic factor on the swap side: one re-prefilled token is taken
+//! to cost about one moved token-row, and a swap moves every live row twice.
+//! The crossover is therefore at `fed = 2 × live` — for a lazy policy
+//! (live ≈ B + W) every row longer than ~2(B + W) fed tokens swaps cheaper,
+//! and the advantage widens linearly from there. `sim::capacity` measures
+//! the two models side by side and `benches/pool.rs` reports the crossover.
+
+/// Rows of device↔host traffic per live token across a full swap round trip
+/// (one copy out at preemption, one copy in at resume).
+pub const SWAP_TRAFFIC_FACTOR: usize = 2;
+
+/// Should this row be preempted in swap mode rather than recompute mode?
+/// `live_tokens` is the row's current live set (blocks to move),
+/// `fed_tokens` its fed-stream length (prompt + generated — the recompute
+/// prefill size). Ties go to recompute: equal cost buys no bucket risk at
+/// resume only when the stream still fits the bucket, and the engine's
+/// recompute path already handles the oversize case by restarting.
+pub fn swap_beats_recompute(live_tokens: usize, fed_tokens: usize) -> bool {
+    SWAP_TRAFFIC_FACTOR * live_tokens < fed_tokens
+}
+
+/// The fed-stream length past which swap wins for a given live set — the
+/// crossover `benches/pool.rs` reports.
+pub fn crossover_fed_tokens(live_tokens: usize) -> usize {
+    SWAP_TRAFFIC_FACTOR * live_tokens + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossover_boundary_is_exact() {
+        // live 48 (B=40, W=8): fed 96 ties → recompute; fed 97 → swap
+        assert!(!swap_beats_recompute(48, 96));
+        assert!(swap_beats_recompute(48, 97));
+        assert_eq!(crossover_fed_tokens(48), 97);
+    }
+
+    #[test]
+    fn short_rows_recompute_long_rows_swap() {
+        // early in a sequence the live set IS the stream: recompute wins
+        assert!(!swap_beats_recompute(30, 30));
+        // deep into a lazily-evicted sequence the stream dwarfs the live set
+        assert!(swap_beats_recompute(48, 4096));
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert!(!swap_beats_recompute(0, 0));
+        assert!(swap_beats_recompute(0, 1), "an empty live set is free to move");
+    }
+}

@@ -10,7 +10,9 @@
 //!               "utilization": 0.86, "preemptions": 2,       // only
 //!               "resumes": 2, "recomputed_tokens": 120,
 //!               "shared_blocks": 3, "prefix_hits": 5, "prefix_misses": 2,
-//!               "prefix_entries": 1, "prefix_pinned_blocks": 3}}
+//!               "prefix_entries": 1, "prefix_pinned_blocks": 3,
+//!               "parked_blocks": 2, "promotions": 4,      // host tier
+//!               "swap_out_bytes": 9216, "swap_in_bytes": 6144, ...}}
 //!   ← {"error": "..."}                                    // on any failure
 //!
 //! `max_new` is clamped: 0 is rejected, values above [`MAX_MAX_NEW`] are
@@ -97,6 +99,15 @@ pub fn pool_gauges_to_json(g: &PoolGauges) -> Json {
         .set("prefix_prefill_skips", g.prefix_prefill_skips as f64)
         .set("kv_arena_bytes", g.kv_arena_bytes)
         .set("kv_bytes_in_use", g.kv_bytes_in_use)
+        .set("parked_blocks", g.parked_blocks)
+        .set("parked_bytes", g.parked_bytes)
+        .set("demoted_blocks", g.demoted_blocks as f64)
+        .set("promotions", g.promotions as f64)
+        .set("false_evictions_avoided", g.false_evictions_avoided as f64)
+        .set("swap_out_bytes", g.swap_out_bytes as f64)
+        .set("swap_in_bytes", g.swap_in_bytes as f64)
+        .set("swap_preempts", g.swap_preempts as f64)
+        .set("tier_shed_blocks", g.tier_shed_blocks as f64)
 }
 
 pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
@@ -418,6 +429,15 @@ mod tests {
             prefix_prefill_skips: 4,
             kv_arena_bytes: 131072,
             kv_bytes_in_use: 112640,
+            parked_blocks: 3,
+            parked_bytes: 3072,
+            demoted_blocks: 7,
+            promotions: 5,
+            false_evictions_avoided: 11,
+            swap_out_bytes: 9216,
+            swap_in_bytes: 6144,
+            swap_preempts: 1,
+            tier_shed_blocks: 2,
         };
         let j = pool_gauges_to_json(&g);
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -435,5 +455,14 @@ mod tests {
         assert_eq!(parsed.usize_at("prefix_prefill_skips").unwrap(), 4);
         assert_eq!(parsed.usize_at("kv_arena_bytes").unwrap(), 131072);
         assert_eq!(parsed.usize_at("kv_bytes_in_use").unwrap(), 112640);
+        assert_eq!(parsed.usize_at("parked_blocks").unwrap(), 3);
+        assert_eq!(parsed.usize_at("parked_bytes").unwrap(), 3072);
+        assert_eq!(parsed.usize_at("demoted_blocks").unwrap(), 7);
+        assert_eq!(parsed.usize_at("promotions").unwrap(), 5);
+        assert_eq!(parsed.usize_at("false_evictions_avoided").unwrap(), 11);
+        assert_eq!(parsed.usize_at("swap_out_bytes").unwrap(), 9216);
+        assert_eq!(parsed.usize_at("swap_in_bytes").unwrap(), 6144);
+        assert_eq!(parsed.usize_at("swap_preempts").unwrap(), 1);
+        assert_eq!(parsed.usize_at("tier_shed_blocks").unwrap(), 2);
     }
 }

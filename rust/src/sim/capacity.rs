@@ -5,10 +5,12 @@
 //! [`BlockPool`] with the same iteration-level mechanics as the engine:
 //! watermark-gated admission, block-at-a-time growth, whole-block
 //! reclamation after eviction, and youngest-first preemption when the pool
-//! runs dry — with either recompute-mode resume (re-prefill the live set at
-//! the preemption cursor and continue; the engine's behavior) or
-//! restart-from-prompt (the pre-resume baseline) as the re-admission cost
-//! model, selected by `CapacitySpec::recompute_resume`. The headline metric is
+//! runs dry — with recompute-mode resume (re-prefill the live set at the
+//! preemption cursor and continue; the engine's default), swap-mode resume
+//! (`kvtier`: park the table in a byte-budgeted host tier and copy it back —
+//! charged as bytes moved, not tokens recomputed), or restart-from-prompt
+//! (the pre-resume baseline) as the re-admission cost model, selected by
+//! `CapacitySpec::{recompute_resume, swap_resume}`. The headline metric is
 //! `mean_concurrency` — the sustained batch size under the budget; a policy
 //! whose live set collapses to ≈ B+W (LazyEviction) sustains several times
 //! the concurrency of FullKV's unbounded growth.
@@ -61,6 +63,19 @@ pub struct CapacitySpec {
     /// decode work per preemption. Default `false` so baseline capacity
     /// numbers stay comparable across PRs; the delta is the cost model.
     pub recompute_resume: bool,
+    /// Swap-mode preemption (`kvtier`; overrides `recompute_resume` for
+    /// mid-decode victims): the victim's whole table parks in a host tier
+    /// and re-admission copies it back — no re-prefill at all. Costs are
+    /// charged as bytes moved (`swap_out_bytes`/`swap_in_bytes`) instead of
+    /// `recomputed_tokens`; scheduling is unchanged, so a swap run and a
+    /// recompute run are step-for-step identical and the delta is purely
+    /// the cost model — the crossover `benches/pool.rs` reports.
+    pub swap_resume: bool,
+    /// Host-tier budget for swap mode, in blocks. Parked tables hold tier
+    /// capacity until re-admission; a preemption that would overflow it
+    /// falls back to the recompute model (`swap_fallbacks`). Unlimited by
+    /// default.
+    pub host_tier_blocks: usize,
 }
 
 impl CapacitySpec {
@@ -85,6 +100,8 @@ impl CapacitySpec {
             share_prefix: false,
             kv_cost: KvCost::paper_7b(),
             recompute_resume: false,
+            swap_resume: false,
+            host_tier_blocks: usize::MAX,
         }
     }
 }
@@ -129,6 +146,16 @@ pub struct CapacityReport {
     /// is exactly the sum of the live-curve lengths; with restarts it is
     /// that plus `restarted_steps` — the identity the cost-model test pins.
     pub decode_steps: u64,
+    /// Swap-mode: blocks parked in the host tier by preemptions.
+    pub swapped_blocks: u64,
+    /// Swap-mode: bytes copied device→host at preemption time.
+    pub swap_out_bytes: u64,
+    /// Swap-mode: bytes copied host→device at re-admission. Equals
+    /// `swap_out_bytes` once the run drains (every parked table resumes).
+    pub swap_in_bytes: u64,
+    /// Swap preemptions that fell back to the recompute model because the
+    /// tier budget could not hold the table.
+    pub swap_fallbacks: u64,
 }
 
 /// One queued/active sequence: its live curve and (when active) its table.
@@ -202,9 +229,10 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         donor = Some(t);
     }
 
-    // queue entries carry a resume cursor: 0 for fresh sequences, the
-    // preemption point for recompute-mode re-admissions
-    let mut queue: VecDeque<(usize, usize)> = VecDeque::new();
+    // queue entries carry a resume cursor (0 for fresh sequences, the
+    // preemption point for re-admissions) plus the parked-token count of a
+    // swap-mode victim (0 = nothing parked: fresh, restart, or recompute)
+    let mut queue: VecDeque<(usize, usize, usize)> = VecDeque::new();
     for (i, s) in seqs.iter().enumerate() {
         // a sequence whose peak demand exceeds the whole pool can never run
         let peak =
@@ -212,13 +240,16 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         if pool.blocks_for(peak + 1) > pool.total_blocks() {
             rep.failed += 1;
         } else {
-            queue.push_back((i, 0));
+            queue.push_back((i, 0, 0));
         }
     }
 
     let mut active: Vec<ActiveSeq> = Vec::new();
     let mut admit_seq = 0u64;
     let mut conc_sum = 0u64;
+    // host-tier occupancy (blocks) while swap-mode victims sit queued
+    let mut tier_used = 0usize;
+    let bytes_per_token = spec.kv_cost.bytes_per_token() as u64;
 
     while !(queue.is_empty() && active.is_empty()) {
         // iteration-level admission, watermark-reserved unless idle. With
@@ -228,7 +259,7 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         // preemption point instead of the prompt: that one-pass re-prefill
         // is the resume cost, charged to `recomputed_tokens`.
         while active.len() < spec.max_rows {
-            let Some(&(next, cursor)) = queue.front() else { break };
+            let Some(&(next, cursor, parked_tokens)) = queue.front() else { break };
             let fill = if cursor > 0 {
                 header + seqs[next].live_curve[cursor].max(1)
             } else {
@@ -266,13 +297,20 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
             }
             if cursor > 0 {
                 rep.resumes += 1;
-                // the engine's recompute prefill runs over the whole fed
-                // stream (prompt + tokens generated up to the preemption
-                // cursor), not just the surviving live set the blocks hold —
-                // charge the same so engine and sim `recomputed_tokens`
-                // stay comparable in one report
-                rep.recomputed_tokens +=
-                    (header + seqs[next].prompt_tokens + cursor) as u64;
+                if parked_tokens > 0 {
+                    // swap resume: the parked table comes back host→device;
+                    // no model compute at all
+                    rep.swap_in_bytes += parked_tokens as u64 * bytes_per_token;
+                    tier_used -= pool.blocks_for(parked_tokens);
+                } else {
+                    // the engine's recompute prefill runs over the whole fed
+                    // stream (prompt + tokens generated up to the preemption
+                    // cursor), not just the surviving live set the blocks
+                    // hold — charge the same so engine and sim
+                    // `recomputed_tokens` stay comparable in one report
+                    rep.recomputed_tokens +=
+                        (header + seqs[next].prompt_tokens + cursor) as u64;
+                }
             }
             active.push(ActiveSeq {
                 idx: next,
@@ -308,18 +346,36 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
             if target <= active[r].table.len() {
                 active[r].table.truncate(target, &mut pool);
             }
-            // a preemption re-queues at the cursor (recompute resume) or at
-            // 0 (restart — the replayed steps are counted as thrown away)
+            // a preemption re-queues at the cursor with its table parked in
+            // the tier (swap mode), at the cursor with nothing parked
+            // (recompute mode, or a swap that overflowed the tier budget),
+            // or at 0 (restart — the replayed steps are thrown away)
             let requeue = |v: &mut ActiveSeq,
                            pool: &mut BlockPool,
                            rep: &mut CapacityReport,
-                           queue: &mut VecDeque<(usize, usize)>| {
+                           queue: &mut VecDeque<(usize, usize, usize)>,
+                           tier_used: &mut usize| {
+                let parked_tokens = if spec.swap_resume && v.cursor > 0 {
+                    let blocks = v.table.n_blocks();
+                    if *tier_used + blocks <= spec.host_tier_blocks {
+                        *tier_used += blocks;
+                        rep.swapped_blocks += blocks as u64;
+                        rep.swap_out_bytes +=
+                            v.table.len() as u64 * spec.kv_cost.bytes_per_token() as u64;
+                        v.table.len()
+                    } else {
+                        rep.swap_fallbacks += 1;
+                        0
+                    }
+                } else {
+                    0
+                };
                 v.table.release_all(pool);
-                if spec.recompute_resume {
-                    queue.push_front((v.idx, v.cursor));
+                if spec.swap_resume || spec.recompute_resume {
+                    queue.push_front((v.idx, v.cursor, parked_tokens));
                 } else {
                     rep.restarted_steps += v.cursor as u64;
-                    queue.push_front((v.idx, 0));
+                    queue.push_front((v.idx, 0, 0));
                 }
                 rep.preemptions += 1;
             };
@@ -331,13 +387,13 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
                 if r == active.len() - 1 {
                     // this row is the youngest: preempt it
                     let mut v = active.remove(r);
-                    requeue(&mut v, &mut pool, &mut rep, &mut queue);
+                    requeue(&mut v, &mut pool, &mut rep, &mut queue, &mut tier_used);
                     preempted_self = true;
                     break;
                 }
                 // preempt the youngest (last after the sort) and retry
                 let mut v = active.pop().expect("len > r + 1");
-                requeue(&mut v, &mut pool, &mut rep, &mut queue);
+                requeue(&mut v, &mut pool, &mut rep, &mut queue, &mut tier_used);
             }
             if preempted_self {
                 continue; // active[r] is now the next row (or none)
@@ -523,6 +579,51 @@ mod tests {
         // both leak-free
         assert_eq!(a.end_free_blocks, a.total_blocks);
         assert_eq!(b.end_free_blocks, b.total_blocks);
+    }
+
+    #[test]
+    fn swap_resume_is_step_identical_and_charges_bytes_not_tokens() {
+        // Swap mode changes only the cost accounting, never the schedule:
+        // the run is step-for-step identical to recompute mode, pays zero
+        // recomputed tokens, and every parked byte comes back exactly once.
+        let mut recompute = spec("full");
+        recompute.recompute_resume = true;
+        let mut swap = spec("full");
+        swap.swap_resume = true;
+        let a = run_capacity(&recompute).unwrap();
+        let b = run_capacity(&swap).unwrap();
+        assert!(a.preemptions > 0 && b.preemptions > 0);
+        assert_eq!(a.preemptions, b.preemptions, "schedules must match");
+        assert_eq!(a.decode_steps, b.decode_steps, "swap replays nothing");
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(b.restarted_steps, 0);
+        assert_eq!(b.recomputed_tokens, 0, "unlimited tier: no fallback");
+        assert_eq!(b.swap_fallbacks, 0);
+        assert!(b.swapped_blocks > 0 && b.swap_out_bytes > 0);
+        assert_eq!(
+            b.swap_in_bytes, b.swap_out_bytes,
+            "every parked table must resume exactly once"
+        );
+        assert!(a.recomputed_tokens > 0, "the recompute run pays in tokens");
+        assert_eq!(b.end_free_blocks, b.total_blocks);
+    }
+
+    #[test]
+    fn tier_budget_overflow_falls_back_to_recompute() {
+        // An 8-block tier cannot hold a full-KV table (~20+ blocks), so
+        // every swap attempt falls back — and the run still completes,
+        // paying the recompute cost instead.
+        let mut s = spec("full");
+        s.swap_resume = true;
+        s.host_tier_blocks = 8;
+        let r = run_capacity(&s).unwrap();
+        assert_eq!(r.completed, 10);
+        assert!(r.preemptions > 0);
+        assert!(r.swap_fallbacks > 0, "tiny tier must force fallbacks");
+        assert_eq!(r.swapped_blocks, 0, "nothing fits an 8-block tier");
+        assert!(r.recomputed_tokens > 0, "fallbacks pay the recompute cost");
+        assert_eq!(r.restarted_steps, 0);
+        assert_eq!(r.end_free_blocks, r.total_blocks);
     }
 
     #[test]

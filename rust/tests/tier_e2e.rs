@@ -1,0 +1,233 @@
+//! Tiered-KV end-to-end: the host spill tier under real serving traffic.
+//!
+//! Two properties the tier must deliver (ISSUE 5 acceptance):
+//!
+//! * swap-out → swap-in round trips are byte-identical — pinned by driving
+//!   serve past pool exhaustion in swap preempt-mode over TCP (every
+//!   response must match a solo control byte for byte, and the sim
+//!   backend's stored-key identity check makes corrupted swapped bytes
+//!   derail recurrence tracking rather than pass silently), and by a
+//!   promotion run whose live K/V rows are compared byte-for-byte against
+//!   a never-evicted FullKV control;
+//! * the recurrence phenomenon is *served*: a lazy run on the deterministic
+//!   recurrence-heavy sim trace reports `promotions > 0` with zero output
+//!   divergence.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use lazyeviction::coordinator::{Engine, EngineConfig, PreemptMode, Request};
+use lazyeviction::kvpool::PoolConfig;
+use lazyeviction::kvtier::HostTierConfig;
+use lazyeviction::util::json::Json;
+
+fn tier_cfg(batch: usize, n_blocks: usize, mode: PreemptMode) -> EngineConfig {
+    let mut cfg = EngineConfig {
+        batch,
+        cache: 64,
+        budget: 40,
+        policy: "lazy".into(),
+        record_live: false,
+        pool: Some(PoolConfig {
+            block_size: 8,
+            n_blocks,
+            low_watermark: 0,
+            high_watermark: 0,
+        }),
+        host_tier: Some(HostTierConfig { max_bytes: 1 << 20 }),
+        preempt_mode: mode,
+        ..Default::default()
+    };
+    cfg.params.window = 8;
+    cfg.params.recent = 8;
+    cfg
+}
+
+fn serve_on(addr: &'static str, engine_cfg: EngineConfig, shutdown: &Arc<AtomicBool>) {
+    {
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            let engine = Engine::new_sim(engine_cfg).expect("sim engine");
+            let _ = lazyeviction::server::serve(engine, addr, shutdown);
+        });
+    }
+    for _ in 0..200 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            drop(s);
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    panic!("server did not come up within 4s");
+}
+
+fn solo_text(max_new: usize) -> String {
+    let mut cfg = tier_cfg(1, 16, PreemptMode::Recompute);
+    cfg.host_tier = None;
+    let mut e = Engine::new_sim(cfg).unwrap();
+    let r = e
+        .run_all(vec![Request {
+            id: 0,
+            prompt: "#A=3;B=7;\n>".into(),
+            template: String::new(),
+            max_new,
+            resume: None,
+        }])
+        .unwrap();
+    r[0].text.clone()
+}
+
+#[test]
+fn swap_mode_serving_past_exhaustion_is_byte_identical() {
+    // 9 blocks behind 2 rows: two ~6-block rows near budget must collide,
+    // so swap-mode preemption fires under real serving traffic. Every
+    // client's output must equal the uncontended solo control — which can
+    // only hold if the swap-out → swap-in round trips preserved the bytes
+    // (the resumed rows decode on exactly the restored K/V).
+    let addr = "127.0.0.1:8957";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    serve_on(addr, tier_cfg(2, 9, PreemptMode::Swap), &shutdown);
+    let solo = solo_text(50);
+
+    let mut handles = Vec::new();
+    for _ in 0..4u32 {
+        handles.push(std::thread::spawn(move || -> String {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            writeln!(&stream, r#"{{"prompt":"#A=3;B=7;\n>","max_new":50}}"#).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line
+        }));
+    }
+    let mut max_swap_out = 0usize;
+    let mut max_swap_in = 0usize;
+    let mut max_swaps = 0usize;
+    for h in handles {
+        let line = h.join().unwrap();
+        let j = Json::parse(&line).expect("json response line");
+        assert!(j.get("error").is_none(), "server returned an error: {line}");
+        assert_eq!(j.usize_at("tokens").unwrap(), 50);
+        assert_eq!(
+            j.str_at("text").unwrap(),
+            solo,
+            "a swap round trip corrupted this row"
+        );
+        let pool = j.req("pool").expect("pool gauges attached");
+        max_swap_out = max_swap_out.max(pool.usize_at("swap_out_bytes").unwrap());
+        max_swap_in = max_swap_in.max(pool.usize_at("swap_in_bytes").unwrap());
+        max_swaps = max_swaps.max(pool.usize_at("swap_preempts").unwrap());
+        assert_eq!(
+            pool.usize_at("recomputed_tokens").unwrap(),
+            0,
+            "swap mode must not pay recompute"
+        );
+    }
+    assert!(max_swaps >= 1, "the contended pool must swap-preempt");
+    assert!(max_swap_out > 0 && max_swap_in > 0);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn promotion_after_eviction_matches_never_evicted_control() {
+    // A lazy run with the tier on: eviction parks blocks, recurrence brings
+    // some back. Every live slot — promoted ones included — must then hold
+    // exactly the K/V bytes a never-evicted FullKV control holds for the
+    // same position (the sim stores the birth position inside the key row,
+    // so any mis-restored byte shows up here).
+    let mut e = Engine::new_sim(tier_cfg(1, 16, PreemptMode::Recompute)).unwrap();
+    assert!(e
+        .submit(
+            Request {
+                id: 1,
+                prompt: "#A=3;B=7;\n>".into(),
+                template: String::new(),
+                max_new: 60,
+                resume: None,
+            },
+            0.0,
+        )
+        .unwrap());
+    let mut c = Engine::new_sim(EngineConfig {
+        batch: 1,
+        cache: 128,
+        budget: 120,
+        policy: "full".into(),
+        record_live: false,
+        pool: Some(PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 0,
+            high_watermark: 0,
+        }),
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(c
+        .submit(
+            Request {
+                id: 1,
+                prompt: "#A=3;B=7;\n>".into(),
+                template: String::new(),
+                max_new: 60,
+                resume: None,
+            },
+            0.0,
+        )
+        .unwrap());
+    for _ in 0..52 {
+        e.step().unwrap();
+        c.step().unwrap();
+    }
+    let g = e.pool_gauges().unwrap();
+    assert!(g.demoted_blocks > 0, "evictions must park blocks");
+    assert!(g.promotions > 0, "recurrence must promote parked tokens back");
+    assert!(g.false_evictions_avoided > 0);
+
+    let control: HashMap<u32, (u32, usize)> = c
+        .debug_row_slots(0)
+        .unwrap()
+        .into_iter()
+        .map(|(pos, b, o)| (pos, (b, o)))
+        .collect();
+    let slots = e.debug_row_slots(0).unwrap();
+    assert!(!slots.is_empty());
+    for (pos, blk, off) in slots {
+        let (k, v) = e.backend_kv_row(blk, off).unwrap();
+        let &(cb, co) = control.get(&pos).expect("control keeps every position");
+        let (ck, cv) = c.backend_kv_row(cb, co).unwrap();
+        assert_eq!(k, ck, "pos {pos}: K bytes diverged across the tier");
+        assert_eq!(v, cv, "pos {pos}: V bytes diverged across the tier");
+        assert_eq!(k[0] as u32, pos, "stored-key identity check");
+    }
+}
+
+#[test]
+fn tiered_serving_reports_promotions_with_identical_output() {
+    // The serving-visible half of the promotion acceptance: a lazy run over
+    // TCP with the tier on completes with byte-identical output and its
+    // pool gauges report promotions > 0.
+    let addr = "127.0.0.1:8958";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    serve_on(addr, tier_cfg(1, 16, PreemptMode::Recompute), &shutdown);
+    let solo = solo_text(60);
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(&stream, r#"{{"prompt":"#A=3;B=7;\n>","max_new":60}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).expect("json response line");
+    assert!(j.get("error").is_none(), "server returned an error: {line}");
+    assert_eq!(j.str_at("text").unwrap(), solo, "the tier changed the output");
+    let pool = j.req("pool").expect("pool gauges attached");
+    assert!(pool.usize_at("demoted_blocks").unwrap() > 0);
+    assert!(
+        pool.usize_at("promotions").unwrap() > 0,
+        "a recurrence-heavy lazy run must promote: {line}"
+    );
+    assert!(pool.usize_at("false_evictions_avoided").unwrap() > 0);
+    shutdown.store(true, Ordering::Relaxed);
+}
