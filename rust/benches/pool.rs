@@ -461,6 +461,89 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Recorded trajectory — BENCH_pool.json. A policy × scenario grid over
+    // the sim engine: sustained batch (mean decoding rows per step),
+    // TTFT/TPOT percentiles from the engine's streaming histograms, and the
+    // tier's promotion/park/shed counters. `save` schema-checks the report
+    // before writing; CI uploads the file as an artifact, so successive
+    // runs form a diffable trajectory without parsing bench stdout.
+    {
+        use lazyeviction::bench_harness::report::{BenchReport, BenchScenario, Quantiles};
+        let scenario_cfg = |scenario: &str, policy: &str| {
+            let (batch, blocks, tier) = match scenario {
+                "steady" => (2, 16, false),  // uncontended continuous batching
+                "preempt" => (2, 9, false),  // guaranteed preemption (see above)
+                _ => (1, 16, true),          // "tier": demote/promote traffic
+            };
+            let mut cfg = EngineConfig {
+                batch,
+                cache: 64,
+                budget: 40,
+                policy: policy.into(),
+                pool: Some(PoolConfig {
+                    block_size: 8,
+                    n_blocks: blocks,
+                    low_watermark: 0,
+                    high_watermark: 0,
+                }),
+                host_tier: tier.then(|| HostTierConfig { max_bytes: 1 << 20 }),
+                ..Default::default()
+            };
+            cfg.params.window = 8;
+            cfg.params.recent = 8;
+            cfg
+        };
+        let mut report = BenchReport::new("pool", n);
+        for policy in ["full", "h2o", "tova", "lazy"] {
+            for scenario in ["steady", "preempt", "tier"] {
+                let cfg = scenario_cfg(scenario, policy);
+                let peak_batch = cfg.batch;
+                let (n_reqs, max_new): (u64, usize) = match scenario {
+                    "steady" => (4, 50),
+                    "preempt" => (3, 50),
+                    _ => (1, 60),
+                };
+                let mut e = Engine::new_sim(cfg)?;
+                e.run_all(
+                    (0..n_reqs)
+                        .map(|id| Request {
+                            id,
+                            prompt: "#A=3;B=7;\n>".into(),
+                            template: String::new(),
+                            max_new,
+                            resume: None,
+                        })
+                        .collect(),
+                )?;
+                let m = &e.metrics;
+                report.push(BenchScenario {
+                    policy: policy.into(),
+                    scenario: scenario.into(),
+                    steps: m.steps,
+                    sustained_batch: if m.steps == 0 {
+                        0.0
+                    } else {
+                        m.tokens_out as f64 / m.steps as f64
+                    },
+                    peak_batch,
+                    completed: m.requests_finished,
+                    preemptions: m.preemptions,
+                    resumes: m.resumes,
+                    promotions: m.promotions,
+                    demoted_blocks: m.demoted_blocks,
+                    tier_rejects: m.tier_rejects,
+                    tier_shed_blocks: e
+                        .pool_gauges()
+                        .map(|g| g.tier_shed_blocks)
+                        .unwrap_or(0),
+                    ttft_ms: Quantiles::from_hist(&m.ttft_hist_ms),
+                    tpot_ms: Quantiles::from_hist(&m.tpot_hist_ms),
+                });
+            }
+        }
+        report.save(std::path::Path::new("BENCH_pool.json"))?;
+    }
+
     save_results("pool", out)?;
     Ok(())
 }

@@ -41,6 +41,9 @@ fn main() -> anyhow::Result<()> {
         cfg.params.window = 25;
         cfg.params.recent = 25;
         let mut engine = Engine::new(&client, &manifest, cfg)?;
+        // per-step raw series is opt-in now (the default path keeps only a
+        // bounded histogram); this bench needs positional windows
+        engine.metrics.enable_step_log(gen_len + 64);
         engine.run_all(vec![Request {
             id: 0,
             prompt: "#A=3;B=7;C=2;D=5;\n>".into(),
@@ -48,7 +51,7 @@ fn main() -> anyhow::Result<()> {
             max_new: gen_len,
             resume: None,
         }])?;
-        let lat = &engine.metrics.step_latencies;
+        let lat = engine.metrics.step_log();
         let mut row = vec![name.to_string()];
         let mut jrow = Json::obj();
         for cp in CHECKPOINTS {

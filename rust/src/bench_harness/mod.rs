@@ -1,6 +1,7 @@
 //! Bench harness: timing (criterion is not in the offline crate set),
 //! table rendering matching the paper's rows, and results persistence.
 
+pub mod report;
 pub mod simgrid;
 pub mod table;
 pub mod timing;

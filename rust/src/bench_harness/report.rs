@@ -1,0 +1,315 @@
+//! Recorded benchmark trajectories — the `BENCH_pool.json` surface.
+//!
+//! The CI quick-bench (`cargo bench --bench pool`) emits one
+//! [`BenchReport`]: per policy × scenario, the sustained batch, TTFT/TPOT
+//! percentiles (from the engine's streaming histograms) and the tier's
+//! promotion/park/shed counters, under a fixed `schema_version`. The file
+//! is uploaded as a CI artifact, so successive runs form a recorded
+//! trajectory tools can diff without parsing bench stdout.
+//!
+//! [`BenchReport::validate`] is the schema check: the bench asserts the
+//! report it just built round-trips through it before writing, and the
+//! unit tests here pin the schema against accidental drift (a field
+//! rename or type change fails validation, not a downstream dashboard).
+
+use std::path::Path;
+
+use crate::telemetry::StreamingHistogram;
+use crate::util::json::Json;
+
+/// Bump when a field is renamed/removed or its meaning changes. Additive
+/// fields do not need a bump — `validate` only requires, never forbids.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// Latency quantile summary extracted from a [`StreamingHistogram`].
+#[derive(Clone, Debug, Default)]
+pub struct Quantiles {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Quantiles {
+    pub fn from_hist(h: &StreamingHistogram) -> Quantiles {
+        Quantiles {
+            n: h.n() as usize,
+            mean: h.mean(),
+            p50: h.quantile(0.50),
+            p90: h.quantile(0.90),
+            p99: h.quantile(0.99),
+            max: h.max(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n", self.n)
+            .set("mean", self.mean)
+            .set("p50", self.p50)
+            .set("p90", self.p90)
+            .set("p99", self.p99)
+            .set("max", self.max)
+    }
+}
+
+/// One measured cell of the policy × scenario grid. Counter fields are raw
+/// totals; rates are derivable against `steps` (per-step) or `completed`
+/// (per-request), so the report never bakes in a denominator choice.
+#[derive(Clone, Debug, Default)]
+pub struct BenchScenario {
+    pub policy: String,
+    pub scenario: String,
+    /// Decode steps the scenario ran.
+    pub steps: u64,
+    /// Mean concurrently-decoding rows (tokens_out / steps).
+    pub sustained_batch: f64,
+    /// Configured row ceiling for the scenario.
+    pub peak_batch: usize,
+    /// Requests finished.
+    pub completed: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    /// Host tier: recurrence-driven promotions (entries swapped back in).
+    pub promotions: u64,
+    /// Host tier: evicted-block groups parked instead of destroyed.
+    pub demoted_blocks: u64,
+    /// Host tier: park attempts refused (byte budget exhausted).
+    pub tier_rejects: u64,
+    /// Host tier: parked entries destroyed under byte pressure.
+    pub tier_shed_blocks: u64,
+    pub ttft_ms: Quantiles,
+    pub tpot_ms: Quantiles,
+}
+
+impl BenchScenario {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("policy", self.policy.as_str())
+            .set("scenario", self.scenario.as_str())
+            .set("steps", self.steps as f64)
+            .set("sustained_batch", self.sustained_batch)
+            .set("peak_batch", self.peak_batch)
+            .set("completed", self.completed as f64)
+            .set("preemptions", self.preemptions as f64)
+            .set("resumes", self.resumes as f64)
+            .set("promotions", self.promotions as f64)
+            .set("demoted_blocks", self.demoted_blocks as f64)
+            .set("tier_rejects", self.tier_rejects as f64)
+            .set("tier_shed_blocks", self.tier_shed_blocks as f64)
+            .set("ttft_ms", self.ttft_ms.to_json())
+            .set("tpot_ms", self.tpot_ms.to_json())
+    }
+}
+
+/// The whole recorded run: metadata + every grid cell.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub bench: String,
+    /// Workload size knob the run used (LAZYEVICTION_BENCH_SAMPLES).
+    pub samples: usize,
+    pub results: Vec<BenchScenario>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str, samples: usize) -> BenchReport {
+        BenchReport {
+            bench: bench.to_string(),
+            samples,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, s: BenchScenario) {
+        self.results.push(s);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self.results.iter().map(|s| s.to_json()).collect();
+        Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
+            .set("bench", self.bench.as_str())
+            .set("samples", self.samples)
+            .set("results", results)
+    }
+
+    /// Schema check for a serialized report. Returns the first violation.
+    pub fn validate(j: &Json) -> Result<(), String> {
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_usize())
+            .ok_or("missing schema_version")?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} != supported {SCHEMA_VERSION}"
+            ));
+        }
+        let bench = j
+            .get("bench")
+            .and_then(|v| v.as_str())
+            .ok_or("missing bench name")?;
+        if bench.is_empty() {
+            return Err("empty bench name".into());
+        }
+        j.get("samples")
+            .and_then(|v| v.as_f64())
+            .ok_or("missing samples")?;
+        let results = j
+            .get("results")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing results array")?;
+        if results.is_empty() {
+            return Err("empty results array".into());
+        }
+        for (i, s) in results.iter().enumerate() {
+            for key in ["policy", "scenario"] {
+                s.get(key)
+                    .and_then(|v| v.as_str())
+                    .ok_or(format!("results[{i}]: missing string '{key}'"))?;
+            }
+            for key in [
+                "steps",
+                "sustained_batch",
+                "peak_batch",
+                "completed",
+                "preemptions",
+                "resumes",
+                "promotions",
+                "demoted_blocks",
+                "tier_rejects",
+                "tier_shed_blocks",
+            ] {
+                let v = s
+                    .get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or(format!("results[{i}]: missing number '{key}'"))?;
+                if v < 0.0 {
+                    return Err(format!("results[{i}]: negative '{key}'"));
+                }
+            }
+            for hist in ["ttft_ms", "tpot_ms"] {
+                let q = s
+                    .get(hist)
+                    .ok_or(format!("results[{i}]: missing '{hist}'"))?;
+                let mut vals = [0.0f64; 4];
+                for (slot, key) in ["p50", "p90", "p99", "max"].iter().enumerate() {
+                    vals[slot] = q
+                        .get(key)
+                        .and_then(|v| v.as_f64())
+                        .ok_or(format!("results[{i}].{hist}: missing '{key}'"))?;
+                }
+                q.get("n")
+                    .and_then(|v| v.as_f64())
+                    .ok_or(format!("results[{i}].{hist}: missing 'n'"))?;
+                q.get("mean")
+                    .and_then(|v| v.as_f64())
+                    .ok_or(format!("results[{i}].{hist}: missing 'mean'"))?;
+                if !(vals[0] <= vals[1] && vals[1] <= vals[2] && vals[2] <= vals[3]) {
+                    return Err(format!(
+                        "results[{i}].{hist}: quantiles not monotone \
+                         (p50 {} p90 {} p99 {} max {})",
+                        vals[0], vals[1], vals[2], vals[3]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate, then write the report to `path` (pretty-printed).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let j = self.to_json();
+        BenchReport::validate(&j)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        std::fs::write(path, j.to_pretty())?;
+        eprintln!("[results] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        let mut hist = StreamingHistogram::latency_ms();
+        for ms in [1.0, 2.0, 4.0, 8.0] {
+            hist.observe(ms);
+        }
+        let mut r = BenchReport::new("pool", 8);
+        r.push(BenchScenario {
+            policy: "lazy".into(),
+            scenario: "steady".into(),
+            steps: 100,
+            sustained_batch: 1.9,
+            peak_batch: 2,
+            completed: 4,
+            ttft_ms: Quantiles::from_hist(&hist),
+            tpot_ms: Quantiles::from_hist(&hist),
+            ..Default::default()
+        });
+        r
+    }
+
+    #[test]
+    fn report_round_trips_and_validates() {
+        let j = sample_report().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        BenchReport::validate(&parsed).expect("schema-valid");
+        assert_eq!(parsed.usize_at("schema_version").unwrap(), SCHEMA_VERSION);
+        let results = parsed.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].str_at("policy").unwrap(), "lazy");
+        assert!(results[0].f64_at("sustained_batch").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_schema_valid() {
+        // a scenario whose TPOT never fired (single-token outputs) must
+        // still serialize to a valid report, not NaN-poison it
+        let mut r = BenchReport::new("pool", 1);
+        r.push(BenchScenario {
+            policy: "full".into(),
+            scenario: "steady".into(),
+            ..Default::default()
+        });
+        BenchReport::validate(&r.to_json()).expect("empty quantiles are 0.0");
+    }
+
+    #[test]
+    fn validate_rejects_corruption() {
+        let good = sample_report().to_json();
+        // wrong version
+        let j = Json::parse(&good.to_string())
+            .unwrap()
+            .set("schema_version", 99usize);
+        assert!(BenchReport::validate(&j).is_err());
+        // missing results
+        let j = Json::obj().set("schema_version", SCHEMA_VERSION).set(
+            "bench",
+            "pool",
+        );
+        assert!(BenchReport::validate(&j).is_err());
+        // a result missing a required counter
+        let bad = r#"{"schema_version":1,"bench":"pool","samples":1,
+            "results":[{"policy":"lazy","scenario":"steady"}]}"#;
+        assert!(BenchReport::validate(&Json::parse(bad).unwrap()).is_err());
+        // non-monotone quantiles
+        let mut s = sample_report();
+        s.results[0].ttft_ms.p90 = 0.0;
+        assert!(BenchReport::validate(&s.to_json()).is_err());
+    }
+
+    #[test]
+    fn save_writes_schema_valid_file() {
+        let dir = std::env::temp_dir().join("lazyeviction_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_pool.json");
+        sample_report().save(&path).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        BenchReport::validate(&back).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -56,6 +56,7 @@ use crate::kvpool::{
 use crate::kvtier::{HostTier, ParkedEntry, SwappedBlock, TierBlockId};
 use crate::metrics::{EngineMetrics, PoolGauges, RequestMetrics};
 use crate::runtime::{Client, DecodeBackend, Manifest, ModelExecutor, SimBackend};
+use crate::telemetry::event;
 use crate::tokenizer::Tokenizer;
 
 pub struct Engine {
@@ -78,6 +79,10 @@ pub struct Engine {
     /// Next admission ticket (monotone; youngest row = max ticket).
     admit_seq: u64,
     pub metrics: EngineMetrics,
+    /// Shared telemetry sink (serve mode): flight events are recorded at
+    /// each lifecycle point, and `publish_telemetry` pushes registry
+    /// snapshots. `None` costs nothing on any hot path.
+    telemetry: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
     vocab: usize,
     /// Max blocks a row's table can hold (paged staging width).
     blocks_per_row: usize,
@@ -157,6 +162,7 @@ impl Engine {
             preempted: Vec::new(),
             admit_seq: 0,
             metrics: EngineMetrics::default(),
+            telemetry: None,
             blocks_per_row,
             mask_buf: vec![0.0; b * s],
             tok_buf: vec![0; b],
@@ -234,8 +240,61 @@ impl Engine {
                 g.swap_preempts = self.metrics.swap_preempts;
                 g.tier_shed_blocks = t.shed_blocks;
             }
+            // refused parks can also come from swap-mode preemptions, so
+            // export unconditionally (0 without a tier)
+            g.tier_rejects = self.metrics.tier_rejects;
             g
         })
+    }
+
+    /// Attach a shared telemetry handle: from here on the engine records
+    /// flight events at every request-lifecycle point and
+    /// `publish_telemetry` pushes registry snapshots.
+    pub fn attach_telemetry(&mut self, t: std::sync::Arc<crate::telemetry::Telemetry>) {
+        self.telemetry = Some(t);
+    }
+
+    fn tele_event(
+        &self,
+        req: u64,
+        event: &'static str,
+        step: usize,
+        live: usize,
+        detail: f64,
+        note: &'static str,
+    ) {
+        if let Some(t) = &self.telemetry {
+            t.record(req, event, step, live, detail, note);
+        }
+    }
+
+    /// Push counter/gauge/histogram snapshots into the attached registry.
+    /// No-op without telemetry; called by the serve loop each iteration so
+    /// scrapers read fresh values without touching engine state.
+    pub fn publish_telemetry(&self) {
+        use crate::telemetry::names;
+        let Some(t) = &self.telemetry else { return };
+        let reg = &t.registry;
+        let m = &self.metrics;
+        reg.set_counter(names::TOKENS_OUT, m.tokens_out);
+        reg.set_counter(names::STEPS, m.steps);
+        reg.set_counter(names::REQUESTS_FINISHED, m.requests_finished);
+        reg.set_counter("lazyeviction_eviction_passes_total", m.eviction_count);
+        reg.set_counter("lazyeviction_prefill_skips_total", m.prefill_skips);
+        reg.set_counter("lazyeviction_resume_fallbacks_total", m.resume_fallbacks);
+        reg.set_gauge("lazyeviction_active_rows", self.active() as f64);
+        reg.set_gauge("lazyeviction_batch_rows", self.cfg.batch as f64);
+        reg.set_gauge("lazyeviction_throughput_tokens_per_s", m.throughput());
+        reg.set_histogram(names::STEP_LATENCY_MS, &m.step_hist_ms);
+        reg.set_histogram(names::PREFILL_LATENCY_MS, &m.prefill_hist_ms);
+        reg.set_histogram(names::TTFT_MS, &m.ttft_hist_ms);
+        reg.set_histogram(names::TPOT_MS, &m.tpot_hist_ms);
+        reg.set_histogram(names::QUEUE_WAIT_MS, &m.queue_wait_hist_ms);
+        reg.set_histogram(names::EVICTION_PASS_MS, &m.evict_hist_ms);
+        reg.set_histogram(names::LIVE_TOKENS, &m.live_hist);
+        if let Some(g) = self.pool_gauges() {
+            g.publish(reg);
+        }
     }
 
     /// Test/debug introspection: `(pos, block, offset)` for every live slot
@@ -384,6 +443,7 @@ impl Engine {
         if let Some(st) = req.resume.take() {
             return self.submit_resumed(req, st);
         }
+        let req_id = req.id;
         let Some(row_idx) = self.rows.iter().position(|r| r.is_none()) else {
             return Ok(false);
         };
@@ -470,6 +530,7 @@ impl Engine {
         } else {
             None
         };
+        let mut prefill_ms = None;
         let pre = if let Some(seed) = seed_opt {
             self.metrics.prefill_skips += 1;
             Prefilled::Seeded(seed)
@@ -494,7 +555,9 @@ impl Engine {
                     return Err(e);
                 }
             }
-            self.metrics.record_prefill(t0.elapsed());
+            let dt = t0.elapsed();
+            self.metrics.record_prefill(dt);
+            prefill_ms = Some(dt.as_secs_f64() * 1e3);
             out
         };
 
@@ -631,6 +694,21 @@ impl Engine {
                 self.rows[row_idx] = Some(row);
             }
         }
+        self.metrics.record_queue_wait(queued_s);
+        if self.telemetry.is_some() {
+            let (step, live) = self.rows[row_idx]
+                .as_ref()
+                .map(|r| (r.pos as usize, r.seq.len()))
+                .unwrap_or((p, p));
+            self.tele_event(req_id, event::ADMITTED, step, live, p as f64, "");
+            if prefix_hit {
+                self.tele_event(req_id, event::PREFIX_HIT, step, live, premapped as f64, "");
+            }
+            match prefill_ms {
+                Some(ms) => self.tele_event(req_id, event::PREFILL, step, live, ms, ""),
+                None => self.tele_event(req_id, event::PREFILL_SKIP, step, live, 0.0, ""),
+            }
+        }
         Ok(true)
     }
 
@@ -679,6 +757,7 @@ impl Engine {
         if self.rows.iter().all(|r| r.is_some()) {
             return Ok(false);
         }
+        let rid = req.id;
         // cumulative wait: everything queued before earlier admissions plus
         // the wait since this preemption (re-queue happens at preemption)
         let queued_s = st.queued_s + st.preempted_at.elapsed().as_secs_f64();
@@ -691,6 +770,8 @@ impl Engine {
             self.admit_seq += 1;
             self.metrics.resumes += 1;
             self.rows[row_idx] = Some(row);
+            self.metrics.record_queue_wait(queued_s);
+            self.tele_event(rid, event::RESUME, st.pos as usize, st.records.len(), 0.0, "finished");
             return Ok(true);
         }
         // swap-mode snapshot: the K/V bytes are parked in the host tier —
@@ -722,6 +803,7 @@ impl Engine {
             let admitted = self.submit(req, queued_s)?;
             if admitted {
                 self.metrics.resume_fallbacks += 1;
+                self.tele_event(rid, event::RESUME_RESTART, st.pos as usize, 0, 0.0, "");
                 // the restart regenerates tokens, but the request's
                 // timeline is still the original one: keep the
                 // first-admission timestamps so ttft_s/total_s honor the
@@ -864,10 +946,11 @@ impl Engine {
             }
         }
         self.metrics.resumes += 1;
-        if pre.is_some() {
-            self.metrics.recomputed_tokens += ids.len() as u64;
-        }
+        let recomputed = if pre.is_some() { ids.len() } else { 0 };
+        self.metrics.recomputed_tokens += recomputed as u64;
         self.rows[row_idx] = Some(row);
+        self.metrics.record_queue_wait(queued_s);
+        self.tele_event(rid, event::RESUME, st.pos as usize, n_live, recomputed as f64, "");
         Ok(true)
     }
 
@@ -886,6 +969,7 @@ impl Engine {
         st: std::sync::Arc<PreemptedState>,
         queued_s: f64,
     ) -> Result<bool> {
+        let rid = req.id;
         let swapped = st.swapped.clone().expect("caller checked");
         let n_live = st.records.len();
         anyhow::ensure!(n_live > 0, "swap snapshot has an empty live set");
@@ -962,6 +1046,8 @@ impl Engine {
         self.metrics.resumes += 1;
         self.metrics.swap_in_bytes += moved as u64;
         self.rows[row_idx] = Some(row);
+        self.metrics.record_queue_wait(queued_s);
+        self.tele_event(rid, event::RESUME_SWAP, st.pos as usize, n_live, moved as f64, "");
         Ok(true)
     }
 
@@ -978,9 +1064,13 @@ impl Engine {
             return;
         };
         self.metrics.preemptions += 1;
+        let rid = row.req.id;
+        let pos = row.pos as usize;
+        let live = row.seq.len();
         // swap mode: park the whole table before the blocks are released —
         // `None` means the recompute snapshot below carries the row instead
         let swapped = self.try_swap_out_row(&row);
+        let was_swap = swapped.is_some();
         if let Some(pool) = self.pool.as_mut() {
             row.seq.release_blocks(pool);
         }
@@ -1008,6 +1098,12 @@ impl Engine {
             preempted_at: Instant::now(),
         }));
         self.preempted.push((row.admit_seq, req));
+        let ev = if was_swap {
+            event::PREEMPT_SWAP
+        } else {
+            event::PREEMPT
+        };
+        self.tele_event(rid, ev, pos, live, live as f64, "");
     }
 
     /// Swap-mode half of [`preempt_row`]: copy every occupied row of the
@@ -1254,7 +1350,7 @@ impl Engine {
         // per-row: observe attention, record the new token, pick next input
         for i in 0..b {
             // phase 1 (row borrow): tracker update + logical push + output
-            let write_at = {
+            let (write_at, decode_ev) = {
                 let Some(row) = self.rows[i].as_mut() else {
                     continue;
                 };
@@ -1288,7 +1384,15 @@ impl Engine {
                 if self.cfg.record_live {
                     row.live_curve.push(row.seq.len());
                 }
+                self.metrics.record_live(row.seq.len());
                 row.pos += 1;
+                // first decode step of this admission: flight-record it once
+                let decode_ev = if row.decode_logged {
+                    None
+                } else {
+                    row.decode_logged = true;
+                    Some((row.req.id, row.pos as usize, row.seq.len()))
+                };
 
                 let logits = &out.logits[i * self.vocab..(i + 1) * self.vocab];
                 let pred = self
@@ -1298,13 +1402,14 @@ impl Engine {
                 if let Some(c) = row.advance_with_prediction(pred, self.cfg.stop_char) {
                     row.next_token = self.tokenizer.id(c).unwrap_or(0);
                 }
-                if paged {
+                let write_at = if paged {
                     let slot = row.seq.len() - 1;
                     let t = row.seq.block_table().expect("pooled row has a table");
                     Some(t.locate(slot).expect("just pushed ⇒ mapped"))
                 } else {
                     None
-                }
+                };
+                (write_at, decode_ev)
             };
             // phase 2 (backend): any shared-tail CoW copy lands first, then
             // the new token's K/V row goes to its table-mapped location
@@ -1317,6 +1422,9 @@ impl Engine {
                     &out.k_new[base..base + per_row_new],
                     &out.v_new[base..base + per_row_new],
                 )?;
+            }
+            if let Some((rid, stp, lv)) = decode_ev {
+                self.tele_event(rid, event::DECODE, stp, lv, 0.0, "");
             }
         }
         self.metrics.record_step(t0.elapsed(), active);
@@ -1347,12 +1455,13 @@ impl Engine {
             let wants = wants && (self.pool.is_none() || self.make_row_private(i)?);
             if wants {
                 self.demote_buf.clear();
-                {
+                let evict_ev = {
                     let row = self.rows[i].as_mut().unwrap();
                     let keep =
                         self.policy
                             .select_keep(row.seq.records(), self.cfg.budget, row.pos);
-                    row.evictions += row.seq.len() - keep.len();
+                    let n_evicted = row.seq.len() - keep.len();
+                    row.evictions += n_evicted;
                     match self.pool.as_mut() {
                         Some(pool) => {
                             self.move_buf.clear();
@@ -1381,7 +1490,10 @@ impl Engine {
                             self.gather_buf[range].copy_from_slice(&idx);
                         }
                     }
-                }
+                    (row.req.id, row.pos as usize, keep.len(), n_evicted)
+                };
+                let (rid, pos, kept, n_evicted) = evict_ev;
+                self.tele_event(rid, event::EVICT, pos, kept, n_evicted as f64, "");
                 // demotion swap-outs read the evicted rows at their
                 // pre-compaction locations — they must land before the
                 // compaction moves overwrite those rows below
@@ -1440,10 +1552,12 @@ impl Engine {
             return Ok(());
         }
         let step_t = self.rows[i].as_ref().map(|r| r.pos).unwrap_or(0);
+        let rid = self.rows[i].as_ref().map(|r| r.req.id).unwrap_or(0);
         let re = {
             let d = self.exec.dims();
             d.n_layers * d.n_heads * d.d_head
         };
+        let mut parked_tokens = 0usize;
         let demoted = std::mem::take(&mut self.demote_buf);
         let mut gi = 0;
         while gi < demoted.len() {
@@ -1473,6 +1587,7 @@ impl Engine {
                 Some(id) => {
                     self.metrics.demoted_blocks += 1;
                     self.metrics.swap_out_bytes += bytes as u64;
+                    parked_tokens += n;
                     if let Some(row) = self.rows[i].as_mut() {
                         row.parked.entries.push(ParkedEntry {
                             tier_id: id,
@@ -1487,6 +1602,10 @@ impl Engine {
         }
         self.demote_buf = demoted;
         self.demote_buf.clear();
+        if parked_tokens > 0 {
+            let live = self.rows[i].as_ref().map(|r| r.seq.len()).unwrap_or(0);
+            self.tele_event(rid, event::DEMOTE, step_t as usize, live, parked_tokens as f64, "");
+        }
         Ok(())
     }
 
@@ -1524,7 +1643,7 @@ impl Engine {
         }
         let score_cfg = self.cfg.params.score;
         let w = self.cfg.params.window;
-        let (step_t, plan) = {
+        let (step_t, rid, plan) = {
             let Some(row) = self.rows[i].as_ref() else {
                 return Ok(());
             };
@@ -1559,7 +1678,7 @@ impl Engine {
                     plan.push(e.tier_id);
                 }
             }
-            (step_t, plan)
+            (step_t, row.req.id, plan)
         };
         if plan.is_empty() {
             return Ok(());
@@ -1639,6 +1758,8 @@ impl Engine {
             }
             self.metrics.promotions += 1;
             self.metrics.swap_in_bytes += bytes as u64;
+            let live = self.rows[i].as_ref().map(|r| r.seq.len()).unwrap_or(0);
+            self.tele_event(rid, event::PROMOTE, step_t as usize, live, n as f64, "");
         }
         Ok(())
     }
@@ -1658,6 +1779,15 @@ impl Engine {
             .first_token_at
             .map(|t| t.duration_since(row.admitted_at).as_secs_f64())
             .unwrap_or(total);
+        self.metrics.record_finish(ttft, total, row.produced);
+        self.tele_event(
+            row.req.id,
+            event::FINISH,
+            row.pos as usize,
+            row.seq.len(),
+            row.produced as f64,
+            row.finish.as_ref().map(|f| f.as_str()).unwrap_or(""),
+        );
         Response {
             id: row.req.id,
             text: row.out_text,
@@ -1701,6 +1831,7 @@ impl Engine {
                 break;
             }
             done.extend(self.step()?);
+            self.publish_telemetry();
             // oldest victim first: reverse-push so slice order survives the
             // front insertion (resumed waits are tracked in the snapshot)
             let now = Instant::now();

@@ -34,6 +34,9 @@ pub struct RowState {
     /// Monotone admission ticket from the engine; the *highest* ticket is
     /// the youngest row — the preemption victim when the pool runs dry.
     pub admit_seq: u64,
+    /// Whether this row's first decode step was already flight-recorded
+    /// (one DECODE event per admission, not one per step).
+    pub decode_logged: bool,
     /// Demotion ledger: this row's evicted-but-parked blocks in the host
     /// tier, awaiting recurrence-driven promotion (empty without a tier).
     pub parked: ParkedBlocks,
@@ -58,6 +61,7 @@ impl RowState {
             evictions: 0,
             live_curve: Vec::new(),
             admit_seq: 0,
+            decode_logged: false,
             parked: ParkedBlocks::default(),
         }
     }
@@ -86,6 +90,7 @@ impl RowState {
             evictions: st.evictions,
             live_curve: st.live_curve.clone(),
             admit_seq: 0,
+            decode_logged: false,
             parked: st.parked.clone(),
         }
     }

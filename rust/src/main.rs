@@ -17,6 +17,12 @@
 //! disables sharing entirely. --host-tier-bytes N adds the host spill tier
 //! (demotion/promotion; see kvtier) and --preempt-mode
 //! recompute|swap|auto picks how preempted rows come back.
+//!
+//! Telemetry flags (serve/sim-serve): --metrics-addr HOST:PORT starts a
+//! Prometheus-style scrape listener (`GET /metrics`, `GET /trace`),
+//! --trace-out FILE streams flight-recorder lifecycle events as JSONL,
+//! --trace-events N bounds the in-memory flight ring (default 4096).
+//! See docs/observability.md.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -142,11 +148,35 @@ fn build_engine(args: &Args) -> Result<Engine> {
     Engine::new(&client, &manifest, cfg)
 }
 
+/// Build the optional telemetry handle from `--metrics-addr`, `--trace-out`
+/// and `--trace-events`, and start the scrape listener when one is asked
+/// for. `None` (no flags) keeps serving exactly as before — zero overhead.
+fn telemetry_from(
+    args: &Args,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<Option<Arc<lazyeviction::telemetry::Telemetry>>> {
+    use lazyeviction::telemetry::{spawn_metrics_listener, FlightRecorder, Telemetry};
+    let metrics_addr = args.get("metrics-addr");
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    if metrics_addr.is_none() && trace_out.is_none() {
+        return Ok(None);
+    }
+    let cap = args.usize_or("trace-events", FlightRecorder::DEFAULT_CAP);
+    let t = Telemetry::with_trace(cap, trace_out.as_deref()).context("opening --trace-out")?;
+    if let Some(addr) = metrics_addr {
+        spawn_metrics_listener(addr, t.clone(), shutdown.clone())
+            .with_context(|| format!("binding --metrics-addr {addr}"))?;
+        eprintln!("metrics: http://{addr}/metrics");
+    }
+    Ok(Some(t))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = build_engine(args)?;
     let addr = args.str_or("addr", "127.0.0.1:8088");
     let shutdown = Arc::new(AtomicBool::new(false));
-    lazyeviction::server::serve(engine, &addr, shutdown)
+    let telemetry = telemetry_from(args, &shutdown)?;
+    lazyeviction::server::serve_with_telemetry(engine, &addr, shutdown, telemetry)
 }
 
 fn cmd_sim_serve(args: &Args) -> Result<()> {
@@ -159,7 +189,8 @@ fn cmd_sim_serve(args: &Args) -> Result<()> {
     let engine = Engine::new_sim(cfg)?;
     let addr = args.str_or("addr", "127.0.0.1:8088");
     let shutdown = Arc::new(AtomicBool::new(false));
-    lazyeviction::server::serve(engine, &addr, shutdown)
+    let telemetry = telemetry_from(args, &shutdown)?;
+    lazyeviction::server::serve_with_telemetry(engine, &addr, shutdown, telemetry)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -188,7 +219,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let m = &engine.metrics;
     eprintln!(
         "steps: {} decode, mean {:.2} ms, throughput {:.1} tok/s",
-        m.step_latencies.len(),
+        m.steps,
         m.step_summary_ms().mean,
         m.throughput()
     );
@@ -292,6 +323,7 @@ fn main() -> Result<()> {
                  pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8 --auto-watermarks\n\
                  prefix flags: --prefix-entries 64 --no-prefix-cache\n\
                  tier flags:   --host-tier-bytes N --preempt-mode recompute|swap|auto\n\
+                 telemetry:    --metrics-addr HOST:PORT --trace-out FILE --trace-events 4096\n\
                  every flag and the server's pool gauge fields: docs/serving.md"
             );
             std::process::exit(2);

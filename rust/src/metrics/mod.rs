@@ -1,16 +1,40 @@
 //! Serving metrics: step latencies, per-request timing, throughput counters.
+//!
+//! Latency series are held as bounded streaming histograms
+//! (`telemetry::StreamingHistogram`), not growing vectors: a long-running
+//! serve loop records millions of steps without the recorder itself
+//! becoming a memory leak. Throughput and mean-latency math is exact (the
+//! histograms track exact `n`/`sum`); percentiles are bucket-interpolated.
+//! Benches that need the raw per-step series (e.g. windowed checkpoint
+//! latency in table 7) opt into a bounded side log via `enable_step_log`.
 
 use std::time::{Duration, Instant};
 
+use crate::telemetry::hist::StreamingHistogram;
+use crate::telemetry::registry::MetricKind;
 use crate::util::stats::Summary;
 
 /// Rolling recorder for one engine's decode loop.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct EngineMetrics {
-    /// Wall time of each decode step (seconds).
-    pub step_latencies: Vec<f64>,
-    /// Wall time of each prefill (seconds).
-    pub prefill_latencies: Vec<f64>,
+    /// Wall time of each decode step (histogram over milliseconds).
+    pub step_hist_ms: StreamingHistogram,
+    /// Wall time of each prefill (histogram over milliseconds).
+    pub prefill_hist_ms: StreamingHistogram,
+    /// Time-to-first-token per finished request (ms).
+    pub ttft_hist_ms: StreamingHistogram,
+    /// Time-per-output-token per finished request, excluding the first (ms).
+    pub tpot_hist_ms: StreamingHistogram,
+    /// Queue wait per admission (ms).
+    pub queue_wait_hist_ms: StreamingHistogram,
+    /// Wall time of each eviction pass (ms).
+    pub evict_hist_ms: StreamingHistogram,
+    /// Live-set sizes sampled per row per step (tokens).
+    pub live_hist: StreamingHistogram,
+    /// Decode steps recorded.
+    pub steps: u64,
+    /// Total wall seconds inside decode steps (exact; drives throughput).
+    pub step_time_s: f64,
     /// Wall time spent inside eviction decisions (seconds).
     pub eviction_time: f64,
     pub eviction_count: u64,
@@ -48,10 +72,48 @@ pub struct EngineMetrics {
     pub tier_rejects: u64,
     /// Tokens produced (all rows).
     pub tokens_out: u64,
-    /// Live-token counts sampled per step (for memory curves), per row.
-    pub live_counts: Vec<usize>,
+    /// Requests finished (any reason).
+    pub requests_finished: u64,
+    /// Optional bounded raw per-step latency log (seconds), for benches
+    /// that window the series; `None` in serving (bounded memory).
+    step_log: Option<(Vec<f64>, usize)>,
     started: Option<Instant>,
     pub wall: f64,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> EngineMetrics {
+        EngineMetrics {
+            step_hist_ms: StreamingHistogram::latency_ms(),
+            prefill_hist_ms: StreamingHistogram::latency_ms(),
+            ttft_hist_ms: StreamingHistogram::latency_ms(),
+            tpot_hist_ms: StreamingHistogram::latency_ms(),
+            queue_wait_hist_ms: StreamingHistogram::latency_ms(),
+            evict_hist_ms: StreamingHistogram::latency_ms(),
+            live_hist: StreamingHistogram::counts(),
+            steps: 0,
+            step_time_s: 0.0,
+            eviction_time: 0.0,
+            eviction_count: 0,
+            preemptions: 0,
+            resumes: 0,
+            recomputed_tokens: 0,
+            resume_fallbacks: 0,
+            prefill_skips: 0,
+            demoted_blocks: 0,
+            promotions: 0,
+            false_evictions_avoided: 0,
+            swap_out_bytes: 0,
+            swap_in_bytes: 0,
+            swap_preempts: 0,
+            tier_rejects: 0,
+            tokens_out: 0,
+            requests_finished: 0,
+            step_log: None,
+            started: None,
+            wall: 0.0,
+        }
+    }
 }
 
 impl EngineMetrics {
@@ -65,27 +127,66 @@ impl EngineMetrics {
         }
     }
 
+    /// Keep a raw per-step latency log of at most `cap` entries alongside
+    /// the histogram (bench/analysis use only).
+    pub fn enable_step_log(&mut self, cap: usize) {
+        self.step_log = Some((Vec::with_capacity(cap.min(4096)), cap));
+    }
+
+    /// The raw step-latency series (seconds), if `enable_step_log` was on.
+    pub fn step_log(&self) -> &[f64] {
+        self.step_log.as_ref().map(|(v, _)| v.as_slice()).unwrap_or(&[])
+    }
+
     pub fn record_step(&mut self, d: Duration, new_tokens: u64) {
-        self.step_latencies.push(d.as_secs_f64());
+        let s = d.as_secs_f64();
+        self.steps += 1;
+        self.step_time_s += s;
+        self.step_hist_ms.observe(s * 1e3);
         self.tokens_out += new_tokens;
+        if let Some((log, cap)) = self.step_log.as_mut() {
+            if log.len() < *cap {
+                log.push(s);
+            }
+        }
     }
 
     pub fn record_prefill(&mut self, d: Duration) {
-        self.prefill_latencies.push(d.as_secs_f64());
+        self.prefill_hist_ms.observe(d.as_secs_f64() * 1e3);
     }
 
     pub fn record_eviction(&mut self, d: Duration) {
-        self.eviction_time += d.as_secs_f64();
+        let s = d.as_secs_f64();
+        self.eviction_time += s;
         self.eviction_count += 1;
+        self.evict_hist_ms.observe(s * 1e3);
+    }
+
+    pub fn record_queue_wait(&mut self, queued_s: f64) {
+        self.queue_wait_hist_ms.observe(queued_s * 1e3);
+    }
+
+    /// Per-request timings at completion: TTFT, and TPOT over the tokens
+    /// after the first (undefined for single-token outputs).
+    pub fn record_finish(&mut self, ttft_s: f64, total_s: f64, tokens: usize) {
+        self.requests_finished += 1;
+        self.ttft_hist_ms.observe(ttft_s * 1e3);
+        if tokens > 1 {
+            let tpot = (total_s - ttft_s).max(0.0) / (tokens - 1) as f64;
+            self.tpot_hist_ms.observe(tpot * 1e3);
+        }
+    }
+
+    pub fn record_live(&mut self, live_tokens: usize) {
+        self.live_hist.observe(live_tokens as f64);
     }
 
     /// Decode throughput in tokens/second over recorded steps.
     pub fn throughput(&self) -> f64 {
-        let total: f64 = self.step_latencies.iter().sum();
-        if total == 0.0 {
+        if self.step_time_s == 0.0 {
             0.0
         } else {
-            self.tokens_out as f64 / total
+            self.tokens_out as f64 / self.step_time_s
         }
     }
 
@@ -94,12 +195,11 @@ impl EngineMetrics {
         if self.tokens_out == 0 {
             return f64::NAN;
         }
-        self.step_latencies.iter().sum::<f64>() * 1e3 / self.tokens_out as f64
+        self.step_time_s * 1e3 / self.tokens_out as f64
     }
 
     pub fn step_summary_ms(&self) -> Summary {
-        let ms: Vec<f64> = self.step_latencies.iter().map(|x| x * 1e3).collect();
-        Summary::of(&ms)
+        self.step_hist_ms.summary()
     }
 }
 
@@ -116,6 +216,11 @@ pub struct RequestMetrics {
 /// Instantaneous block-pool gauges (paged-KV mode). Exported by
 /// `Engine::pool_gauges` and attached to server responses so clients and
 /// scrapers see global memory pressure alongside each completion.
+///
+/// `fields()` is the single source of truth for the export surface: the
+/// server's `pool` JSON and the `/metrics` exposition both iterate it, so
+/// a field added here is automatically visible in both (and the parity
+/// test fails if either path hand-rolls a divergent list).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PoolGauges {
     pub free_blocks: usize,
@@ -165,6 +270,87 @@ pub struct PoolGauges {
     /// Cumulative unpinned tier entries destroyed under byte pressure —
     /// each one a demotion that silently became a plain eviction.
     pub tier_shed_blocks: u64,
+    /// Cumulative park attempts the tier refused (byte budget exhausted by
+    /// pinned state) — those demotions stayed destructive.
+    pub tier_rejects: u64,
+}
+
+impl PoolGauges {
+    /// Every exported field as `(name, value, kind)`. Built by exhaustive
+    /// destructuring: adding a `PoolGauges` field without extending this
+    /// list is a compile error, which is what keeps the server JSON and
+    /// the `/metrics` exposition in lockstep.
+    pub fn fields(&self) -> Vec<(&'static str, f64, MetricKind)> {
+        use MetricKind::{Counter, Gauge};
+        let PoolGauges {
+            free_blocks,
+            total_blocks,
+            utilization,
+            preemptions,
+            resumes,
+            recomputed_tokens,
+            shared_blocks,
+            prefix_hits,
+            prefix_misses,
+            prefix_entries,
+            prefix_pinned_blocks,
+            prefix_prefill_skips,
+            kv_arena_bytes,
+            kv_bytes_in_use,
+            parked_blocks,
+            parked_bytes,
+            demoted_blocks,
+            promotions,
+            false_evictions_avoided,
+            swap_out_bytes,
+            swap_in_bytes,
+            swap_preempts,
+            tier_shed_blocks,
+            tier_rejects,
+        } = *self;
+        vec![
+            ("free_blocks", free_blocks as f64, Gauge),
+            ("total_blocks", total_blocks as f64, Gauge),
+            ("utilization", utilization, Gauge),
+            ("preemptions", preemptions as f64, Counter),
+            ("resumes", resumes as f64, Counter),
+            ("recomputed_tokens", recomputed_tokens as f64, Counter),
+            ("shared_blocks", shared_blocks as f64, Gauge),
+            ("prefix_hits", prefix_hits as f64, Counter),
+            ("prefix_misses", prefix_misses as f64, Counter),
+            ("prefix_entries", prefix_entries as f64, Gauge),
+            ("prefix_pinned_blocks", prefix_pinned_blocks as f64, Gauge),
+            ("prefix_prefill_skips", prefix_prefill_skips as f64, Counter),
+            ("kv_arena_bytes", kv_arena_bytes as f64, Gauge),
+            ("kv_bytes_in_use", kv_bytes_in_use as f64, Gauge),
+            ("parked_blocks", parked_blocks as f64, Gauge),
+            ("parked_bytes", parked_bytes as f64, Gauge),
+            ("demoted_blocks", demoted_blocks as f64, Counter),
+            ("promotions", promotions as f64, Counter),
+            (
+                "false_evictions_avoided",
+                false_evictions_avoided as f64,
+                Counter,
+            ),
+            ("swap_out_bytes", swap_out_bytes as f64, Counter),
+            ("swap_in_bytes", swap_in_bytes as f64, Counter),
+            ("swap_preempts", swap_preempts as f64, Counter),
+            ("tier_shed_blocks", tier_shed_blocks as f64, Counter),
+            ("tier_rejects", tier_rejects as f64, Counter),
+        ]
+    }
+
+    /// Publish every field into a registry under the
+    /// `lazyeviction_pool_` namespace (counters clamped monotone there).
+    pub fn publish(&self, reg: &crate::telemetry::Registry) {
+        for (name, value, kind) in self.fields() {
+            let metric = format!("{}{name}", crate::telemetry::names::POOL_PREFIX);
+            match kind {
+                MetricKind::Counter => reg.set_counter(&metric, value as u64),
+                MetricKind::Gauge => reg.set_gauge(&metric, value),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -194,5 +380,64 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         m.stop();
         assert!(m.wall >= 0.004);
+    }
+
+    #[test]
+    fn step_summary_mean_is_exact() {
+        let mut m = EngineMetrics::default();
+        m.record_step(Duration::from_millis(10), 1);
+        m.record_step(Duration::from_millis(30), 1);
+        let s = m.step_summary_ms();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 20.0).abs() < 1e-9);
+        assert_eq!(s.min, 10.0);
+        assert_eq!(s.max, 30.0);
+    }
+
+    #[test]
+    fn step_log_is_opt_in_and_bounded() {
+        let mut m = EngineMetrics::default();
+        m.record_step(Duration::from_millis(1), 1);
+        assert!(m.step_log().is_empty(), "serving never keeps raw series");
+        m.enable_step_log(2);
+        for _ in 0..5 {
+            m.record_step(Duration::from_millis(1), 1);
+        }
+        assert_eq!(m.step_log().len(), 2);
+        assert_eq!(m.steps, 6);
+    }
+
+    #[test]
+    fn finish_records_ttft_and_tpot() {
+        let mut m = EngineMetrics::default();
+        // 100ms TTFT, then 9 more tokens over 900ms → TPOT 100ms
+        m.record_finish(0.1, 1.0, 10);
+        assert_eq!(m.requests_finished, 1);
+        assert_eq!(m.ttft_hist_ms.n(), 1);
+        assert!((m.ttft_hist_ms.sum() - 100.0).abs() < 1e-9);
+        assert_eq!(m.tpot_hist_ms.n(), 1);
+        assert!((m.tpot_hist_ms.sum() - 100.0).abs() < 1e-9);
+        // single-token request: TTFT only, TPOT undefined
+        m.record_finish(0.05, 0.05, 1);
+        assert_eq!(m.ttft_hist_ms.n(), 2);
+        assert_eq!(m.tpot_hist_ms.n(), 1);
+    }
+
+    #[test]
+    fn pool_gauge_fields_cover_every_field() {
+        let g = PoolGauges {
+            tier_rejects: 3,
+            ..Default::default()
+        };
+        let fields = g.fields();
+        // 24 fields today; the destructuring in fields() makes forgetting
+        // a new one a compile error, this pins against deletions
+        assert_eq!(fields.len(), 24);
+        let names: Vec<&str> = fields.iter().map(|f| f.0).collect();
+        assert!(names.contains(&"tier_rejects"));
+        assert!(names.contains(&"utilization"));
+        let tr = fields.iter().find(|f| f.0 == "tier_rejects").unwrap();
+        assert_eq!(tr.1, 3.0);
+        assert_eq!(tr.2, MetricKind::Counter);
     }
 }

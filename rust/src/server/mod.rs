@@ -18,6 +18,15 @@
 //! `max_new` is clamped: 0 is rejected, values above [`MAX_MAX_NEW`] are
 //! capped before they reach the scheduler.
 //!
+//! With telemetry attached (`serve_with_telemetry`), two more line-protocol
+//! commands are available on the same port:
+//!   → {"cmd": "stats"}            ← {"stats": {"counters": …, "gauges": …,
+//!                                              "histograms": …}}
+//!   → {"cmd": "trace", "id": 7}   ← {"id": 7, "trace": [flight events…]}
+//! and the Prometheus exposition is served by the dedicated `--metrics-addr`
+//! listener (see `telemetry::http`), kept off this port so scrapers never
+//! head-of-line-block a generation client.
+//!
 //! ## Pressure / preemption protocol (paged-KV mode)
 //!
 //! When the engine runs on a shared block pool, the serve loop consults an
@@ -61,6 +70,7 @@ use anyhow::Result;
 use crate::coordinator::{Engine, Request, Response};
 use crate::metrics::PoolGauges;
 use crate::scheduler::{AdmissionController, QueuedRequest, RequestQueue};
+use crate::telemetry::{event, Telemetry};
 use crate::util::json::Json;
 
 /// Upper bound on a request's `max_new`; larger asks are capped, not erred,
@@ -82,32 +92,15 @@ pub fn response_to_json(r: &Response) -> Json {
         .set("evictions", r.metrics.evictions)
 }
 
-/// Block-pool gauges as attached to responses in paged-KV mode.
+/// Block-pool gauges as attached to responses in paged-KV mode. Driven by
+/// `PoolGauges::fields()` — the same enumeration that feeds the `/metrics`
+/// exposition — so the two surfaces cannot drift apart.
 pub fn pool_gauges_to_json(g: &PoolGauges) -> Json {
-    Json::obj()
-        .set("free_blocks", g.free_blocks)
-        .set("total_blocks", g.total_blocks)
-        .set("utilization", g.utilization)
-        .set("preemptions", g.preemptions as f64)
-        .set("resumes", g.resumes as f64)
-        .set("recomputed_tokens", g.recomputed_tokens as f64)
-        .set("shared_blocks", g.shared_blocks)
-        .set("prefix_hits", g.prefix_hits as f64)
-        .set("prefix_misses", g.prefix_misses as f64)
-        .set("prefix_entries", g.prefix_entries)
-        .set("prefix_pinned_blocks", g.prefix_pinned_blocks)
-        .set("prefix_prefill_skips", g.prefix_prefill_skips as f64)
-        .set("kv_arena_bytes", g.kv_arena_bytes)
-        .set("kv_bytes_in_use", g.kv_bytes_in_use)
-        .set("parked_blocks", g.parked_blocks)
-        .set("parked_bytes", g.parked_bytes)
-        .set("demoted_blocks", g.demoted_blocks as f64)
-        .set("promotions", g.promotions as f64)
-        .set("false_evictions_avoided", g.false_evictions_avoided as f64)
-        .set("swap_out_bytes", g.swap_out_bytes as f64)
-        .set("swap_in_bytes", g.swap_in_bytes as f64)
-        .set("swap_preempts", g.swap_preempts as f64)
-        .set("tier_shed_blocks", g.tier_shed_blocks as f64)
+    let mut j = Json::obj();
+    for (name, value, _kind) in g.fields() {
+        j = j.set(name, value);
+    }
+    j
 }
 
 pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
@@ -147,7 +140,20 @@ fn send_reply(routes: &Routes, id: u64, reply: ServeReply) {
 
 /// Serve an engine on `addr` until `shutdown` flips. The engine loop runs on
 /// the calling thread; connections are handled by spawned threads.
-pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Result<()> {
+pub fn serve(engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Result<()> {
+    serve_with_telemetry(engine, addr, shutdown, None)
+}
+
+/// [`serve`] with a shared telemetry handle: the engine publishes registry
+/// snapshots every loop iteration, connection threads record `queued`
+/// flight events and answer `stats`/`trace` commands. The caller usually
+/// also hands the same handle to `telemetry::spawn_metrics_listener`.
+pub fn serve_with_telemetry(
+    mut engine: Engine,
+    addr: &str,
+    shutdown: Arc<AtomicBool>,
+    telemetry: Option<Arc<Telemetry>>,
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     eprintln!(
@@ -161,6 +167,10 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
         }
     );
 
+    if let Some(t) = &telemetry {
+        engine.attach_telemetry(t.clone());
+    }
+
     let queue = Arc::new(RequestQueue::new());
     let routes: Routes = Arc::new(Mutex::new(HashMap::new()));
     let next_id = Arc::new(AtomicU64::new(1));
@@ -171,6 +181,7 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
         let routes = routes.clone();
         let next_id = next_id.clone();
         let shutdown = shutdown.clone();
+        let telemetry = telemetry.clone();
         std::thread::spawn(move || {
             for stream in listener.incoming() {
                 if shutdown.load(Ordering::Relaxed) {
@@ -181,7 +192,10 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
                         let queue = queue.clone();
                         let routes = routes.clone();
                         let next_id = next_id.clone();
-                        std::thread::spawn(move || handle_conn(s, queue, routes, next_id));
+                        let telemetry = telemetry.clone();
+                        std::thread::spawn(move || {
+                            handle_conn(s, queue, routes, next_id, telemetry)
+                        });
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -282,14 +296,51 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
                     .collect(),
             );
         }
+        // push this iteration's counters/gauges/histograms to the shared
+        // registry so scrapers read fresh values without touching the engine
+        engine.publish_telemetry();
         if idle {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
     }
+    if let Some(t) = &telemetry {
+        t.flush();
+    }
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, queue: Arc<RequestQueue>, routes: Routes, next_id: Arc<AtomicU64>) {
+/// Handle a `{"cmd": ...}` line; returns the reply, or `None` if the line
+/// is not a command (i.e. a generation request).
+fn handle_command(line: &str, telemetry: &Option<Arc<Telemetry>>) -> Option<Json> {
+    let j = Json::parse(line).ok()?;
+    let cmd = j.get("cmd")?.as_str()?.to_string();
+    let Some(t) = telemetry else {
+        return Some(Json::obj().set("error", "telemetry not enabled on this server"));
+    };
+    Some(match cmd.as_str() {
+        "stats" => Json::obj().set("stats", t.registry.to_json()),
+        "trace" => match j.get("id").and_then(|v| v.as_f64()) {
+            Some(id) => {
+                let events: Vec<Json> = t
+                    .events_for(id as u64)
+                    .iter()
+                    .map(|e| e.to_json())
+                    .collect();
+                Json::obj().set("id", id).set("trace", events)
+            }
+            None => Json::obj().set("error", "trace requires a numeric 'id'"),
+        },
+        other => Json::obj().set("error", format!("unknown cmd '{other}'")),
+    })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<RequestQueue>,
+    routes: Routes,
+    next_id: Arc<AtomicU64>,
+    telemetry: Option<Arc<Telemetry>>,
+) {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -299,6 +350,12 @@ fn handle_conn(stream: TcpStream, queue: Arc<RequestQueue>, routes: Routes, next
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(reply) = handle_command(&line, &telemetry) {
+            if writeln!(writer, "{}", reply.to_string()).is_err() {
+                break;
+            }
             continue;
         }
         let id = next_id.fetch_add(1, Ordering::Relaxed);
@@ -315,6 +372,9 @@ fn handle_conn(stream: TcpStream, queue: Arc<RequestQueue>, routes: Routes, next
         };
         let (tx, rx) = mpsc::channel();
         routes.lock().unwrap().insert(id, tx);
+        if let Some(t) = &telemetry {
+            t.record(id, event::QUEUED, 0, 0, 0.0, "");
+        }
         queue.push(q);
         match rx.recv() {
             Ok(ServeReply::Done(resp, gauges)) => {
@@ -438,6 +498,7 @@ mod tests {
             swap_in_bytes: 6144,
             swap_preempts: 1,
             tier_shed_blocks: 2,
+            tier_rejects: 6,
         };
         let j = pool_gauges_to_json(&g);
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -464,5 +525,65 @@ mod tests {
         assert_eq!(parsed.usize_at("swap_in_bytes").unwrap(), 6144);
         assert_eq!(parsed.usize_at("swap_preempts").unwrap(), 1);
         assert_eq!(parsed.usize_at("tier_shed_blocks").unwrap(), 2);
+        assert_eq!(parsed.usize_at("tier_rejects").unwrap(), 6);
+    }
+
+    /// Every `PoolGauges` field must appear in both export surfaces: the
+    /// server `pool` JSON and the Prometheus exposition. `fields()` is the
+    /// single enumeration (exhaustive destructuring makes omissions a
+    /// compile error); this pins that both paths actually consume it.
+    #[test]
+    fn pool_gauge_field_parity_json_and_exposition() {
+        let g = PoolGauges {
+            free_blocks: 1,
+            total_blocks: 2,
+            utilization: 0.5,
+            preemptions: 3,
+            resumes: 4,
+            recomputed_tokens: 5,
+            shared_blocks: 6,
+            prefix_hits: 7,
+            prefix_misses: 8,
+            prefix_entries: 9,
+            prefix_pinned_blocks: 10,
+            prefix_prefill_skips: 11,
+            kv_arena_bytes: 12,
+            kv_bytes_in_use: 13,
+            parked_blocks: 14,
+            parked_bytes: 15,
+            demoted_blocks: 16,
+            promotions: 17,
+            false_evictions_avoided: 18,
+            swap_out_bytes: 19,
+            swap_in_bytes: 20,
+            swap_preempts: 21,
+            tier_shed_blocks: 22,
+            tier_rejects: 23,
+        };
+        let json = pool_gauges_to_json(&g);
+        let obj = json.as_obj().expect("pool json is an object");
+
+        let reg = crate::telemetry::Registry::new();
+        g.publish(&reg);
+        let exposition = reg.render_prometheus();
+
+        let fields = g.fields();
+        assert_eq!(obj.len(), fields.len(), "json has exactly the fields");
+        for (name, value, _kind) in &fields {
+            assert_eq!(
+                json.f64_at(name).unwrap(),
+                *value,
+                "json missing or wrong for {name}"
+            );
+            let metric = format!("{}{name}", crate::telemetry::names::POOL_PREFIX);
+            let line = format!("{metric} ");
+            assert!(
+                exposition.lines().any(|l| l.starts_with(&line)),
+                "exposition missing {metric}"
+            );
+        }
+        // distinct values survive the round trip (no copy-paste aliasing)
+        assert_eq!(json.f64_at("tier_rejects").unwrap(), 23.0);
+        assert!(exposition.contains("lazyeviction_pool_tier_rejects 23"));
     }
 }

@@ -1,0 +1,245 @@
+//! Per-request flight recorder: a bounded ring buffer of structured
+//! lifecycle events for post-mortem of preemption storms.
+//!
+//! Every request's life is a sequence of events — queued → admitted
+//! (possibly via a prefix hit) → prefill → decode → evict/demote/promote →
+//! preempt/swap/resume → finish — and under pool pressure the interesting
+//! failures are *interleavings* of those sequences across requests. The
+//! recorder keeps the most recent `cap` events in memory (queryable
+//! per-request over the wire) and, when configured with an output path,
+//! appends every event as a JSON line so a full serve run can be replayed
+//! offline.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Event names, in rough lifecycle order. Kept as `&'static str` so
+/// recording never allocates for the common fields.
+pub mod event {
+    /// Request parsed and placed on the scheduler queue.
+    pub const QUEUED: &str = "queued";
+    /// Admitted into a batch row; `detail` = prompt tokens.
+    pub const ADMITTED: &str = "admitted";
+    /// Prompt prefix found in the cache; `detail` = tokens premapped.
+    pub const PREFIX_HIT: &str = "prefix_hit";
+    /// Prefill executed; `detail` = wall milliseconds.
+    pub const PREFILL: &str = "prefill";
+    /// Prefill skipped outright (full-prompt prefix hit).
+    pub const PREFILL_SKIP: &str = "prefill_skip";
+    /// First decode step after admission.
+    pub const DECODE: &str = "decode";
+    /// Eviction pass removed tokens; `detail` = tokens evicted.
+    pub const EVICT: &str = "evict";
+    /// Evicted blocks parked in the host tier; `detail` = tokens parked.
+    pub const DEMOTE: &str = "demote";
+    /// Parked tokens promoted back on recurrence; `detail` = tokens.
+    pub const PROMOTE: &str = "promote";
+    /// Row preempted, recompute snapshot taken; `detail` = live tokens.
+    pub const PREEMPT: &str = "preempt";
+    /// Row preempted by swapping its table to the host tier.
+    pub const PREEMPT_SWAP: &str = "preempt_swap";
+    /// Recompute-mode resume; `detail` = tokens re-prefilled.
+    pub const RESUME: &str = "resume";
+    /// Swap-mode resume; `detail` = bytes copied host→device.
+    pub const RESUME_SWAP: &str = "resume_swap";
+    /// Resume fell back to a restart from the prompt.
+    pub const RESUME_RESTART: &str = "resume_restart";
+    /// Request finished; `detail` = tokens produced, `note` = reason.
+    pub const FINISH: &str = "finish";
+}
+
+/// One lifecycle event. `step` is the row's sequence position at the time
+/// (0 when not yet admitted), `live` the row's live-set size in tokens, and
+/// `detail` an event-specific scalar documented on the `event` constants.
+#[derive(Clone, Debug)]
+pub struct FlightEvent {
+    /// Global sequence number (strictly increasing across all requests).
+    pub seq: u64,
+    /// Seconds since the recorder was created.
+    pub t_s: f64,
+    /// Request id.
+    pub req: u64,
+    pub event: &'static str,
+    pub step: usize,
+    pub live: usize,
+    pub detail: f64,
+    /// Free-form qualifier (finish reason, preempt mode); "" when unused.
+    pub note: &'static str,
+}
+
+impl FlightEvent {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("seq", self.seq as f64)
+            .set("t_s", self.t_s)
+            .set("req", self.req as f64)
+            .set("event", self.event)
+            .set("step", self.step)
+            .set("live", self.live)
+            .set("detail", self.detail);
+        if !self.note.is_empty() {
+            j = j.set("note", self.note);
+        }
+        j
+    }
+}
+
+/// Bounded in-memory ring + optional JSONL sink.
+pub struct FlightRecorder {
+    epoch: Instant,
+    next_seq: u64,
+    cap: usize,
+    ring: VecDeque<FlightEvent>,
+    out: Option<BufWriter<File>>,
+    /// Events pushed out of the ring since startup (still in the JSONL
+    /// sink if one is configured).
+    pub dropped: u64,
+}
+
+impl FlightRecorder {
+    pub const DEFAULT_CAP: usize = 4096;
+
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            next_seq: 0,
+            cap: cap.max(1),
+            ring: VecDeque::with_capacity(cap.max(1).min(1024)),
+            out: None,
+            dropped: 0,
+        }
+    }
+
+    /// Ring recorder that also appends every event to `path` as JSONL.
+    pub fn with_output(cap: usize, path: &Path) -> std::io::Result<FlightRecorder> {
+        let mut r = FlightRecorder::new(cap);
+        r.out = Some(BufWriter::new(File::create(path)?));
+        Ok(r)
+    }
+
+    pub fn record(
+        &mut self,
+        req: u64,
+        event: &'static str,
+        step: usize,
+        live: usize,
+        detail: f64,
+        note: &'static str,
+    ) {
+        let ev = FlightEvent {
+            seq: self.next_seq,
+            t_s: self.epoch.elapsed().as_secs_f64(),
+            req,
+            event,
+            step,
+            live,
+            detail,
+            note,
+        };
+        self.next_seq += 1;
+        if let Some(w) = self.out.as_mut() {
+            let _ = writeln!(w, "{}", ev.to_json().to_string());
+            // finish closes a request's sequence — make it durable so a
+            // reader tailing the file sees complete lifecycles
+            if event == event::FINISH {
+                let _ = w.flush();
+            }
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    /// All retained events for one request, in emission order.
+    pub fn events_for(&self, req: u64) -> Vec<FlightEvent> {
+        self.ring.iter().filter(|e| e.req == req).cloned().collect()
+    }
+
+    /// All retained events in emission order.
+    pub fn events(&self) -> Vec<FlightEvent> {
+        self.ring.iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(w) = self.out.as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+impl Drop for FlightRecorder {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let mut r = FlightRecorder::new(3);
+        for i in 0..5u64 {
+            r.record(i, event::QUEUED, 0, 0, 0.0, "");
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped, 2);
+        // oldest two evicted, seq numbering still global
+        let seqs: Vec<u64> = r.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn events_for_filters_and_preserves_order() {
+        let mut r = FlightRecorder::new(16);
+        r.record(1, event::QUEUED, 0, 0, 0.0, "");
+        r.record(2, event::QUEUED, 0, 0, 0.0, "");
+        r.record(1, event::ADMITTED, 5, 5, 5.0, "");
+        r.record(1, event::FINISH, 12, 9, 7.0, "max_tokens");
+        let ev = r.events_for(1);
+        let names: Vec<&str> = ev.iter().map(|e| e.event).collect();
+        assert_eq!(names, vec!["queued", "admitted", "finish"]);
+        assert!(ev.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(ev.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let dir = std::env::temp_dir().join("lazyeviction-flight-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("trace-{}.jsonl", std::process::id()));
+        {
+            let mut r = FlightRecorder::with_output(8, &path).unwrap();
+            r.record(7, event::QUEUED, 0, 0, 0.0, "");
+            r.record(7, event::ADMITTED, 4, 4, 4.0, "");
+            r.record(7, event::FINISH, 10, 8, 6.0, "stop");
+        } // drop flushes
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let j = Json::parse(line).expect("each trace line is valid JSON");
+            assert_eq!(j.f64_at("req").unwrap(), 7.0);
+            assert!(j.str_at("event").is_ok());
+        }
+        let last = Json::parse(lines[2]).unwrap();
+        assert_eq!(last.str_at("note").unwrap(), "stop");
+        let _ = std::fs::remove_file(&path);
+    }
+}

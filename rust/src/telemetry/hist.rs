@@ -1,0 +1,279 @@
+//! Bounded-memory streaming histograms.
+//!
+//! The serve loop used to append every step/prefill latency to a `Vec<f64>`,
+//! which grows without bound under a long-running server. A
+//! [`StreamingHistogram`] replaces that: fixed bucket bounds chosen at
+//! construction, O(buckets) memory forever, exact `n`/`sum`/`min`/`max`
+//! (so throughput and mean-latency math is unchanged), and
+//! linearly-interpolated quantiles whose error is bounded by bucket width.
+//!
+//! Bucket bounds are *upper* bounds (Prometheus `le` semantics): a sample
+//! lands in the first bucket whose bound is `>= x`; anything above the last
+//! bound lands in the implicit `+Inf` overflow bucket.
+
+use crate::util::stats::Summary;
+
+/// Default latency ladder in milliseconds: ~2.5x geometric steps spanning
+/// 10µs sim steps through multi-second real-model prefills.
+pub const LATENCY_MS_BOUNDS: &[f64] = &[
+    0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+    1000.0, 2500.0, 5000.0, 10000.0,
+];
+
+/// Default ladder for live-set sizes (tokens) and other small counts.
+pub const COUNT_BOUNDS: &[f64] = &[
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0,
+    16384.0,
+];
+
+/// Fixed-bucket streaming histogram with exact moments.
+#[derive(Clone, Debug)]
+pub struct StreamingHistogram {
+    bounds: &'static [f64],
+    /// One count per bound, plus a trailing `+Inf` overflow slot.
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl StreamingHistogram {
+    pub fn new(bounds: &'static [f64]) -> StreamingHistogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds ascending");
+        StreamingHistogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            n: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Histogram over the default millisecond latency ladder.
+    pub fn latency_ms() -> StreamingHistogram {
+        StreamingHistogram::new(LATENCY_MS_BOUNDS)
+    }
+
+    /// Histogram over the default token/size-count ladder.
+    pub fn counts() -> StreamingHistogram {
+        StreamingHistogram::new(COUNT_BOUNDS)
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// `(upper_bound, cumulative_count)` pairs, ending with `(+Inf, n)` —
+    /// exactly the shape of Prometheus `_bucket{le=...}` series.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            let le = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((le, acc));
+        }
+        out
+    }
+
+    /// Quantile estimate (`q` in [0,1]) by linear interpolation within the
+    /// bucket holding the target rank, clamped to the exact observed
+    /// [min, max] so single-bucket distributions do not smear.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = q * (self.n as f64 - 1.0) + 1.0; // 1-based fractional rank
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = acc + c;
+            if rank <= next as f64 {
+                let lo = if i == 0 { self.min.min(self.bounds[0]) } else { self.bounds[i - 1] };
+                let hi = self.bounds.get(i).copied().unwrap_or(self.max);
+                let frac = (rank - acc as f64) / c as f64;
+                let v = lo + (hi - lo) * frac.clamp(0.0, 1.0);
+                return v.clamp(self.min, self.max);
+            }
+            acc = next;
+        }
+        self.max
+    }
+
+    /// Summary matching `util::stats::Summary`: n/mean/std/min/max exact,
+    /// percentiles interpolated from buckets.
+    pub fn summary(&self) -> Summary {
+        if self.n == 0 {
+            return Summary::default();
+        }
+        let mean = self.mean();
+        let var = (self.sum_sq / self.n as f64 - mean * mean).max(0.0);
+        Summary {
+            n: self.n as usize,
+            mean,
+            std: var.sqrt(),
+            min: self.min,
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            max: self.max,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.n = 0;
+        self.sum = 0.0;
+        self.sum_sq = 0.0;
+        self.min = f64::INFINITY;
+        self.max = f64::NEG_INFINITY;
+    }
+}
+
+impl Default for StreamingHistogram {
+    fn default() -> Self {
+        StreamingHistogram::latency_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_are_exact() {
+        let mut h = StreamingHistogram::latency_ms();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            h.observe(x);
+        }
+        assert_eq!(h.n(), 4);
+        assert!((h.sum() - 10.0).abs() < 1e-12);
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 4.0);
+    }
+
+    #[test]
+    fn quantiles_bounded_by_bucket() {
+        let mut h = StreamingHistogram::latency_ms();
+        for _ in 0..1000 {
+            h.observe(3.0); // all in the (2.5, 5.0] bucket
+        }
+        let p50 = h.quantile(0.5);
+        // clamped to exact min/max: a point mass reports itself exactly
+        assert!((p50 - 3.0).abs() < 1e-12, "{p50}");
+        assert_eq!(h.quantile(0.99), 3.0);
+    }
+
+    #[test]
+    fn quantiles_track_spread_samples() {
+        let mut h = StreamingHistogram::latency_ms();
+        for i in 1..=100 {
+            h.observe(i as f64); // 1..100 ms
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 >= h.min() && p99 <= h.max());
+        assert!(p50 < p90 && p90 <= p99, "p50={p50} p90={p90} p99={p99}");
+        // bucket-width error bound: p50's true value is 50.5, inside (25,50]
+        // or (50,100] depending on rank — allow one bucket of slack
+        assert!((10.0..=100.0).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn overflow_bucket_catches_huge_samples() {
+        let mut h = StreamingHistogram::latency_ms();
+        h.observe(1e6);
+        let buckets = h.cumulative_buckets();
+        let (le, c) = *buckets.last().unwrap();
+        assert!(le.is_infinite());
+        assert_eq!(c, 1);
+        assert_eq!(h.quantile(0.5), 1e6); // clamped to exact max
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let h = StreamingHistogram::latency_ms();
+        assert_eq!(h.n(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        let s = h.summary();
+        assert_eq!(s.n, 0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone() {
+        let mut h = StreamingHistogram::counts();
+        for i in 0..50 {
+            h.observe(i as f64 * 7.0);
+        }
+        let b = h.cumulative_buckets();
+        for w in b.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+            assert!(w[0].0 < w[1].0);
+        }
+        assert_eq!(b.last().unwrap().1, 50);
+    }
+
+    #[test]
+    fn non_finite_observations_are_dropped() {
+        let mut h = StreamingHistogram::latency_ms();
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.n(), 0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal HTTP/1.0 scrape endpoint for the metrics registry.
+//!
+//! A dedicated listener (separate from the line-protocol serve port, so a
+//! scraper can never head-of-line-block a generation client) answering:
+//!
+//! * `GET /metrics` — Prometheus text exposition of the registry
+//! * `GET /trace?req=N` — JSONL flight-recorder events for request `N`
+//! * `GET /trace` — JSONL of every retained flight event
+//!
+//! Hand-rolled on `std::net` like the main server (no hyper/tokio in the
+//! offline crate set). Connections are scrape-shaped: read one request
+//! head, write one response, close.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::Telemetry;
+
+/// Bind `addr` and serve scrapes on a background thread until `shutdown`.
+/// Returns once the listener is bound (so callers can connect immediately).
+pub fn spawn_metrics_listener(
+    addr: &str,
+    telemetry: Arc<Telemetry>,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    std::thread::spawn(move || {
+        while !shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let t = telemetry.clone();
+                    std::thread::spawn(move || handle_scrape(stream, t));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(())
+}
+
+fn handle_scrape(mut stream: std::net::TcpStream, telemetry: Arc<Telemetry>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    // read until end-of-head (or EOF/timeout); only the request line matters
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", String::new())
+    } else if target == "/metrics" {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            telemetry.registry.render_prometheus(),
+        )
+    } else if target == "/trace" || target.starts_with("/trace?") {
+        let req_id = target
+            .split_once("req=")
+            .and_then(|(_, v)| v.split('&').next().unwrap_or(v).parse::<u64>().ok());
+        let flight = telemetry.flight.lock().unwrap();
+        let events = match req_id {
+            Some(id) => flight.events_for(id),
+            None => flight.events(),
+        };
+        let body = events
+            .iter()
+            .map(|e| e.to_json().to_string() + "\n")
+            .collect::<String>();
+        ("200 OK", "application/jsonl", body)
+    } else {
+        ("404 Not Found", "text/plain", String::new())
+    };
+
+    let _ = write!(
+        stream,
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.flush();
+}

@@ -1,0 +1,103 @@
+//! Telemetry subsystem: metrics registry, flight recorder, scrape endpoint.
+//!
+//! Three pieces, all bounded-memory by construction (see
+//! docs/observability.md for the full surface):
+//!
+//! * [`hist::StreamingHistogram`] — fixed-bucket latency/size histograms
+//!   with exact moments; replaces the unbounded `Vec<f64>` latency logs
+//!   `EngineMetrics` used to grow.
+//! * [`registry::Registry`] — shared counter/gauge/histogram snapshot store
+//!   the engine *publishes into* each serve-loop iteration. Scrapers read
+//!   the registry; they never touch engine state. Rendered as Prometheus
+//!   text exposition by the [`http`] listener (`--metrics-addr`) and as
+//!   JSON by the line-protocol `stats` command.
+//! * [`flight::FlightRecorder`] — bounded ring of per-request lifecycle
+//!   events (queued → admitted → prefill → decode → evict/demote/promote →
+//!   preempt/swap/resume → finish), dumpable as JSONL (`--trace-out`) and
+//!   queryable per-request over the wire (`trace` command, `GET /trace`).
+//!
+//! The engine is single-threaded; [`Telemetry`] is the `Arc` handle shared
+//! between it, the serve loop's connection threads, and the scrape
+//! listener.
+
+pub mod flight;
+pub mod hist;
+pub mod http;
+pub mod registry;
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+pub use flight::{event, FlightEvent, FlightRecorder};
+pub use hist::StreamingHistogram;
+pub use http::spawn_metrics_listener;
+pub use registry::{MetricKind, Registry};
+
+/// Canonical metric names (the `lazyeviction_` namespace). Pool gauges are
+/// published as `lazyeviction_pool_<field>` from `PoolGauges::fields()`.
+pub mod names {
+    pub const STEP_LATENCY_MS: &str = "lazyeviction_step_latency_ms";
+    pub const PREFILL_LATENCY_MS: &str = "lazyeviction_prefill_latency_ms";
+    pub const TTFT_MS: &str = "lazyeviction_ttft_ms";
+    pub const TPOT_MS: &str = "lazyeviction_tpot_ms";
+    pub const QUEUE_WAIT_MS: &str = "lazyeviction_queue_wait_ms";
+    pub const EVICTION_PASS_MS: &str = "lazyeviction_eviction_pass_ms";
+    pub const LIVE_TOKENS: &str = "lazyeviction_live_tokens";
+    pub const TOKENS_OUT: &str = "lazyeviction_tokens_out_total";
+    pub const STEPS: &str = "lazyeviction_decode_steps_total";
+    pub const REQUESTS_FINISHED: &str = "lazyeviction_requests_finished_total";
+    pub const POOL_PREFIX: &str = "lazyeviction_pool_";
+}
+
+/// Shared handle: registry (interior mutex) + flight recorder (mutex).
+pub struct Telemetry {
+    pub registry: Registry,
+    pub flight: Mutex<FlightRecorder>,
+}
+
+impl Telemetry {
+    /// In-memory telemetry with the default flight-ring capacity.
+    pub fn new() -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            registry: Registry::new(),
+            flight: Mutex::new(FlightRecorder::new(FlightRecorder::DEFAULT_CAP)),
+        })
+    }
+
+    /// Telemetry whose flight recorder also appends JSONL to `trace_out`.
+    pub fn with_trace(cap: usize, trace_out: Option<&Path>) -> std::io::Result<Arc<Telemetry>> {
+        let flight = match trace_out {
+            Some(p) => FlightRecorder::with_output(cap, p)?,
+            None => FlightRecorder::new(cap),
+        };
+        Ok(Arc::new(Telemetry {
+            registry: Registry::new(),
+            flight: Mutex::new(flight),
+        }))
+    }
+
+    /// Record one flight event (convenience that takes the flight lock).
+    pub fn record(
+        &self,
+        req: u64,
+        event: &'static str,
+        step: usize,
+        live: usize,
+        detail: f64,
+        note: &'static str,
+    ) {
+        self.flight
+            .lock()
+            .unwrap()
+            .record(req, event, step, live, detail, note);
+    }
+
+    /// Retained flight events for one request.
+    pub fn events_for(&self, req: u64) -> Vec<FlightEvent> {
+        self.flight.lock().unwrap().events_for(req)
+    }
+
+    pub fn flush(&self) {
+        self.flight.lock().unwrap().flush();
+    }
+}

@@ -1,0 +1,222 @@
+//! Typed metrics registry with Prometheus text exposition.
+//!
+//! The engine is single-threaded and owned by its serve loop, so the
+//! registry works on a publish model: each loop iteration the engine pushes
+//! snapshots of its counters, gauges, and histograms into the shared
+//! registry (`Arc<Telemetry>`), and scrape threads read them without ever
+//! touching engine state. Counters are clamped monotone on publish so a
+//! scraper mid-publish never observes a decrease.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+use super::hist::StreamingHistogram;
+
+/// Whether a published value is cumulative (counter) or instantaneous
+/// (gauge) — drives the `# TYPE` annotation in the exposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, StreamingHistogram>,
+}
+
+/// Shared snapshot store; all methods take `&self` (interior mutex).
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Publish a cumulative counter. Clamped monotone: a stale or reset
+    /// publisher can never make a scraped counter go backwards.
+    pub fn set_counter(&self, name: &str, v: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.counters.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    /// Publish an instantaneous gauge (last write wins).
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    /// Publish a histogram snapshot (replaces the previous snapshot).
+    pub fn set_histogram(&self, name: &str, h: &StreamingHistogram) {
+        self.inner
+            .lock()
+            .unwrap()
+            .hists
+            .insert(name.to_string(), h.clone());
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.inner.lock().unwrap().counters.get(name).copied()
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Prometheus text exposition (version 0.0.4): counters and gauges as
+    /// single samples, histograms as `_bucket{le=...}`/`_sum`/`_count`
+    /// families plus explicit `_p50`/`_p90`/`_p99` quantile gauges so
+    /// scrapers that don't do bucket math still get percentiles.
+    pub fn render_prometheus(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, v) in &g.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &g.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", num(*v)));
+        }
+        for (name, h) in &g.hists {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            for (le, c) in h.cumulative_buckets() {
+                let le = if le.is_infinite() {
+                    "+Inf".to_string()
+                } else {
+                    num(le)
+                };
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {c}\n"));
+            }
+            out.push_str(&format!("{name}_sum {}\n", num(h.sum())));
+            out.push_str(&format!("{name}_count {}\n", h.n()));
+            for (q, label) in [(0.50, "p50"), (0.90, "p90"), (0.99, "p99")] {
+                out.push_str(&format!(
+                    "# TYPE {name}_{label} gauge\n{name}_{label} {}\n",
+                    num(h.quantile(q))
+                ));
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot for the line-protocol `stats` command: counters and
+    /// gauges verbatim, histograms as `{count, sum, mean, p50, p90, p99}`.
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut counters = Json::obj();
+        for (name, v) in &g.counters {
+            counters = counters.set(name.as_str(), *v as f64);
+        }
+        let mut gauges = Json::obj();
+        for (name, v) in &g.gauges {
+            gauges = gauges.set(name.as_str(), *v);
+        }
+        let mut hists = Json::obj();
+        for (name, h) in &g.hists {
+            hists = hists.set(
+                name.as_str(),
+                Json::obj()
+                    .set("count", h.n() as f64)
+                    .set("sum", h.sum())
+                    .set("mean", h.mean())
+                    .set("p50", h.quantile(0.50))
+                    .set("p90", h.quantile(0.90))
+                    .set("p99", h.quantile(0.99)),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+    }
+
+    pub fn counter_names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().counters.keys().cloned().collect()
+    }
+}
+
+/// Render a float the way the exposition format expects: integral values
+/// without a trailing `.0`, non-finite as Prometheus spec strings.
+fn num(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x.is_infinite() {
+        if x > 0.0 { "+Inf" } else { "-Inf" }.to_string()
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotone() {
+        let r = Registry::new();
+        r.set_counter("x", 5);
+        r.set_counter("x", 3); // stale publish must not regress
+        assert_eq!(r.counter("x"), Some(5));
+        r.set_counter("x", 9);
+        assert_eq!(r.counter("x"), Some(9));
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let r = Registry::new();
+        r.set_gauge("g", 5.0);
+        r.set_gauge("g", 3.0);
+        assert_eq!(r.gauge("g"), Some(3.0));
+    }
+
+    #[test]
+    fn exposition_contains_all_families() {
+        let r = Registry::new();
+        r.set_counter("app_requests_total", 7);
+        r.set_gauge("app_free_blocks", 12.0);
+        let mut h = StreamingHistogram::latency_ms();
+        h.observe(1.5);
+        h.observe(2.5);
+        r.set_histogram("app_step_ms", &h);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE app_requests_total counter"));
+        assert!(text.contains("app_requests_total 7"));
+        assert!(text.contains("app_free_blocks 12"));
+        assert!(text.contains("app_step_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("app_step_ms_count 2"));
+        assert!(text.contains("app_step_ms_p50"));
+        assert!(text.contains("app_step_ms_p99"));
+        // every line is either a comment or `name value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_snapshot_shape() {
+        let r = Registry::new();
+        r.set_counter("c", 1);
+        r.set_gauge("g", 0.5);
+        let mut h = StreamingHistogram::latency_ms();
+        h.observe(4.0);
+        r.set_histogram("h", &h);
+        let j = r.to_json();
+        let s = j.to_string();
+        let back = Json::parse(&s).expect("stats JSON round-trips");
+        assert_eq!(back.req("counters").unwrap().f64_at("c").unwrap(), 1.0);
+        assert_eq!(back.req("gauges").unwrap().f64_at("g").unwrap(), 0.5);
+        let h = back.req("histograms").unwrap().req("h").unwrap();
+        assert_eq!(h.f64_at("count").unwrap(), 1.0);
+    }
+}

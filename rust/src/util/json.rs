@@ -161,7 +161,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literals; emitting them
+                    // verbatim would corrupt the stream (e.g. avg_latency_ms
+                    // is NaN before any token is produced)
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -542,6 +547,21 @@ mod tests {
         let v = Json::parse(r#"{"a":"x"}"#).unwrap();
         assert!(v.f64_at("a").is_err());
         assert!(v.f64_at("missing").is_err());
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        let v = Json::obj()
+            .set("nan", f64::NAN)
+            .set("inf", f64::INFINITY)
+            .set("ninf", f64::NEG_INFINITY)
+            .set("ok", 1.5);
+        let s = v.to_string();
+        let back = Json::parse(&s).expect("non-finite floats must not corrupt the stream");
+        assert_eq!(back.get("nan"), Some(&Json::Null));
+        assert_eq!(back.get("inf"), Some(&Json::Null));
+        assert_eq!(back.get("ninf"), Some(&Json::Null));
+        assert_eq!(back.f64_at("ok").unwrap(), 1.5);
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! End-to-end telemetry: a sim-backed engine served over TCP with the
+//! metrics listener attached, scraped mid-serve (counters must be monotone)
+//! and after (registry must agree with what the clients saw); plus
+//! engine-level flight-recorder checks that the preempt → swap → resume
+//! lifecycle comes out as an ordered event sequence consistent with the
+//! final counters, both in the in-memory ring and in the `--trace-out`
+//! JSONL replay.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lazyeviction::coordinator::{Engine, EngineConfig, PreemptMode, Request};
+use lazyeviction::kvpool::PoolConfig;
+use lazyeviction::kvtier::HostTierConfig;
+use lazyeviction::metrics::PoolGauges;
+use lazyeviction::telemetry::{event, spawn_metrics_listener, Telemetry};
+use lazyeviction::util::json::Json;
+
+// pool_e2e.rs owns 8953-8956; keep this binary's ports disjoint
+const SERVE_ADDR: &str = "127.0.0.1:8960";
+const METRICS_ADDR: &str = "127.0.0.1:8961";
+
+fn pooled_cfg(batch: usize, n_blocks: usize) -> EngineConfig {
+    let mut cfg = EngineConfig {
+        batch,
+        cache: 64,
+        budget: 40,
+        policy: "lazy".into(),
+        record_live: false,
+        pool: Some(PoolConfig {
+            block_size: 8,
+            n_blocks,
+            low_watermark: 2,
+            high_watermark: 4,
+        }),
+        ..Default::default()
+    };
+    cfg.params.window = 8;
+    cfg.params.recent = 8;
+    cfg
+}
+
+/// The quick-bench's host-tier configuration (benches/pool.rs): watermarks
+/// off so `run_all` drives admission itself, a 1 MiB tier, and the given
+/// preemption mode.
+fn tier_cfg(mode: PreemptMode, batch: usize, n_blocks: usize) -> EngineConfig {
+    let mut cfg = pooled_cfg(batch, n_blocks);
+    {
+        let p = cfg.pool.as_mut().unwrap();
+        p.low_watermark = 0;
+        p.high_watermark = 0;
+    }
+    cfg.host_tier = Some(HostTierConfig { max_bytes: 1 << 20 });
+    cfg.preempt_mode = mode;
+    cfg
+}
+
+fn mk(id: u64, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt: "#A=3;B=7;\n>".into(),
+        template: String::new(),
+        max_new,
+        resume: None,
+    }
+}
+
+/// One HTTP/1.0 exchange against the scrape listener → (head, body).
+fn http_get(addr: &str, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect scrape listener");
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read scrape response");
+    let (head, body) = buf.split_once("\r\n\r\n").expect("response head/body");
+    (head.to_string(), body.to_string())
+}
+
+/// Value of the `name value` sample line in a text exposition, if present.
+/// Anchored on `name` + a space so `foo` never matches `foo_count`.
+fn metric(body: &str, name: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        l.strip_prefix(name)?
+            .strip_prefix(' ')?
+            .trim()
+            .parse::<f64>()
+            .ok()
+    })
+}
+
+#[test]
+fn scrape_stats_and_trace_during_and_after_serving() {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let telemetry = Telemetry::new();
+    spawn_metrics_listener(METRICS_ADDR, telemetry.clone(), shutdown.clone())
+        .expect("bind metrics listener");
+    {
+        let shutdown = shutdown.clone();
+        let t = telemetry.clone();
+        std::thread::spawn(move || {
+            let engine = Engine::new_sim(pooled_cfg(2, 12)).expect("sim engine");
+            let _ = lazyeviction::server::serve_with_telemetry(engine, SERVE_ADDR, shutdown, Some(t));
+        });
+    }
+    let mut up = false;
+    for _ in 0..200 {
+        if TcpStream::connect(SERVE_ADDR).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(up, "server did not come up within 4s");
+
+    // 4 concurrent clients through 2 rows over 12 blocks: enough contention
+    // to exercise the watermark while the scraper reads mid-flight
+    let mut handles = Vec::new();
+    for c in 0..4u32 {
+        handles.push(std::thread::spawn(move || -> String {
+            let stream = TcpStream::connect(SERVE_ADDR).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            writeln!(&stream, r#"{{"prompt":"#A={c};B=7;\n>","max_new":48}}"#).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line
+        }));
+    }
+
+    // mid-serve scrapes: published counters may lag but must never regress
+    // (the registry clamps monotone; absent-yet metrics read as zero)
+    let mut last = (0.0f64, 0.0f64);
+    for _ in 0..4 {
+        std::thread::sleep(Duration::from_millis(30));
+        let (head, body) = http_get(METRICS_ADDR, "/metrics");
+        assert!(head.starts_with("HTTP/1.0 200"), "scrape head: {head}");
+        let now = (
+            metric(&body, "lazyeviction_tokens_out_total").unwrap_or(0.0),
+            metric(&body, "lazyeviction_decode_steps_total").unwrap_or(0.0),
+        );
+        assert!(
+            now.0 >= last.0 && now.1 >= last.1,
+            "counters regressed mid-serve: {last:?} -> {now:?}"
+        );
+        last = now;
+    }
+
+    for h in handles {
+        let line = h.join().unwrap();
+        let j = Json::parse(&line).expect("json response line");
+        assert!(j.get("error").is_none(), "server returned an error: {line}");
+        assert_eq!(j.usize_at("tokens").unwrap(), 48);
+    }
+
+    // the serve loop publishes on its next iteration — poll briefly for the
+    // final snapshot instead of racing it
+    let mut body = String::new();
+    let mut settled = false;
+    for _ in 0..100 {
+        body = http_get(METRICS_ADDR, "/metrics").1;
+        if metric(&body, "lazyeviction_requests_finished_total") == Some(4.0) {
+            settled = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(settled, "final publish never arrived; exposition:\n{body}");
+    // 4 requests x 48 tokens; a resume-restart fallback could regenerate
+    // some, so the decoded total is a floor, not an exact count
+    assert!(metric(&body, "lazyeviction_tokens_out_total").unwrap() >= 192.0);
+    assert_eq!(metric(&body, "lazyeviction_ttft_ms_count"), Some(4.0));
+    assert!(metric(&body, "lazyeviction_ttft_ms_p50").unwrap() >= 0.0);
+    assert!(metric(&body, "lazyeviction_queue_wait_ms_count").unwrap() >= 4.0);
+    assert!(body.contains("# TYPE lazyeviction_step_latency_ms histogram"));
+    assert_eq!(metric(&body, "lazyeviction_pool_total_blocks"), Some(12.0));
+    // every PoolGauges field must be scrapable under the pool namespace —
+    // the same single-source list the server JSON parity test pins
+    for (name, _, _) in PoolGauges::default().fields() {
+        assert!(
+            metric(&body, &format!("lazyeviction_pool_{name}")).is_some(),
+            "pool gauge '{name}' missing from the exposition"
+        );
+    }
+
+    // HTTP trace endpoint: request 1's lifecycle as parseable JSONL,
+    // starting at the server-recorded enqueue and ending at finish
+    let (head, trace) = http_get(METRICS_ADDR, "/trace?req=1");
+    assert!(head.starts_with("HTTP/1.0 200"), "trace head: {head}");
+    let events: Vec<Json> = trace
+        .lines()
+        .map(|l| Json::parse(l).expect("trace line is JSON"))
+        .collect();
+    assert!(!events.is_empty(), "request 1 left no flight events");
+    assert_eq!(events[0].str_at("event").unwrap(), event::QUEUED);
+    assert_eq!(events.last().unwrap().str_at("event").unwrap(), event::FINISH);
+
+    // line-protocol commands share the generation port
+    let stream = TcpStream::connect(SERVE_ADDR).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(&stream, r#"{{"cmd":"stats"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(&line).expect("stats reply");
+    let counters = stats.req("stats").unwrap().req("counters").unwrap();
+    assert_eq!(
+        counters.f64_at("lazyeviction_requests_finished_total").unwrap(),
+        4.0
+    );
+
+    writeln!(&stream, r#"{{"cmd":"trace","id":2}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let reply = Json::parse(&line).expect("trace reply");
+    let evs = reply.get("trace").and_then(|v| v.as_arr()).expect("trace array");
+    assert!(!evs.is_empty());
+    assert_eq!(evs[0].str_at("event").unwrap(), event::QUEUED);
+
+    writeln!(&stream, r#"{{"cmd":"bogus"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("error").is_some());
+
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn flight_recorder_orders_swap_preempt_resume() {
+    // the quick-bench's contended swap scenario: 3 requests, 2 rows, 9
+    // blocks, swap-mode preemption against a 1 MiB tier
+    let telemetry = Telemetry::new();
+    let mut e = Engine::new_sim(tier_cfg(PreemptMode::Swap, 2, 9)).expect("sim engine");
+    e.attach_telemetry(telemetry.clone());
+    let rs = e.run_all((0..3).map(|i| mk(i, 50)).collect()).expect("run");
+    assert_eq!(rs.len(), 3);
+    assert!(e.metrics.swap_preempts > 0, "the scenario must swap-preempt");
+
+    let mut preempt_events = 0u64;
+    let mut swap_cycles = 0usize;
+    for id in 0..3u64 {
+        let evs = telemetry.events_for(id);
+        assert!(!evs.is_empty(), "request {id} left no flight events");
+        assert!(
+            evs.windows(2).all(|w| w[0].seq < w[1].seq),
+            "request {id}: seq numbers must increase in emission order"
+        );
+        let names: Vec<&str> = evs.iter().map(|ev| ev.event).collect();
+        // engine-level runs start at admission (`queued` is server-side)
+        assert_eq!(names.first().copied(), Some(event::ADMITTED), "req {id}");
+        assert_eq!(names.last().copied(), Some(event::FINISH), "req {id}");
+        assert!(names.contains(&event::DECODE), "req {id} never decoded");
+        preempt_events += names
+            .iter()
+            .filter(|n| **n == event::PREEMPT || **n == event::PREEMPT_SWAP)
+            .count() as u64;
+        // every swap-out must be paired with a later swap-in: by finish the
+        // request's tier traffic is balanced, and the first cycle is ordered
+        let outs = names.iter().filter(|n| **n == event::PREEMPT_SWAP).count();
+        let ins = names.iter().filter(|n| **n == event::RESUME_SWAP).count();
+        assert_eq!(outs, ins, "req {id}: unbalanced swap cycle");
+        if outs > 0 {
+            let p = names.iter().position(|n| *n == event::PREEMPT_SWAP).unwrap();
+            let r = names.iter().position(|n| *n == event::RESUME_SWAP).unwrap();
+            assert!(r > p, "req {id}: swap resume recorded before its preempt");
+            swap_cycles += 1;
+        }
+    }
+    assert_eq!(
+        preempt_events, e.metrics.preemptions,
+        "one preempt event per counted preemption"
+    );
+    assert!(swap_cycles > 0, "no request recorded a full swap cycle");
+}
+
+#[test]
+fn trace_out_jsonl_replays_lifecycle_consistent_with_counters() {
+    // the quick-bench's recurrence scenario: one lazy row over 16 blocks
+    // with a host tier — guaranteed demotions and promotions
+    let dir = std::env::temp_dir().join(format!("lazyeviction-tele-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    let telemetry = Telemetry::with_trace(4096, Some(path.as_path())).expect("trace sink");
+    let mut e = Engine::new_sim(tier_cfg(PreemptMode::Recompute, 1, 16)).expect("sim engine");
+    e.attach_telemetry(telemetry.clone());
+    let rs = e.run_all(vec![mk(0, 60)]).expect("run");
+    assert_eq!(rs.len(), 1);
+    telemetry.flush();
+
+    let text = std::fs::read_to_string(&path).expect("read trace-out");
+    let (mut finishes, mut promotes, mut demotes, mut evicts) = (0u64, 0u64, 0u64, 0u64);
+    let mut last_seq = None;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every trace line is valid JSON");
+        let seq = j.usize_at("seq").unwrap();
+        if let Some(prev) = last_seq {
+            assert!(seq > prev, "trace seq must be strictly increasing");
+        }
+        last_seq = Some(seq);
+        assert!(j.f64_at("t_s").unwrap() >= 0.0);
+        assert_eq!(j.f64_at("req").unwrap(), 0.0);
+        let ev = j.str_at("event").unwrap();
+        if ev == event::FINISH {
+            finishes += 1;
+        } else if ev == event::PROMOTE {
+            promotes += 1;
+        } else if ev == event::DEMOTE {
+            demotes += 1;
+        } else if ev == event::EVICT {
+            evicts += 1;
+        }
+    }
+    assert_eq!(finishes, 1, "exactly one finish for one request");
+    assert_eq!(promotes, e.metrics.promotions, "one promote event per promotion");
+    assert!(promotes > 0, "recurrence scenario must promote");
+    assert!(demotes > 0, "evictions must park blocks");
+    // batch-1: the per-row evict events are exactly the counted passes
+    assert_eq!(evicts, e.metrics.eviction_count);
+    // the ring (under capacity here) retained the same lifecycle the file got
+    assert_eq!(telemetry.events_for(0).len(), text.lines().count());
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir(&dir).ok();
+}
