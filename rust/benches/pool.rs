@@ -9,12 +9,16 @@
 //!
 //! Pure simulator path (trace replay + kvpool packing) — no artifacts.
 
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
 use lazyeviction::bench_harness::{save_results, table::Table};
 use lazyeviction::coordinator::{Engine, EngineConfig, PreemptMode, Request};
 use lazyeviction::kvpool::PoolConfig;
 use lazyeviction::kvtier::HostTierConfig;
 use lazyeviction::scheduler::preempt::crossover_fed_tokens;
 use lazyeviction::sim::capacity::{run_capacity, CapacitySpec};
+use lazyeviction::telemetry::StreamingHistogram;
 use lazyeviction::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -461,10 +465,73 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Client-abort scenario — cancellation at fleet scale. Every 3rd client
+    // disconnects mid-decode (or gives up while swap-parked); the sim must
+    // tear the row down and hand its pool blocks — and any pinned tier
+    // state — back immediately, leaving no leak at drain. This is the
+    // fleet-scale counterpart of the serve loop's EOF → abort path.
+    {
+        let mut spec = CapacitySpec::new("lazy", n);
+        spec.pool.n_blocks = 64;
+        spec.abort_every = 3;
+        let r = run_capacity(&spec)?;
+        println!(
+            "\nClient-abort scenario — every 3rd client disconnects mid-decode\n\
+             \x20 cancelled {}, completed {}, failed {} (of {})\n\
+             \x20 reclaimed {} pool blocks, {} parked tier blocks; {} free at drain",
+            r.cancelled,
+            r.completed,
+            r.failed,
+            n,
+            r.reclaimed_blocks,
+            r.reclaimed_tier_blocks,
+            r.end_free_blocks,
+        );
+        assert_eq!(r.cancelled as usize, n / 3, "every marked client must abort");
+        assert_eq!(
+            r.cancelled as usize + r.completed + r.failed,
+            n,
+            "every request must terminate exactly once"
+        );
+        assert_eq!(
+            r.end_free_blocks, r.total_blocks,
+            "aborted rows must return their blocks (leak at drain)"
+        );
+        assert_eq!(r.end_tier_blocks, 0, "no tier state may stay pinned");
+        if n >= 3 {
+            assert!(r.reclaimed_blocks > 0, "mid-decode aborts must free blocks");
+        }
+        // swap-mode flavor: clients that give up while parked in the host
+        // tier must unpin those bytes at the drop, not at process exit
+        let mut swap = CapacitySpec::new("full", n);
+        swap.pool.n_blocks = 64;
+        swap.swap_resume = true;
+        swap.abort_every = 2;
+        let s = run_capacity(&swap)?;
+        assert_eq!(s.end_tier_blocks, 0, "abandoned parked rows must unpin");
+        assert_eq!(s.end_free_blocks, s.total_blocks);
+        println!(
+            "\x20 swap flavor: {} cancelled, {} parked tier blocks reclaimed, \
+             tier empty at drain",
+            s.cancelled, s.reclaimed_tier_blocks,
+        );
+        out = out.set(
+            "client_abort",
+            Json::obj()
+                .set("abort_every", spec.abort_every)
+                .set("cancelled", r.cancelled as f64)
+                .set("reclaimed_blocks", r.reclaimed_blocks as f64)
+                .set("reclaimed_tier_blocks", s.reclaimed_tier_blocks as f64)
+                .set("end_tier_blocks", s.end_tier_blocks),
+        );
+    }
+
     // Recorded trajectory — BENCH_pool.json. A policy × scenario grid over
     // the sim engine: sustained batch (mean decoding rows per step),
     // TTFT/TPOT percentiles from the engine's streaming histograms, and the
-    // tier's promotion/park/shed counters. `save` schema-checks the report
+    // tier's promotion/park/shed counters. The `stream` cell re-drives the
+    // steady workload serve-loop style and reports client-visible TTFT
+    // (submit → first drained token event). `save` schema-checks the report
     // before writing; CI uploads the file as an artifact, so successive
     // runs form a diffable trajectory without parsing bench stdout.
     {
@@ -493,8 +560,18 @@ fn main() -> anyhow::Result<()> {
             cfg.params.recent = 8;
             cfg
         };
+        let mk = |id: u64, max_new: usize| Request {
+            id,
+            prompt: "#A=3;B=7;\n>".into(),
+            template: String::new(),
+            max_new,
+            resume: None,
+        };
         let mut report = BenchReport::new("pool", n);
         for policy in ["full", "h2o", "tova", "lazy"] {
+            // the steady cell's output doubles as the byte-identity baseline
+            // for the stream cell below (same config, same requests)
+            let mut steady_text: Option<String> = None;
             for scenario in ["steady", "preempt", "tier"] {
                 let cfg = scenario_cfg(scenario, policy);
                 let peak_batch = cfg.batch;
@@ -504,17 +581,10 @@ fn main() -> anyhow::Result<()> {
                     _ => (1, 60),
                 };
                 let mut e = Engine::new_sim(cfg)?;
-                e.run_all(
-                    (0..n_reqs)
-                        .map(|id| Request {
-                            id,
-                            prompt: "#A=3;B=7;\n>".into(),
-                            template: String::new(),
-                            max_new,
-                            resume: None,
-                        })
-                        .collect(),
-                )?;
+                let rs = e.run_all((0..n_reqs).map(|id| mk(id, max_new)).collect())?;
+                if scenario == "steady" {
+                    steady_text = rs.first().map(|r| r.text.clone());
+                }
                 let m = &e.metrics;
                 report.push(BenchScenario {
                     policy: policy.into(),
@@ -536,7 +606,102 @@ fn main() -> anyhow::Result<()> {
                         .pool_gauges()
                         .map(|g| g.tier_shed_blocks)
                         .unwrap_or(0),
+                    streamed_tokens: m.streamed_tokens,
+                    cancelled_rows: m.cancelled_rows,
                     ttft_ms: Quantiles::from_hist(&m.ttft_hist_ms),
+                    tpot_ms: Quantiles::from_hist(&m.tpot_hist_ms),
+                });
+            }
+
+            // "stream": the steady workload re-driven the way the serve loop
+            // drives it — submit/step/drain per iteration, with this bench
+            // acting as the streaming client. TTFT here is *client-visible*:
+            // wall time from submit() to the first drained token event, not
+            // the engine-internal prefill clock the other cells report.
+            {
+                let cfg = scenario_cfg("steady", policy);
+                let peak_batch = cfg.batch;
+                let (n_reqs, max_new): (u64, usize) = (4, 50);
+                let mut e = Engine::new_sim(cfg)?;
+                let mut pending: VecDeque<Request> =
+                    (0..n_reqs).map(|id| mk(id, max_new)).collect();
+                let mut submit_at: HashMap<u64, Instant> = HashMap::new();
+                let mut concat: HashMap<u64, String> = HashMap::new();
+                let mut ttft = StreamingHistogram::latency_ms();
+                let mut streamed: u64 = 0;
+                let mut finished: u64 = 0;
+                while finished < n_reqs {
+                    while !pending.is_empty() && e.has_free_row() {
+                        let r = pending.front().expect("nonempty").clone();
+                        let (id, fresh) = (r.id, r.resume.is_none());
+                        let t0 = Instant::now();
+                        if !e.submit(r, 0.0)? {
+                            break; // declined under pool pressure; retry
+                        }
+                        pending.pop_front();
+                        if fresh {
+                            submit_at.insert(id, t0);
+                        }
+                    }
+                    let done = e.step()?;
+                    // tokens drain before terminals, like the serve loop
+                    for ev in e.drain_token_events() {
+                        streamed += 1;
+                        if ev.first {
+                            if let Some(t0) = submit_at.get(&ev.req) {
+                                ttft.observe(t0.elapsed().as_secs_f64() * 1e3);
+                            }
+                        }
+                        concat.entry(ev.req).or_default().push_str(&ev.text);
+                    }
+                    for resp in done {
+                        finished += 1;
+                        let joined = concat.remove(&resp.id).unwrap_or_default();
+                        assert_eq!(
+                            joined, resp.text,
+                            "request {}: streamed concat diverged from the \
+                             terminal response",
+                            resp.id
+                        );
+                        if let Some(base) = &steady_text {
+                            assert_eq!(
+                                &resp.text, base,
+                                "request {}: stream drive changed output",
+                                resp.id
+                            );
+                        }
+                    }
+                    // the steady config should not preempt, but stay
+                    // correct if a policy change ever makes it
+                    for r in e.take_preempted() {
+                        pending.push_front(r);
+                    }
+                }
+                assert_eq!(ttft.n(), n_reqs, "every request must stream a first token");
+                let m = &e.metrics;
+                report.push(BenchScenario {
+                    policy: policy.into(),
+                    scenario: "stream".into(),
+                    steps: m.steps,
+                    sustained_batch: if m.steps == 0 {
+                        0.0
+                    } else {
+                        m.tokens_out as f64 / m.steps as f64
+                    },
+                    peak_batch,
+                    completed: m.requests_finished,
+                    preemptions: m.preemptions,
+                    resumes: m.resumes,
+                    promotions: m.promotions,
+                    demoted_blocks: m.demoted_blocks,
+                    tier_rejects: m.tier_rejects,
+                    tier_shed_blocks: e
+                        .pool_gauges()
+                        .map(|g| g.tier_shed_blocks)
+                        .unwrap_or(0),
+                    streamed_tokens: streamed,
+                    cancelled_rows: m.cancelled_rows,
+                    ttft_ms: Quantiles::from_hist(&ttft),
                     tpot_ms: Quantiles::from_hist(&m.tpot_hist_ms),
                 });
             }

@@ -80,6 +80,12 @@ pub struct BenchScenario {
     pub tier_rejects: u64,
     /// Host tier: parked entries destroyed under byte pressure.
     pub tier_shed_blocks: u64,
+    /// Token events surfaced to a streaming consumer as they were decoded.
+    /// Batch-mode cells report 0 (nothing drains the events); the `stream`
+    /// cell counts the events its bench-side client drained per step.
+    pub streamed_tokens: u64,
+    /// Rows/requests torn down by client cancellation or disconnect.
+    pub cancelled_rows: u64,
     pub ttft_ms: Quantiles,
     pub tpot_ms: Quantiles,
 }
@@ -99,6 +105,8 @@ impl BenchScenario {
             .set("demoted_blocks", self.demoted_blocks as f64)
             .set("tier_rejects", self.tier_rejects as f64)
             .set("tier_shed_blocks", self.tier_shed_blocks as f64)
+            .set("streamed_tokens", self.streamed_tokens as f64)
+            .set("cancelled_rows", self.cancelled_rows as f64)
             .set("ttft_ms", self.ttft_ms.to_json())
             .set("tpot_ms", self.tpot_ms.to_json())
     }
@@ -180,6 +188,8 @@ impl BenchReport {
                 "demoted_blocks",
                 "tier_rejects",
                 "tier_shed_blocks",
+                "streamed_tokens",
+                "cancelled_rows",
             ] {
                 let v = s
                     .get(key)

@@ -46,7 +46,9 @@ use anyhow::{Context, Result};
 
 use crate::attention::{observe, TrackerConfig};
 use crate::coordinator::row::RowState;
-use crate::coordinator::{EngineConfig, PreemptMode, PreemptedState, Request, Response};
+use crate::coordinator::{
+    EngineConfig, PreemptMode, PreemptedState, Request, Response, TokenEvent,
+};
 use crate::eviction::score::importance;
 use crate::eviction::{self, Policy};
 use crate::kvcache::TokenRecord;
@@ -103,6 +105,11 @@ pub struct Engine {
     /// arena location + frozen record — swapped out to the tier before the
     /// compaction moves invalidate those locations.
     demote_buf: Vec<(BlockId, usize, TokenRecord)>,
+    /// Tokens decoded since the last `drain_token_events` call, in
+    /// production order. The serve loop drains these every iteration to
+    /// feed streaming clients; `run_all` drains them per step so the
+    /// buffer stays bounded in batch runs too.
+    token_events: Vec<TokenEvent>,
 }
 
 impl Engine {
@@ -174,6 +181,7 @@ impl Engine {
             copy_buf: Vec::new(),
             move_buf: Vec::new(),
             demote_buf: Vec::new(),
+            token_events: Vec::new(),
             exec,
             cfg,
         })
@@ -282,6 +290,8 @@ impl Engine {
         reg.set_counter("lazyeviction_eviction_passes_total", m.eviction_count);
         reg.set_counter("lazyeviction_prefill_skips_total", m.prefill_skips);
         reg.set_counter("lazyeviction_resume_fallbacks_total", m.resume_fallbacks);
+        reg.set_counter(names::STREAMED_TOKENS, m.streamed_tokens);
+        reg.set_counter(names::CANCELLED_ROWS, m.cancelled_rows);
         reg.set_gauge("lazyeviction_active_rows", self.active() as f64);
         reg.set_gauge("lazyeviction_batch_rows", self.cfg.batch as f64);
         reg.set_gauge("lazyeviction_throughput_tokens_per_s", m.throughput());
@@ -417,6 +427,78 @@ impl Engine {
             }
         }
         ids
+    }
+
+    /// Take the tokens decoded since the last drain, in production order.
+    /// The serve loop forwards them to streaming clients; concatenating
+    /// `text` over one request's events is byte-identical to the final
+    /// `Response::text`.
+    pub fn drain_token_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.token_events)
+    }
+
+    /// Client cancellation: tear down the active row owned by request `id`,
+    /// returning its blocks to the pool and releasing its parked tier
+    /// entries. Returns false when no active row belongs to `id` (the
+    /// request is queued, preempted, or already finished — the caller
+    /// handles those via `RequestQueue::remove` + `release_discarded_state`).
+    /// Unlike preemption nothing is snapshotted: the client is gone.
+    pub fn abort_request(&mut self, id: u64) -> bool {
+        let Some(i) = self
+            .rows
+            .iter()
+            .position(|r| r.as_ref().map(|row| row.req.id == id).unwrap_or(false))
+        else {
+            return false;
+        };
+        let mut row = self.rows[i].take().expect("ownership checked");
+        if let Some(pool) = self.pool.as_mut() {
+            row.seq.release_blocks(pool);
+        }
+        if let Some(tier) = self.tier.as_mut() {
+            for e in row.parked.entries.drain(..) {
+                tier.release(e.tier_id);
+            }
+        }
+        self.metrics.cancelled_rows += 1;
+        self.tele_event(
+            id,
+            event::ABORT,
+            row.pos as usize,
+            0,
+            row.produced as f64,
+            "active",
+        );
+        true
+    }
+
+    /// Client cancellation of a request that is *queued* with a preemption
+    /// snapshot: release the tier state riding in it — the pinned entries
+    /// of a swap-parked table (which nothing else would ever free: only a
+    /// resume consumes them) and the unpinned demotion ledger. Without this
+    /// sweep an abandoned swap-parked request leaks pinned tier budget
+    /// forever. Safe against double-release: `HostTier::release` ignores
+    /// unknown ids, and shed unpinned entries are already gone.
+    pub fn release_discarded_state(&mut self, st: &PreemptedState, id: u64) {
+        if let Some(tier) = self.tier.as_mut() {
+            if let Some(swapped) = &st.swapped {
+                for sb in swapped {
+                    tier.release(sb.tier_id);
+                }
+            }
+            for e in &st.parked.entries {
+                tier.release(e.tier_id);
+            }
+        }
+        self.metrics.cancelled_rows += 1;
+        self.tele_event(
+            id,
+            event::ABORT,
+            st.pos as usize,
+            st.records.len(),
+            st.produced as f64,
+            "queued",
+        );
     }
 
     /// Extract the layer-0 concat-heads key vector for slot data laid out
@@ -1350,7 +1432,7 @@ impl Engine {
         // per-row: observe attention, record the new token, pick next input
         for i in 0..b {
             // phase 1 (row borrow): tracker update + logical push + output
-            let (write_at, decode_ev) = {
+            let (write_at, decode_ev, tok_ev) = {
                 let Some(row) = self.rows[i].as_mut() else {
                     continue;
                 };
@@ -1399,9 +1481,28 @@ impl Engine {
                     .tokenizer
                     .char_of(argmax(logits) as u32)
                     .unwrap_or(' ');
+                // capture the output delta around the advance: whatever
+                // chars land in out_text this step (predicted or
+                // template-forced) are exactly what a streaming client must
+                // see, so concat(stream) == Response::text byte-for-byte
+                let out_len_before = row.out_text.len();
                 if let Some(c) = row.advance_with_prediction(pred, self.cfg.stop_char) {
                     row.next_token = self.tokenizer.id(c).unwrap_or(0);
                 }
+                let tok_ev = if row.out_text.len() > out_len_before {
+                    Some((
+                        TokenEvent {
+                            req: row.req.id,
+                            text: row.out_text[out_len_before..].to_string(),
+                            produced: row.produced,
+                            first: row.produced == 1,
+                        },
+                        row.pos as usize,
+                        row.seq.len(),
+                    ))
+                } else {
+                    None
+                };
                 let write_at = if paged {
                     let slot = row.seq.len() - 1;
                     let t = row.seq.block_table().expect("pooled row has a table");
@@ -1409,7 +1510,7 @@ impl Engine {
                 } else {
                     None
                 };
-                (write_at, decode_ev)
+                (write_at, decode_ev, tok_ev)
             };
             // phase 2 (backend): any shared-tail CoW copy lands first, then
             // the new token's K/V row goes to its table-mapped location
@@ -1425,6 +1526,17 @@ impl Engine {
             }
             if let Some((rid, stp, lv)) = decode_ev {
                 self.tele_event(rid, event::DECODE, stp, lv, 0.0, "");
+            }
+            if let Some((ev, pos, live)) = tok_ev {
+                self.tele_event(
+                    ev.req,
+                    event::STREAM_TOKEN,
+                    pos,
+                    live,
+                    ev.produced as f64,
+                    "",
+                );
+                self.token_events.push(ev);
             }
         }
         self.metrics.record_step(t0.elapsed(), active);
@@ -1831,6 +1943,9 @@ impl Engine {
                 break;
             }
             done.extend(self.step()?);
+            // nobody streams in batch mode — drop the step's token events
+            // so the buffer stays bounded over arbitrarily long runs
+            self.token_events.clear();
             self.publish_telemetry();
             // oldest victim first: reverse-push so slice order survives the
             // front insertion (resumed waits are tracked in the snapshot)

@@ -271,6 +271,25 @@ impl FinishReason {
     }
 }
 
+/// One decoded token leaving the engine, in production order. The serve
+/// loop drains these each iteration (`Engine::drain_token_events`) and
+/// forwards them to streaming clients; concatenating `text` over a
+/// request's events reproduces `Response::text` byte-identically (the
+/// deltas are captured straight off `RowState::out_text`, so forced
+/// template chars are included exactly as the final response includes
+/// them).
+#[derive(Clone, Debug)]
+pub struct TokenEvent {
+    /// Request id the token belongs to.
+    pub req: u64,
+    /// The chars appended to the row's output by this decode step.
+    pub text: String,
+    /// Tokens produced so far, including this one.
+    pub produced: usize,
+    /// True for the request's first produced token (client-visible TTFT).
+    pub first: bool,
+}
+
 /// A completed generation.
 #[derive(Clone, Debug)]
 pub struct Response {

@@ -74,6 +74,13 @@ pub struct EngineMetrics {
     pub tokens_out: u64,
     /// Requests finished (any reason).
     pub requests_finished: u64,
+    /// Token events actually handed to a streaming client as they were
+    /// decoded (the serve loop increments this when it forwards a drained
+    /// event to a route that asked for `"stream": true`).
+    pub streamed_tokens: u64,
+    /// Rows/requests torn down by client cancellation or disconnect
+    /// (active-row aborts and discarded preempted snapshots alike).
+    pub cancelled_rows: u64,
     /// Optional bounded raw per-step latency log (seconds), for benches
     /// that window the series; `None` in serving (bounded memory).
     step_log: Option<(Vec<f64>, usize)>,
@@ -109,6 +116,8 @@ impl Default for EngineMetrics {
             tier_rejects: 0,
             tokens_out: 0,
             requests_finished: 0,
+            streamed_tokens: 0,
+            cancelled_rows: 0,
             step_log: None,
             started: None,
             wall: 0.0,

@@ -1,5 +1,5 @@
-//! Request scheduling: FIFO admission queue + continuous batcher +
-//! pool-pressure admission control.
+//! Request scheduling: deadline-ordered admission queue + continuous
+//! batcher + pool-pressure admission control.
 //!
 //! The engine has a fixed number of batch rows (the compiled executable's
 //! batch dimension). The batcher admits queued requests into free rows at
@@ -16,13 +16,19 @@
 //! preserves that order, where a per-request `push_front` loop would
 //! reverse same-step victims. Their re-admission *resumes* generation
 //! (recompute mode) rather than restarting it.
+//!
+//! Fresh arrivals are no longer plain FIFO: each request carries an
+//! [`queue::SloClass`] and the queue pops the earliest *deadline* first
+//! (enqueue time minus accumulated wait, plus the class's TTFT target) —
+//! TTFT-priority admission with aging built in. Declined/preempted
+//! re-queues bypass deadline ordering entirely (front lane).
 
 pub mod admission;
 pub mod preempt;
 pub mod queue;
 
 pub use admission::{derive_watermarks, AdmissionController};
-pub use queue::{QueuedRequest, RequestQueue};
+pub use queue::{QueuedRequest, RequestQueue, SloClass};
 
 /// Iteration-level admission decisions for a fixed-row engine.
 #[derive(Debug)]

@@ -1,11 +1,71 @@
-//! Thread-safe FIFO admission queue shared between the server front-end and
-//! the engine thread (std sync primitives; tokio is not in the offline set).
+//! Thread-safe admission queue shared between the server front-end and the
+//! engine thread (std sync primitives; tokio is not in the offline set).
+//!
+//! Ordering is two lanes:
+//!
+//! * **Front lane** — strict FIFO, populated by `push_front` /
+//!   `push_front_all`. Requests the engine declined under pool pressure and
+//!   preemption victims go here and always pop before anything else, in the
+//!   exact order they were handed back (oldest victim first). They already
+//!   paid for their place in line — SLO classes never reorder them.
+//! * **Deadline lane** — fresh `push` arrivals, popped
+//!   earliest-deadline-first. A request's deadline is its effective enqueue
+//!   time (arrival minus any queue wait already accumulated across earlier
+//!   admissions, [`PreemptedState::queued_s`]) plus its class's TTFT target.
+//!   Within one class this degenerates to FIFO; across classes an
+//!   interactive request overtakes batch work until the batch request has
+//!   aged past the target gap — aging is built into the deadline, so
+//!   nothing starves forever.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::PreemptedState;
+
+/// Service-level class for TTFT-priority admission. Parsed from the wire
+/// request's `"class"` field; defaults to [`SloClass::Standard`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SloClass {
+    /// Human-in-the-loop: first token matters most.
+    Interactive,
+    /// Ordinary API traffic.
+    #[default]
+    Standard,
+    /// Offline/bulk work: happy to wait behind everything else.
+    Batch,
+}
+
+impl SloClass {
+    /// TTFT target in seconds — the deadline offset added to the effective
+    /// enqueue time. The absolute values matter less than the gaps: a batch
+    /// request overtakes a fresh interactive one only after waiting the
+    /// difference of the two targets.
+    pub fn ttft_target_s(self) -> f64 {
+        match self {
+            SloClass::Interactive => 0.05,
+            SloClass::Standard => 2.0,
+            SloClass::Batch => 30.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct QueuedRequest {
@@ -16,6 +76,9 @@ pub struct QueuedRequest {
     /// Empty ⇒ free-running generation.
     pub template: String,
     pub max_new: usize,
+    /// SLO class driving deadline-ordered admission. Survives preemption
+    /// round trips (the serve loop re-queues with the original class).
+    pub class: SloClass,
     /// When this request (re-)entered the queue. For a preempted request
     /// this is the re-queue time; the wait accumulated before earlier
     /// admissions travels inside `resume` (`PreemptedState::queued_s`), so
@@ -27,16 +90,34 @@ pub struct QueuedRequest {
     pub resume: Option<Arc<PreemptedState>>,
 }
 
-#[derive(Default)]
+impl QueuedRequest {
+    /// Queue wait already accumulated across earlier admission attempts.
+    fn prior_wait_s(&self) -> f64 {
+        self.resume.as_ref().map(|s| s.queued_s).unwrap_or(0.0)
+    }
+}
+
+struct Entry {
+    /// Monotone insertion counter — the deadline tie-break, which is what
+    /// makes same-class ordering exactly FIFO.
+    seq: u64,
+    /// Deadline in seconds relative to the queue's epoch.
+    deadline_s: f64,
+    req: QueuedRequest,
+}
+
 struct Inner {
-    q: VecDeque<QueuedRequest>,
+    front: VecDeque<QueuedRequest>,
+    lane: Vec<Entry>,
+    next_seq: u64,
     closed: bool,
 }
 
-/// MPSC-ish blocking queue with close semantics.
+/// MPSC-ish blocking queue with close semantics and two-lane ordering.
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
+    epoch: Instant,
 }
 
 impl Default for RequestQueue {
@@ -45,26 +126,49 @@ impl Default for RequestQueue {
     }
 }
 
+/// Signed seconds from `epoch` to `t` (tests construct past instants).
+fn secs_from(epoch: Instant, t: Instant) -> f64 {
+    match t.checked_duration_since(epoch) {
+        Some(d) => d.as_secs_f64(),
+        None => -epoch.duration_since(t).as_secs_f64(),
+    }
+}
+
 impl RequestQueue {
     pub fn new() -> RequestQueue {
         RequestQueue {
-            inner: Mutex::new(Inner::default()),
+            inner: Mutex::new(Inner {
+                front: VecDeque::new(),
+                lane: Vec::new(),
+                next_seq: 0,
+                closed: false,
+            }),
             cv: Condvar::new(),
+            epoch: Instant::now(),
         }
     }
 
     pub fn push(&self, req: QueuedRequest) {
+        let deadline_s = secs_from(self.epoch, req.queued_at) - req.prior_wait_s()
+            + req.class.ttft_target_s();
         let mut g = self.inner.lock().unwrap();
-        g.q.push_back(req);
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.lane.push(Entry {
+            seq,
+            deadline_s,
+            req,
+        });
         self.cv.notify_one();
     }
 
     /// Put a request at the *front* of the queue — used to hand back a
     /// request the engine declined under pool pressure, or one whose row was
-    /// preempted, so it is first in line once blocks free up.
+    /// preempted, so it is first in line once blocks free up. Front-lane
+    /// requests pop before any deadline-lane request regardless of class.
     pub fn push_front(&self, req: QueuedRequest) {
         let mut g = self.inner.lock().unwrap();
-        g.q.push_front(req);
+        g.front.push_front(req);
         self.cv.notify_one();
     }
 
@@ -79,21 +183,40 @@ impl RequestQueue {
         }
         let mut g = self.inner.lock().unwrap();
         for r in reqs.into_iter().rev() {
-            g.q.push_front(r);
+            g.front.push_front(r);
         }
         self.cv.notify_all();
     }
 
+    fn pop_locked(g: &mut Inner) -> Option<QueuedRequest> {
+        if let Some(r) = g.front.pop_front() {
+            return Some(r);
+        }
+        if g.lane.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        for i in 1..g.lane.len() {
+            let (a, b) = (&g.lane[i], &g.lane[best]);
+            if a.deadline_s < b.deadline_s
+                || (a.deadline_s == b.deadline_s && a.seq < b.seq)
+            {
+                best = i;
+            }
+        }
+        Some(g.lane.remove(best).req)
+    }
+
     /// Non-blocking pop (engine polls between iterations).
     pub fn try_pop(&self) -> Option<QueuedRequest> {
-        self.inner.lock().unwrap().q.pop_front()
+        Self::pop_locked(&mut self.inner.lock().unwrap())
     }
 
     /// Blocking pop; None once closed and drained.
     pub fn pop_wait(&self) -> Option<QueuedRequest> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(r) = g.q.pop_front() {
+            if let Some(r) = Self::pop_locked(&mut g) {
                 return Some(r);
             }
             if g.closed {
@@ -103,8 +226,55 @@ impl RequestQueue {
         }
     }
 
+    /// Remove a queued request by id (either lane) — the cancellation path
+    /// for requests whose client disconnected before admission. Returns the
+    /// request so the caller can release any tier state riding in `resume`.
+    pub fn remove(&self, id: u64) -> Option<QueuedRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(i) = g.front.iter().position(|r| r.id == id) {
+            return g.front.remove(i);
+        }
+        if let Some(i) = g.lane.iter().position(|e| e.req.id == id) {
+            return Some(g.lane.remove(i).req);
+        }
+        None
+    }
+
+    /// Block until the queue is non-empty, closed, or `timeout` elapses.
+    /// Returns true when a request is available. This is the engine's idle
+    /// wait: a condvar wakeup on push instead of a sleep-poll floor.
+    pub fn wait_nonempty(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.front.is_empty() || !g.lane.is_empty() {
+                return true;
+            }
+            if g.closed {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (ng, res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if res.timed_out() {
+                return !g.front.is_empty() || !g.lane.is_empty();
+            }
+        }
+    }
+
+    /// Wake every waiter without enqueuing anything — used by connection
+    /// threads after flagging a cancellation so an idle engine sweeps it
+    /// immediately instead of at the next wait timeout.
+    pub fn nudge(&self) {
+        self.cv.notify_all();
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        let g = self.inner.lock().unwrap();
+        g.front.len() + g.lane.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -132,9 +302,40 @@ mod tests {
             prompt: String::new(),
             template: String::new(),
             max_new: 8,
+            class: SloClass::Standard,
             queued_at: Instant::now(),
             resume: None,
         }
+    }
+
+    fn req_class(id: u64, class: SloClass) -> QueuedRequest {
+        QueuedRequest {
+            class,
+            ..req(id)
+        }
+    }
+
+    /// A minimal preemption snapshot carrying only accumulated queue wait.
+    fn snapshot(queued_s: f64) -> Arc<PreemptedState> {
+        Arc::new(PreemptedState {
+            records: Vec::new(),
+            pos: 0,
+            next_token: 0,
+            next_forced: false,
+            template_cursor: 0,
+            out_text: String::new(),
+            hole_predictions: Vec::new(),
+            produced: 0,
+            finish: None,
+            evictions: 0,
+            live_curve: Vec::new(),
+            queued_s,
+            admitted_at: Instant::now(),
+            first_token_at: None,
+            preempted_at: Instant::now(),
+            swapped: None,
+            parked: Default::default(),
+        })
     }
 
     #[test]
@@ -172,6 +373,84 @@ mod tests {
         // empty batch is a no-op
         q.push_front_all(Vec::new());
         assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn interactive_overtakes_batch_and_standard() {
+        let q = RequestQueue::new();
+        q.push(req_class(1, SloClass::Batch));
+        q.push(req_class(2, SloClass::Standard));
+        q.push(req_class(3, SloClass::Interactive));
+        assert_eq!(q.try_pop().unwrap().id, 3);
+        assert_eq!(q.try_pop().unwrap().id, 2);
+        assert_eq!(q.try_pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn aged_batch_request_beats_fresh_interactive() {
+        // deadline = enqueue + target: a batch request that has waited past
+        // the target gap has the earlier deadline — aging prevents
+        // starvation under a steady interactive stream
+        let q = RequestQueue::new();
+        let mut old = req_class(1, SloClass::Batch);
+        // checked: Instant is monotonic-from-boot and may not reach back 60s
+        let Some(past) = Instant::now().checked_sub(Duration::from_secs(60)) else {
+            return;
+        };
+        old.queued_at = past;
+        q.push(old);
+        q.push(req_class(2, SloClass::Interactive));
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert_eq!(q.try_pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn accumulated_queue_wait_counts_toward_deadline() {
+        // a resume carries prior queue wait (PreemptedState::queued_s); the
+        // effective enqueue time moves back by that much, so a previously
+        // starved request is not reset to the back of its class
+        let q = RequestQueue::new();
+        let mut waited = req(1);
+        waited.resume = Some(snapshot(3600.0));
+        q.push(waited);
+        q.push(req_class(2, SloClass::Interactive));
+        assert_eq!(q.try_pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn front_lane_outranks_every_class() {
+        let q = RequestQueue::new();
+        q.push(req_class(1, SloClass::Interactive));
+        q.push_front(req_class(9, SloClass::Batch)); // declined re-queue
+        assert_eq!(q.try_pop().unwrap().id, 9);
+        assert_eq!(q.try_pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn remove_plucks_from_either_lane() {
+        let q = RequestQueue::new();
+        q.push(req(1));
+        q.push(req(2));
+        q.push_front(req(3));
+        assert_eq!(q.remove(2).unwrap().id, 2);
+        assert_eq!(q.remove(3).unwrap().id, 3);
+        assert!(q.remove(99).is_none());
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn wait_nonempty_wakes_on_push_and_times_out_empty() {
+        let q = Arc::new(RequestQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            q2.wait_nonempty(Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(req(1));
+        assert!(h.join().unwrap(), "waiter must see the push");
+        q.try_pop();
+        assert!(!q.wait_nonempty(Duration::from_millis(5)));
     }
 
     #[test]

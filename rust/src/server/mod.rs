@@ -3,7 +3,12 @@
 //! thread-per-connection I/O costs nothing measurable).
 //!
 //! Protocol (one JSON object per line):
-//!   → {"prompt": "...", "template": "...", "max_new": 256}
+//!   → {"prompt": "...", "template": "...", "max_new": 256,
+//!      "class": "interactive" | "standard" | "batch",   // SLO class, opt.
+//!      "stream": true}                                  // opt-in streaming
+//!   ← {"event": "token", "id": 1, "n": 3, "first": false, "text": "…"}
+//!                                  // streaming only: one line per decode
+//!                                  // step, written as it is produced
 //!   ← {"id": 1, "text": "...", "holes": "…", "finish": "max_tokens",
 //!      "ttft_ms": 12.3, "total_ms": 456.7, "tokens": 256, "evictions": 3,
 //!      "pool": {"free_blocks": 9, "total_blocks": 64,        // paged mode
@@ -13,7 +18,14 @@
 //!               "prefix_entries": 1, "prefix_pinned_blocks": 3,
 //!               "parked_blocks": 2, "promotions": 4,      // host tier
 //!               "swap_out_bytes": 9216, "swap_in_bytes": 6144, ...}}
+//!                                  // terminal summary line (both modes;
+//!                                  // carries "event":"done" when streaming)
 //!   ← {"error": "..."}                                    // on any failure
+//!
+//! Concatenating the `text` of one request's token events yields exactly the
+//! summary line's `text` — streaming changes delivery, never content. The
+//! full wire protocol (including cancellation semantics) is specified in
+//! docs/serving.md.
 //!
 //! `max_new` is clamped: 0 is rejected, values above [`MAX_MAX_NEW`] are
 //! capped before they reach the scheduler.
@@ -26,6 +38,38 @@
 //! and the Prometheus exposition is served by the dedicated `--metrics-addr`
 //! listener (see `telemetry::http`), kept off this port so scrapers never
 //! head-of-line-block a generation client.
+//!
+//! ## Event-driven serve loop
+//!
+//! Three thread roles share three pieces of state — the [`RequestQueue`],
+//! the `routes` map (request id → per-connection reply channel), and the
+//! `cancels` list:
+//!
+//! * The **acceptor** blocks in `accept` (no poll loop; shutdown wakes it
+//!   with a dummy connect) and spawns one handler per connection.
+//! * A **connection handler** owns the socket's write half; a paired reader
+//!   thread pumps incoming lines and the EOF into the same channel the
+//!   engine's replies arrive on, so the handler observes a client disconnect
+//!   *while a request is in flight* and flags it in `cancels`. Token events
+//!   are serialized with the reusable `util::wire::EventWriter` — the per
+//!   token path does no allocation and no tree building.
+//! * The **engine loop** (the calling thread) runs one iteration per decode
+//!   step: sweep cancellations, admit from the queue (deadline-ordered —
+//!   see `scheduler::queue`), step the engine, forward drained token events
+//!   to streaming routes, deliver terminal replies, re-queue preemption
+//!   victims. When fully idle it parks on the queue's condvar
+//!   ([`RequestQueue::wait_nonempty`]) instead of sleep-polling.
+//!
+//! ## Cancellation
+//!
+//! A disconnect (EOF or failed write) lands the request id in `cancels`;
+//! the next loop iteration routes it to whichever place owns state for it:
+//! a queued fresh request is simply dropped, a queued *preempted* request
+//! releases the tier state riding in its snapshot
+//! (`Engine::release_discarded_state` — pinned swap blocks and parked
+//! ledger), and an active row is torn down (`Engine::abort_request`,
+//! blocks + parked entries released). All three count into
+//! `cancelled_rows`; nothing is decoded for a client that is gone.
 //!
 //! ## Pressure / preemption protocol (paged-KV mode)
 //!
@@ -41,12 +85,14 @@
 //! victim first, via `RequestQueue::push_front_all`** (a per-request
 //! `push_front` loop would reverse same-step victims), and its re-admission
 //! *resumes* generation (recompute mode: one batched re-prefill, tracker
-//! state restored) instead of restarting it. Clients never see a
-//! preemption, only latency; the wait accumulated across the round trip is
-//! reported in the response's queue-wait metric (the snapshot carries the
-//! pre-preemption wait, so nothing is lost to the re-queue). Completed
-//! responses carry the pool gauges above — including `resumes` and
-//! `recomputed_tokens` — so clients/scrapers observe global pressure.
+//! state restored) instead of restarting it. Re-queues keep the request's
+//! SLO class (front lane outranks the deadline lane, and the class rides
+//! along for any later re-push). Clients never see a preemption, only
+//! latency; the wait accumulated across the round trip is reported in the
+//! response's queue-wait metric (the snapshot carries the pre-preemption
+//! wait, so nothing is lost to the re-queue). Completed responses carry the
+//! pool gauges above — including `resumes` and `recomputed_tokens` — so
+//! clients/scrapers observe global pressure.
 //!
 //! ## Failure delivery
 //!
@@ -58,20 +104,21 @@
 //! blocked on a channel that can no longer be served, queued-but-unsubmitted
 //! requests are unaffected, and the loop cannot busy-spin on zombie rows.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Engine, Request, Response};
+use crate::coordinator::{Engine, Request, Response, TokenEvent};
 use crate::metrics::PoolGauges;
-use crate::scheduler::{AdmissionController, QueuedRequest, RequestQueue};
+use crate::scheduler::{AdmissionController, QueuedRequest, RequestQueue, SloClass};
 use crate::telemetry::{event, Telemetry};
 use crate::util::json::Json;
+use crate::util::wire;
 
 /// Upper bound on a request's `max_new`; larger asks are capped, not erred,
 /// so misconfigured clients degrade gracefully.
@@ -103,39 +150,88 @@ pub fn pool_gauges_to_json(g: &PoolGauges) -> Json {
     j
 }
 
-pub fn parse_request(line: &str, id: u64) -> Result<QueuedRequest> {
-    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
-    let max_new = j
-        .get("max_new")
-        .and_then(|m| m.as_usize())
-        .unwrap_or(256);
+/// Parse one request line via the zero-copy visitor (`util::wire`): no tree
+/// is built, and an escape-free prompt is borrowed from the line until the
+/// final `to_string`. Returns the queued request plus its streaming flag.
+pub fn parse_request(line: &str, id: u64) -> Result<(QueuedRequest, bool)> {
+    let w = wire::parse_request(line.as_bytes())
+        .map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+    let prompt = w
+        .prompt
+        .ok_or_else(|| anyhow::anyhow!("missing key 'prompt'"))?;
+    let max_new = w.max_new.map(|x| x as usize).unwrap_or(256);
     anyhow::ensure!(max_new > 0, "max_new must be >= 1");
-    Ok(QueuedRequest {
-        id,
-        prompt: j.str_at("prompt")?.to_string(),
-        template: j
-            .get("template")
-            .and_then(|t| t.as_str())
-            .unwrap_or("")
-            .to_string(),
-        max_new: max_new.min(MAX_MAX_NEW),
-        queued_at: Instant::now(),
-        resume: None,
-    })
+    let class = match &w.class {
+        Some(c) => SloClass::parse(c)
+            .ok_or_else(|| anyhow::anyhow!("unknown class '{c}' (interactive|standard|batch)"))?,
+        None => SloClass::Standard,
+    };
+    Ok((
+        QueuedRequest {
+            id,
+            prompt: prompt.into_owned(),
+            template: w.template.map(|t| t.into_owned()).unwrap_or_default(),
+            max_new: max_new.min(MAX_MAX_NEW),
+            class,
+            queued_at: Instant::now(),
+            resume: None,
+        },
+        w.stream,
+    ))
 }
 
-/// One terminal outcome per queued request (see "Failure delivery" above).
+/// Replies the engine loop sends to a connection. Terminal variants
+/// (`Done`/`Failed`) arrive exactly once per request; `Token` any number of
+/// times before that, streaming mode only.
 enum ServeReply {
+    Token(TokenEvent),
     Done(Response, Option<PoolGauges>),
     Failed(String),
 }
 
-type Routes = Arc<Mutex<HashMap<u64, mpsc::Sender<ServeReply>>>>;
+/// Everything a connection handler can observe, merged into one channel so
+/// a blocked request still sees the client hang up.
+enum ConnEvent {
+    Line(String),
+    Eof,
+    Reply(ServeReply),
+}
+
+struct Route {
+    tx: mpsc::Sender<ConnEvent>,
+    stream: bool,
+}
+
+type Routes = Arc<Mutex<HashMap<u64, Route>>>;
+/// Request ids whose client disconnected; swept by the engine loop.
+type Cancels = Arc<Mutex<Vec<u64>>>;
 
 fn send_reply(routes: &Routes, id: u64, reply: ServeReply) {
-    if let Some(tx) = routes.lock().unwrap().remove(&id) {
-        let _ = tx.send(reply);
+    if let Some(rt) = routes.lock().unwrap().remove(&id) {
+        let _ = rt.tx.send(ConnEvent::Reply(reply));
     }
+}
+
+/// Forward one token event to its (streaming) route without consuming the
+/// route — the terminal reply is still to come. Returns whether the event
+/// was actually handed to a streaming client (routes for non-streaming
+/// requests and already-cancelled rows swallow their events).
+fn send_token(routes: &Routes, ev: TokenEvent) -> bool {
+    let g = routes.lock().unwrap();
+    if let Some(rt) = g.get(&ev.req) {
+        if rt.stream {
+            let _ = rt.tx.send(ConnEvent::Reply(ServeReply::Token(ev)));
+            return true;
+        }
+    }
+    false
+}
+
+/// Flag `id` for cancellation and wake an idle engine so the sweep happens
+/// now, not at the next wait timeout.
+fn cancel(cancels: &Cancels, queue: &RequestQueue, id: u64) {
+    cancels.lock().unwrap().push(id);
+    queue.nudge();
 }
 
 /// Serve an engine on `addr` until `shutdown` flips. The engine loop runs on
@@ -155,7 +251,7 @@ pub fn serve_with_telemetry(
     telemetry: Option<Arc<Telemetry>>,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    listener.set_nonblocking(true)?;
+    let local_addr = listener.local_addr()?;
     eprintln!(
         "lazyevictiond: serving on {addr} (policy={}, budget={}, batch={}{})",
         engine.policy_name(),
@@ -173,12 +269,15 @@ pub fn serve_with_telemetry(
 
     let queue = Arc::new(RequestQueue::new());
     let routes: Routes = Arc::new(Mutex::new(HashMap::new()));
+    let cancels: Cancels = Arc::new(Mutex::new(Vec::new()));
     let next_id = Arc::new(AtomicU64::new(1));
 
-    // acceptor thread
+    // acceptor thread: blocking accept (no retry poll); the engine loop
+    // wakes it at shutdown with a dummy connect to our own address
     {
         let queue = queue.clone();
         let routes = routes.clone();
+        let cancels = cancels.clone();
         let next_id = next_id.clone();
         let shutdown = shutdown.clone();
         let telemetry = telemetry.clone();
@@ -187,29 +286,50 @@ pub fn serve_with_telemetry(
                 if shutdown.load(Ordering::Relaxed) {
                     break;
                 }
-                match stream {
-                    Ok(s) => {
-                        let queue = queue.clone();
-                        let routes = routes.clone();
-                        let next_id = next_id.clone();
-                        let telemetry = telemetry.clone();
-                        std::thread::spawn(move || {
-                            handle_conn(s, queue, routes, next_id, telemetry)
-                        });
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
+                let Ok(s) = stream else { break };
+                let queue = queue.clone();
+                let routes = routes.clone();
+                let cancels = cancels.clone();
+                let next_id = next_id.clone();
+                let telemetry = telemetry.clone();
+                std::thread::spawn(move || {
+                    handle_conn(s, queue, routes, cancels, next_id, telemetry)
+                });
             }
         });
     }
 
-    // engine loop (this thread)
+    // engine loop (this thread). `classes` remembers each in-flight
+    // request's SLO class so preemption re-queues keep it (Request does not
+    // carry the class — it is a scheduling concern, not an engine one).
     let mut admission = AdmissionController::new();
+    let mut classes: HashMap<u64, SloClass> = HashMap::new();
     while !shutdown.load(Ordering::Relaxed) {
         let mut idle = true;
+
+        // cancellation sweep: route each disconnected id to whatever owns
+        // state for it (see "Cancellation" above)
+        let cancelled: Vec<u64> = std::mem::take(&mut *cancels.lock().unwrap());
+        for id in cancelled {
+            routes.lock().unwrap().remove(&id);
+            classes.remove(&id);
+            if let Some(q) = queue.remove(id) {
+                match &q.resume {
+                    Some(st) => engine.release_discarded_state(st, id),
+                    None => {
+                        // fresh queued request: nothing admitted, nothing to
+                        // release — just count the cancellation
+                        engine.metrics.cancelled_rows += 1;
+                        if let Some(t) = &telemetry {
+                            t.record(id, event::ABORT, 0, 0, 0.0, "unadmitted");
+                        }
+                    }
+                }
+            } else {
+                engine.abort_request(id);
+            }
+        }
+
         let mut admit_open = match engine.pool_pressure() {
             Some(p) => admission.allow(&p),
             None => true,
@@ -226,6 +346,7 @@ pub fn serve_with_telemetry(
         while admit_open && engine.has_free_row() {
             let Some(q) = queue.try_pop() else { break };
             let queued_s = q.queued_at.elapsed().as_secs_f64();
+            classes.insert(q.id, q.class);
             let req = Request {
                 id: q.id,
                 prompt: q.prompt.clone(),
@@ -245,6 +366,7 @@ pub fn serve_with_telemetry(
                 Err(e) => {
                     let msg = format!("{e:#}");
                     eprintln!("submit error (request {}): {msg}", q.id);
+                    classes.remove(&q.id);
                     send_reply(&routes, q.id, ServeReply::Failed(msg));
                 }
             }
@@ -253,15 +375,26 @@ pub fn serve_with_telemetry(
             idle = false;
             match engine.step() {
                 Ok(done) => {
+                    // tokens first, then terminals: a finishing row's last
+                    // token event precedes its summary on the channel
+                    for ev in engine.drain_token_events() {
+                        if send_token(&routes, ev) {
+                            engine.metrics.streamed_tokens += 1;
+                        }
+                    }
                     let gauges = engine.pool_gauges();
                     for resp in done {
                         let id = resp.id;
+                        classes.remove(&id);
                         send_reply(&routes, id, ServeReply::Done(resp, gauges));
                     }
                 }
                 Err(e) => {
                     let msg = format!("engine step error: {e:#}");
                     eprintln!("{msg}");
+                    // Partial token events from the failed step must not
+                    // reach clients their summary will never follow.
+                    engine.drain_token_events();
                     // Fail exactly the requests whose rows were inside the
                     // erroring engine — their decode state is gone — and
                     // clear those rows (blocks released) so the loop cannot
@@ -269,6 +402,7 @@ pub fn serve_with_telemetry(
                     // Requests still waiting in the queue keep their routes
                     // and are served normally once the engine recovers.
                     for id in engine.abort_rows() {
+                        classes.remove(&id);
                         send_reply(&routes, id, ServeReply::Failed(msg.clone()));
                     }
                 }
@@ -279,13 +413,15 @@ pub fn serve_with_telemetry(
             // push_front here would reverse same-step victims). `queued_at`
             // marks the re-queue time only — the wait accumulated before
             // the preemption travels inside the snapshot, so the final
-            // queue-wait metric covers the request's full queued time.
+            // queue-wait metric covers the request's full queued time. The
+            // SLO class survives the round trip via `classes`.
             let now = Instant::now();
             queue.push_front_all(
                 engine
                     .take_preempted()
                     .into_iter()
                     .map(|r| QueuedRequest {
+                        class: classes.get(&r.id).copied().unwrap_or_default(),
                         id: r.id,
                         prompt: r.prompt,
                         template: r.template,
@@ -300,9 +436,21 @@ pub fn serve_with_telemetry(
         // registry so scrapers read fresh values without touching the engine
         engine.publish_telemetry();
         if idle {
-            std::thread::sleep(std::time::Duration::from_millis(2));
+            if queue.is_empty() {
+                // park on the queue condvar: a push (or a cancel nudge)
+                // wakes us immediately; the timeout only bounds how stale
+                // the published telemetry can go while fully idle
+                queue.wait_nonempty(Duration::from_millis(25));
+            } else {
+                // queue non-empty but nothing admissible (pressure latch):
+                // yield briefly, re-evaluate
+                std::thread::sleep(Duration::from_millis(1));
+            }
         }
     }
+    queue.close();
+    // wake the acceptor out of its blocking accept so it observes shutdown
+    let _ = TcpStream::connect(local_addr);
     if let Some(t) = &telemetry {
         t.flush();
     }
@@ -338,29 +486,57 @@ fn handle_conn(
     stream: TcpStream,
     queue: Arc<RequestQueue>,
     routes: Routes,
+    cancels: Cancels,
     next_id: Arc<AtomicU64>,
     telemetry: Option<Arc<Telemetry>>,
 ) {
-    let peer = stream.peer_addr().ok();
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let (tx, rx) = mpsc::channel::<ConnEvent>();
+
+    // reader thread: pump lines and the EOF into the merged channel, so the
+    // handler observes a disconnect even while a request is in flight
+    {
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if tx.send(ConnEvent::Line(line)).is_err() {
+                    return;
+                }
+            }
+            let _ = tx.send(ConnEvent::Eof);
+        });
+    }
+
+    // lines that arrived while a request was in flight (pipelining)
+    let mut pending: VecDeque<String> = VecDeque::new();
+    let mut events = wire::EventWriter::new();
+    'conn: loop {
+        let line = match pending.pop_front() {
+            Some(l) => l,
+            None => match rx.recv() {
+                Ok(ConnEvent::Line(l)) => l,
+                Ok(ConnEvent::Eof) | Err(_) => break 'conn,
+                // replies for a request this handler already gave up on
+                Ok(ConnEvent::Reply(_)) => continue,
+            },
+        };
         if line.trim().is_empty() {
             continue;
         }
         if let Some(reply) = handle_command(&line, &telemetry) {
             if writeln!(writer, "{}", reply.to_string()).is_err() {
-                break;
+                break 'conn;
             }
             continue;
         }
         let id = next_id.fetch_add(1, Ordering::Relaxed);
-        let q = match parse_request(&line, id) {
-            Ok(q) => q,
+        let (q, stream_mode) = match parse_request(&line, id) {
+            Ok(v) => v,
             Err(e) => {
                 let _ = writeln!(
                     writer,
@@ -370,46 +546,75 @@ fn handle_conn(
                 continue;
             }
         };
-        let (tx, rx) = mpsc::channel();
-        routes.lock().unwrap().insert(id, tx);
+        routes.lock().unwrap().insert(
+            id,
+            Route {
+                tx: tx.clone(),
+                stream: stream_mode,
+            },
+        );
         if let Some(t) = &telemetry {
-            t.record(id, event::QUEUED, 0, 0, 0.0, "");
+            t.record(id, event::QUEUED, 0, 0, 0.0, q.class.as_str());
         }
         queue.push(q);
-        match rx.recv() {
-            Ok(ServeReply::Done(resp, gauges)) => {
-                let mut j = response_to_json(&resp);
-                if let Some(g) = gauges {
-                    j = j.set("pool", pool_gauges_to_json(&g));
+        // in flight: forward token events as they arrive, finish on the
+        // terminal reply, cancel on any sign the client is gone
+        loop {
+            match rx.recv() {
+                Ok(ConnEvent::Reply(ServeReply::Token(ev))) => {
+                    let line = events.token(ev.req, &ev.text, ev.produced, ev.first);
+                    if writer.write_all(line).is_err() {
+                        cancel(&cancels, &queue, id);
+                        break 'conn;
+                    }
                 }
-                if writeln!(writer, "{}", j.to_string()).is_err() {
+                Ok(ConnEvent::Reply(ServeReply::Done(resp, gauges))) => {
+                    let mut j = response_to_json(&resp);
+                    if stream_mode {
+                        j = j.set("event", "done");
+                    }
+                    if let Some(g) = gauges {
+                        j = j.set("pool", pool_gauges_to_json(&g));
+                    }
+                    if writeln!(writer, "{}", j.to_string()).is_err() {
+                        break 'conn;
+                    }
                     break;
                 }
-            }
-            Ok(ServeReply::Failed(msg)) => {
-                // deterministic failure line; connection stays usable
-                if writeln!(
-                    writer,
-                    "{}",
-                    Json::obj().set("error", msg.as_str()).to_string()
-                )
-                .is_err()
-                {
+                Ok(ConnEvent::Reply(ServeReply::Failed(msg))) => {
+                    // deterministic failure line; connection stays usable
+                    if writeln!(
+                        writer,
+                        "{}",
+                        Json::obj().set("error", msg.as_str()).to_string()
+                    )
+                    .is_err()
+                    {
+                        break 'conn;
+                    }
                     break;
                 }
-            }
-            // server shut down with the request still queued
-            Err(_) => {
-                let _ = writeln!(
-                    writer,
-                    "{}",
-                    Json::obj().set("error", "server shut down").to_string()
-                );
-                break;
+                // client sent the next request before this one finished
+                Ok(ConnEvent::Line(l)) => pending.push_back(l),
+                // client hung up mid-request: flag the abort and leave —
+                // the engine loop releases blocks/tier state on its next
+                // iteration
+                Ok(ConnEvent::Eof) => {
+                    cancel(&cancels, &queue, id);
+                    break 'conn;
+                }
+                // server shut down with the request still in flight
+                Err(_) => {
+                    let _ = writeln!(
+                        writer,
+                        "{}",
+                        Json::obj().set("error", "server shut down").to_string()
+                    );
+                    break 'conn;
+                }
             }
         }
     }
-    let _ = peer;
 }
 
 #[cfg(test)]
@@ -418,19 +623,36 @@ mod tests {
 
     #[test]
     fn parse_request_full() {
-        let q = parse_request(r##"{"prompt":"#A=1;\n>","template":"A=?;","max_new":32}"##, 7)
-            .unwrap();
+        let (q, stream) =
+            parse_request(r##"{"prompt":"#A=1;\n>","template":"A=?;","max_new":32}"##, 7)
+                .unwrap();
         assert_eq!(q.id, 7);
         assert_eq!(q.prompt, "#A=1;\n>");
         assert_eq!(q.template, "A=?;");
         assert_eq!(q.max_new, 32);
+        assert_eq!(q.class, SloClass::Standard);
+        assert!(!stream);
     }
 
     #[test]
     fn parse_request_defaults() {
-        let q = parse_request(r#"{"prompt":"x"}"#, 1).unwrap();
+        let (q, stream) = parse_request(r#"{"prompt":"x"}"#, 1).unwrap();
         assert_eq!(q.template, "");
         assert_eq!(q.max_new, 256);
+        assert_eq!(q.class, SloClass::Standard);
+        assert!(!stream);
+    }
+
+    #[test]
+    fn parse_request_class_and_stream() {
+        let (q, stream) =
+            parse_request(r#"{"prompt":"x","class":"interactive","stream":true}"#, 1).unwrap();
+        assert_eq!(q.class, SloClass::Interactive);
+        assert!(stream);
+        let (q, _) = parse_request(r#"{"prompt":"x","class":"batch"}"#, 1).unwrap();
+        assert_eq!(q.class, SloClass::Batch);
+        // unknown class is a hard error, not a silent default
+        assert!(parse_request(r#"{"prompt":"x","class":"platinum"}"#, 1).is_err());
     }
 
     #[test]
@@ -446,11 +668,21 @@ mod tests {
         // negative numbers land on 0 via the f64→usize cast: also rejected
         assert!(parse_request(r#"{"prompt":"x","max_new":-5}"#, 1).is_err());
         // absurd values are capped, not erred
-        let q = parse_request(r#"{"prompt":"x","max_new":999999999}"#, 1).unwrap();
+        let (q, _) = parse_request(r#"{"prompt":"x","max_new":999999999}"#, 1).unwrap();
         assert_eq!(q.max_new, MAX_MAX_NEW);
-        let q = parse_request(&format!(r#"{{"prompt":"x","max_new":{MAX_MAX_NEW}}}"#), 1)
+        let (q, _) = parse_request(&format!(r#"{{"prompt":"x","max_new":{MAX_MAX_NEW}}}"#), 1)
             .unwrap();
         assert_eq!(q.max_new, MAX_MAX_NEW);
+    }
+
+    #[test]
+    fn parse_request_ignores_unknown_fields() {
+        let (q, _) = parse_request(
+            r#"{"prompt":"x","future":{"nested":[1,2,3]},"n":null}"#,
+            1,
+        )
+        .unwrap();
+        assert_eq!(q.prompt, "x");
     }
 
     #[test]

@@ -76,6 +76,13 @@ pub struct CapacitySpec {
     /// falls back to the recompute model (`swap_fallbacks`). Unlimited by
     /// default.
     pub host_tier_blocks: usize,
+    /// Client-abort process: every `abort_every`-th request disconnects —
+    /// mid-decode at half its live curve (row torn down, blocks reclaimed),
+    /// or at re-admission time if it was preempted first (the client gave
+    /// up during the stall; any swap-parked tier state is released, the
+    /// serving path's `Engine::release_discarded_state`). 0 = no aborts
+    /// (the default, keeping earlier capacity numbers comparable).
+    pub abort_every: usize,
 }
 
 impl CapacitySpec {
@@ -102,6 +109,7 @@ impl CapacitySpec {
             recompute_resume: false,
             swap_resume: false,
             host_tier_blocks: usize::MAX,
+            abort_every: 0,
         }
     }
 }
@@ -156,6 +164,16 @@ pub struct CapacityReport {
     /// Swap preemptions that fell back to the recompute model because the
     /// tier budget could not hold the table.
     pub swap_fallbacks: u64,
+    /// Requests whose client disconnected (see `CapacitySpec::abort_every`).
+    pub cancelled: u64,
+    /// Pool blocks released by tearing down aborted *active* rows.
+    pub reclaimed_blocks: u64,
+    /// Host-tier blocks released by aborting *queued swap-parked* victims —
+    /// state that only a resume (or this sweep) would ever free.
+    pub reclaimed_tier_blocks: u64,
+    /// Host-tier blocks still occupied after the run drains (must be 0:
+    /// every parked table either resumed or was reclaimed by an abort).
+    pub end_tier_blocks: usize,
 }
 
 /// One queued/active sequence: its live curve and (when active) its table.
@@ -250,6 +268,10 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
     // host-tier occupancy (blocks) while swap-mode victims sit queued
     let mut tier_used = 0usize;
     let bytes_per_token = spec.kv_cost.bytes_per_token() as u64;
+    // deterministic client-abort process: which requests disconnect, and at
+    // which step of their curve (halfway — late enough to hold real state)
+    let marked = |i: usize| spec.abort_every > 0 && (i + 1) % spec.abort_every == 0;
+    let abort_at = |len: usize| (len / 2).max(1);
 
     while !(queue.is_empty() && active.is_empty()) {
         // iteration-level admission, watermark-reserved unless idle. With
@@ -260,6 +282,20 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         // is the resume cost, charged to `recomputed_tokens`.
         while active.len() < spec.max_rows {
             let Some(&(next, cursor, parked_tokens)) = queue.front() else { break };
+            if marked(next) && cursor > 0 {
+                // the client hung up during the preemption stall: drop the
+                // re-admission instead of paying for it, and release any
+                // tier state parked with the snapshot — nothing else would
+                // ever free it (only a resume consumes parked entries)
+                queue.pop_front();
+                if parked_tokens > 0 {
+                    let blocks = pool.blocks_for(parked_tokens);
+                    tier_used -= blocks;
+                    rep.reclaimed_tier_blocks += blocks as u64;
+                }
+                rep.cancelled += 1;
+                continue;
+            }
             let fill = if cursor > 0 {
                 header + seqs[next].live_curve[cursor].max(1)
             } else {
@@ -336,6 +372,17 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         let mut advanced = 0usize;
         let mut r = 0usize;
         while r < active.len() {
+            // mid-decode disconnect: tear the row down where it stands —
+            // blocks return to the pool this step, nothing is re-queued
+            if marked(active[r].idx)
+                && active[r].cursor >= abort_at(seqs[active[r].idx].live_curve.len())
+            {
+                let mut v = active.remove(r);
+                rep.reclaimed_blocks += v.table.n_blocks() as u64;
+                v.table.release_all(&mut pool);
+                rep.cancelled += 1;
+                continue;
+            }
             // the resident header rides on top of the tail's live target, so
             // a shrink never dips into the shared whole-block region
             let target = {
@@ -433,6 +480,7 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
         d.release_all(&mut pool);
     }
     rep.end_free_blocks = pool.free_blocks();
+    rep.end_tier_blocks = tier_used;
     Ok(rep)
 }
 
@@ -624,6 +672,55 @@ mod tests {
         assert!(r.recomputed_tokens > 0, "fallbacks pay the recompute cost");
         assert_eq!(r.restarted_steps, 0);
         assert_eq!(r.end_free_blocks, r.total_blocks);
+    }
+
+    #[test]
+    fn client_aborts_reclaim_blocks_and_rest_complete() {
+        // every 3rd request disconnects at half its curve: those rows tear
+        // down where they stand, everyone else still completes, and the
+        // pool drains leak-free — cancellation cannot strand blocks
+        let mut s = spec("lazy");
+        s.abort_every = 3;
+        let r = run_capacity(&s).unwrap();
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.cancelled, 3, "requests 3, 6, 9 disconnect");
+        assert_eq!(r.completed, 7);
+        assert!(r.reclaimed_blocks > 0, "aborted rows held real state");
+        assert_eq!(r.end_free_blocks, r.total_blocks);
+        assert_eq!(r.end_tier_blocks, 0);
+        // a no-abort run is unchanged by the knob existing
+        let base = run_capacity(&spec("lazy")).unwrap();
+        assert_eq!(base.cancelled, 0);
+        assert_eq!(base.reclaimed_blocks, 0);
+    }
+
+    #[test]
+    fn aborts_under_swap_release_parked_tier_state() {
+        // full-KV rows in 64 blocks collide constantly; with swap-mode
+        // resume the victims park pinned tier state. A client that gives up
+        // during the stall must get that state swept — the tier ends the
+        // run empty either way, and any swept park shows up as reclaimed
+        // tier blocks with the matching swap bytes never copied back.
+        let mut s = spec("full");
+        s.swap_resume = true;
+        s.abort_every = 2;
+        let r = run_capacity(&s).unwrap();
+        assert_eq!(r.cancelled, 5, "every 2nd of 10 requests disconnects");
+        assert_eq!(r.completed + r.failed, 5);
+        assert!(r.preemptions > 0, "full-KV rows in 64 blocks must collide");
+        assert_eq!(
+            r.end_tier_blocks, 0,
+            "every parked table must be resumed or reclaimed"
+        );
+        assert_eq!(r.end_free_blocks, r.total_blocks);
+        if r.reclaimed_tier_blocks > 0 {
+            assert!(
+                r.swap_in_bytes < r.swap_out_bytes,
+                "reclaimed parks never swap back in"
+            );
+        } else {
+            assert_eq!(r.swap_in_bytes, r.swap_out_bytes);
+        }
     }
 
     #[test]

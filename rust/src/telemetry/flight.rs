@@ -49,6 +49,14 @@ pub mod event {
     pub const RESUME_SWAP: &str = "resume_swap";
     /// Resume fell back to a restart from the prompt.
     pub const RESUME_RESTART: &str = "resume_restart";
+    /// One decoded token left the engine toward a streaming client;
+    /// `detail` = tokens produced so far.
+    pub const STREAM_TOKEN: &str = "stream_token";
+    /// Row aborted by client cancellation/disconnect; `detail` = tokens
+    /// produced before the abort, `note` = what owned the request's state:
+    /// "active" (decoding row), "queued" (preempted snapshot discarded) or
+    /// "unadmitted" (fresh queued request dropped).
+    pub const ABORT: &str = "abort";
     /// Request finished; `detail` = tokens produced, `note` = reason.
     pub const FINISH: &str = "finish";
 }
@@ -144,9 +152,9 @@ impl FlightRecorder {
         self.next_seq += 1;
         if let Some(w) = self.out.as_mut() {
             let _ = writeln!(w, "{}", ev.to_json().to_string());
-            // finish closes a request's sequence — make it durable so a
-            // reader tailing the file sees complete lifecycles
-            if event == event::FINISH {
+            // finish/abort closes a request's sequence — make it durable so
+            // a reader tailing the file sees complete lifecycles
+            if event == event::FINISH || event == event::ABORT {
                 let _ = w.flush();
             }
         }

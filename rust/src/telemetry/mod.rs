@@ -46,6 +46,10 @@ pub mod names {
     pub const TOKENS_OUT: &str = "lazyeviction_tokens_out_total";
     pub const STEPS: &str = "lazyeviction_decode_steps_total";
     pub const REQUESTS_FINISHED: &str = "lazyeviction_requests_finished_total";
+    /// Tokens handed to streaming clients as they were decoded.
+    pub const STREAMED_TOKENS: &str = "lazyeviction_streamed_tokens_total";
+    /// Rows/requests torn down by client cancellation or disconnect.
+    pub const CANCELLED_ROWS: &str = "lazyeviction_cancelled_rows_total";
     pub const POOL_PREFIX: &str = "lazyeviction_pool_";
 }
 

@@ -1,9 +1,16 @@
 //! Minimal JSON parser/serializer (serde/serde_json are not in the offline
 //! crate set). Supports the full JSON grammar; numbers are f64 (adequate for
 //! manifest/config/results files — no u64 ids cross this boundary).
+//!
+//! The grammar lives in [`super::wire::Lexer`] (the zero-copy lexer the
+//! streaming serve path uses directly); `Json::parse` is a tree-builder over
+//! that lexer, so cold-path tree parsing and hot-path visitor parsing cannot
+//! drift apart.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+use super::wire::Lexer;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -129,15 +136,12 @@ impl Json {
 
     // ---- parse ------------------------------------------------------------
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser {
-            b: s.as_bytes(),
-            i: 0,
-        };
-        p.ws();
-        let v = p.value()?;
-        p.ws();
-        if p.i != p.b.len() {
-            return Err(p.err("trailing characters"));
+        let mut lx = Lexer::new(s.as_bytes());
+        lx.ws();
+        let v = build_value(&mut lx)?;
+        lx.ws();
+        if !lx.at_end() {
+            return Err(lx.error("trailing characters"));
         }
         Ok(v)
     }
@@ -280,202 +284,65 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError {
-            msg: msg.to_string(),
-            offset: self.i,
-        }
-    }
-
-    fn ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
-            self.i += 1;
-        }
-    }
-
-    fn peek(&self) -> Option<u8> {
-        self.b.get(self.i).copied()
-    }
-
-    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(c) {
-            self.i += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected '{}'", c as char)))
-        }
-    }
-
-    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
-        if self.b[self.i..].starts_with(s.as_bytes()) {
-            self.i += s.len();
-            Ok(v)
-        } else {
-            Err(self.err(&format!("expected '{s}'")))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
-            b'n' => self.lit("null", Json::Null),
-            b't' => self.lit("true", Json::Bool(true)),
-            b'f' => self.lit("false", Json::Bool(false)),
-            b'"' => Ok(Json::Str(self.string()?)),
-            b'[' => self.array(),
-            b'{' => self.object(),
-            b'-' | b'0'..=b'9' => self.number(),
-            c => Err(self.err(&format!("unexpected '{}'", c as char))),
-        }
-    }
-
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'[')?;
-        let mut v = Vec::new();
-        self.ws();
-        if self.peek() == Some(b']') {
-            self.i += 1;
-            return Ok(Json::Arr(v));
-        }
-        loop {
-            self.ws();
-            v.push(self.value()?);
-            self.ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b']') => {
-                    self.i += 1;
-                    return Ok(Json::Arr(v));
-                }
-                _ => return Err(self.err("expected ',' or ']'")),
+/// Tree-builder over the zero-copy lexer: decodes strings into owned
+/// `String`s and collects containers — the cold-path counterpart of
+/// `wire::parse_request`.
+fn build_value(lx: &mut Lexer<'_>) -> Result<Json, JsonError> {
+    match lx.peek().ok_or_else(|| lx.error("unexpected end"))? {
+        b'n' => lx.lit("null").map(|_| Json::Null),
+        b't' => lx.lit("true").map(|_| Json::Bool(true)),
+        b'f' => lx.lit("false").map(|_| Json::Bool(false)),
+        b'"' => Ok(Json::Str(lx.raw_str()?.unescape()?.into_owned())),
+        b'-' | b'0'..=b'9' => lx.number().map(Json::Num),
+        b'[' => {
+            lx.eat(b'[')?;
+            let mut v = Vec::new();
+            lx.ws();
+            if lx.peek() == Some(b']') {
+                lx.eat(b']')?;
+                return Ok(Json::Arr(v));
             }
-        }
-    }
-
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'{')?;
-        let mut m = BTreeMap::new();
-        self.ws();
-        if self.peek() == Some(b'}') {
-            self.i += 1;
-            return Ok(Json::Obj(m));
-        }
-        loop {
-            self.ws();
-            let k = self.string()?;
-            self.ws();
-            self.eat(b':')?;
-            self.ws();
-            m.insert(k, self.value()?);
-            self.ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b'}') => {
-                    self.i += 1;
-                    return Ok(Json::Obj(m));
-                }
-                _ => return Err(self.err("expected ',' or '}'")),
-            }
-        }
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.eat(b'"')?;
-        let mut s = String::new();
-        loop {
-            match self.peek().ok_or_else(|| self.err("unterminated string"))? {
-                b'"' => {
-                    self.i += 1;
-                    return Ok(s);
-                }
-                b'\\' => {
-                    self.i += 1;
-                    let c = self.peek().ok_or_else(|| self.err("bad escape"))?;
-                    self.i += 1;
-                    match c {
-                        b'"' => s.push('"'),
-                        b'\\' => s.push('\\'),
-                        b'/' => s.push('/'),
-                        b'b' => s.push('\u{8}'),
-                        b'f' => s.push('\u{c}'),
-                        b'n' => s.push('\n'),
-                        b'r' => s.push('\r'),
-                        b't' => s.push('\t'),
-                        b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err(self.err("bad \\u"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| self.err("bad \\u"))?;
-                            let cp =
-                                u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u"))?;
-                            self.i += 4;
-                            // surrogate pairs
-                            let ch = if (0xD800..0xDC00).contains(&cp) {
-                                if &self.b[self.i..self.i + 2] != b"\\u" {
-                                    return Err(self.err("lone surrogate"));
-                                }
-                                self.i += 2;
-                                let hex2 = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                    .map_err(|_| self.err("bad \\u"))?;
-                                let lo = u32::from_str_radix(hex2, 16)
-                                    .map_err(|_| self.err("bad \\u"))?;
-                                self.i += 4;
-                                0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
-                            } else {
-                                cp
-                            };
-                            s.push(char::from_u32(ch).ok_or_else(|| self.err("bad codepoint"))?);
-                        }
-                        _ => return Err(self.err("bad escape")),
+            loop {
+                lx.ws();
+                v.push(build_value(lx)?);
+                lx.ws();
+                match lx.peek() {
+                    Some(b',') => lx.eat(b',')?,
+                    Some(b']') => {
+                        lx.eat(b']')?;
+                        return Ok(Json::Arr(v));
                     }
-                }
-                _ => {
-                    // copy one UTF-8 scalar
-                    let start = self.i;
-                    let rest = std::str::from_utf8(&self.b[start..])
-                        .map_err(|_| self.err("invalid utf8"))?;
-                    let c = rest.chars().next().unwrap();
-                    s.push(c);
-                    self.i += c.len_utf8();
+                    _ => return Err(lx.error("expected ',' or ']'")),
                 }
             }
         }
-    }
-
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.i;
-        if self.peek() == Some(b'-') {
-            self.i += 1;
-        }
-        while matches!(self.peek(), Some(b'0'..=b'9')) {
-            self.i += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.i += 1;
-            while matches!(self.peek(), Some(b'0'..=b'9')) {
-                self.i += 1;
+        b'{' => {
+            lx.eat(b'{')?;
+            let mut m = BTreeMap::new();
+            lx.ws();
+            if lx.peek() == Some(b'}') {
+                lx.eat(b'}')?;
+                return Ok(Json::Obj(m));
+            }
+            loop {
+                lx.ws();
+                let k = lx.raw_str()?.unescape()?.into_owned();
+                lx.ws();
+                lx.eat(b':')?;
+                lx.ws();
+                m.insert(k, build_value(lx)?);
+                lx.ws();
+                match lx.peek() {
+                    Some(b',') => lx.eat(b',')?,
+                    Some(b'}') => {
+                        lx.eat(b'}')?;
+                        return Ok(Json::Obj(m));
+                    }
+                    _ => return Err(lx.error("expected ',' or '}'")),
+                }
             }
         }
-        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
-            self.i += 1;
-            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
-                self.i += 1;
-            }
-            while matches!(self.peek(), Some(b'0'..=b'9')) {
-                self.i += 1;
-            }
-        }
-        std::str::from_utf8(&self.b[start..self.i])
-            .ok()
-            .and_then(|s| s.parse::<f64>().ok())
-            .map(Json::Num)
-            .ok_or_else(|| self.err("bad number"))
+        c => Err(lx.error(&format!("unexpected '{}'", c as char))),
     }
 }
 
@@ -569,5 +436,73 @@ mod tests {
         let v = Json::parse("\"héllo — ok\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo — ok");
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn escape_sequences_decode() {
+        let v = Json::parse(r#""\"\\\/\b\f\n\r\tA😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\"\\/\u{8}\u{c}\n\r\tA😀");
+    }
+
+    #[test]
+    fn truncated_input_rejected_at_every_prefix() {
+        // every strict prefix of a document whose top-level value only
+        // completes on the final byte must be a clean Err — including the
+        // mid-surrogate-pair cuts that crashed the pre-lexer parser
+        for doc in [
+            r#"{"a":[1,2.5,"x\"y"],"b":{"c":true,"d":null}}"#,
+            r#""pre 😀 post""#,
+            r#"[true,"A",-1.5e-2]"#,
+        ] {
+            for cut in 0..doc.len() {
+                if !doc.is_char_boundary(cut) {
+                    continue;
+                }
+                assert!(
+                    Json::parse(&doc[..cut]).is_err(),
+                    "prefix {:?} must be rejected",
+                    &doc[..cut]
+                );
+            }
+            assert!(Json::parse(doc).is_ok());
+        }
+    }
+
+    #[test]
+    fn random_trees_roundtrip() {
+        // property check of the rebuilt parse path against the serializer:
+        // any tree we can emit must parse back identically
+        fn gen(r: &mut crate::util::rng::Rng, depth: usize) -> Json {
+            match if depth == 0 { r.below(4) } else { r.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(r.chance(0.5)),
+                2 => Json::Num((r.below(2000) as f64 - 1000.0) / 8.0),
+                3 => {
+                    let mut s = String::new();
+                    for _ in 0..r.below(12) {
+                        s.push(match r.below(6) {
+                            0 => '"',
+                            1 => '\\',
+                            2 => '\n',
+                            3 => '😀',
+                            _ => char::from_u32(0x20 + r.below(0x5e) as u32).unwrap(),
+                        });
+                    }
+                    Json::Str(s)
+                }
+                4 => Json::Arr((0..r.below(4)).map(|_| gen(r, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..r.below(4))
+                        .map(|k| (format!("k{k}"), gen(r, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        crate::util::property_test("json_roundtrip", 128, |r| {
+            let v = gen(r, 3);
+            let back = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(Json::parse(&v.to_pretty()).unwrap(), v);
+        });
     }
 }

@@ -1,0 +1,650 @@
+//! Zero-copy wire-protocol layer for the streaming serve path (hifijson
+//! style: slice lexing over the input buffer, strings borrowed from the
+//! input unless they contain escapes, visitor-style field extraction that
+//! skips unknown values without building a tree, and a token-event
+//! serializer that writes into one reusable `Vec<u8>`).
+//!
+//! [`super::json::Json::parse`] is a tree-builder over the same [`Lexer`],
+//! so the grammar (and its error behavior) exists exactly once; the serve
+//! loop's hot path uses [`parse_request`] / [`EventWriter`] directly and
+//! never allocates per token.
+
+use std::borrow::Cow;
+
+use super::json::JsonError;
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+/// Pull lexer over a byte slice. All scanning is bounds-checked: truncated
+/// input yields `Err`, never a panic (the previous tree parser could index
+/// out of bounds on a string cut mid-surrogate-pair).
+pub struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(b: &'a [u8]) -> Lexer<'a> {
+        Lexer { b, i: 0 }
+    }
+
+    /// Byte offset of the cursor — error reporting and span math.
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    pub fn error(&self, msg: &str) -> JsonError {
+        JsonError {
+            msg: msg.to_string(),
+            offset: self.i,
+        }
+    }
+
+    pub fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    pub fn at_end(&self) -> bool {
+        self.i == self.b.len()
+    }
+
+    pub fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    pub fn eat(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.error(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    pub fn lit(&mut self, s: &str) -> Result<(), JsonError> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(())
+        } else {
+            Err(self.error(&format!("expected '{s}'")))
+        }
+    }
+
+    /// Lex one string, returning the span between the quotes without copying
+    /// or decoding. Escape *syntax* is validated here (so a skipped value is
+    /// still syntax-checked); escape *semantics* (surrogate pairing,
+    /// codepoint validity, UTF-8) are validated by [`RawStr::unescape`].
+    pub fn raw_str(&mut self) -> Result<RawStr<'a>, JsonError> {
+        self.eat(b'"')?;
+        let start = self.i;
+        let mut escaped = false;
+        loop {
+            match self.peek().ok_or_else(|| self.error("unterminated string"))? {
+                b'"' => {
+                    let raw = &self.b[start..self.i];
+                    self.i += 1;
+                    return Ok(RawStr { raw, escaped });
+                }
+                b'\\' => {
+                    escaped = true;
+                    self.i += 1;
+                    match self.peek().ok_or_else(|| self.error("bad escape"))? {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => self.i += 1,
+                        b'u' => {
+                            self.i += 1;
+                            if self.i + 4 > self.b.len()
+                                || !self.b[self.i..self.i + 4]
+                                    .iter()
+                                    .all(|c| c.is_ascii_hexdigit())
+                            {
+                                return Err(self.error("bad \\u"));
+                            }
+                            self.i += 4;
+                        }
+                        _ => return Err(self.error("bad escape")),
+                    }
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Lex one number (JSON grammar superset: the previous parser accepted
+    /// forms like `1.` and so does f64 parsing — kept for compatibility).
+    pub fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| self.error("bad number"))
+    }
+
+    /// Skip one complete value (any type, arbitrarily nested) without
+    /// allocating — how the visitor ignores unknown request fields.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.peek().ok_or_else(|| self.error("unexpected end"))? {
+            b'n' => self.lit("null"),
+            b't' => self.lit("true"),
+            b'f' => self.lit("false"),
+            b'"' => self.raw_str().map(|_| ()),
+            b'-' | b'0'..=b'9' => self.number().map(|_| ()),
+            b'[' => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.error("expected ',' or ']'")),
+                    }
+                }
+            }
+            b'{' => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.raw_str()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.error("expected ',' or '}'")),
+                    }
+                }
+            }
+            c => Err(self.error(&format!("unexpected '{}'", c as char))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RawStr: borrowed string span + lazy unescape
+// ---------------------------------------------------------------------------
+
+/// A lexed string: the raw bytes between the quotes. Decoding is deferred so
+/// the common case (no escapes) borrows straight from the input buffer.
+pub struct RawStr<'a> {
+    raw: &'a [u8],
+    escaped: bool,
+}
+
+impl<'a> RawStr<'a> {
+    /// Decode to text: `Cow::Borrowed` into the input when no escapes are
+    /// present, an owned `String` otherwise. Validates UTF-8, surrogate
+    /// pairing and codepoint validity.
+    pub fn unescape(&self) -> Result<Cow<'a, str>, JsonError> {
+        if !self.escaped {
+            return std::str::from_utf8(self.raw).map(Cow::Borrowed).map_err(|_| JsonError {
+                msg: "invalid utf8".to_string(),
+                offset: 0,
+            });
+        }
+        let mut out = String::with_capacity(self.raw.len());
+        self.unescape_into(&mut out)?;
+        Ok(Cow::Owned(out))
+    }
+
+    /// Decode into a caller-owned buffer (lets the visitor reuse storage).
+    pub fn unescape_into(&self, out: &mut String) -> Result<(), JsonError> {
+        let err = |msg: &str, at: usize| JsonError {
+            msg: msg.to_string(),
+            offset: at,
+        };
+        let b = self.raw;
+        let mut i = 0;
+        while i < b.len() {
+            if b[i] != b'\\' {
+                // copy the maximal escape-free run in one UTF-8 validation
+                let start = i;
+                while i < b.len() && b[i] != b'\\' {
+                    i += 1;
+                }
+                out.push_str(
+                    std::str::from_utf8(&b[start..i]).map_err(|_| err("invalid utf8", start))?,
+                );
+                continue;
+            }
+            i += 1;
+            let c = *b.get(i).ok_or_else(|| err("bad escape", i))?;
+            i += 1;
+            match c {
+                b'"' => out.push('"'),
+                b'\\' => out.push('\\'),
+                b'/' => out.push('/'),
+                b'b' => out.push('\u{8}'),
+                b'f' => out.push('\u{c}'),
+                b'n' => out.push('\n'),
+                b'r' => out.push('\r'),
+                b't' => out.push('\t'),
+                b'u' => {
+                    let cp = hex4(b, i).ok_or_else(|| err("bad \\u", i))?;
+                    i += 4;
+                    let ch = if (0xD800..0xDC00).contains(&cp) {
+                        // high surrogate: a \uXXXX low surrogate must follow
+                        if b.get(i..i + 2) != Some(b"\\u") {
+                            return Err(err("lone surrogate", i));
+                        }
+                        i += 2;
+                        let lo = hex4(b, i).ok_or_else(|| err("bad \\u", i))?;
+                        i += 4;
+                        if !(0xDC00..0xE000).contains(&lo) {
+                            return Err(err("lone surrogate", i));
+                        }
+                        0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                    } else {
+                        cp
+                    };
+                    out.push(char::from_u32(ch).ok_or_else(|| err("bad codepoint", i))?);
+                }
+                _ => return Err(err("bad escape", i)),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn hex4(b: &[u8], i: usize) -> Option<u32> {
+    let s = b.get(i..i + 4)?;
+    u32::from_str_radix(std::str::from_utf8(s).ok()?, 16).ok()
+}
+
+// ---------------------------------------------------------------------------
+// Request visitor
+// ---------------------------------------------------------------------------
+
+/// Fields of one wire request, extracted without building a `Json` tree.
+/// Strings borrow from the input line unless they contained escapes. Unknown
+/// fields are skipped (forward compatibility); the caller applies defaults
+/// and required-field policy.
+#[derive(Default)]
+pub struct WireRequest<'a> {
+    pub prompt: Option<Cow<'a, str>>,
+    pub template: Option<Cow<'a, str>>,
+    pub max_new: Option<f64>,
+    pub class: Option<Cow<'a, str>>,
+    pub stream: bool,
+    pub cmd: Option<Cow<'a, str>>,
+    pub id: Option<f64>,
+}
+
+/// Parse one request line (a top-level JSON object) in a single pass.
+pub fn parse_request(line: &[u8]) -> Result<WireRequest<'_>, JsonError> {
+    let mut lx = Lexer::new(line);
+    let mut req = WireRequest::default();
+    lx.ws();
+    lx.eat(b'{')?;
+    lx.ws();
+    if lx.peek() != Some(b'}') {
+        loop {
+            lx.ws();
+            let key = lx.raw_str()?;
+            lx.ws();
+            lx.eat(b':')?;
+            lx.ws();
+            let key = key.unescape()?;
+            match &*key {
+                "prompt" => req.prompt = Some(str_field(&mut lx, "prompt")?),
+                "template" => req.template = Some(str_field(&mut lx, "template")?),
+                "class" => req.class = Some(str_field(&mut lx, "class")?),
+                "cmd" => req.cmd = Some(str_field(&mut lx, "cmd")?),
+                "max_new" => req.max_new = Some(num_field(&mut lx, "max_new")?),
+                "id" => req.id = Some(num_field(&mut lx, "id")?),
+                "stream" => {
+                    req.stream = match lx.peek() {
+                        Some(b't') => {
+                            lx.lit("true")?;
+                            true
+                        }
+                        Some(b'f') => {
+                            lx.lit("false")?;
+                            false
+                        }
+                        _ => return Err(lx.error("'stream' is not a bool")),
+                    }
+                }
+                _ => lx.skip_value()?,
+            }
+            lx.ws();
+            match lx.peek() {
+                Some(b',') => {
+                    lx.eat(b',')?;
+                }
+                Some(b'}') => break,
+                _ => return Err(lx.error("expected ',' or '}'")),
+            }
+        }
+    }
+    lx.eat(b'}')?;
+    lx.ws();
+    if !lx.at_end() {
+        return Err(lx.error("trailing characters"));
+    }
+    Ok(req)
+}
+
+fn str_field<'a>(lx: &mut Lexer<'a>, name: &str) -> Result<Cow<'a, str>, JsonError> {
+    if lx.peek() != Some(b'"') {
+        return Err(lx.error(&format!("'{name}' is not a string")));
+    }
+    lx.raw_str()?.unescape()
+}
+
+fn num_field(lx: &mut Lexer<'_>, name: &str) -> Result<f64, JsonError> {
+    if !matches!(lx.peek(), Some(b'-') | Some(b'0'..=b'9')) {
+        return Err(lx.error(&format!("'{name}' is not a number")));
+    }
+    lx.number()
+}
+
+// ---------------------------------------------------------------------------
+// EventWriter: reusable token-event serializer
+// ---------------------------------------------------------------------------
+
+/// Serializes token-event lines into one owned buffer that is reused across
+/// calls, so the per-token streaming path performs no allocation once the
+/// buffer has grown to the working size.
+pub struct EventWriter {
+    buf: Vec<u8>,
+}
+
+impl EventWriter {
+    pub fn new() -> EventWriter {
+        EventWriter {
+            buf: Vec::with_capacity(128),
+        }
+    }
+
+    /// One `token` event as a JSON line (trailing `\n` included). The
+    /// returned slice is valid until the next call.
+    pub fn token(&mut self, id: u64, text: &str, n: usize, first: bool) -> &[u8] {
+        self.buf.clear();
+        self.buf.extend_from_slice(b"{\"event\":\"token\",\"id\":");
+        push_u64(&mut self.buf, id);
+        self.buf.extend_from_slice(b",\"n\":");
+        push_u64(&mut self.buf, n as u64);
+        self.buf.extend_from_slice(b",\"first\":");
+        self.buf
+            .extend_from_slice(if first { b"true" } else { b"false" });
+        self.buf.extend_from_slice(b",\"text\":");
+        push_escaped(&mut self.buf, text);
+        self.buf.extend_from_slice(b"}\n");
+        &self.buf
+    }
+}
+
+impl Default for EventWriter {
+    fn default() -> Self {
+        EventWriter::new()
+    }
+}
+
+/// Decimal u64 without going through `format!` (which allocates).
+fn push_u64(out: &mut Vec<u8>, mut x: u64) {
+    let mut tmp = [0u8; 20];
+    let mut n = 0;
+    loop {
+        tmp[n] = b'0' + (x % 10) as u8;
+        x /= 10;
+        n += 1;
+        if x == 0 {
+            break;
+        }
+    }
+    for k in (0..n).rev() {
+        out.push(tmp[k]);
+    }
+}
+
+/// JSON string escape into a byte buffer — same escape set as the tree
+/// serializer in `util::json`, so event lines parse with `Json::parse`.
+pub fn push_escaped(out: &mut Vec<u8>, s: &str) {
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            '\n' => out.extend_from_slice(b"\\n"),
+            '\r' => out.extend_from_slice(b"\\r"),
+            '\t' => out.extend_from_slice(b"\\t"),
+            c if (c as u32) < 0x20 => {
+                out.extend_from_slice(b"\\u00");
+                let v = c as u32;
+                const HEX: &[u8; 16] = b"0123456789abcdef";
+                out.push(HEX[(v >> 4) as usize]);
+                out.push(HEX[(v & 0xf) as usize]);
+            }
+            c => {
+                let mut utf8 = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut utf8).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use crate::util::property_test;
+
+    #[test]
+    fn raw_str_borrows_without_escapes() {
+        let mut lx = Lexer::new(b"\"plain ascii and \xc3\xa9\"");
+        let s = lx.raw_str().unwrap();
+        match s.unescape().unwrap() {
+            Cow::Borrowed(v) => assert_eq!(v, "plain ascii and é"),
+            Cow::Owned(_) => panic!("escape-free string must borrow"),
+        }
+    }
+
+    #[test]
+    fn raw_str_owns_with_escapes() {
+        let mut lx = Lexer::new(br#""a\nb\u0041\ud83d\ude00""#);
+        let s = lx.raw_str().unwrap();
+        match s.unescape().unwrap() {
+            Cow::Owned(v) => assert_eq!(v, "a\nbA😀"),
+            Cow::Borrowed(_) => panic!("escaped string must decode"),
+        }
+    }
+
+    #[test]
+    fn truncated_inputs_error_not_panic() {
+        // the old tree parser indexed out of bounds on strings cut
+        // mid-surrogate-pair; every truncation must now be a clean Err
+        for src in [
+            &b"\"abc"[..],
+            b"\"\\",
+            b"\"\\u",
+            b"\"\\u00",
+            b"\"\\ud800",
+            b"\"\\ud800\\",
+            b"\"\\ud800\\u",
+            b"\"\\ud800\\udc0",
+        ] {
+            let mut lx = Lexer::new(src);
+            let r = lx.raw_str().and_then(|s| s.unescape().map(|_| ()));
+            assert!(r.is_err(), "{:?} must be rejected", src);
+        }
+    }
+
+    #[test]
+    fn surrogate_validation() {
+        // lone high surrogate, and a high surrogate followed by a non-low
+        for src in [&br#""\ud800""#[..], br#""\ud800\u0041""#] {
+            let mut lx = Lexer::new(src);
+            let r = lx.raw_str().unwrap().unescape();
+            assert!(r.is_err(), "{:?} must be rejected", src);
+        }
+        // a valid pair decodes
+        let mut lx = Lexer::new(br#""\ud83d\ude00""#);
+        assert_eq!(lx.raw_str().unwrap().unescape().unwrap(), "😀");
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut lx = Lexer::new(b"\"\xff\xfe\"");
+        assert!(lx.raw_str().unwrap().unescape().is_err());
+        // ...also when the bad bytes sit next to an escape
+        let mut lx = Lexer::new(b"\"\\n\xff\"");
+        assert!(lx.raw_str().unwrap().unescape().is_err());
+    }
+
+    #[test]
+    fn skip_value_spans_nested() {
+        let src = br#"{"a":[1,{"b":"x\n"},null,true],"c":-1e3} tail"#;
+        let mut lx = Lexer::new(src);
+        lx.skip_value().unwrap();
+        lx.ws();
+        assert_eq!(lx.pos(), src.len() - 4);
+    }
+
+    #[test]
+    fn skip_value_rejects_malformed() {
+        for src in [&b"[1,]"[..], b"{\"a\" 1}", b"{\"a\":}", b"[", b"nul"] {
+            let mut lx = Lexer::new(src);
+            assert!(lx.skip_value().is_err(), "{:?} must be rejected", src);
+        }
+    }
+
+    #[test]
+    fn request_extraction() {
+        let line = br#"{"prompt":"hi\n","max_new":12,"class":"interactive","stream":true,"future_field":{"deep":[1,2]},"template":"gsm"}"#;
+        let r = parse_request(line).unwrap();
+        assert_eq!(r.prompt.as_deref(), Some("hi\n"));
+        assert_eq!(r.template.as_deref(), Some("gsm"));
+        assert_eq!(r.class.as_deref(), Some("interactive"));
+        assert_eq!(r.max_new, Some(12.0));
+        assert!(r.stream);
+        assert!(r.cmd.is_none());
+    }
+
+    #[test]
+    fn request_defaults_and_commands() {
+        let r = parse_request(br#"{"cmd":"trace","id":7}"#).unwrap();
+        assert_eq!(r.cmd.as_deref(), Some("trace"));
+        assert_eq!(r.id, Some(7.0));
+        assert!(r.prompt.is_none());
+        assert!(!r.stream);
+        let r = parse_request(b"{}").unwrap();
+        assert!(r.prompt.is_none() && r.cmd.is_none());
+    }
+
+    #[test]
+    fn request_type_errors() {
+        assert!(parse_request(br#"{"prompt":1}"#).is_err());
+        assert!(parse_request(br#"{"max_new":"x"}"#).is_err());
+        assert!(parse_request(br#"{"stream":"yes"}"#).is_err());
+        assert!(parse_request(br#"{"prompt":"a"} extra"#).is_err());
+        assert!(parse_request(b"[1]").is_err());
+    }
+
+    #[test]
+    fn request_prompt_borrows_when_clean() {
+        let line = br#"{"prompt":"no escapes here"}"#;
+        let r = parse_request(line).unwrap();
+        match r.prompt.unwrap() {
+            Cow::Borrowed(v) => assert_eq!(v, "no escapes here"),
+            Cow::Owned(_) => panic!("clean prompt must borrow from the line"),
+        }
+    }
+
+    #[test]
+    fn event_writer_lines_parse() {
+        let mut w = EventWriter::new();
+        let line = w.token(42, "a\"b\\c\nd\té😀\u{1}", 3, true);
+        assert_eq!(*line.last().unwrap(), b'\n');
+        let v = Json::parse(std::str::from_utf8(line).unwrap().trim_end()).unwrap();
+        assert_eq!(v.str_at("event").unwrap(), "token");
+        assert_eq!(v.usize_at("id").unwrap(), 42);
+        assert_eq!(v.usize_at("n").unwrap(), 3);
+        assert!(v.get("first").unwrap().as_bool().unwrap());
+        assert_eq!(v.str_at("text").unwrap(), "a\"b\\c\nd\té😀\u{1}");
+    }
+
+    #[test]
+    fn event_writer_reuses_buffer() {
+        let mut w = EventWriter::new();
+        let long = "x".repeat(64);
+        w.token(1, &long, 1, true);
+        let cap = w.buf.capacity();
+        for n in 2..50 {
+            let line = w.token(1, &long, n, false);
+            let v = Json::parse(std::str::from_utf8(line).unwrap().trim_end()).unwrap();
+            assert_eq!(v.usize_at("n").unwrap(), n);
+        }
+        assert_eq!(w.buf.capacity(), cap, "steady-state tokens must not grow the buffer");
+    }
+
+    #[test]
+    fn event_writer_roundtrips_random_text() {
+        property_test("event_writer_roundtrip", 64, |r| {
+            let mut text = String::new();
+            for _ in 0..r.below(40) {
+                // bias toward the characters that exercise escaping and
+                // multi-byte UTF-8 boundaries
+                let c = match r.below(8) {
+                    0 => '"',
+                    1 => '\\',
+                    2 => '\n',
+                    3 => char::from_u32(r.below(0x20) as u32).unwrap(),
+                    4 => 'é',
+                    5 => '😀',
+                    _ => char::from_u32(0x20 + r.below(0x5e) as u32).unwrap(),
+                };
+                text.push(c);
+            }
+            let mut w = EventWriter::new();
+            let line = w.token(9, &text, 1, false);
+            let v = Json::parse(std::str::from_utf8(line).unwrap().trim_end()).unwrap();
+            assert_eq!(v.str_at("text").unwrap(), text);
+        });
+    }
+}

@@ -1,0 +1,330 @@
+//! End-to-end per-token streaming over localhost TCP — the serving-core
+//! acceptance tests. A streaming client must see token events incrementally
+//! (first token line strictly before the terminal line), their concatenation
+//! must be byte-identical to the non-streaming response for the same prompt
+//! across every eviction policy, and a client that disconnects mid-stream
+//! must have its row torn down promptly: pool blocks and host-tier state
+//! back to idle, observed via the `/metrics` exposition. The last test pins
+//! the abandoned swap-parked snapshot path (`release_discarded_state`) at
+//! the engine level — the leak that motivated it is invisible over the wire
+//! until the tier fills.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lazyeviction::coordinator::{Engine, EngineConfig, PreemptMode, Request};
+use lazyeviction::kvpool::PoolConfig;
+use lazyeviction::kvtier::HostTierConfig;
+use lazyeviction::telemetry::{spawn_metrics_listener, Telemetry};
+use lazyeviction::util::json::Json;
+
+// pool_e2e.rs owns 8953-8956, telemetry_e2e.rs 8960-8961; this binary
+// uses 8970-8977 so the three can run in parallel
+const POLICY_PORTS: [(&str, &str); 4] = [
+    ("full", "127.0.0.1:8970"),
+    ("h2o", "127.0.0.1:8971"),
+    ("tova", "127.0.0.1:8972"),
+    ("lazy", "127.0.0.1:8973"),
+];
+const DISCONNECT_ADDR: &str = "127.0.0.1:8976";
+const DISCONNECT_METRICS: &str = "127.0.0.1:8977";
+
+fn pooled_cfg(policy: &str, batch: usize, n_blocks: usize) -> EngineConfig {
+    let mut cfg = EngineConfig {
+        batch,
+        cache: 64,
+        budget: 40,
+        policy: policy.into(),
+        record_live: false,
+        pool: Some(PoolConfig {
+            block_size: 8,
+            n_blocks,
+            low_watermark: 2,
+            high_watermark: 4,
+        }),
+        ..Default::default()
+    };
+    cfg.params.window = 8;
+    cfg.params.recent = 8;
+    cfg
+}
+
+fn mk(id: u64, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt: "#A=3;B=7;\n>".into(),
+        template: String::new(),
+        max_new,
+        resume: None,
+    }
+}
+
+/// Spawn a serve loop for `cfg` (optionally with telemetry) and wait for
+/// its listener to come up.
+fn serve_on(addr: &'static str, cfg: EngineConfig, shutdown: &Arc<AtomicBool>, telemetry: Option<Arc<Telemetry>>) {
+    {
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            let engine = Engine::new_sim(cfg).expect("sim engine");
+            let _ = lazyeviction::server::serve_with_telemetry(engine, addr, shutdown, telemetry);
+        });
+    }
+    for _ in 0..200 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            drop(s);
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("server did not come up within 4s");
+}
+
+/// One HTTP/1.0 exchange against the scrape listener → body.
+fn http_get_body(addr: &str, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect scrape listener");
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read scrape response");
+    buf.split_once("\r\n\r\n").expect("head/body").1.to_string()
+}
+
+/// Value of the `name value` sample line in a text exposition, if present.
+fn metric(body: &str, name: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        l.strip_prefix(name)?
+            .strip_prefix(' ')?
+            .trim()
+            .parse::<f64>()
+            .ok()
+    })
+}
+
+#[test]
+fn stream_concat_is_byte_identical_across_policies() {
+    // For each policy: one streaming request, then the identical prompt
+    // without streaming on the same server. The token lines must arrive
+    // before the terminal line (incremental delivery), count one per token
+    // with `n` increasing from 1, and concatenate to exactly the
+    // non-streaming `text` — streaming changes delivery, never content.
+    for (policy, addr) in POLICY_PORTS {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        serve_on(addr, pooled_cfg(policy, 2, 16), &shutdown, None);
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writeln!(
+            &stream,
+            r#"{{"prompt":"#A=3;B=7;\n>","max_new":32,"stream":true,"class":"interactive"}}"#
+        )
+        .unwrap();
+
+        let mut concat = String::new();
+        let mut n_events = 0usize;
+        let done = loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).expect("stream line is JSON");
+            assert!(j.get("error").is_none(), "server errored: {line}");
+            match j.str_at("event").expect("streaming lines carry 'event'") {
+                "token" => {
+                    n_events += 1;
+                    // the very first line off the socket is a token event:
+                    // the client holds the first token before the row is done
+                    assert_eq!(
+                        j.usize_at("n").unwrap(),
+                        n_events,
+                        "policy {policy}: token events out of order"
+                    );
+                    assert_eq!(
+                        j.get("first").unwrap().as_bool().unwrap(),
+                        n_events == 1,
+                        "policy {policy}: 'first' must mark exactly event 1"
+                    );
+                    concat.push_str(j.str_at("text").unwrap());
+                }
+                "done" => break j,
+                other => panic!("policy {policy}: unexpected event '{other}'"),
+            }
+        };
+        assert!(n_events > 0, "policy {policy}: no token events before done");
+        assert_eq!(
+            done.usize_at("tokens").unwrap(),
+            32,
+            "policy {policy}: wrong token count"
+        );
+        assert_eq!(
+            concat,
+            done.str_at("text").unwrap(),
+            "policy {policy}: streamed concat != terminal text"
+        );
+
+        // the same prompt, non-streaming, on the same connection: exactly
+        // one line, no token events, byte-identical text
+        writeln!(&stream, r#"{{"prompt":"#A=3;B=7;\n>","max_new":32}}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).expect("plain response line");
+        assert!(j.get("error").is_none(), "server errored: {line}");
+        assert!(
+            j.get("event").is_none(),
+            "policy {policy}: non-streaming reply must carry no event marker"
+        );
+        assert_eq!(
+            j.str_at("text").unwrap(),
+            concat,
+            "policy {policy}: streaming changed the generated bytes"
+        );
+        shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+#[test]
+fn mid_stream_disconnect_frees_blocks_and_tier_state() {
+    // A streaming client reads a handful of token events off a long
+    // generation and hangs up. The reader thread lands the EOF in the
+    // handler, the handler flags the cancel, and the engine loop's next
+    // iteration tears the row down: cancelled_rows ticks, all pool blocks
+    // return, and every parked host-tier entry the row had demoted is
+    // released. The prefix cache is off so no pinned donor blocks mask a
+    // leak in the free-block gauge.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let telemetry = Telemetry::new();
+    spawn_metrics_listener(DISCONNECT_METRICS, telemetry.clone(), shutdown.clone())
+        .expect("bind metrics listener");
+    let mut cfg = pooled_cfg("lazy", 2, 9);
+    cfg.prefix_cache = None;
+    cfg.host_tier = Some(HostTierConfig { max_bytes: 1 << 20 });
+    cfg.preempt_mode = PreemptMode::Swap;
+    serve_on(DISCONNECT_ADDR, cfg, &shutdown, Some(telemetry));
+
+    {
+        let stream = TcpStream::connect(DISCONNECT_ADDR).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // 4096 tokens through a 40-token budget: the decode (and its tier
+        // demotions) is nowhere near done when the client walks away, so
+        // the abort deterministically lands mid-stream
+        writeln!(
+            &stream,
+            r#"{{"prompt":"#A=3;B=7;\n>","max_new":4096,"stream":true}}"#
+        )
+        .unwrap();
+        for i in 0..5 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).expect("token line");
+            assert_eq!(j.str_at("event").unwrap(), "token", "line {i}: {line}");
+        }
+        // drop both halves: the reader thread sees EOF mid-decode
+    }
+
+    // the abort is asynchronous (next engine-loop iteration + a telemetry
+    // publish); poll the exposition for the settled post-abort state
+    let mut body = String::new();
+    let mut settled = false;
+    for _ in 0..250 {
+        body = http_get_body(DISCONNECT_METRICS, "/metrics");
+        if metric(&body, "lazyeviction_cancelled_rows_total") == Some(1.0)
+            && metric(&body, "lazyeviction_pool_free_blocks") == Some(9.0)
+            && metric(&body, "lazyeviction_pool_parked_bytes") == Some(0.0)
+        {
+            settled = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        settled,
+        "abort did not reclaim blocks/tier state; exposition:\n{body}"
+    );
+    assert!(
+        metric(&body, "lazyeviction_streamed_tokens_total").unwrap() >= 5.0,
+        "the streamed events must be counted"
+    );
+    // no terminal was ever produced for the abandoned request
+    assert_eq!(metric(&body, "lazyeviction_requests_finished_total"), Some(0.0));
+
+    // the server stays healthy: a fresh client is served to completion
+    let stream = TcpStream::connect(DISCONNECT_ADDR).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(&stream, r#"{{"prompt":"#A=1;\n>","max_new":8}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("error").is_none(), "post-abort request failed: {line}");
+    assert_eq!(j.usize_at("tokens").unwrap(), 8);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn discarding_a_swap_parked_snapshot_drains_the_tier() {
+    // The serve loop's queued-cancellation path, engine-level: two rows
+    // contending for 9 blocks under swap-mode preemption park a victim's
+    // whole block table in the host tier. If that victim's client is gone
+    // when its turn comes, the serve loop calls `release_discarded_state`
+    // instead of resubmitting — and the pinned tier bytes must come back,
+    // or abandoned clients permanently shrink the tier budget.
+    let mut cfg = pooled_cfg("lazy", 2, 9);
+    {
+        let p = cfg.pool.as_mut().unwrap();
+        p.low_watermark = 0;
+        p.high_watermark = 0;
+    }
+    cfg.prefix_cache = None;
+    cfg.host_tier = Some(HostTierConfig { max_bytes: 1 << 20 });
+    cfg.preempt_mode = PreemptMode::Swap;
+    let mut e = Engine::new_sim(cfg).expect("sim engine");
+    assert!(e.submit(mk(0, 50), 0.0).expect("submit 0"));
+    assert!(e.submit(mk(1, 50), 0.0).expect("submit 1"));
+
+    // step until the pool collision swap-preempts one of the rows
+    let mut victims = Vec::new();
+    for _ in 0..200 {
+        e.step().expect("step");
+        victims = e.take_preempted();
+        if !victims.is_empty() {
+            break;
+        }
+    }
+    let victim = victims.pop().expect("9 blocks under 2 rows must preempt");
+    // any same-step co-victims stay live: hand them straight back
+    for r in victims {
+        assert!(e.submit(r, 0.0).expect("resubmit co-victim"));
+    }
+    let st = victim.resume.clone().expect("preemption carries a snapshot");
+    assert!(
+        st.swapped.is_some(),
+        "swap-mode preemption must park the table, not recompute"
+    );
+    let parked_before = e.pool_gauges().expect("paged mode").parked_bytes;
+    assert!(parked_before > 0, "the victim's bytes must sit in the tier");
+
+    // the client is gone: discard the snapshot the way the serve loop does
+    let cancelled_before = e.metrics.cancelled_rows;
+    e.release_discarded_state(&st, victim.id);
+    assert_eq!(e.metrics.cancelled_rows, cancelled_before + 1);
+    assert!(
+        e.pool_gauges().unwrap().parked_bytes < parked_before,
+        "discarding the snapshot must release its pinned tier bytes"
+    );
+
+    // drain the surviving row; at idle the tier must be byte-empty and the
+    // pool whole again — nothing the dead client owned stays pinned
+    for _ in 0..500 {
+        if e.active() == 0 {
+            break;
+        }
+        e.step().expect("drain step");
+        for r in e.take_preempted() {
+            // re-admit survivors so the drain terminates
+            assert!(e.submit(r, 0.0).expect("resubmit"));
+        }
+    }
+    assert_eq!(e.active(), 0, "survivor did not finish");
+    let g = e.pool_gauges().unwrap();
+    assert_eq!(g.parked_bytes, 0, "tier budget must return to zero");
+    assert_eq!(g.parked_blocks, 0);
+    assert_eq!(g.free_blocks, g.total_blocks, "pool blocks leaked");
+}
