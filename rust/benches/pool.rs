@@ -17,7 +17,7 @@ use lazyeviction::coordinator::{Engine, EngineConfig, PreemptMode, Request};
 use lazyeviction::kvpool::PoolConfig;
 use lazyeviction::kvtier::HostTierConfig;
 use lazyeviction::scheduler::preempt::crossover_fed_tokens;
-use lazyeviction::sim::capacity::{run_capacity, CapacitySpec};
+use lazyeviction::sim::capacity::{run_capacity, run_fleet, CapacitySpec, FleetRouting, FleetSpec};
 use lazyeviction::telemetry::StreamingHistogram;
 use lazyeviction::util::json::Json;
 
@@ -705,6 +705,94 @@ fn main() -> anyhow::Result<()> {
                     tpot_ms: Quantiles::from_hist(&m.tpot_hist_ms),
                 });
             }
+        }
+
+        // Fleet section (schema v2): the multi-replica routing cells. One
+        // shared-header workload placed by each routing policy on 3
+        // replicas records the affinity-vs-round-robin hit-rate gap, plus
+        // affinity at N = 1/2/4 records how sustained batch scales with
+        // the fleet. The assertions are the PR's acceptance gate: affinity
+        // must strictly beat round-robin on hit rate and at least match it
+        // on sustained batch, in the recorded artifact itself.
+        {
+            use lazyeviction::bench_harness::report::FleetCell;
+            let fleet_spec = |replicas: usize, routing: FleetRouting| {
+                let mut base = CapacitySpec::new("lazy", n.max(12));
+                base.pool.n_blocks = 64;
+                let mut f = FleetSpec::new(base, replicas, routing);
+                f.header_groups = replicas + 1; // never aligned with i % N
+                f.header_tokens = 64;
+                f
+            };
+            let cell = |replicas: usize, routing: FleetRouting| -> anyhow::Result<FleetCell> {
+                let spec = fleet_spec(replicas, routing);
+                let r = run_fleet(&spec)?;
+                Ok(FleetCell {
+                    routing: routing.as_str().into(),
+                    replicas,
+                    sustained_batch: r.sustained_batch,
+                    header_hits: r.header_hits,
+                    header_misses: r.header_misses,
+                    hit_rate: r.hit_rate,
+                    preemptions: r.preemptions,
+                    completed: r.completed as u64,
+                })
+            };
+            let affinity3 = cell(3, FleetRouting::Affinity)?;
+            let rr3 = cell(3, FleetRouting::RoundRobin)?;
+            assert!(
+                affinity3.hit_rate > rr3.hit_rate,
+                "affinity hit rate {} must strictly beat rr {}",
+                affinity3.hit_rate,
+                rr3.hit_rate
+            );
+            assert!(
+                affinity3.sustained_batch >= rr3.sustained_batch,
+                "affinity sustained batch {} must not trail rr {}",
+                affinity3.sustained_batch,
+                rr3.sustained_batch
+            );
+            println!("\nfleet routing (3 replicas, shared headers; + affinity scaling)");
+            let mut table = Table::new(&[
+                "routing",
+                "replicas",
+                "hit_rate",
+                "sustained_batch",
+                "preemptions",
+            ]);
+            for c in [affinity3, rr3] {
+                table.row(vec![
+                    c.routing.clone(),
+                    format!("{}", c.replicas),
+                    format!("{:.3}", c.hit_rate),
+                    format!("{:.2}", c.sustained_batch),
+                    format!("{}", c.preemptions),
+                ]);
+                report.push_fleet(c);
+            }
+            let mut prev = 0.0f64;
+            for replicas in [1usize, 2, 4] {
+                let c = cell(replicas, FleetRouting::Affinity)?;
+                assert!(
+                    c.sustained_batch >= prev,
+                    "sustained batch must be monotone in replica count: \
+                     N={replicas} gives {} after {}",
+                    c.sustained_batch,
+                    prev
+                );
+                prev = c.sustained_batch;
+                table.row(vec![
+                    c.routing.clone(),
+                    format!("{}", c.replicas),
+                    format!("{:.3}", c.hit_rate),
+                    format!("{:.2}", c.sustained_batch),
+                    format!("{}", c.preemptions),
+                ]);
+                report.push_fleet(c);
+            }
+            table.print();
+            let cells: Vec<Json> = report.fleet.iter().map(|c| c.to_json()).collect();
+            out = out.set("fleet", Json::obj().set("cells", cells));
         }
         report.save(std::path::Path::new("BENCH_pool.json"))?;
     }

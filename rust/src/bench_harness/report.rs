@@ -19,7 +19,10 @@ use crate::util::json::Json;
 
 /// Bump when a field is renamed/removed or its meaning changes. Additive
 /// fields do not need a bump — `validate` only requires, never forbids.
-pub const SCHEMA_VERSION: usize = 1;
+/// History: 1 = the original policy × scenario grid; 2 = + the optional
+/// `fleet` section (multi-replica routing cells; absent when a bench
+/// records no fleet scenarios, and validated when present).
+pub const SCHEMA_VERSION: usize = 2;
 
 /// Latency quantile summary extracted from a [`StreamingHistogram`].
 #[derive(Clone, Debug, Default)]
@@ -112,6 +115,40 @@ impl BenchScenario {
     }
 }
 
+/// One multi-replica routing cell (the `fleet` section, schema v2): a
+/// `sim::capacity::run_fleet` outcome keyed by routing policy × replica
+/// count, so CI trajectories record the affinity-vs-blind hit-rate gap and
+/// how sustained batch scales with the fleet.
+#[derive(Clone, Debug, Default)]
+pub struct FleetCell {
+    pub routing: String,
+    pub replicas: usize,
+    /// Fleet-wide sustained batch (sum of per-replica means).
+    pub sustained_batch: f64,
+    /// Header placements served by an already-resident prefix.
+    pub header_hits: u64,
+    /// Cold header materializations (duplication = the routing tax).
+    pub header_misses: u64,
+    /// hits / requests, in [0, 1].
+    pub hit_rate: f64,
+    pub preemptions: u64,
+    pub completed: u64,
+}
+
+impl FleetCell {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("routing", self.routing.as_str())
+            .set("replicas", self.replicas)
+            .set("sustained_batch", self.sustained_batch)
+            .set("header_hits", self.header_hits as f64)
+            .set("header_misses", self.header_misses as f64)
+            .set("hit_rate", self.hit_rate)
+            .set("preemptions", self.preemptions as f64)
+            .set("completed", self.completed as f64)
+    }
+}
+
 /// The whole recorded run: metadata + every grid cell.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
@@ -119,6 +156,8 @@ pub struct BenchReport {
     /// Workload size knob the run used (LAZYEVICTION_BENCH_SAMPLES).
     pub samples: usize,
     pub results: Vec<BenchScenario>,
+    /// Multi-replica routing cells; empty = no fleet section serialized.
+    pub fleet: Vec<FleetCell>,
 }
 
 impl BenchReport {
@@ -127,6 +166,7 @@ impl BenchReport {
             bench: bench.to_string(),
             samples,
             results: Vec::new(),
+            fleet: Vec::new(),
         }
     }
 
@@ -134,13 +174,22 @@ impl BenchReport {
         self.results.push(s);
     }
 
+    pub fn push_fleet(&mut self, c: FleetCell) {
+        self.fleet.push(c);
+    }
+
     pub fn to_json(&self) -> Json {
         let results: Vec<Json> = self.results.iter().map(|s| s.to_json()).collect();
-        Json::obj()
+        let mut j = Json::obj()
             .set("schema_version", SCHEMA_VERSION)
             .set("bench", self.bench.as_str())
             .set("samples", self.samples)
-            .set("results", results)
+            .set("results", results);
+        if !self.fleet.is_empty() {
+            let fleet: Vec<Json> = self.fleet.iter().map(|c| c.to_json()).collect();
+            j = j.set("fleet", fleet);
+        }
+        j
     }
 
     /// Schema check for a serialized report. Returns the first violation.
@@ -225,6 +274,44 @@ impl BenchReport {
                 }
             }
         }
+        // the fleet section is additive: absent is fine, present must hold
+        if let Some(fleet) = j.get("fleet") {
+            let cells = fleet.as_arr().ok_or("fleet is not an array")?;
+            if cells.is_empty() {
+                return Err("fleet present but empty".into());
+            }
+            for (i, c) in cells.iter().enumerate() {
+                c.get("routing")
+                    .and_then(|v| v.as_str())
+                    .ok_or(format!("fleet[{i}]: missing string 'routing'"))?;
+                for key in [
+                    "replicas",
+                    "sustained_batch",
+                    "header_hits",
+                    "header_misses",
+                    "preemptions",
+                    "completed",
+                ] {
+                    let v = c
+                        .get(key)
+                        .and_then(|v| v.as_f64())
+                        .ok_or(format!("fleet[{i}]: missing number '{key}'"))?;
+                    if v < 0.0 {
+                        return Err(format!("fleet[{i}]: negative '{key}'"));
+                    }
+                }
+                let hr = c
+                    .get("hit_rate")
+                    .and_then(|v| v.as_f64())
+                    .ok_or(format!("fleet[{i}]: missing number 'hit_rate'"))?;
+                if !(0.0..=1.0).contains(&hr) {
+                    return Err(format!("fleet[{i}]: hit_rate {hr} out of [0, 1]"));
+                }
+                if c.get("replicas").and_then(|v| v.as_usize()).unwrap_or(0) == 0 {
+                    return Err(format!("fleet[{i}]: replicas must be >= 1"));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -303,13 +390,48 @@ mod tests {
         );
         assert!(BenchReport::validate(&j).is_err());
         // a result missing a required counter
-        let bad = r#"{"schema_version":1,"bench":"pool","samples":1,
+        let bad = r#"{"schema_version":2,"bench":"pool","samples":1,
             "results":[{"policy":"lazy","scenario":"steady"}]}"#;
         assert!(BenchReport::validate(&Json::parse(bad).unwrap()).is_err());
         // non-monotone quantiles
         let mut s = sample_report();
         s.results[0].ttft_ms.p90 = 0.0;
         assert!(BenchReport::validate(&s.to_json()).is_err());
+    }
+
+    #[test]
+    fn fleet_section_is_optional_but_validated_when_present() {
+        // absent: schema-valid (v1-shaped reports upgrade by version bump)
+        let mut r = sample_report();
+        BenchReport::validate(&r.to_json()).expect("no fleet section needed");
+        assert!(r.to_json().get("fleet").is_none(), "empty fleet not serialized");
+        // present and well-formed
+        r.push_fleet(FleetCell {
+            routing: "affinity".into(),
+            replicas: 3,
+            sustained_batch: 9.5,
+            header_hits: 8,
+            header_misses: 4,
+            hit_rate: 8.0 / 12.0,
+            preemptions: 1,
+            completed: 12,
+        });
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        BenchReport::validate(&j).expect("fleet cell is schema-valid");
+        let cells = j.get("fleet").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(cells[0].str_at("routing").unwrap(), "affinity");
+        assert_eq!(cells[0].usize_at("replicas").unwrap(), 3);
+        // corrupt cells are rejected: hit_rate out of range, replicas 0,
+        // missing counter
+        let mut bad = r.clone();
+        bad.fleet[0].hit_rate = 1.5;
+        assert!(BenchReport::validate(&bad.to_json()).is_err());
+        let mut bad = r.clone();
+        bad.fleet[0].replicas = 0;
+        assert!(BenchReport::validate(&bad.to_json()).is_err());
+        let bad = r#"{"schema_version":2,"bench":"pool","samples":1,
+            "results":[],"fleet":[{"routing":"rr"}]}"#;
+        assert!(BenchReport::validate(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,738 @@
+//! Engine-as-actor: one replica of the fleet, owned by its own thread.
+//!
+//! PRs 1–7 drove the engine as a borrowed-in-a-loop struct — the serve
+//! loop called `submit`/`step`/`take_preempted` directly on the calling
+//! thread. That shape cannot replicate: the fleet needs N engines running
+//! *concurrently*, each with its own `BlockPool`, `PrefixCache`, and
+//! `HostTier`. This module makes the engine a library-owned actor:
+//! [`spawn_engine_actor`] moves an [`Engine`] onto a dedicated thread that
+//! runs exactly the single-engine serve iteration (cancel sweep →
+//! admission → step → preemption re-queue → telemetry publish) in a loop,
+//! and the only way in or out is messages:
+//!
+//! * inbound ([`EngineMsg`], per-replica channel): `Submit` a parsed
+//!   request, `Cancel` an id, request a telemetry `Snapshot`, or `Drain`
+//!   (finish everything, then exit cleanly);
+//! * outbound ([`ActorEvent`], one channel shared by the whole fleet):
+//!   per-token events, terminal `Done`/`Failed` replies, `Orphaned`
+//!   requests (see below), and a final `Exited`.
+//!
+//! Each actor owns a private [`RequestQueue`]: preemption victims re-enter
+//! *their own replica's* front lane oldest-first — never another
+//! replica's — because their `resume` snapshot references blocks that only
+//! exist in this engine's pool. The router can only influence placement at
+//! submit time; after that, a request's home is fixed.
+//!
+//! **Kill semantics** (the fleet's failure contract, extending PR 1's
+//! deterministic failure routing): dropping the inbound sender is the
+//! fault model for a dead replica. The actor detects the disconnect,
+//! aborts its active rows (each emits a deterministic `Failed`), releases
+//! tier state for queued *preempted* requests and fails them too (their
+//! snapshots are meaningless off this replica), and hands queued *fresh*
+//! requests back as `Orphaned` — the router re-places those on surviving
+//! replicas, so a replica death costs at most the work that was already
+//! decoding on it, and no connection ever hangs.
+//!
+//! Lock-free visibility: the actor publishes [`ReplicaStatus`] atomics
+//! (free blocks, parked bytes, queue depth, liveness) plus its prefix
+//! digest every iteration; the router reads them without ever blocking on
+//! an engine.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::PoolGauges;
+use crate::scheduler::{AdmissionController, QueuedRequest, ReplicaView, RequestQueue, SloClass};
+use crate::telemetry::event;
+
+use super::{Engine, Request, Response, TokenEvent};
+
+/// Inbound control messages for one engine actor.
+pub enum EngineMsg {
+    /// Place a request on this replica (router decision already made).
+    Submit(QueuedRequest),
+    /// Client gone: release whatever state the replica holds for this id.
+    Cancel(u64),
+    /// Reply with a point-in-time [`ReplicaSnapshot`] on the given sender.
+    Snapshot(mpsc::Sender<ReplicaSnapshot>),
+    /// Finish all queued + active work, then exit cleanly.
+    Drain,
+}
+
+/// Outbound events, multiplexed onto the fleet-wide channel. Every event
+/// carries its replica index so the pump can attribute it.
+pub enum ActorEvent {
+    /// One decoded token (streaming pump forwards or drops it).
+    Token { replica: usize, ev: TokenEvent },
+    /// Terminal success + this replica's pool gauges at completion.
+    Done {
+        replica: usize,
+        resp: Response,
+        gauges: Option<PoolGauges>,
+    },
+    /// Terminal deterministic failure for a request this replica owned.
+    Failed {
+        replica: usize,
+        req: u64,
+        error: String,
+    },
+    /// A fresh (never-admitted) request this replica can no longer serve
+    /// (kill teardown). No state was lost — the router re-places it.
+    Orphaned { replica: usize, req: QueuedRequest },
+    /// The actor thread is gone. `clean` distinguishes drain from kill.
+    Exited { replica: usize, clean: bool },
+}
+
+/// Point-in-time replica introspection (the `Snapshot` reply).
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    pub replica: usize,
+    pub policy: String,
+    pub active: usize,
+    pub queue_len: usize,
+    pub digest: Vec<u64>,
+    pub pool: Option<PoolGauges>,
+}
+
+/// Lock-free routing view, published by the actor every iteration and read
+/// by the router on every placement. The digest sits behind a mutex (it is
+/// a `Vec`), swapped wholesale and only when it changed.
+#[derive(Default)]
+pub struct ReplicaStatus {
+    pub alive: AtomicBool,
+    pub free_blocks: AtomicUsize,
+    pub total_blocks: AtomicUsize,
+    pub parked_bytes: AtomicUsize,
+    pub queue_len: AtomicUsize,
+    pub active: AtomicUsize,
+    pub pressure_floor: AtomicUsize,
+    digest: Mutex<Vec<u64>>,
+}
+
+impl ReplicaStatus {
+    /// Sample everything into the router's [`ReplicaView`].
+    pub fn view(&self) -> ReplicaView {
+        ReplicaView {
+            alive: self.alive.load(Ordering::Acquire),
+            free_blocks: self.free_blocks.load(Ordering::Relaxed),
+            total_blocks: self.total_blocks.load(Ordering::Relaxed),
+            parked_bytes: self.parked_bytes.load(Ordering::Relaxed),
+            queue_len: self.queue_len.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            pressure_floor: self.pressure_floor.load(Ordering::Relaxed),
+            digest: self.digest.lock().unwrap().clone(),
+        }
+    }
+
+    fn set_digest(&self, d: Vec<u64>) {
+        let mut g = self.digest.lock().unwrap();
+        if *g != d {
+            *g = d;
+        }
+    }
+}
+
+/// The fleet's grip on one replica. `kill` drops the sender — the actor
+/// observes the disconnect and runs its teardown protocol (doc above).
+pub struct ActorHandle {
+    pub replica: usize,
+    pub status: Arc<ReplicaStatus>,
+    tx: Mutex<Option<mpsc::Sender<EngineMsg>>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ActorHandle {
+    /// True if the message was delivered to a live actor.
+    fn send(&self, msg: EngineMsg) -> bool {
+        match &*self.tx.lock().unwrap() {
+            Some(tx) => tx.send(msg).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Deliver a request to a live actor; a dead one hands the request
+    /// back so the router can place it somewhere else.
+    pub fn submit(&self, q: QueuedRequest) -> Result<(), QueuedRequest> {
+        match &*self.tx.lock().unwrap() {
+            Some(tx) => match tx.send(EngineMsg::Submit(q)) {
+                Ok(()) => Ok(()),
+                Err(mpsc::SendError(EngineMsg::Submit(q))) => Err(q),
+                Err(_) => unreachable!("submit sends only Submit"),
+            },
+            None => Err(q),
+        }
+    }
+
+    pub fn cancel(&self, id: u64) -> bool {
+        self.send(EngineMsg::Cancel(id))
+    }
+
+    /// Synchronous snapshot round-trip (None if the actor is gone).
+    pub fn snapshot(&self) -> Option<ReplicaSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        if !self.send(EngineMsg::Snapshot(tx)) {
+            return None;
+        }
+        rx.recv_timeout(Duration::from_secs(5)).ok()
+    }
+
+    /// Ask the actor to finish everything and exit cleanly.
+    pub fn drain(&self) -> bool {
+        self.send(EngineMsg::Drain)
+    }
+
+    /// Fault injection / shutdown: drop the inbound sender. The actor sees
+    /// `Disconnected` on its next receive and tears down deterministically.
+    pub fn kill(&self) {
+        self.tx.lock().unwrap().take();
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.status.alive.load(Ordering::Acquire)
+    }
+
+    /// Wait for the actor thread to exit (after `drain` or `kill`).
+    pub fn join(&self) {
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Move `engine` onto its own thread as replica `replica`, emitting
+/// [`ActorEvent`]s on `events`. The engine's metrics are labeled with the
+/// replica index iff it was marked via [`Engine::set_replica_label`] —
+/// callers running a single-replica fleet skip the label to keep the
+/// established unlabeled metric names.
+pub fn spawn_engine_actor(
+    engine: Engine,
+    replica: usize,
+    events: mpsc::Sender<ActorEvent>,
+) -> ActorHandle {
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+    let status = Arc::new(ReplicaStatus::default());
+    status.alive.store(true, Ordering::Release);
+    if let Some(pc) = &engine.cfg.pool {
+        status.pressure_floor.store(pc.low_watermark, Ordering::Relaxed);
+        status.total_blocks.store(pc.n_blocks, Ordering::Relaxed);
+        status.free_blocks.store(pc.n_blocks, Ordering::Relaxed);
+    }
+    let st = status.clone();
+    let join = std::thread::spawn(move || actor_loop(engine, replica, rx, events, st));
+    ActorHandle {
+        replica,
+        status,
+        tx: Mutex::new(Some(tx)),
+        join: Mutex::new(Some(join)),
+    }
+}
+
+/// The replica thread: the single-engine serve iteration, message-driven.
+fn actor_loop(
+    mut engine: Engine,
+    replica: usize,
+    rx: mpsc::Receiver<EngineMsg>,
+    events: mpsc::Sender<ActorEvent>,
+    status: Arc<ReplicaStatus>,
+) {
+    let queue = RequestQueue::new();
+    let mut admission = AdmissionController::new();
+    let mut classes: HashMap<u64, SloClass> = HashMap::new();
+    let mut cancels: Vec<u64> = Vec::new();
+    let mut pending: Vec<EngineMsg> = Vec::new();
+    let mut draining = false;
+    let mut killed = false;
+
+    'life: loop {
+        let mut idle = true;
+
+        // ---- inbound: pending (from the idle wait) first, then drain the
+        // channel without blocking. A disconnect here is the kill signal.
+        let mut inbox = std::mem::take(&mut pending);
+        loop {
+            match rx.try_recv() {
+                Ok(m) => inbox.push(m),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    killed = true;
+                    break;
+                }
+            }
+        }
+        for msg in inbox {
+            match msg {
+                EngineMsg::Submit(q) => {
+                    classes.insert(q.id, q.class);
+                    queue.push(q);
+                    idle = false;
+                }
+                EngineMsg::Cancel(id) => cancels.push(id),
+                EngineMsg::Snapshot(reply) => {
+                    let _ = reply.send(ReplicaSnapshot {
+                        replica,
+                        policy: engine.policy_name(),
+                        active: engine.active(),
+                        queue_len: queue.len(),
+                        digest: engine.prefix_digest(),
+                        pool: engine.pool_gauges(),
+                    });
+                }
+                EngineMsg::Drain => draining = true,
+            }
+        }
+        if killed {
+            break 'life;
+        }
+
+        // ---- cancellation sweep: same ownership routing as the
+        // single-engine loop (queued-fresh / queued-preempted / active).
+        for id in std::mem::take(&mut cancels) {
+            classes.remove(&id);
+            if let Some(q) = queue.remove(id) {
+                match &q.resume {
+                    Some(st) => engine.release_discarded_state(st, id),
+                    None => {
+                        engine.metrics.cancelled_rows += 1;
+                        if let Some(t) = engine.telemetry() {
+                            t.record(id, event::ABORT, 0, 0, 0.0, "unadmitted");
+                        }
+                    }
+                }
+            } else {
+                engine.abort_request(id);
+            }
+        }
+
+        // ---- admission under pool pressure (verbatim single-engine rules)
+        let mut admit_open = match engine.pool_pressure() {
+            Some(p) => admission.allow(&p),
+            None => true,
+        };
+        if !admit_open && engine.active() == 0 && !queue.is_empty() {
+            engine.shed_prefix_to_high_watermark();
+            if let Some(p) = engine.pool_pressure() {
+                admit_open = admission.allow(&p);
+            }
+        }
+        while admit_open && engine.has_free_row() {
+            let Some(q) = queue.try_pop() else { break };
+            let queued_s = q.queued_at.elapsed().as_secs_f64();
+            classes.insert(q.id, q.class);
+            let req = Request {
+                id: q.id,
+                prompt: q.prompt.clone(),
+                template: q.template.clone(),
+                max_new: q.max_new,
+                resume: q.resume.clone(),
+            };
+            match engine.submit(req, queued_s) {
+                Ok(true) => idle = false,
+                Ok(false) => {
+                    queue.push_front(q);
+                    break;
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    eprintln!("replica {replica}: submit error (request {}): {msg}", q.id);
+                    classes.remove(&q.id);
+                    let _ = events.send(ActorEvent::Failed {
+                        replica,
+                        req: q.id,
+                        error: msg,
+                    });
+                }
+            }
+        }
+
+        // ---- decode step: tokens first, then terminals, then re-queue
+        // preemption victims on *this* replica's front lane.
+        if engine.active() > 0 {
+            idle = false;
+            match engine.step() {
+                Ok(done) => {
+                    for ev in engine.drain_token_events() {
+                        let _ = events.send(ActorEvent::Token { replica, ev });
+                    }
+                    let gauges = engine.pool_gauges();
+                    for resp in done {
+                        classes.remove(&resp.id);
+                        let _ = events.send(ActorEvent::Done {
+                            replica,
+                            resp,
+                            gauges: gauges.clone(),
+                        });
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("engine step error: {e:#}");
+                    eprintln!("replica {replica}: {msg}");
+                    engine.drain_token_events();
+                    for id in engine.abort_rows() {
+                        classes.remove(&id);
+                        let _ = events.send(ActorEvent::Failed {
+                            replica,
+                            req: id,
+                            error: msg.clone(),
+                        });
+                    }
+                }
+            }
+            let now = Instant::now();
+            queue.push_front_all(
+                engine
+                    .take_preempted()
+                    .into_iter()
+                    .map(|r| QueuedRequest {
+                        class: classes.get(&r.id).copied().unwrap_or_default(),
+                        id: r.id,
+                        prompt: r.prompt,
+                        template: r.template,
+                        max_new: r.max_new,
+                        queued_at: now,
+                        resume: r.resume,
+                    })
+                    .collect(),
+            );
+        }
+
+        // ---- publish: registry snapshots + the router's lock-free view
+        engine.publish_telemetry();
+        publish_status(&engine, &queue, &status);
+
+        if draining && queue.is_empty() && engine.active() == 0 {
+            break 'life;
+        }
+
+        if idle {
+            if queue.is_empty() {
+                // park on the inbound channel: any message wakes us; the
+                // timeout bounds telemetry staleness while fully idle
+                match rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(m) => pending.push(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        killed = true;
+                        break 'life;
+                    }
+                }
+            } else {
+                // queued work held by the pressure latch: yield, re-evaluate
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+
+    // ---- teardown. Clean drain has nothing in flight by construction;
+    // a kill deterministically disposes of everything this replica owned.
+    if killed {
+        let msg = format!("replica {replica} killed");
+        engine.drain_token_events();
+        for id in engine.abort_rows() {
+            classes.remove(&id);
+            let _ = events.send(ActorEvent::Failed {
+                replica,
+                req: id,
+                error: msg.clone(),
+            });
+        }
+        while let Some(q) = queue.try_pop() {
+            classes.remove(&q.id);
+            match &q.resume {
+                Some(st) => {
+                    // the snapshot references this replica's pool/tier —
+                    // worthless anywhere else: release + deterministic fail
+                    engine.release_discarded_state(st, q.id);
+                    let _ = events.send(ActorEvent::Failed {
+                        replica,
+                        req: q.id,
+                        error: msg.clone(),
+                    });
+                }
+                None => {
+                    // never admitted here: the router can place it again
+                    let _ = events.send(ActorEvent::Orphaned { replica, req: q });
+                }
+            }
+        }
+    }
+    engine.publish_telemetry();
+    status.alive.store(false, Ordering::Release);
+    status.queue_len.store(0, Ordering::Relaxed);
+    status.active.store(0, Ordering::Relaxed);
+    let _ = events.send(ActorEvent::Exited {
+        replica,
+        clean: !killed,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineConfig;
+    use crate::kvpool::PoolConfig;
+
+    fn pooled_cfg(batch: usize, n_blocks: usize) -> EngineConfig {
+        let mut cfg = EngineConfig {
+            batch,
+            cache: 64,
+            budget: 40,
+            policy: "full".into(),
+            record_live: false,
+            pool: Some(PoolConfig {
+                block_size: 8,
+                n_blocks,
+                low_watermark: 2,
+                high_watermark: 4,
+            }),
+            ..Default::default()
+        };
+        cfg.params.window = 8;
+        cfg.params.recent = 8;
+        cfg
+    }
+
+    fn queued(id: u64, max_new: usize) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            prompt: "#A=3;B=7;\n>".into(),
+            template: String::new(),
+            max_new,
+            class: SloClass::Standard,
+            queued_at: Instant::now(),
+            resume: None,
+        }
+    }
+
+    /// Run the same request on a plain (non-actor) engine: the actor's
+    /// output must be byte-identical to this.
+    fn control_text(max_new: usize) -> String {
+        let mut e = Engine::new_sim(pooled_cfg(2, 16)).unwrap();
+        e.submit(
+            Request {
+                id: 1,
+                prompt: "#A=3;B=7;\n>".into(),
+                template: String::new(),
+                max_new,
+                resume: None,
+            },
+            0.0,
+        )
+        .unwrap();
+        loop {
+            let done = e.step().unwrap();
+            if let Some(r) = done.into_iter().next() {
+                return r.text;
+            }
+        }
+    }
+
+    #[test]
+    fn actor_round_trip_matches_direct_engine() {
+        let (etx, erx) = mpsc::channel();
+        let h = spawn_engine_actor(Engine::new_sim(pooled_cfg(2, 16)).unwrap(), 0, etx);
+        assert!(h.submit(queued(1, 24)).is_ok());
+        let mut tokens = String::new();
+        let mut text = None;
+        while text.is_none() {
+            match erx.recv_timeout(Duration::from_secs(10)).expect("event") {
+                ActorEvent::Token { replica, ev } => {
+                    assert_eq!(replica, 0);
+                    tokens.push_str(&ev.text);
+                }
+                ActorEvent::Done { resp, gauges, .. } => {
+                    assert_eq!(resp.id, 1);
+                    assert!(gauges.is_some(), "paged engine attaches gauges");
+                    text = Some(resp.text);
+                }
+                ActorEvent::Failed { error, .. } => panic!("unexpected failure: {error}"),
+                _ => {}
+            }
+        }
+        let text = text.unwrap();
+        assert_eq!(tokens, text, "token stream concatenates to the summary");
+        assert_eq!(text, control_text(24), "actor output == direct engine");
+        assert!(h.drain());
+        h.join();
+        assert!(!h.is_alive());
+    }
+
+    #[test]
+    fn snapshot_answers_while_idle_and_drain_is_clean() {
+        let (etx, erx) = mpsc::channel();
+        let h = spawn_engine_actor(Engine::new_sim(pooled_cfg(2, 16)).unwrap(), 3, etx);
+        let s = h.snapshot().expect("snapshot");
+        assert_eq!(s.replica, 3);
+        assert_eq!(s.policy, "full");
+        assert_eq!(s.active, 0);
+        assert!(s.pool.is_some());
+        assert!(h.drain());
+        h.join();
+        // the final event is a clean exit
+        let mut last = None;
+        while let Ok(ev) = erx.try_recv() {
+            last = Some(ev);
+        }
+        match last {
+            Some(ActorEvent::Exited { replica: 3, clean: true }) => {}
+            _ => panic!("expected clean Exited as the final event"),
+        }
+        // a dead actor rejects everything
+        assert!(h.submit(queued(9, 8)).is_err());
+        assert!(h.snapshot().is_none());
+    }
+
+    /// Kill contract: after dropping the channel mid-serve, every request
+    /// the replica owned resolves deterministically — active rows fail,
+    /// queued-fresh requests come back as re-routable orphans, and the
+    /// actor exits. Nothing hangs.
+    #[test]
+    fn kill_resolves_every_owned_request() {
+        let (etx, erx) = mpsc::channel();
+        let h = spawn_engine_actor(Engine::new_sim(pooled_cfg(1, 16)).unwrap(), 0, etx);
+        let ids: Vec<u64> = (1..=6).collect();
+        for &id in &ids {
+            assert!(h.submit(queued(id, 40)).is_ok());
+        }
+        // wait until the single row is actually decoding, then pull the plug
+        loop {
+            match erx.recv_timeout(Duration::from_secs(10)).expect("event") {
+                ActorEvent::Token { .. } => break,
+                ActorEvent::Done { .. } => break, // raced to completion: fine
+                _ => {}
+            }
+        }
+        h.kill();
+        let mut outcomes: HashMap<u64, &'static str> = HashMap::new();
+        let mut orphans = 0;
+        loop {
+            match erx.recv_timeout(Duration::from_secs(10)).expect("no hang") {
+                ActorEvent::Token { .. } => {}
+                ActorEvent::Done { resp, .. } => {
+                    assert!(outcomes.insert(resp.id, "done").is_none());
+                }
+                ActorEvent::Failed { req, .. } => {
+                    assert!(outcomes.insert(req, "failed").is_none());
+                }
+                ActorEvent::Orphaned { req, .. } => {
+                    assert!(req.resume.is_none(), "orphans are always fresh");
+                    assert!(outcomes.insert(req.id, "orphaned").is_none());
+                    orphans += 1;
+                }
+                ActorEvent::Exited { clean, .. } => {
+                    assert!(!clean, "kill is not a clean exit");
+                    break;
+                }
+            }
+        }
+        h.join();
+        for id in ids {
+            assert!(
+                outcomes.contains_key(&id),
+                "request {id} vanished without a terminal outcome"
+            );
+        }
+        // batch=1 and the kill lands within a step or two of the first
+        // token, so most of the queue was never admitted — but the exact
+        // split is a scheduling race; the contract is that orphans exist
+        // and every orphan is fresh (asserted above).
+        assert!(orphans >= 1, "queued-fresh requests must come back as orphans");
+    }
+
+    /// Satellite regression: preemption re-queues must stay on their home
+    /// replica's front lane, oldest-first — a resume snapshot references
+    /// blocks that only exist in the home engine's pool. Two actors share
+    /// the event channel; every request targets replica 0 with a pool too
+    /// small for the batch, so rows are preempted and resumed. Replica 1
+    /// must see none of that traffic, and completions must come back in
+    /// admission order (oldest victim resumed first).
+    #[test]
+    fn preemption_requeues_stay_home_oldest_first() {
+        let (etx, erx) = mpsc::channel();
+        let h0 = spawn_engine_actor(Engine::new_sim(pooled_cfg(3, 12)).unwrap(), 0, etx.clone());
+        let h1 = spawn_engine_actor(Engine::new_sim(pooled_cfg(3, 12)).unwrap(), 1, etx);
+        for id in 1..=3u64 {
+            assert!(h0.submit(queued(id, 40)).is_ok());
+        }
+        let mut done_order = Vec::new();
+        let mut preemptions = 0u64;
+        while done_order.len() < 3 {
+            match erx.recv_timeout(Duration::from_secs(20)).expect("fleet event") {
+                ActorEvent::Token { replica, .. } => assert_eq!(replica, 0),
+                ActorEvent::Done { replica, resp, gauges } => {
+                    assert_eq!(replica, 0, "work must not migrate off its home");
+                    done_order.push(resp.id);
+                    if let Some(g) = gauges {
+                        preemptions = preemptions.max(g.preemptions);
+                    }
+                }
+                ActorEvent::Failed { error, .. } => panic!("unexpected failure: {error}"),
+                ActorEvent::Orphaned { .. } => panic!("no kill in this test"),
+                ActorEvent::Exited { .. } => panic!("no exit in this test"),
+            }
+        }
+        assert!(
+            preemptions > 0,
+            "pool must be small enough to force preemption, else this test is vacuous"
+        );
+        assert_eq!(
+            done_order,
+            vec![1, 2, 3],
+            "re-queued victims must resume oldest-first on their home replica"
+        );
+        // replica 1 idled throughout: no rows, no queue, still alive
+        assert_eq!(h1.status.active.load(Ordering::Relaxed), 0);
+        assert_eq!(h1.status.queue_len.load(Ordering::Relaxed), 0);
+        assert!(h1.is_alive());
+        h0.drain();
+        h1.drain();
+        h0.join();
+        h1.join();
+    }
+
+    #[test]
+    fn status_view_tracks_pool_and_digest() {
+        let (etx, _erx) = mpsc::channel();
+        let mut cfg = pooled_cfg(2, 16);
+        cfg.prefix_cache = Some(crate::kvpool::PrefixCacheConfig::default());
+        let h = spawn_engine_actor(Engine::new_sim(cfg).unwrap(), 0, etx);
+        let v = h.status.view();
+        assert!(v.alive);
+        assert_eq!(v.total_blocks, 16);
+        assert_eq!(v.pressure_floor, 2);
+        // submit → the served prompt seeds the prefix cache → the digest
+        // the actor publishes becomes non-empty
+        assert!(h.submit(queued(1, 16)).is_ok());
+        let t0 = Instant::now();
+        loop {
+            let v = h.status.view();
+            if !v.digest.is_empty() {
+                assert!(v.digest.windows(2).all(|w| w[0] < w[1]));
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "digest never published"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        h.kill();
+        h.join();
+        assert!(!h.status.view().alive);
+    }
+}
+
+fn publish_status(engine: &Engine, queue: &RequestQueue, status: &ReplicaStatus) {
+    if let Some(p) = engine.pool_pressure() {
+        status.free_blocks.store(p.free, Ordering::Relaxed);
+        status.total_blocks.store(p.total, Ordering::Relaxed);
+        status.pressure_floor.store(p.low_watermark, Ordering::Relaxed);
+    }
+    if let Some(g) = engine.pool_gauges() {
+        status.parked_bytes.store(g.parked_bytes, Ordering::Relaxed);
+    }
+    status.queue_len.store(queue.len(), Ordering::Relaxed);
+    status.active.store(engine.active(), Ordering::Relaxed);
+    status.set_digest(engine.prefix_digest());
+}

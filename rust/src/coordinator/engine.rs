@@ -85,6 +85,11 @@ pub struct Engine {
     /// each lifecycle point, and `publish_telemetry` pushes registry
     /// snapshots. `None` costs nothing on any hot path.
     telemetry: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
+    /// Fleet identity: set by the actor wrapper when this engine is one of
+    /// N replicas sharing a registry. Decorates every published metric
+    /// with a `{replica="i"}` label; `None` (single-engine) publishes the
+    /// exact unlabeled names PRs 6–7 established.
+    replica: Option<usize>,
     vocab: usize,
     /// Max blocks a row's table can hold (paged staging width).
     blocks_per_row: usize,
@@ -170,6 +175,7 @@ impl Engine {
             admit_seq: 0,
             metrics: EngineMetrics::default(),
             telemetry: None,
+            replica: None,
             blocks_per_row,
             mask_buf: vec![0.0; b * s],
             tok_buf: vec![0; b],
@@ -262,6 +268,33 @@ impl Engine {
         self.telemetry = Some(t);
     }
 
+    /// The attached telemetry handle, if any (the fleet pump shares it).
+    pub fn telemetry(&self) -> Option<&std::sync::Arc<crate::telemetry::Telemetry>> {
+        self.telemetry.as_ref()
+    }
+
+    /// Mark this engine as replica `r` of a fleet: every metric published
+    /// from here on carries a `{replica="r"}` label so N engines can share
+    /// one registry without clobbering each other.
+    pub fn set_replica_label(&mut self, r: usize) {
+        self.replica = Some(r);
+    }
+
+    pub fn replica(&self) -> Option<usize> {
+        self.replica
+    }
+
+    /// The prefix cache's routing digest (sorted whole-block header
+    /// hashes), or empty without a cache. The fleet actor exports this to
+    /// its published status each iteration; the router probes request
+    /// header hashes against it.
+    pub fn prefix_digest(&self) -> Vec<u64> {
+        self.prefix_cache
+            .as_ref()
+            .map(|c| c.digest())
+            .unwrap_or_default()
+    }
+
     fn tele_event(
         &self,
         req: u64,
@@ -284,26 +317,35 @@ impl Engine {
         let Some(t) = &self.telemetry else { return };
         let reg = &t.registry;
         let m = &self.metrics;
-        reg.set_counter(names::TOKENS_OUT, m.tokens_out);
-        reg.set_counter(names::STEPS, m.steps);
-        reg.set_counter(names::REQUESTS_FINISHED, m.requests_finished);
-        reg.set_counter("lazyeviction_eviction_passes_total", m.eviction_count);
-        reg.set_counter("lazyeviction_prefill_skips_total", m.prefill_skips);
-        reg.set_counter("lazyeviction_resume_fallbacks_total", m.resume_fallbacks);
-        reg.set_counter(names::STREAMED_TOKENS, m.streamed_tokens);
-        reg.set_counter(names::CANCELLED_ROWS, m.cancelled_rows);
-        reg.set_gauge("lazyeviction_active_rows", self.active() as f64);
-        reg.set_gauge("lazyeviction_batch_rows", self.cfg.batch as f64);
-        reg.set_gauge("lazyeviction_throughput_tokens_per_s", m.throughput());
-        reg.set_histogram(names::STEP_LATENCY_MS, &m.step_hist_ms);
-        reg.set_histogram(names::PREFILL_LATENCY_MS, &m.prefill_hist_ms);
-        reg.set_histogram(names::TTFT_MS, &m.ttft_hist_ms);
-        reg.set_histogram(names::TPOT_MS, &m.tpot_hist_ms);
-        reg.set_histogram(names::QUEUE_WAIT_MS, &m.queue_wait_hist_ms);
-        reg.set_histogram(names::EVICTION_PASS_MS, &m.evict_hist_ms);
-        reg.set_histogram(names::LIVE_TOKENS, &m.live_hist);
+        // fleet replicas decorate every name; single-engine keeps the
+        // exact unlabeled names existing scrapers and tests assert on
+        let key = |n: &str| match self.replica {
+            Some(r) => crate::telemetry::labeled(n, "replica", r),
+            None => n.to_string(),
+        };
+        reg.set_counter(&key(names::TOKENS_OUT), m.tokens_out);
+        reg.set_counter(&key(names::STEPS), m.steps);
+        reg.set_counter(&key(names::REQUESTS_FINISHED), m.requests_finished);
+        reg.set_counter(&key("lazyeviction_eviction_passes_total"), m.eviction_count);
+        reg.set_counter(&key("lazyeviction_prefill_skips_total"), m.prefill_skips);
+        reg.set_counter(&key("lazyeviction_resume_fallbacks_total"), m.resume_fallbacks);
+        reg.set_counter(&key(names::STREAMED_TOKENS), m.streamed_tokens);
+        reg.set_counter(&key(names::CANCELLED_ROWS), m.cancelled_rows);
+        reg.set_gauge(&key("lazyeviction_active_rows"), self.active() as f64);
+        reg.set_gauge(&key("lazyeviction_batch_rows"), self.cfg.batch as f64);
+        reg.set_gauge(&key("lazyeviction_throughput_tokens_per_s"), m.throughput());
+        reg.set_histogram(&key(names::STEP_LATENCY_MS), &m.step_hist_ms);
+        reg.set_histogram(&key(names::PREFILL_LATENCY_MS), &m.prefill_hist_ms);
+        reg.set_histogram(&key(names::TTFT_MS), &m.ttft_hist_ms);
+        reg.set_histogram(&key(names::TPOT_MS), &m.tpot_hist_ms);
+        reg.set_histogram(&key(names::QUEUE_WAIT_MS), &m.queue_wait_hist_ms);
+        reg.set_histogram(&key(names::EVICTION_PASS_MS), &m.evict_hist_ms);
+        reg.set_histogram(&key(names::LIVE_TOKENS), &m.live_hist);
         if let Some(g) = self.pool_gauges() {
-            g.publish(reg);
+            match self.replica {
+                Some(r) => g.publish_labeled(reg, r),
+                None => g.publish(reg),
+            }
         }
     }
 

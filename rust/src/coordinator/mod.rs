@@ -1,9 +1,13 @@
 //! L3 coordinator: request/response types, engine configuration, and the
 //! decode-loop engine that wires runtime ⇄ kvcache ⇄ eviction together.
 
+pub mod actor;
 pub mod engine;
 pub mod row;
 
+pub use actor::{
+    spawn_engine_actor, ActorEvent, ActorHandle, EngineMsg, ReplicaSnapshot, ReplicaStatus,
+};
 pub use engine::Engine;
 
 use std::sync::Arc;

@@ -52,5 +52,7 @@ pub mod table;
 
 pub use arena::{BlockCopy, KvArena, KvLayout, RowMove};
 pub use pool::{BlockId, BlockPool, PoolConfig, PoolPressure};
-pub use prefix::{PrefillSeed, PrefixCache, PrefixCacheConfig, PrefixHit};
+pub use prefix::{
+    boundary_hashes, prefix_hash, PrefillSeed, PrefixCache, PrefixCacheConfig, PrefixHit,
+};
 pub use table::BlockTable;

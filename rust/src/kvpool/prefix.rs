@@ -94,7 +94,11 @@ pub fn prefix_hash(ids: &[u32]) -> u64 {
 /// Rolling FNV-1a snapshots at every block boundary: `out[k]` is
 /// `prefix_hash(&ids[..k * block_size])`. One O(len) pass, so a lookup
 /// hashes the prompt once no matter how many entries it is checked against.
-fn boundary_hashes(ids: &[u32], block_size: usize) -> Vec<u64> {
+/// Public because the fleet router keys placement on the same hashes
+/// ([`crate::scheduler::routing::header_hashes`]): a probe key computed here
+/// is bit-identical to the entry keys `insert` stores, so a router match
+/// means the target replica's cache would pre-filter the same entry.
+pub fn boundary_hashes(ids: &[u32], block_size: usize) -> Vec<u64> {
     let n_bounds = ids.len() / block_size;
     let mut out = Vec::with_capacity(n_bounds + 1);
     let mut h = FNV_OFFSET;
@@ -363,6 +367,20 @@ impl PrefixCache {
     pub fn clear(&mut self, pool: &mut BlockPool) {
         while self.shed_lru(pool) {}
     }
+
+    /// The entry keys (whole-block header hashes), sorted — the replica's
+    /// routing digest. The fleet router compares a prompt's block-boundary
+    /// hashes against each replica's digest to place the request where the
+    /// donor blocks live. Hashes are a *placement hint* only: a collision
+    /// can at worst route a request to a replica whose cache then
+    /// token-verifies and rejects the match ([`PrefixCache::lookup`]), so
+    /// mis-routing never shares wrong bytes — it just forfeits one hit.
+    pub fn digest(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self.entries.iter().map(|e| e.hash).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
 }
 
 #[cfg(test)]
@@ -507,6 +525,49 @@ mod tests {
             c.lookup(&[9, 9, 9, 9], 4).is_none(),
             "token check must reject"
         );
+    }
+
+    #[test]
+    fn digest_lists_entry_hashes_sorted_deduped() {
+        let mut p = pool(16);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        assert!(c.digest().is_empty(), "empty cache exports an empty digest");
+        let a: Vec<u32> = (0..8).collect();
+        let b: Vec<u32> = (20..24).collect();
+        let ta = table_for(8, &mut p);
+        let tb = table_for(4, &mut p);
+        c.insert(&a, &ta, None, &mut p);
+        c.insert(&b, &tb, None, &mut p);
+        let d = c.digest();
+        assert_eq!(d.len(), 2);
+        assert!(d.windows(2).all(|w| w[0] < w[1]), "sorted, deduped");
+        assert!(d.contains(&prefix_hash(&a)));
+        assert!(d.contains(&prefix_hash(&b)));
+        // digest keys are exactly the probe keys boundary_hashes computes,
+        // so a router match implies the cache's own hash pre-filter matches
+        assert_eq!(boundary_hashes(&a, 4)[2], prefix_hash(&a));
+        c.clear(&mut p);
+        assert!(c.digest().is_empty());
+    }
+
+    /// Fleet-routing companion to `hash_collision_cannot_serve_wrong_tokens`:
+    /// two prompts with equal hashes but different tokens may be *routed*
+    /// to the same replica (the digest is hash-only), but they can never
+    /// *share* — the cache's token verification rejects the colliding
+    /// probe, so the worst outcome of a collision is one lost hit.
+    #[test]
+    fn digest_collision_is_a_hint_never_a_share() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(PrefixCacheConfig::default());
+        let ids: Vec<u32> = (0..4).collect();
+        let donor = table_for(4, &mut p);
+        c.insert(&ids, &donor, None, &mut p);
+        let colliding: Vec<u32> = vec![9, 9, 9, 9];
+        c.entries[0].hash = prefix_hash(&colliding);
+        // the routing digest now matches the colliding prompt's header hash
+        assert!(c.digest().contains(&boundary_hashes(&colliding, 4)[1]));
+        // ...but a lookup on that replica still refuses to splice blocks
+        assert!(c.lookup(&colliding, 4).is_none());
     }
 
     #[test]

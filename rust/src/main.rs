@@ -18,6 +18,12 @@
 //! (demotion/promotion; see kvtier) and --preempt-mode
 //! recompute|swap|auto picks how preempted rows come back.
 //!
+//! Fleet flags (serve/sim-serve): --replicas N runs N engine replicas
+//! behind the prefix-affinity router (--routing affinity|pressure|rr,
+//! --router-seed for the deterministic tie-break); --fault-injection
+//! enables the kill_replica line command for chaos tests. See
+//! docs/fleet.md.
+//!
 //! Telemetry flags (serve/sim-serve): --metrics-addr HOST:PORT starts a
 //! Prometheus-style scrape listener (`GET /metrics`, `GET /trace`),
 //! --trace-out FILE streams flight-recorder lifecycle events as JSONL,
@@ -171,26 +177,50 @@ fn telemetry_from(
     Ok(Some(t))
 }
 
+/// Fleet flags shared by serve/sim-serve: `--replicas N` (default 1),
+/// `--routing affinity|pressure|rr`, `--router-seed`, `--fault-injection`
+/// (enables the `kill_replica` line command — chaos testing only).
+fn fleet_options_from(args: &Args) -> Result<(usize, lazyeviction::server::FleetOptions)> {
+    let replicas = args.usize_or("replicas", 1);
+    anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+    let mut opts = lazyeviction::server::FleetOptions::default();
+    if let Some(r) = args.get("routing") {
+        opts.routing = lazyeviction::scheduler::Routing::parse(r)
+            .ok_or_else(|| anyhow::anyhow!("unknown --routing '{r}' (affinity|pressure|rr)"))?;
+    }
+    opts.seed = args.u64_or("router-seed", opts.seed);
+    opts.fault_injection = args.bool_flag("fault-injection");
+    Ok((replicas, opts))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = build_engine(args)?;
+    let (replicas, opts) = fleet_options_from(args)?;
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        engines.push(build_engine(args)?);
+    }
     let addr = args.str_or("addr", "127.0.0.1:8088");
     let shutdown = Arc::new(AtomicBool::new(false));
     let telemetry = telemetry_from(args, &shutdown)?;
-    lazyeviction::server::serve_with_telemetry(engine, &addr, shutdown, telemetry)
+    lazyeviction::server::serve_fleet(engines, &addr, shutdown, telemetry, opts)
 }
 
 fn cmd_sim_serve(args: &Args) -> Result<()> {
+    let (replicas, opts) = fleet_options_from(args)?;
     let mut cfg = engine_config_from(args);
     apply_auto_watermarks(args, &mut cfg)?;
     eprintln!(
         "sim engine: batch={} cache={} budget={} policy={} (artifact-free backend)",
         cfg.batch, cfg.cache, cfg.budget, cfg.policy
     );
-    let engine = Engine::new_sim(cfg)?;
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        engines.push(Engine::new_sim(cfg.clone())?);
+    }
     let addr = args.str_or("addr", "127.0.0.1:8088");
     let shutdown = Arc::new(AtomicBool::new(false));
     let telemetry = telemetry_from(args, &shutdown)?;
-    lazyeviction::server::serve_with_telemetry(engine, &addr, shutdown, telemetry)
+    lazyeviction::server::serve_fleet(engines, &addr, shutdown, telemetry, opts)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -323,8 +353,9 @@ fn main() -> Result<()> {
                  pool flags:   --pool-blocks N --block-size 16 --pool-low 4 --pool-high 8 --auto-watermarks\n\
                  prefix flags: --prefix-entries 64 --no-prefix-cache\n\
                  tier flags:   --host-tier-bytes N --preempt-mode recompute|swap|auto\n\
+                 fleet flags:  --replicas N --routing affinity|pressure|rr --router-seed S --fault-injection\n\
                  telemetry:    --metrics-addr HOST:PORT --trace-out FILE --trace-events 4096\n\
-                 every flag and the server's pool gauge fields: docs/serving.md"
+                 every flag and the server's pool gauge fields: docs/serving.md; fleet: docs/fleet.md"
             );
             std::process::exit(2);
         }

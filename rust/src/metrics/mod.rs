@@ -352,8 +352,23 @@ impl PoolGauges {
     /// Publish every field into a registry under the
     /// `lazyeviction_pool_` namespace (counters clamped monotone there).
     pub fn publish(&self, reg: &crate::telemetry::Registry) {
+        self.publish_with(reg, None);
+    }
+
+    /// Fleet variant: publish under `lazyeviction_pool_<field>{replica="r"}`
+    /// so N replicas' pools coexist in one registry. The exposition groups
+    /// the labeled samples into one family per field.
+    pub fn publish_labeled(&self, reg: &crate::telemetry::Registry, replica: usize) {
+        self.publish_with(reg, Some(replica));
+    }
+
+    fn publish_with(&self, reg: &crate::telemetry::Registry, replica: Option<usize>) {
         for (name, value, kind) in self.fields() {
-            let metric = format!("{}{name}", crate::telemetry::names::POOL_PREFIX);
+            let base = format!("{}{name}", crate::telemetry::names::POOL_PREFIX);
+            let metric = match replica {
+                Some(r) => crate::telemetry::labeled(&base, "replica", r),
+                None => base,
+            };
             match kind {
                 MetricKind::Counter => reg.set_counter(&metric, value as u64),
                 MetricKind::Gauge => reg.set_gauge(&metric, value),

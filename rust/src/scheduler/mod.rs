@@ -22,13 +22,24 @@
 //! (enqueue time minus accumulated wait, plus the class's TTFT target) —
 //! TTFT-priority admission with aging built in. Declined/preempted
 //! re-queues bypass deadline ordering entirely (front lane).
+//!
+//! Above the per-replica queues sits the fleet layer ([`routing`]): a
+//! [`routing::Router`] places each incoming request on one of N engine
+//! replicas by prefix affinity (block-boundary header hashes probed
+//! against per-replica `PrefixCache` digests) with pool-pressure
+//! balancing as the fallback. Each replica then runs exactly the
+//! single-engine admission/preemption machinery above, over its own
+//! queue — preemption re-queues in particular stay on their home
+//! replica's front lane, oldest-victim-first.
 
 pub mod admission;
 pub mod preempt;
 pub mod queue;
+pub mod routing;
 
 pub use admission::{derive_watermarks, AdmissionController};
 pub use queue::{QueuedRequest, RequestQueue, SloClass};
+pub use routing::{header_hashes, Decision, ReplicaView, RouteReason, Router, RouterCounters, Routing};
 
 /// Iteration-level admission decisions for a fixed-row engine.
 #[derive(Debug)]

@@ -1,0 +1,564 @@
+//! Fleet routing: place each request on the engine replica where its KV
+//! sharing can actually pay off, fall back to pool pressure elsewhere.
+//!
+//! LazyEviction's prefix reuse (and Token Importance Recurrence generally)
+//! only helps where the donor blocks *live* — a prompt whose header sits in
+//! replica 2's `PrefixCache` is a guaranteed prefill skip there and a cold
+//! prefill anywhere else. The router therefore keys placement on the same
+//! block-boundary FNV-1a hashes the cache itself stores
+//! ([`crate::kvpool::boundary_hashes`]): each replica periodically exports
+//! the sorted hash set of its cache entries ([`crate::kvpool::PrefixCache::
+//! digest`]), and [`Router::choose`] probes a request's *header hashes*
+//! (every whole-block prefix of its prompt, longest first) against those
+//! digests. Hashes are a placement hint only — the target cache still
+//! token-verifies on lookup, so a collision can at worst forfeit a hit,
+//! never splice wrong bytes.
+//!
+//! Two affinity sources, checked in order:
+//!
+//! 1. **sticky map** — the router remembers where it last *sent* each
+//!    longest header hash. Fresher than any digest (it records the latest
+//!    actual decision): it covers the publish race — the first request of
+//!    a burst seeds a replica's cache, but that replica's digest is only
+//!    re-exported on its next telemetry tick, so without stickiness the
+//!    rest of the burst would scatter — and keeps a rebalanced header on
+//!    its new home;
+//! 2. **digest match** — some replica's published digest contains one of
+//!    the request's header hashes (longest match wins, ties broken by the
+//!    pressure ordering below).
+//!
+//! Everything else (no header match, `--routing pressure`, affinity target
+//! starved) falls back to **pressure balancing** over the replica gauges
+//! the telemetry layer already exports: most free blocks first, then fewest
+//! parked tier bytes, then shortest queue+active load, then a *seeded*
+//! deterministic hash tie-break — so equal-pressure placement is a pure
+//! function of (seed, request id) and tests can pin it.
+//!
+//! An affinity target that has fallen at-or-under its free-block floor
+//! (`pressure_floor`, wired to the pool's low watermark) is *rebalanced*:
+//! a cold prefill elsewhere beats queueing behind a preemption storm, and
+//! `router_rebalances_total` counts how often that trade was taken.
+
+use std::collections::HashMap;
+
+use crate::kvpool::boundary_hashes;
+
+/// Routing policy selected by `--routing affinity|pressure|rr`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Routing {
+    /// Prefix-affinity first, pressure fallback (the default).
+    Affinity,
+    /// Pure pressure balancing (ignores digests).
+    Pressure,
+    /// Round-robin over live replicas (baseline / bench control).
+    RoundRobin,
+}
+
+impl Routing {
+    pub fn parse(s: &str) -> Option<Routing> {
+        match s {
+            "affinity" => Some(Routing::Affinity),
+            "pressure" => Some(Routing::Pressure),
+            "rr" | "round-robin" => Some(Routing::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Routing::Affinity => "affinity",
+            Routing::Pressure => "pressure",
+            Routing::RoundRobin => "rr",
+        }
+    }
+}
+
+/// One replica's routing-relevant state, sampled from its published
+/// `ReplicaStatus` atomics + digest. A dead replica (`alive == false`)
+/// is never chosen.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaView {
+    pub alive: bool,
+    pub free_blocks: usize,
+    pub total_blocks: usize,
+    pub parked_bytes: usize,
+    pub queue_len: usize,
+    pub active: usize,
+    /// Free-block level at or under which this replica counts as starved
+    /// (wired to the pool's low watermark).
+    pub pressure_floor: usize,
+    /// Sorted whole-block header hashes of the replica's prefix cache.
+    pub digest: Vec<u64>,
+}
+
+impl ReplicaView {
+    fn starved(&self) -> bool {
+        self.free_blocks <= self.pressure_floor
+    }
+
+    fn has_hash(&self, h: u64) -> bool {
+        self.digest.binary_search(&h).is_ok()
+    }
+}
+
+/// Why `choose` picked the replica it picked (drives the router counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteReason {
+    /// Header hash matched a replica digest or the sticky map.
+    Affinity,
+    /// No affinity signal (or policy `pressure`): gauge-balanced pick.
+    Pressure,
+    /// Round-robin policy.
+    RoundRobin,
+    /// Affinity target was starved; re-placed by pressure.
+    Rebalanced,
+}
+
+/// A placement decision: target replica + how it was reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub replica: usize,
+    pub reason: RouteReason,
+}
+
+/// Monotone counters the router publishes as
+/// `lazyeviction_router_{routed_affinity,routed_pressure,routed_rr,
+/// rebalances}_total`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterCounters {
+    pub routed_affinity: u64,
+    pub routed_pressure: u64,
+    pub routed_rr: u64,
+    pub rebalances: u64,
+}
+
+/// Every whole-block header hash of `ids`, **longest prefix first**, for
+/// probing against replica digests. This is [`boundary_hashes`] minus its
+/// k = 0 snapshot: the hash of the empty prefix is a constant
+/// (`FNV_OFFSET`) that every prompt shares, so including it would make
+/// every request "match" any replica whose cache is non-empty.
+pub fn header_hashes(ids: &[u32], block_size: usize) -> Vec<u64> {
+    let mut out = boundary_hashes(ids, block_size);
+    out.remove(0);
+    out.reverse();
+    out
+}
+
+/// Upper bound on sticky-map entries before it is wholesale cleared.
+/// Stickiness only matters within a burst (until the target replica's next
+/// digest publish), so losing the map costs at most one pressure-routed
+/// request per active header — bounded memory matters more.
+const STICKY_CAP: usize = 4096;
+
+/// The fleet placement engine. One per server; callers sample per-replica
+/// [`ReplicaView`]s and ask for a [`Decision`].
+#[derive(Debug)]
+pub struct Router {
+    policy: Routing,
+    seed: u64,
+    /// longest header hash → replica we last sent it to.
+    sticky: HashMap<u64, usize>,
+    rr_next: usize,
+    pub counters: RouterCounters,
+}
+
+impl Router {
+    pub fn new(policy: Routing, seed: u64) -> Router {
+        Router {
+            policy,
+            seed,
+            sticky: HashMap::new(),
+            rr_next: 0,
+            counters: RouterCounters::default(),
+        }
+    }
+
+    pub fn policy(&self) -> Routing {
+        self.policy
+    }
+
+    /// Pick a replica for a request with header hashes `hashes` (longest
+    /// first, from [`header_hashes`]) and id `req_id` (tie-break input).
+    /// Returns `None` iff no replica is alive.
+    pub fn choose(&mut self, hashes: &[u64], req_id: u64, views: &[ReplicaView]) -> Option<Decision> {
+        if !views.iter().any(|v| v.alive) {
+            return None;
+        }
+        match self.policy {
+            Routing::RoundRobin => {
+                let n = views.len();
+                for _ in 0..n {
+                    let r = self.rr_next % n;
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if views[r].alive {
+                        self.counters.routed_rr += 1;
+                        return Some(Decision {
+                            replica: r,
+                            reason: RouteReason::RoundRobin,
+                        });
+                    }
+                }
+                None
+            }
+            Routing::Pressure => Some(self.by_pressure(hashes, req_id, views)),
+            Routing::Affinity => Some(self.by_affinity(hashes, req_id, views)),
+        }
+    }
+
+    fn by_affinity(&mut self, hashes: &[u64], req_id: u64, views: &[ReplicaView]) -> Decision {
+        // 1. sticky map: where we last *sent* this exact header. Checked
+        //    before the digests because it is always fresher — it records
+        //    the latest actual decision, while a digest is only as recent
+        //    as its replica's last publish. This both covers the publish
+        //    race (burst follows its first request) and keeps a rebalanced
+        //    header on its *new* home even though the old home's digest
+        //    still lists it.
+        let mut home: Option<(u64, usize)> = None;
+        if let Some(&h) = hashes.first() {
+            if let Some(&r) = self.sticky.get(&h) {
+                if views.get(r).map(|v| v.alive).unwrap_or(false) {
+                    home = Some((h, r));
+                }
+            }
+        }
+        // 2. longest header hash present in a live replica's digest.
+        if home.is_none() {
+            'probe: for &h in hashes {
+                let mut best: Option<usize> = None;
+                for (r, v) in views.iter().enumerate() {
+                    if v.alive && v.has_hash(h) && self.better_pressure(views, r, best, req_id) {
+                        best = Some(r);
+                    }
+                }
+                if let Some(r) = best {
+                    home = Some((h, r));
+                    break 'probe;
+                }
+            }
+        }
+        if let Some((h, r)) = home {
+            if views[r].starved() {
+                // The home replica is under its free-block floor: a cold
+                // prefill on a healthy replica beats queueing behind a
+                // preemption storm. Only rebalance if somewhere better
+                // actually exists.
+                let alt = self.pressure_pick(req_id, views);
+                if alt != r && !views[alt].starved() {
+                    self.counters.rebalances += 1;
+                    self.counters.routed_pressure += 1;
+                    self.remember(h, alt);
+                    return Decision {
+                        replica: alt,
+                        reason: RouteReason::Rebalanced,
+                    };
+                }
+            }
+            self.counters.routed_affinity += 1;
+            self.remember(h, r);
+            return Decision {
+                replica: r,
+                reason: RouteReason::Affinity,
+            };
+        }
+        let d = self.by_pressure(hashes, req_id, views);
+        if let Some(&h) = hashes.first() {
+            self.remember(h, d.replica);
+        }
+        d
+    }
+
+    fn by_pressure(&mut self, _hashes: &[u64], req_id: u64, views: &[ReplicaView]) -> Decision {
+        let r = self.pressure_pick(req_id, views);
+        self.counters.routed_pressure += 1;
+        Decision {
+            replica: r,
+            reason: RouteReason::Pressure,
+        }
+    }
+
+    /// Gauge-balanced pick over live replicas: max free blocks, then min
+    /// parked bytes, then min (queue + active), then seeded hash of
+    /// (seed, req_id, replica) — fully deterministic given the seed.
+    fn pressure_pick(&self, req_id: u64, views: &[ReplicaView]) -> usize {
+        let mut best: Option<usize> = None;
+        for (r, v) in views.iter().enumerate() {
+            if v.alive && self.better_pressure(views, r, best, req_id) {
+                best = Some(r);
+            }
+        }
+        best.expect("choose() pre-checked a live replica exists")
+    }
+
+    /// Is replica `cand` a strictly better pressure pick than `cur`?
+    fn better_pressure(&self, views: &[ReplicaView], cand: usize, cur: Option<usize>, req_id: u64) -> bool {
+        let cur = match cur {
+            None => return true,
+            Some(c) => c,
+        };
+        let key = |x: &ReplicaView| {
+            (
+                std::cmp::Reverse(x.free_blocks),
+                x.parked_bytes,
+                x.queue_len + x.active,
+            )
+        };
+        match key(&views[cand]).cmp(&key(&views[cur])) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            // seeded tie-break: smaller mixed hash wins; replica index is
+            // mixed in so different replicas get different draws.
+            std::cmp::Ordering::Equal => self.tie_hash(req_id, cand) < self.tie_hash(req_id, cur),
+        }
+    }
+
+    fn tie_hash(&self, req_id: u64, replica: usize) -> u64 {
+        // splitmix64 over (seed ^ req_id ^ replica-salt): cheap, stateless,
+        // and stable across calls — equal-pressure choice is reproducible.
+        let mut z = self
+            .seed
+            .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(req_id.wrapping_add(1)))
+            .wrapping_add((replica as u64).wrapping_mul(0xbf58_476d_1ce4_e5b9));
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    fn remember(&mut self, hash: u64, replica: usize) {
+        if self.sticky.len() >= STICKY_CAP {
+            self.sticky.clear();
+        }
+        self.sticky.insert(hash, replica);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::prefix_hash;
+
+    fn view(free: usize) -> ReplicaView {
+        ReplicaView {
+            alive: true,
+            free_blocks: free,
+            total_blocks: 64,
+            parked_bytes: 0,
+            queue_len: 0,
+            active: 0,
+            pressure_floor: 4,
+            digest: Vec::new(),
+        }
+    }
+
+    // ---- satellite: routing-hash property tests -------------------------
+
+    /// Extending a prompt by whole blocks never changes the hashes of the
+    /// blocks it already had — the property affinity routing depends on:
+    /// a follow-up request with a longer body still probes the same header
+    /// keys its predecessor seeded.
+    #[test]
+    fn header_hash_stable_under_block_aligned_extension() {
+        let bs = 4usize;
+        let base: Vec<u32> = (0..12).collect(); // 3 whole blocks
+        let mut extended = base.clone();
+        extended.extend(100..108); // +2 whole blocks
+        let hb = header_hashes(&base, bs);
+        let he = header_hashes(&extended, bs);
+        assert_eq!(hb.len(), 3);
+        assert_eq!(he.len(), 5);
+        // longest-first ordering: base's hashes are the *tail* of extended's
+        assert_eq!(&he[2..], &hb[..], "shared whole-block hashes identical");
+        // and each is exactly the cache's own entry key for that prefix
+        assert_eq!(hb[0], prefix_hash(&base));
+        assert_eq!(he[0], prefix_hash(&extended));
+    }
+
+    /// A sub-block tail changes nothing: header hashes only exist at block
+    /// boundaries, so ragged suffixes can't perturb placement.
+    #[test]
+    fn header_hash_ignores_ragged_tail() {
+        let bs = 4usize;
+        let base: Vec<u32> = (0..8).collect();
+        let mut ragged = base.clone();
+        ragged.extend([7, 7, 7]); // 3 tokens: not a whole block
+        assert_eq!(header_hashes(&base, bs), header_hashes(&ragged, bs));
+    }
+
+    /// The empty-prefix snapshot must be excluded — it is a constant every
+    /// prompt shares, so keeping it would make everything "match".
+    #[test]
+    fn header_hashes_exclude_empty_prefix() {
+        let ids: Vec<u32> = (0..4).collect();
+        let hs = header_hashes(&ids, 4);
+        assert_eq!(hs, vec![prefix_hash(&ids)]);
+        assert!(header_hashes(&ids[..3], 4).is_empty(), "sub-block prompt has no header keys");
+    }
+
+    /// Equal pressure everywhere → the pick is a pure function of
+    /// (seed, request id): same across router instances with the same
+    /// seed, and at least one req_id maps to a different replica so the
+    /// tie-break actually spreads load.
+    #[test]
+    fn equal_pressure_tie_break_is_seeded_and_deterministic() {
+        let views = vec![view(32), view(32), view(32)];
+        let picks: Vec<usize> = (0..64)
+            .map(|id| {
+                let mut a = Router::new(Routing::Pressure, 7);
+                let mut b = Router::new(Routing::Pressure, 7);
+                let pa = a.choose(&[], id, &views).unwrap().replica;
+                let pb = b.choose(&[], id, &views).unwrap().replica;
+                assert_eq!(pa, pb, "same seed, same id → same replica");
+                pa
+            })
+            .collect();
+        assert!(
+            picks.iter().any(|&p| p != picks[0]),
+            "tie-break must spread across replicas, got {picks:?}"
+        );
+        // a different seed is allowed to (and here does) permute some pick
+        let mut other = Router::new(Routing::Pressure, 8);
+        let differs = (0..64).any(|id| {
+            let p = other.choose(&[], id, &views).unwrap().replica;
+            p != picks[id as usize]
+        });
+        assert!(differs, "seed must influence the tie-break");
+    }
+
+    // ---- affinity / pressure / rr behavior ------------------------------
+
+    #[test]
+    fn digest_match_routes_home_longest_first() {
+        let ids: Vec<u32> = (0..8).collect();
+        let hs = header_hashes(&ids, 4); // [hash(8 tok), hash(4 tok)]
+        let mut views = vec![view(32), view(8), view(32)];
+        views[1].digest = vec![hs[1]]; // replica 1 knows the short header
+        views[2].digest = vec![hs[0]]; // replica 2 knows the full prompt
+        views[1].digest.sort_unstable();
+        views[2].digest.sort_unstable();
+        let mut r = Router::new(Routing::Affinity, 7);
+        let d = r.choose(&hs, 1, &views).unwrap();
+        assert_eq!(d.replica, 2, "longest match wins even at lower free");
+        assert_eq!(d.reason, RouteReason::Affinity);
+        assert_eq!(r.counters.routed_affinity, 1);
+        assert_eq!(r.counters.routed_pressure, 0);
+    }
+
+    /// The sticky map covers the digest-publish race: once a header has
+    /// been *sent* somewhere, follow-ups go there too even though the
+    /// replica's digest hasn't been re-exported yet.
+    #[test]
+    fn sticky_map_holds_a_burst_together_before_digest_publish() {
+        let ids: Vec<u32> = (0..8).collect();
+        let hs = header_hashes(&ids, 4);
+        // all digests empty: first request is pressure-routed
+        let views = vec![view(30), view(32), view(31)];
+        let mut r = Router::new(Routing::Affinity, 7);
+        let first = r.choose(&hs, 1, &views).unwrap();
+        assert_eq!(first.replica, 1, "most free blocks");
+        assert_eq!(first.reason, RouteReason::Pressure);
+        // second identical prompt: still no digest anywhere, but sticky
+        let second = r.choose(&hs, 2, &views).unwrap();
+        assert_eq!(second.replica, 1);
+        assert_eq!(second.reason, RouteReason::Affinity);
+        assert_eq!(r.counters.routed_affinity, 1);
+        assert_eq!(r.counters.routed_pressure, 1);
+    }
+
+    #[test]
+    fn starved_home_rebalances_to_healthy_replica() {
+        let ids: Vec<u32> = (0..4).collect();
+        let hs = header_hashes(&ids, 4);
+        let mut views = vec![view(2), view(32), view(16)];
+        views[0].digest = vec![hs[0]]; // home, but free=2 <= floor=4
+        let mut r = Router::new(Routing::Affinity, 7);
+        let d = r.choose(&hs, 1, &views).unwrap();
+        assert_eq!(d.replica, 1, "most free healthy replica");
+        assert_eq!(d.reason, RouteReason::Rebalanced);
+        assert_eq!(r.counters.rebalances, 1);
+        // and the sticky map now points at the new home: the burst follows
+        let follow = r.choose(&hs, 2, &views).unwrap();
+        assert_eq!(follow.replica, 1);
+        assert_eq!(follow.reason, RouteReason::Affinity);
+    }
+
+    /// If *everywhere* is starved there is nothing to gain by moving —
+    /// stay home and keep the prefix hit.
+    #[test]
+    fn no_rebalance_when_all_replicas_starved() {
+        let ids: Vec<u32> = (0..4).collect();
+        let hs = header_hashes(&ids, 4);
+        let mut views = vec![view(2), view(3)];
+        views[0].digest = vec![hs[0]];
+        let mut r = Router::new(Routing::Affinity, 7);
+        let d = r.choose(&hs, 1, &views).unwrap();
+        assert_eq!(d.replica, 0);
+        assert_eq!(d.reason, RouteReason::Affinity);
+        assert_eq!(r.counters.rebalances, 0);
+    }
+
+    #[test]
+    fn pressure_orders_free_then_parked_then_load() {
+        let mut views = vec![view(16), view(16), view(16)];
+        views[0].parked_bytes = 4096;
+        views[1].parked_bytes = 4096;
+        views[1].queue_len = 3;
+        let mut r = Router::new(Routing::Pressure, 7);
+        assert_eq!(r.choose(&[], 1, &views).unwrap().replica, 2);
+        views[2].free_blocks = 1; // now worst on the primary key
+        assert_eq!(r.choose(&[], 1, &views).unwrap().replica, 0);
+        assert_eq!(r.counters.routed_pressure, 2);
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_dead() {
+        let mut views = vec![view(32), view(32), view(32)];
+        views[1].alive = false;
+        let mut r = Router::new(Routing::RoundRobin, 7);
+        let picks: Vec<usize> = (0..4)
+            .map(|id| r.choose(&[], id, &views).unwrap().replica)
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "dead replica skipped, order cycles");
+        assert_eq!(r.counters.routed_rr, 4);
+    }
+
+    #[test]
+    fn dead_replicas_never_chosen_no_alive_is_none() {
+        let ids: Vec<u32> = (0..4).collect();
+        let hs = header_hashes(&ids, 4);
+        let mut views = vec![view(32), view(2)];
+        views[0].digest = vec![hs[0]];
+        views[0].alive = false;
+        let mut r = Router::new(Routing::Affinity, 7);
+        // digest match on a dead replica is ignored → pressure pick
+        let d = r.choose(&hs, 1, &views).unwrap();
+        assert_eq!(d.replica, 1);
+        views[1].alive = false;
+        assert!(r.choose(&hs, 2, &views).is_none(), "no live replica → None");
+        let mut rr = Router::new(Routing::RoundRobin, 7);
+        assert!(rr.choose(&[], 1, &views).is_none());
+    }
+
+    #[test]
+    fn sticky_map_is_capacity_bounded() {
+        let views = vec![view(32), view(32)];
+        let mut r = Router::new(Routing::Affinity, 7);
+        for i in 0..(STICKY_CAP as u64 + 10) {
+            let h = [0xdead_0000u64 + i];
+            r.choose(&h, i, &views);
+        }
+        assert!(r.sticky.len() <= STICKY_CAP);
+    }
+
+    #[test]
+    fn routing_parse_round_trips() {
+        for (s, v) in [
+            ("affinity", Routing::Affinity),
+            ("pressure", Routing::Pressure),
+            ("rr", Routing::RoundRobin),
+        ] {
+            assert_eq!(Routing::parse(s), Some(v));
+            assert_eq!(v.as_str(), s);
+        }
+        assert_eq!(Routing::parse("round-robin"), Some(Routing::RoundRobin));
+        assert_eq!(Routing::parse("nope"), None);
+    }
+}

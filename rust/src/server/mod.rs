@@ -25,84 +25,74 @@
 //! Concatenating the `text` of one request's token events yields exactly the
 //! summary line's `text` — streaming changes delivery, never content. The
 //! full wire protocol (including cancellation semantics) is specified in
-//! docs/serving.md.
+//! docs/serving.md; fleet semantics in docs/fleet.md.
 //!
 //! `max_new` is clamped: 0 is rejected, values above [`MAX_MAX_NEW`] are
 //! capped before they reach the scheduler.
 //!
-//! With telemetry attached (`serve_with_telemetry`), two more line-protocol
+//! With telemetry attached (`serve_with_telemetry`), more line-protocol
 //! commands are available on the same port:
 //!   → {"cmd": "stats"}            ← {"stats": {"counters": …, "gauges": …,
 //!                                              "histograms": …}}
 //!   → {"cmd": "trace", "id": 7}   ← {"id": 7, "trace": [flight events…]}
+//!   → {"cmd": "fleet"}            ← {"fleet": [per-replica status…]}
+//!   → {"cmd": "kill_replica", "replica": 1}
+//!                                 ← {"killed": 1}   // fault injection only
 //! and the Prometheus exposition is served by the dedicated `--metrics-addr`
 //! listener (see `telemetry::http`), kept off this port so scrapers never
 //! head-of-line-block a generation client.
 //!
-//! ## Event-driven serve loop
+//! ## Fleet architecture (listener → router → replica fan-out)
 //!
-//! Three thread roles share three pieces of state — the [`RequestQueue`],
-//! the `routes` map (request id → per-connection reply channel), and the
-//! `cancels` list:
+//! Since PR 8 the serve loop is gone: every engine — including the N = 1
+//! single-engine case — runs as a library-owned **actor**
+//! ([`coordinator::actor`]) on its own thread, executing the same
+//! cancel-sweep → admit → step → re-queue iteration the old in-loop engine
+//! did, driven entirely by messages. The server side is three thread roles
+//! around shared routing state:
 //!
 //! * The **acceptor** blocks in `accept` (no poll loop; shutdown wakes it
 //!   with a dummy connect) and spawns one handler per connection.
-//! * A **connection handler** owns the socket's write half; a paired reader
-//!   thread pumps incoming lines and the EOF into the same channel the
-//!   engine's replies arrive on, so the handler observes a client disconnect
-//!   *while a request is in flight* and flags it in `cancels`. Token events
-//!   are serialized with the reusable `util::wire::EventWriter` — the per
-//!   token path does no allocation and no tree building.
-//! * The **engine loop** (the calling thread) runs one iteration per decode
-//!   step: sweep cancellations, admit from the queue (deadline-ordered —
-//!   see `scheduler::queue`), step the engine, forward drained token events
-//!   to streaming routes, deliver terminal replies, re-queue preemption
-//!   victims. When fully idle it parks on the queue's condvar
-//!   ([`RequestQueue::wait_nonempty`]) instead of sleep-polling.
+//! * A **connection handler** parses requests and *places* each one
+//!   through the [`Fleet`]: prompt → block-boundary header hashes
+//!   ([`scheduler::routing::header_hashes`]) → [`Router::choose`] over the
+//!   replicas' lock-free status views (prefix-affinity first, pool
+//!   pressure as fallback, round-robin as the bench baseline) → one
+//!   `EngineMsg::Submit` to the chosen replica. A paired reader thread
+//!   pumps incoming lines and the EOF into the same channel replies arrive
+//!   on, so the handler observes a client disconnect *while a request is
+//!   in flight* and cancels straight to the home replica.
+//! * The **event pump** (the calling thread) drains the fleet-wide
+//!   [`ActorEvent`] channel: token events forward to streaming routes,
+//!   terminal `Done`/`Failed` replies resolve their routes, `Orphaned`
+//!   requests from a killed replica are *re-routed* to survivors, and
+//!   router/streaming counters are published to the registry.
+//!
+//! Requests never migrate once placed: a preempted row's resume snapshot
+//! references blocks in its home replica's pool, so the actor re-queues it
+//! on its own front lane (oldest-victim-first), exactly as single-engine
+//! PR 4 established.
 //!
 //! ## Cancellation
 //!
-//! A disconnect (EOF or failed write) lands the request id in `cancels`;
-//! the next loop iteration routes it to whichever place owns state for it:
-//! a queued fresh request is simply dropped, a queued *preempted* request
-//! releases the tier state riding in its snapshot
-//! (`Engine::release_discarded_state` — pinned swap blocks and parked
-//! ledger), and an active row is torn down (`Engine::abort_request`,
-//! blocks + parked entries released). All three count into
-//! `cancelled_rows`; nothing is decoded for a client that is gone.
-//!
-//! ## Pressure / preemption protocol (paged-KV mode)
-//!
-//! When the engine runs on a shared block pool, the serve loop consults an
-//! `AdmissionController` each iteration: while free blocks sit below the
-//! pool's low watermark the queue is held (requests wait, connections stay
-//! blocked on their reply channel) until the pool recovers past the high
-//! watermark. A request the engine declines (`submit -> Ok(false)`) goes
-//! back to the *front* of the queue untouched. A request preempted
-//! mid-decode comes back from `Engine::take_preempted` carrying its full
-//! decode-state snapshot (`Request::resume`); the serve loop re-queues the
-//! whole batch at the front **in the order the engine returned it — oldest
-//! victim first, via `RequestQueue::push_front_all`** (a per-request
-//! `push_front` loop would reverse same-step victims), and its re-admission
-//! *resumes* generation (recompute mode: one batched re-prefill, tracker
-//! state restored) instead of restarting it. Re-queues keep the request's
-//! SLO class (front lane outranks the deadline lane, and the class rides
-//! along for any later re-push). Clients never see a preemption, only
-//! latency; the wait accumulated across the round trip is reported in the
-//! response's queue-wait metric (the snapshot carries the pre-preemption
-//! wait, so nothing is lost to the re-queue). Completed responses carry the
-//! pool gauges above — including `resumes` and `recomputed_tokens` — so
-//! clients/scrapers observe global pressure.
+//! A disconnect (EOF or failed write) routes the id to its home replica
+//! (`Fleet::cancel`); the actor's next iteration disposes of whatever it
+//! owns for that id — a queued fresh request is dropped, a queued
+//! *preempted* request releases the tier state riding in its snapshot
+//! (`Engine::release_discarded_state`), an active row is torn down
+//! (`Engine::abort_request`). All three count into `cancelled_rows` on
+//! *that replica's* metrics; other replicas are untouched.
 //!
 //! ## Failure delivery
 //!
-//! Every queued request owns a reply channel in `routes`. All terminal
-//! outcomes deliver exactly one reply: a response, or an `{"error": ...}`
-//! line when its submit fails or the engine's step errors. On a step error
-//! the engine's active rows are aborted (blocks released, rows cleared) and
-//! exactly those requests get the error line — no connection thread is left
-//! blocked on a channel that can no longer be served, queued-but-unsubmitted
-//! requests are unaffected, and the loop cannot busy-spin on zombie rows.
+//! Every in-flight request owns a reply channel in `routes` and delivers
+//! exactly one terminal line. Submit errors and step errors produce
+//! deterministic `{"error": ...}` replies (the actor fails exactly the
+//! rows inside the erroring engine). A **killed replica** (fault injection
+//! or shutdown) fails its active and preempted-queued requests
+//! deterministically and orphans its fresh-queued ones back to the router,
+//! which re-places them on surviving replicas — no connection ever hangs
+//! on a dead replica (see docs/fleet.md for the full contract).
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -113,10 +103,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Engine, Request, Response, TokenEvent};
+use crate::coordinator::{spawn_engine_actor, ActorEvent, ActorHandle, Engine, Response, TokenEvent};
 use crate::metrics::PoolGauges;
-use crate::scheduler::{AdmissionController, QueuedRequest, RequestQueue, SloClass};
-use crate::telemetry::{event, Telemetry};
+use crate::scheduler::{header_hashes, QueuedRequest, ReplicaView, Router, Routing, SloClass};
+use crate::telemetry::{event, labeled, names, Telemetry};
+use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
 use crate::util::wire;
 
@@ -180,7 +171,7 @@ pub fn parse_request(line: &str, id: u64) -> Result<(QueuedRequest, bool)> {
     ))
 }
 
-/// Replies the engine loop sends to a connection. Terminal variants
+/// Replies the event pump sends to a connection. Terminal variants
 /// (`Done`/`Failed`) arrive exactly once per request; `Token` any number of
 /// times before that, streaming mode only.
 enum ServeReply {
@@ -203,8 +194,6 @@ struct Route {
 }
 
 type Routes = Arc<Mutex<HashMap<u64, Route>>>;
-/// Request ids whose client disconnected; swept by the engine loop.
-type Cancels = Arc<Mutex<Vec<u64>>>;
 
 fn send_reply(routes: &Routes, id: u64, reply: ServeReply) {
     if let Some(rt) = routes.lock().unwrap().remove(&id) {
@@ -227,228 +216,245 @@ fn send_token(routes: &Routes, ev: TokenEvent) -> bool {
     false
 }
 
-/// Flag `id` for cancellation and wake an idle engine so the sweep happens
-/// now, not at the next wait timeout.
-fn cancel(cancels: &Cancels, queue: &RequestQueue, id: u64) {
-    cancels.lock().unwrap().push(id);
-    queue.nudge();
+/// Fleet-level serve options (`--replicas` / `--routing` on the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetOptions {
+    /// Placement policy for incoming requests.
+    pub routing: Routing,
+    /// Seed for the router's deterministic equal-pressure tie-break.
+    pub seed: u64,
+    /// Enable the `kill_replica` line-protocol command. Off by default:
+    /// killing replicas is a chaos/testing tool, not a production verb.
+    pub fault_injection: bool,
 }
 
-/// Serve an engine on `addr` until `shutdown` flips. The engine loop runs on
-/// the calling thread; connections are handled by spawned threads.
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            routing: Routing::Affinity,
+            seed: 0x5eed,
+            fault_injection: false,
+        }
+    }
+}
+
+/// Shared fleet state: the replica handles, the router, and the maps that
+/// tie request ids to connections (`routes`) and home replicas
+/// (`placements`).
+struct Fleet {
+    handles: Vec<ActorHandle>,
+    router: Mutex<Router>,
+    /// request id → home replica (for cancellation routing).
+    placements: Mutex<HashMap<u64, usize>>,
+    routes: Routes,
+    tokenizer: Tokenizer,
+    /// Block size the prefix hashes are keyed on (pool block size; 16 when
+    /// the engines run poolless and affinity can never hit anyway).
+    block_size: usize,
+    telemetry: Option<Arc<Telemetry>>,
+    fault_injection: bool,
+    /// N > 1: per-replica metric labels are active.
+    labeled: bool,
+}
+
+impl Fleet {
+    fn views(&self) -> Vec<ReplicaView> {
+        self.handles.iter().map(|h| h.status.view()).collect()
+    }
+
+    /// Route and deliver one request. Retries routing if the chosen
+    /// replica dies in the submit race (each failure marks it dead, so the
+    /// loop strictly shrinks the candidate set). `Err` carries the id and
+    /// a deterministic error message for the reply line.
+    fn submit(&self, q: QueuedRequest) -> std::result::Result<(), (u64, String)> {
+        let ids = self.tokenizer.encode_lossy(&q.prompt);
+        let hashes = header_hashes(&ids, self.block_size);
+        let mut q = q;
+        loop {
+            let views = self.views();
+            let decision = self.router.lock().unwrap().choose(&hashes, q.id, &views);
+            let Some(d) = decision else {
+                self.placements.lock().unwrap().remove(&q.id);
+                return Err((q.id, "no live replicas".to_string()));
+            };
+            self.placements.lock().unwrap().insert(q.id, d.replica);
+            match self.handles[d.replica].submit(q) {
+                Ok(()) => return Ok(()),
+                Err(back) => {
+                    // raced a dying replica: flag it so choose() skips it
+                    self.handles[d.replica]
+                        .status
+                        .alive
+                        .store(false, Ordering::Release);
+                    q = back;
+                }
+            }
+        }
+    }
+
+    /// Client gone: drop the route and tell the home replica to release
+    /// whatever it owns for this id.
+    fn cancel(&self, id: u64) {
+        self.routes.lock().unwrap().remove(&id);
+        if let Some(r) = self.placements.lock().unwrap().remove(&id) {
+            self.handles[r].cancel(id);
+        }
+    }
+
+    /// Publish router counters + fleet gauges into the registry.
+    fn publish_metrics(&self, streamed: &[u64]) {
+        let Some(t) = &self.telemetry else { return };
+        let reg = &t.registry;
+        let c = self.router.lock().unwrap().counters;
+        reg.set_counter(names::ROUTED_AFFINITY, c.routed_affinity);
+        reg.set_counter(names::ROUTED_PRESSURE, c.routed_pressure);
+        reg.set_counter(names::ROUTED_RR, c.routed_rr);
+        reg.set_counter(names::ROUTER_REBALANCES, c.rebalances);
+        let alive = self.handles.iter().filter(|h| h.is_alive()).count();
+        reg.set_gauge(names::REPLICAS_ALIVE, alive as f64);
+        for (i, &s) in streamed.iter().enumerate() {
+            let key = if self.labeled {
+                labeled(names::STREAMED_TOKENS, "replica", i)
+            } else {
+                names::STREAMED_TOKENS.to_string()
+            };
+            reg.set_counter(&key, s);
+        }
+    }
+}
+
+/// Serve an engine on `addr` until `shutdown` flips (single-replica fleet).
 pub fn serve(engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Result<()> {
     serve_with_telemetry(engine, addr, shutdown, None)
 }
 
 /// [`serve`] with a shared telemetry handle: the engine publishes registry
-/// snapshots every loop iteration, connection threads record `queued`
+/// snapshots every actor iteration, connection threads record `queued`
 /// flight events and answer `stats`/`trace` commands. The caller usually
 /// also hands the same handle to `telemetry::spawn_metrics_listener`.
 pub fn serve_with_telemetry(
-    mut engine: Engine,
+    engine: Engine,
     addr: &str,
     shutdown: Arc<AtomicBool>,
     telemetry: Option<Arc<Telemetry>>,
 ) -> Result<()> {
+    serve_fleet(vec![engine], addr, shutdown, telemetry, FleetOptions::default())
+}
+
+/// Serve N engine replicas behind the prefix-affinity router. With one
+/// engine this is exactly the old single-engine server (unlabeled metrics,
+/// every request routed to replica 0); with more it is the fleet. The
+/// event pump runs on the calling thread; replicas and connections run on
+/// spawned threads.
+pub fn serve_fleet(
+    engines: Vec<Engine>,
+    addr: &str,
+    shutdown: Arc<AtomicBool>,
+    telemetry: Option<Arc<Telemetry>>,
+    opts: FleetOptions,
+) -> Result<()> {
+    anyhow::ensure!(!engines.is_empty(), "fleet needs at least one engine");
     let listener = TcpListener::bind(addr)?;
     let local_addr = listener.local_addr()?;
+    let n = engines.len();
     eprintln!(
-        "lazyevictiond: serving on {addr} (policy={}, budget={}, batch={}{})",
-        engine.policy_name(),
-        engine.cfg.budget,
-        engine.cfg.batch,
-        match &engine.cfg.pool {
+        "lazyevictiond: serving on {addr} (policy={}, budget={}, batch={}{}, replicas={n}, routing={})",
+        engines[0].policy_name(),
+        engines[0].cfg.budget,
+        engines[0].cfg.batch,
+        match &engines[0].cfg.pool {
             Some(p) => format!(", pool={}x{}", p.n_blocks, p.block_size),
             None => String::new(),
-        }
+        },
+        opts.routing.as_str(),
     );
 
-    if let Some(t) = &telemetry {
-        engine.attach_telemetry(t.clone());
+    let block_size = engines[0]
+        .cfg
+        .pool
+        .as_ref()
+        .map(|p| p.block_size)
+        .unwrap_or(16);
+    let tokenizer = engines[0].tokenizer.clone();
+    let (etx, erx) = mpsc::channel::<ActorEvent>();
+    let mut handles = Vec::with_capacity(n);
+    for (i, mut e) in engines.into_iter().enumerate() {
+        if n > 1 {
+            e.set_replica_label(i);
+        }
+        if let Some(t) = &telemetry {
+            e.attach_telemetry(t.clone());
+        }
+        handles.push(spawn_engine_actor(e, i, etx.clone()));
     }
+    drop(etx); // pump's receiver outlives exactly the actors
 
-    let queue = Arc::new(RequestQueue::new());
-    let routes: Routes = Arc::new(Mutex::new(HashMap::new()));
-    let cancels: Cancels = Arc::new(Mutex::new(Vec::new()));
+    let fleet = Arc::new(Fleet {
+        handles,
+        router: Mutex::new(Router::new(opts.routing, opts.seed)),
+        placements: Mutex::new(HashMap::new()),
+        routes: Arc::new(Mutex::new(HashMap::new())),
+        tokenizer,
+        block_size,
+        telemetry: telemetry.clone(),
+        fault_injection: opts.fault_injection,
+        labeled: n > 1,
+    });
     let next_id = Arc::new(AtomicU64::new(1));
 
-    // acceptor thread: blocking accept (no retry poll); the engine loop
-    // wakes it at shutdown with a dummy connect to our own address
+    // acceptor thread: blocking accept (no retry poll); the pump wakes it
+    // at shutdown with a dummy connect to our own address
     {
-        let queue = queue.clone();
-        let routes = routes.clone();
-        let cancels = cancels.clone();
+        let fleet = fleet.clone();
         let next_id = next_id.clone();
         let shutdown = shutdown.clone();
-        let telemetry = telemetry.clone();
         std::thread::spawn(move || {
             for stream in listener.incoming() {
                 if shutdown.load(Ordering::Relaxed) {
                     break;
                 }
                 let Ok(s) = stream else { break };
-                let queue = queue.clone();
-                let routes = routes.clone();
-                let cancels = cancels.clone();
+                let fleet = fleet.clone();
                 let next_id = next_id.clone();
-                let telemetry = telemetry.clone();
-                std::thread::spawn(move || {
-                    handle_conn(s, queue, routes, cancels, next_id, telemetry)
-                });
+                std::thread::spawn(move || handle_conn(s, fleet, next_id));
             }
         });
     }
 
-    // engine loop (this thread). `classes` remembers each in-flight
-    // request's SLO class so preemption re-queues keep it (Request does not
-    // carry the class — it is a scheduling concern, not an engine one).
-    let mut admission = AdmissionController::new();
-    let mut classes: HashMap<u64, SloClass> = HashMap::new();
+    // event pump (this thread): actor events → connection replies
+    let mut streamed: Vec<u64> = vec![0; n];
     while !shutdown.load(Ordering::Relaxed) {
-        let mut idle = true;
-
-        // cancellation sweep: route each disconnected id to whatever owns
-        // state for it (see "Cancellation" above)
-        let cancelled: Vec<u64> = std::mem::take(&mut *cancels.lock().unwrap());
-        for id in cancelled {
-            routes.lock().unwrap().remove(&id);
-            classes.remove(&id);
-            if let Some(q) = queue.remove(id) {
-                match &q.resume {
-                    Some(st) => engine.release_discarded_state(st, id),
-                    None => {
-                        // fresh queued request: nothing admitted, nothing to
-                        // release — just count the cancellation
-                        engine.metrics.cancelled_rows += 1;
-                        if let Some(t) = &telemetry {
-                            t.record(id, event::ABORT, 0, 0, 0.0, "unadmitted");
-                        }
-                    }
-                }
-            } else {
-                engine.abort_request(id);
-            }
-        }
-
-        let mut admit_open = match engine.pool_pressure() {
-            Some(p) => admission.allow(&p),
-            None => true,
-        };
-        if !admit_open && engine.active() == 0 && !queue.is_empty() {
-            // Nothing is decoding, so nothing will ever free blocks on its
-            // own — stale prefix-cache pins are all that holds the latch
-            // closed. Release them and re-evaluate, or the queue hangs.
-            engine.shed_prefix_to_high_watermark();
-            if let Some(p) = engine.pool_pressure() {
-                admit_open = admission.allow(&p);
-            }
-        }
-        while admit_open && engine.has_free_row() {
-            let Some(q) = queue.try_pop() else { break };
-            let queued_s = q.queued_at.elapsed().as_secs_f64();
-            classes.insert(q.id, q.class);
-            let req = Request {
-                id: q.id,
-                prompt: q.prompt.clone(),
-                template: q.template.clone(),
-                max_new: q.max_new,
-                resume: q.resume.clone(),
-            };
-            match engine.submit(req, queued_s) {
-                Ok(true) => {
-                    idle = false;
-                }
-                Ok(false) => {
-                    // declined under pool pressure: hold it at the front
-                    queue.push_front(q);
-                    break;
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    eprintln!("submit error (request {}): {msg}", q.id);
-                    classes.remove(&q.id);
-                    send_reply(&routes, q.id, ServeReply::Failed(msg));
+        match erx.recv_timeout(Duration::from_millis(25)) {
+            Ok(ev) => {
+                let publish = !matches!(ev, ActorEvent::Token { .. });
+                pump_event(&fleet, ev, &mut streamed);
+                if publish {
+                    fleet.publish_metrics(&streamed);
                 }
             }
-        }
-        if engine.active() > 0 {
-            idle = false;
-            match engine.step() {
-                Ok(done) => {
-                    // tokens first, then terminals: a finishing row's last
-                    // token event precedes its summary on the channel
-                    for ev in engine.drain_token_events() {
-                        if send_token(&routes, ev) {
-                            engine.metrics.streamed_tokens += 1;
-                        }
-                    }
-                    let gauges = engine.pool_gauges();
-                    for resp in done {
-                        let id = resp.id;
-                        classes.remove(&id);
-                        send_reply(&routes, id, ServeReply::Done(resp, gauges));
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("engine step error: {e:#}");
-                    eprintln!("{msg}");
-                    // Partial token events from the failed step must not
-                    // reach clients their summary will never follow.
-                    engine.drain_token_events();
-                    // Fail exactly the requests whose rows were inside the
-                    // erroring engine — their decode state is gone — and
-                    // clear those rows (blocks released) so the loop cannot
-                    // busy-spin on zombie rows or run out of free rows.
-                    // Requests still waiting in the queue keep their routes
-                    // and are served normally once the engine recovers.
-                    for id in engine.abort_rows() {
-                        classes.remove(&id);
-                        send_reply(&routes, id, ServeReply::Failed(msg.clone()));
-                    }
-                }
-            }
-            // preempted rows: decode state preserved in `resume`, first in
-            // line for recompute re-admission. The batch keeps the engine's
-            // oldest-victim-first order (push_front_all; a per-request
-            // push_front here would reverse same-step victims). `queued_at`
-            // marks the re-queue time only — the wait accumulated before
-            // the preemption travels inside the snapshot, so the final
-            // queue-wait metric covers the request's full queued time. The
-            // SLO class survives the round trip via `classes`.
-            let now = Instant::now();
-            queue.push_front_all(
-                engine
-                    .take_preempted()
-                    .into_iter()
-                    .map(|r| QueuedRequest {
-                        class: classes.get(&r.id).copied().unwrap_or_default(),
-                        id: r.id,
-                        prompt: r.prompt,
-                        template: r.template,
-                        max_new: r.max_new,
-                        queued_at: now,
-                        resume: r.resume,
-                    })
-                    .collect(),
-            );
-        }
-        // push this iteration's counters/gauges/histograms to the shared
-        // registry so scrapers read fresh values without touching the engine
-        engine.publish_telemetry();
-        if idle {
-            if queue.is_empty() {
-                // park on the queue condvar: a push (or a cancel nudge)
-                // wakes us immediately; the timeout only bounds how stale
-                // the published telemetry can go while fully idle
-                queue.wait_nonempty(Duration::from_millis(25));
-            } else {
-                // queue non-empty but nothing admissible (pressure latch):
-                // yield briefly, re-evaluate
-                std::thread::sleep(Duration::from_millis(1));
+            Err(mpsc::RecvTimeoutError::Timeout) => fleet.publish_metrics(&streamed),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // every replica exited; submits now fail deterministically
+                // ("no live replicas") — idle until shutdown
+                fleet.publish_metrics(&streamed);
+                std::thread::sleep(Duration::from_millis(25));
             }
         }
     }
-    queue.close();
+
+    // shutdown: kill all replicas (their teardown fails/orphans what they
+    // own), then drain the final events so every in-flight connection gets
+    // its terminal line instead of hanging
+    for h in &fleet.handles {
+        h.kill();
+    }
+    for h in &fleet.handles {
+        h.join();
+    }
+    while let Ok(ev) = erx.try_recv() {
+        pump_event(&fleet, ev, &mut streamed);
+    }
+    fleet.publish_metrics(&streamed);
     // wake the acceptor out of its blocking accept so it observes shutdown
     let _ = TcpStream::connect(local_addr);
     if let Some(t) = &telemetry {
@@ -457,12 +463,83 @@ pub fn serve_with_telemetry(
     Ok(())
 }
 
+/// Translate one actor event into connection replies / routing updates.
+fn pump_event(fleet: &Arc<Fleet>, ev: ActorEvent, streamed: &mut [u64]) {
+    match ev {
+        ActorEvent::Token { replica, ev } => {
+            if send_token(&fleet.routes, ev) {
+                streamed[replica] += 1;
+            }
+        }
+        ActorEvent::Done { resp, gauges, .. } => {
+            fleet.placements.lock().unwrap().remove(&resp.id);
+            let id = resp.id;
+            send_reply(&fleet.routes, id, ServeReply::Done(resp, gauges));
+        }
+        ActorEvent::Failed { req, error, .. } => {
+            fleet.placements.lock().unwrap().remove(&req);
+            send_reply(&fleet.routes, req, ServeReply::Failed(error));
+        }
+        ActorEvent::Orphaned { req, .. } => {
+            // a killed replica never admitted this request: place it again
+            // on the survivors; only give up when the whole fleet is gone
+            if let Err((id, msg)) = fleet.submit(req) {
+                send_reply(&fleet.routes, id, ServeReply::Failed(msg));
+            }
+        }
+        ActorEvent::Exited { replica, clean } => {
+            if !clean {
+                eprintln!("lazyevictiond: replica {replica} exited (killed)");
+            }
+        }
+    }
+}
+
 /// Handle a `{"cmd": ...}` line; returns the reply, or `None` if the line
 /// is not a command (i.e. a generation request).
-fn handle_command(line: &str, telemetry: &Option<Arc<Telemetry>>) -> Option<Json> {
+fn handle_command(line: &str, fleet: &Arc<Fleet>) -> Option<Json> {
     let j = Json::parse(line).ok()?;
     let cmd = j.get("cmd")?.as_str()?.to_string();
-    let Some(t) = telemetry else {
+    match cmd.as_str() {
+        "fleet" => {
+            let replicas: Vec<Json> = fleet
+                .handles
+                .iter()
+                .map(|h| {
+                    let v = h.status.view();
+                    Json::obj()
+                        .set("replica", h.replica)
+                        .set("alive", if v.alive { 1.0 } else { 0.0 })
+                        .set("free_blocks", v.free_blocks)
+                        .set("total_blocks", v.total_blocks)
+                        .set("parked_bytes", v.parked_bytes)
+                        .set("queue_len", v.queue_len)
+                        .set("active", v.active)
+                        .set("digest_len", v.digest.len())
+                })
+                .collect();
+            return Some(Json::obj().set("fleet", replicas));
+        }
+        "kill_replica" => {
+            if !fleet.fault_injection {
+                return Some(Json::obj().set(
+                    "error",
+                    "kill_replica requires --fault-injection",
+                ));
+            }
+            let Some(r) = j.get("replica").and_then(|v| v.as_f64()) else {
+                return Some(Json::obj().set("error", "kill_replica requires a numeric 'replica'"));
+            };
+            let r = r as usize;
+            let Some(h) = fleet.handles.get(r) else {
+                return Some(Json::obj().set("error", format!("no replica {r}")));
+            };
+            h.kill();
+            return Some(Json::obj().set("killed", r));
+        }
+        _ => {}
+    }
+    let Some(t) = &fleet.telemetry else {
         return Some(Json::obj().set("error", "telemetry not enabled on this server"));
     };
     Some(match cmd.as_str() {
@@ -482,14 +559,7 @@ fn handle_command(line: &str, telemetry: &Option<Arc<Telemetry>>) -> Option<Json
     })
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    queue: Arc<RequestQueue>,
-    routes: Routes,
-    cancels: Cancels,
-    next_id: Arc<AtomicU64>,
-    telemetry: Option<Arc<Telemetry>>,
-) {
+fn handle_conn(stream: TcpStream, fleet: Arc<Fleet>, next_id: Arc<AtomicU64>) {
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -528,7 +598,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        if let Some(reply) = handle_command(&line, &telemetry) {
+        if let Some(reply) = handle_command(&line, &fleet) {
             if writeln!(writer, "{}", reply.to_string()).is_err() {
                 break 'conn;
             }
@@ -546,17 +616,21 @@ fn handle_conn(
                 continue;
             }
         };
-        routes.lock().unwrap().insert(
+        fleet.routes.lock().unwrap().insert(
             id,
             Route {
                 tx: tx.clone(),
                 stream: stream_mode,
             },
         );
-        if let Some(t) = &telemetry {
+        if let Some(t) = &fleet.telemetry {
             t.record(id, event::QUEUED, 0, 0, 0.0, q.class.as_str());
         }
-        queue.push(q);
+        if let Err((fid, msg)) = fleet.submit(q) {
+            // deterministic routing failure: the reply arrives on our own
+            // channel like any other terminal, handled by the loop below
+            send_reply(&fleet.routes, fid, ServeReply::Failed(msg));
+        }
         // in flight: forward token events as they arrive, finish on the
         // terminal reply, cancel on any sign the client is gone
         loop {
@@ -564,7 +638,7 @@ fn handle_conn(
                 Ok(ConnEvent::Reply(ServeReply::Token(ev))) => {
                     let line = events.token(ev.req, &ev.text, ev.produced, ev.first);
                     if writer.write_all(line).is_err() {
-                        cancel(&cancels, &queue, id);
+                        fleet.cancel(id);
                         break 'conn;
                     }
                 }
@@ -596,11 +670,11 @@ fn handle_conn(
                 }
                 // client sent the next request before this one finished
                 Ok(ConnEvent::Line(l)) => pending.push_back(l),
-                // client hung up mid-request: flag the abort and leave —
-                // the engine loop releases blocks/tier state on its next
-                // iteration
+                // client hung up mid-request: cancel straight to the home
+                // replica and leave — its actor releases blocks/tier state
+                // on its next iteration
                 Ok(ConnEvent::Eof) => {
-                    cancel(&cancels, &queue, id);
+                    fleet.cancel(id);
                     break 'conn;
                 }
                 // server shut down with the request still in flight
@@ -817,5 +891,29 @@ mod tests {
         // distinct values survive the round trip (no copy-paste aliasing)
         assert_eq!(json.f64_at("tier_rejects").unwrap(), 23.0);
         assert!(exposition.contains("lazyeviction_pool_tier_rejects 23"));
+    }
+
+    /// Labeled pool publishing (fleet mode) keeps per-replica samples
+    /// separate in one registry while the JSON surface is per-response.
+    #[test]
+    fn pool_gauges_publish_labeled_per_replica() {
+        let a = PoolGauges {
+            free_blocks: 5,
+            ..Default::default()
+        };
+        let b = PoolGauges {
+            free_blocks: 9,
+            ..Default::default()
+        };
+        let reg = crate::telemetry::Registry::new();
+        a.publish_labeled(&reg, 0);
+        b.publish_labeled(&reg, 1);
+        let text = reg.render_prometheus();
+        assert!(text.contains("lazyeviction_pool_free_blocks{replica=\"0\"} 5"));
+        assert!(text.contains("lazyeviction_pool_free_blocks{replica=\"1\"} 9"));
+        assert_eq!(
+            text.matches("# TYPE lazyeviction_pool_free_blocks gauge").count(),
+            1
+        );
     }
 }

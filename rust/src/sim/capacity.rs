@@ -484,6 +484,173 @@ pub fn run_capacity(spec: &CapacitySpec) -> anyhow::Result<CapacityReport> {
     Ok(rep)
 }
 
+/// Fleet placement policy for the capacity model — the sim analog of the
+/// server router ([`crate::scheduler::routing`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetRouting {
+    /// Requests of one header group always land on the same replica
+    /// (`group % replicas`) — the idealized prefix-affinity router.
+    Affinity,
+    /// Request order round-robin, blind to headers.
+    RoundRobin,
+    /// Seeded uniform placement, blind to headers.
+    Random,
+    /// Everything on replica 0 — the degenerate hot-replica assignment a
+    /// broken router (or a single-header workload under naive affinity)
+    /// produces. Used to model preemption storms.
+    OneHot,
+}
+
+impl FleetRouting {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FleetRouting::Affinity => "affinity",
+            FleetRouting::RoundRobin => "rr",
+            FleetRouting::Random => "random",
+            FleetRouting::OneHot => "one-hot",
+        }
+    }
+}
+
+/// A fleet of `replicas` independent pools serving one request stream.
+/// Requests carry one of `header_groups` distinct prompt headers
+/// (`header_tokens` each, request `i` belongs to group `i % header_groups`
+/// — a steady interleaved mix, the adversarial case for routing).
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Per-replica pool/policy settings; `base.n_requests` is the total
+    /// request count across the fleet.
+    pub base: CapacitySpec,
+    pub replicas: usize,
+    pub routing: FleetRouting,
+    pub header_groups: usize,
+    pub header_tokens: usize,
+}
+
+impl FleetSpec {
+    pub fn new(base: CapacitySpec, replicas: usize, routing: FleetRouting) -> FleetSpec {
+        FleetSpec {
+            base,
+            replicas,
+            routing,
+            header_groups: replicas.max(1),
+            header_tokens: 64,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct FleetReport {
+    pub replicas: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub preemptions: u64,
+    /// Fleet-wide sustained batch: the sum of each replica's
+    /// `mean_concurrency` over its own active steps.
+    pub sustained_batch: f64,
+    /// Requests whose header was already resident on their replica.
+    pub header_hits: u64,
+    /// Cold header materializations — one per distinct (replica, group)
+    /// pair the placement produces. Duplication is the routing tax: the
+    /// affinity floor is `header_groups`, the blind ceiling is
+    /// `replicas * header_groups`.
+    pub header_misses: u64,
+    pub hit_rate: f64,
+    pub per_replica_requests: Vec<usize>,
+    pub per_replica_preemptions: Vec<u64>,
+    pub per_replica_concurrency: Vec<f64>,
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Run the fleet model: place `base.n_requests` requests on `replicas`
+/// pools per the routing policy, account header residency analytically
+/// (first request of a group on a replica pins its header there for the
+/// run; later ones fork it), then replay each replica's share through
+/// [`run_capacity`]. Headers a replica holds *beyond* its donor pin usable
+/// blocks without donating to the majority of admissions — that shrinking
+/// of the effective pool is how blind routing's duplication costs
+/// sustained batch. Deterministic for a given spec.
+pub fn run_fleet(spec: &FleetSpec) -> anyhow::Result<FleetReport> {
+    anyhow::ensure!(spec.replicas >= 1, "fleet needs at least one replica");
+    anyhow::ensure!(spec.header_groups >= 1, "fleet needs at least one header group");
+    let n = spec.base.n_requests;
+    let group = |i: usize| i % spec.header_groups;
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); spec.replicas];
+    for i in 0..n {
+        let r = match spec.routing {
+            FleetRouting::Affinity => group(i) % spec.replicas,
+            FleetRouting::RoundRobin => i % spec.replicas,
+            FleetRouting::Random => {
+                (splitmix64(spec.base.seed ^ (i as u64)) % spec.replicas as u64) as usize
+            }
+            FleetRouting::OneHot => 0,
+        };
+        assigned[r].push(i);
+    }
+
+    let mut rep = FleetReport {
+        replicas: spec.replicas,
+        ..FleetReport::default()
+    };
+    // header residency: request order within a replica does not matter —
+    // a group's first arrival is the cold miss, every later one the hit
+    let mut resident = vec![vec![false; spec.header_groups]; spec.replicas];
+    for (r, reqs) in assigned.iter().enumerate() {
+        for &i in reqs {
+            if resident[r][group(i)] {
+                rep.header_hits += 1;
+            } else {
+                resident[r][group(i)] = true;
+                rep.header_misses += 1;
+            }
+        }
+    }
+    rep.hit_rate = if n == 0 {
+        0.0
+    } else {
+        rep.header_hits as f64 / n as f64
+    };
+
+    // whole blocks a resident header pins (partial tails are paid per-row)
+    let header_blocks = spec.header_tokens / spec.base.pool.block_size;
+    for (r, reqs) in assigned.iter().enumerate() {
+        rep.per_replica_requests.push(reqs.len());
+        if reqs.is_empty() {
+            rep.per_replica_preemptions.push(0);
+            rep.per_replica_concurrency.push(0.0);
+            continue;
+        }
+        let groups_here = resident[r].iter().filter(|&&x| x).count();
+        let mut cs = spec.base.clone();
+        cs.n_requests = reqs.len();
+        cs.seed = spec.base.seed.wrapping_add(r as u64);
+        cs.shared_prefix_tokens = spec.header_tokens;
+        cs.share_prefix = header_blocks > 0;
+        // duplicated resident headers pin blocks the donor does not model
+        let extra_pins = (groups_here - 1) * header_blocks;
+        anyhow::ensure!(
+            spec.base.pool.n_blocks > extra_pins + spec.base.pool.high_watermark + header_blocks,
+            "replica {r}: {groups_here} resident headers overwhelm a {}-block pool",
+            spec.base.pool.n_blocks
+        );
+        cs.pool.n_blocks = spec.base.pool.n_blocks - extra_pins;
+        let cr = run_capacity(&cs)?;
+        rep.completed += cr.completed;
+        rep.failed += cr.failed;
+        rep.preemptions += cr.preemptions;
+        rep.sustained_batch += cr.mean_concurrency;
+        rep.per_replica_preemptions.push(cr.preemptions);
+        rep.per_replica_concurrency.push(cr.mean_concurrency);
+    }
+    Ok(rep)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -721,6 +888,115 @@ mod tests {
         } else {
             assert_eq!(r.swap_in_bytes, r.swap_out_bytes);
         }
+    }
+
+    fn fleet(policy: &str, replicas: usize, routing: FleetRouting) -> FleetSpec {
+        let mut base = spec(policy);
+        base.n_requests = 12;
+        let mut f = FleetSpec::new(base, replicas, routing);
+        // coprime-ish with the replica count so round-robin (i % N) does
+        // not accidentally coincide with affinity (group(i) % N)
+        f.header_groups = replicas + 1;
+        f.header_tokens = 64;
+        f
+    }
+
+    #[test]
+    fn affinity_beats_blind_routing_on_hit_rate_and_batch() {
+        // 3 header groups on 3 replicas: affinity pays exactly 3 cold
+        // misses fleet-wide; blind routing re-materializes every header on
+        // every replica it touches. The duplication shows up twice — a
+        // strictly higher hit rate AND at least as much sustained batch
+        // (the rr replicas pin duplicated headers out of their pools).
+        let a = run_fleet(&fleet("lazy", 3, FleetRouting::Affinity)).unwrap();
+        let rr = run_fleet(&fleet("lazy", 3, FleetRouting::RoundRobin)).unwrap();
+        let rand = run_fleet(&fleet("lazy", 3, FleetRouting::Random)).unwrap();
+        assert_eq!(a.completed, 12);
+        assert_eq!(rr.completed, 12);
+        assert_eq!(a.failed + rr.failed, 0);
+        assert_eq!(a.header_misses, 4, "affinity floor: one miss per group");
+        assert!(
+            rr.header_misses > a.header_misses,
+            "blind routing must duplicate headers: rr {} vs affinity {}",
+            rr.header_misses,
+            a.header_misses
+        );
+        assert!(a.hit_rate > rr.hit_rate, "{} <= {}", a.hit_rate, rr.hit_rate);
+        assert!(a.hit_rate > rand.hit_rate, "{} <= {}", a.hit_rate, rand.hit_rate);
+        assert!(
+            a.sustained_batch >= rr.sustained_batch,
+            "affinity batch {} < rr {}",
+            a.sustained_batch,
+            rr.sustained_batch
+        );
+    }
+
+    #[test]
+    fn sustained_batch_scales_with_replica_count() {
+        // Same workload, growing fleet: each added replica brings its own
+        // pool, so the fleet-wide sustained batch is monotone in N.
+        let n1 = run_fleet(&fleet("lazy", 1, FleetRouting::Affinity)).unwrap();
+        let n2 = run_fleet(&fleet("lazy", 2, FleetRouting::Affinity)).unwrap();
+        let n4 = run_fleet(&fleet("lazy", 4, FleetRouting::Affinity)).unwrap();
+        assert_eq!(n1.completed, 12);
+        assert_eq!(n2.completed, 12);
+        assert_eq!(n4.completed, 12);
+        assert!(
+            n2.sustained_batch >= n1.sustained_batch,
+            "2 replicas {} < 1 replica {}",
+            n2.sustained_batch,
+            n1.sustained_batch
+        );
+        assert!(
+            n4.sustained_batch >= n2.sustained_batch,
+            "4 replicas {} < 2 replicas {}",
+            n4.sustained_batch,
+            n2.sustained_batch
+        );
+    }
+
+    #[test]
+    fn one_hot_replica_storms_while_the_rest_idle() {
+        // The degenerate assignment a broken router produces: every
+        // request on replica 0. Full-KV rows in one 64-block pool collide
+        // constantly — the preemption storm concentrates entirely on the
+        // hot replica, the other three contribute nothing, and the fleet's
+        // sustained batch collapses to a fraction of the spread placement.
+        let hot = run_fleet(&fleet("full", 4, FleetRouting::OneHot)).unwrap();
+        let spread = run_fleet(&fleet("full", 4, FleetRouting::Affinity)).unwrap();
+        assert_eq!(hot.per_replica_requests[0], 12);
+        assert!(hot.per_replica_requests[1..].iter().all(|&c| c == 0));
+        assert!(hot.preemptions > 0, "full-KV pileup must preempt");
+        assert_eq!(
+            hot.per_replica_preemptions[0], hot.preemptions,
+            "the storm lives entirely on the hot replica"
+        );
+        assert!(hot.per_replica_concurrency[1..].iter().all(|&c| c == 0.0));
+        assert!(
+            spread.sustained_batch > hot.sustained_batch,
+            "spread {} must beat one-hot {}",
+            spread.sustained_batch,
+            hot.sustained_batch
+        );
+        assert!(
+            spread.preemptions < hot.preemptions,
+            "spreading the load must relieve the storm: {} >= {}",
+            spread.preemptions,
+            hot.preemptions
+        );
+    }
+
+    #[test]
+    fn fleet_model_is_deterministic() {
+        let s = fleet("lazy", 3, FleetRouting::Random);
+        let a = run_fleet(&s).unwrap();
+        let b = run_fleet(&s).unwrap();
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.header_hits, b.header_hits);
+        assert_eq!(a.header_misses, b.header_misses);
+        assert_eq!(a.per_replica_requests, b.per_replica_requests);
+        assert!((a.sustained_batch - b.sustained_batch).abs() < 1e-12);
     }
 
     #[test]

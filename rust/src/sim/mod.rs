@@ -13,5 +13,7 @@ pub mod capacity;
 pub mod replay;
 
 pub use accuracy::{accuracy_over, AccuracyModel};
-pub use capacity::{run_capacity, CapacityReport, CapacitySpec};
+pub use capacity::{
+    run_capacity, run_fleet, CapacityReport, CapacitySpec, FleetReport, FleetRouting, FleetSpec,
+};
 pub use replay::{replay, ReplayConfig, ReplayResult};

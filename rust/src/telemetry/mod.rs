@@ -51,6 +51,23 @@ pub mod names {
     /// Rows/requests torn down by client cancellation or disconnect.
     pub const CANCELLED_ROWS: &str = "lazyeviction_cancelled_rows_total";
     pub const POOL_PREFIX: &str = "lazyeviction_pool_";
+    /// Fleet router placement counters (see `scheduler::routing`).
+    pub const ROUTED_AFFINITY: &str = "lazyeviction_router_routed_affinity_total";
+    pub const ROUTED_PRESSURE: &str = "lazyeviction_router_routed_pressure_total";
+    pub const ROUTED_RR: &str = "lazyeviction_router_routed_rr_total";
+    pub const ROUTER_REBALANCES: &str = "lazyeviction_router_rebalances_total";
+    /// Replicas currently alive (fleet gauge).
+    pub const REPLICAS_ALIVE: &str = "lazyeviction_replicas_alive";
+}
+
+/// Registry key for a labeled sample: `labeled("m", "replica", "2")` →
+/// `m{replica="2"}`. [`registry::Registry::render_prometheus`] understands
+/// this shape — samples sharing a base name render as one family — and the
+/// fleet serve loop uses it to publish every replica's engine metrics side
+/// by side in one registry. The value must not contain `"`, `\` or
+/// newlines (we only ever pass replica indices).
+pub fn labeled(name: &str, label: &str, value: impl std::fmt::Display) -> String {
+    format!("{name}{{{label}=\"{value}\"}}")
 }
 
 /// Shared handle: registry (interior mutex) + flight recorder (mutex).

@@ -74,32 +74,62 @@ impl Registry {
     /// single samples, histograms as `_bucket{le=...}`/`_sum`/`_count`
     /// families plus explicit `_p50`/`_p90`/`_p99` quantile gauges so
     /// scrapers that don't do bucket math still get percentiles.
+    ///
+    /// Registry keys may carry a label suffix (`name{replica="0"}`, built
+    /// by [`super::labeled`]) — the fleet server publishes each replica's
+    /// metrics this way. Samples with the same *base* name are grouped
+    /// into one family under a single `# TYPE` line, and histogram labels
+    /// are spliced into every derived sample (`_bucket{le="x",replica=…}`,
+    /// `_sum{replica=…}`, …) so the output stays spec-valid.
     pub fn render_prometheus(&self) -> String {
         let g = self.inner.lock().unwrap();
         let mut out = String::new();
-        for (name, v) in &g.counters {
-            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
-        }
-        for (name, v) in &g.gauges {
-            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", num(*v)));
-        }
-        for (name, h) in &g.hists {
-            out.push_str(&format!("# TYPE {name} histogram\n"));
-            for (le, c) in h.cumulative_buckets() {
-                let le = if le.is_infinite() {
-                    "+Inf".to_string()
-                } else {
-                    num(le)
-                };
-                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {c}\n"));
+        for (base, samples) in group_families(g.counters.iter().map(|(k, v)| (k, v.to_string()))) {
+            out.push_str(&format!("# TYPE {base} counter\n"));
+            for (labels, v) in samples {
+                out.push_str(&format!("{base}{labels} {v}\n"));
             }
-            out.push_str(&format!("{name}_sum {}\n", num(h.sum())));
-            out.push_str(&format!("{name}_count {}\n", h.n()));
-            for (q, label) in [(0.50, "p50"), (0.90, "p90"), (0.99, "p99")] {
-                out.push_str(&format!(
-                    "# TYPE {name}_{label} gauge\n{name}_{label} {}\n",
-                    num(h.quantile(q))
-                ));
+        }
+        for (base, samples) in group_families(g.gauges.iter().map(|(k, v)| (k, num(*v)))) {
+            out.push_str(&format!("# TYPE {base} gauge\n"));
+            for (labels, v) in samples {
+                out.push_str(&format!("{base}{labels} {v}\n"));
+            }
+        }
+        // histograms: group by base, then emit buckets/sum/count per label
+        // set under one TYPE line; quantile gauges get their own families.
+        let mut hist_groups: BTreeMap<&str, Vec<(&str, &StreamingHistogram)>> = BTreeMap::new();
+        for (name, h) in &g.hists {
+            let (base, labels) = split_labels(name);
+            hist_groups.entry(base).or_default().push((labels, h));
+        }
+        for (base, entries) in &hist_groups {
+            out.push_str(&format!("# TYPE {base} histogram\n"));
+            for (labels, h) in entries {
+                for (le, c) in h.cumulative_buckets() {
+                    let le = if le.is_infinite() {
+                        "+Inf".to_string()
+                    } else {
+                        num(le)
+                    };
+                    out.push_str(&format!(
+                        "{base}_bucket{} {c}\n",
+                        splice_label(labels, &format!("le=\"{le}\""))
+                    ));
+                }
+                out.push_str(&format!("{base}_sum{labels} {}\n", num(h.sum())));
+                out.push_str(&format!("{base}_count{labels} {}\n", h.n()));
+            }
+        }
+        for (q, qname) in [(0.50, "p50"), (0.90, "p90"), (0.99, "p99")] {
+            for (base, entries) in &hist_groups {
+                out.push_str(&format!("# TYPE {base}_{qname} gauge\n"));
+                for (labels, h) in entries {
+                    out.push_str(&format!(
+                        "{base}_{qname}{labels} {}\n",
+                        num(h.quantile(q))
+                    ));
+                }
             }
         }
         out
@@ -139,6 +169,39 @@ impl Registry {
     pub fn counter_names(&self) -> Vec<String> {
         self.inner.lock().unwrap().counters.keys().cloned().collect()
     }
+}
+
+/// Split a registry key into (base name, label suffix). `"a{x=\"1\"}"` →
+/// `("a", "{x=\"1\"}")`; an unlabeled key returns an empty suffix.
+fn split_labels(key: &str) -> (&str, &str) {
+    match key.find('{') {
+        Some(i) => key.split_at(i),
+        None => (key, ""),
+    }
+}
+
+/// Merge an extra `k="v"` pair into an existing label suffix:
+/// `("", le)` → `{le}`, `("{replica=\"0\"}", le)` → `{le,replica="0"}`.
+fn splice_label(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        format!("{{{extra}}}")
+    } else {
+        format!("{{{extra},{}", &labels[1..])
+    }
+}
+
+/// Group sorted `(key, rendered_value)` pairs into
+/// `base → [(label_suffix, value)]` families for exposition.
+fn group_families<'a, I>(it: I) -> BTreeMap<&'a str, Vec<(&'a str, String)>>
+where
+    I: Iterator<Item = (&'a String, String)>,
+{
+    let mut out: BTreeMap<&str, Vec<(&str, String)>> = BTreeMap::new();
+    for (key, v) in it {
+        let (base, labels) = split_labels(key);
+        out.entry(base).or_default().push((labels, v));
+    }
+    out
 }
 
 /// Render a float the way the exposition format expects: integral values
@@ -195,6 +258,55 @@ mod tests {
         assert!(text.contains("app_step_ms_p50"));
         assert!(text.contains("app_step_ms_p99"));
         // every line is either a comment or `name value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn labeled_samples_group_under_one_type_line() {
+        let r = Registry::new();
+        r.set_counter("app_hits_total", 3); // single-engine, unlabeled
+        r.set_counter("app_hits_total{replica=\"0\"}", 5);
+        r.set_counter("app_hits_total{replica=\"1\"}", 2);
+        r.set_gauge("app_free{replica=\"0\"}", 9.0);
+        let text = r.render_prometheus();
+        assert_eq!(
+            text.matches("# TYPE app_hits_total counter").count(),
+            1,
+            "one TYPE line per family, not per labeled sample:\n{text}"
+        );
+        assert!(text.contains("app_hits_total 3"));
+        assert!(text.contains("app_hits_total{replica=\"0\"} 5"));
+        assert!(text.contains("app_hits_total{replica=\"1\"} 2"));
+        assert!(text.contains("# TYPE app_free gauge"));
+        assert!(text.contains("app_free{replica=\"0\"} 9"));
+        // no TYPE line may carry a label suffix
+        for line in text.lines().filter(|l| l.starts_with("# TYPE")) {
+            assert!(!line.contains('{'), "labeled TYPE line: {line}");
+        }
+    }
+
+    #[test]
+    fn labeled_histogram_splices_labels_into_samples() {
+        let r = Registry::new();
+        let mut h = StreamingHistogram::latency_ms();
+        h.observe(1.5);
+        r.set_histogram("app_step_ms{replica=\"2\"}", &h);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE app_step_ms histogram"));
+        assert!(
+            text.contains("app_step_ms_bucket{le=\"+Inf\",replica=\"2\"} 1"),
+            "bucket labels must merge le with the replica label:\n{text}"
+        );
+        assert!(text.contains("app_step_ms_sum{replica=\"2\"}"));
+        assert!(text.contains("app_step_ms_count{replica=\"2\"} 1"));
+        assert!(text.contains("# TYPE app_step_ms_p50 gauge"));
+        assert!(text.contains("app_step_ms_p50{replica=\"2\"}"));
+        // the exposition line shape invariant survives labels
         for line in text.lines() {
             assert!(
                 line.starts_with('#') || line.split_whitespace().count() == 2,

@@ -1,0 +1,480 @@
+//! Fleet serving end-to-end over localhost TCP — the multi-engine router
+//! acceptance tests. A 3-replica fleet must: (1) generate byte-identical
+//! output to a single-engine control for every eviction policy (routing
+//! changes placement, never content); (2) route repeats of a prompt to the
+//! same replica, observable as per-replica `prefix_hits` concentration in
+//! the labeled `/metrics` exposition plus `routed_affinity` counters; (3)
+//! contain a mid-decode disconnect to the victim's home replica — its
+//! blocks and tier bytes reclaimed, every other replica untouched; and
+//! (4) survive a replica kill mid-serve with every in-flight request
+//! either finished on a survivor or deterministically failed — no hung
+//! connections.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lazyeviction::coordinator::{Engine, EngineConfig, PreemptMode};
+use lazyeviction::kvpool::PoolConfig;
+use lazyeviction::kvtier::HostTierConfig;
+use lazyeviction::scheduler::Routing;
+use lazyeviction::server::FleetOptions;
+use lazyeviction::telemetry::{spawn_metrics_listener, Telemetry};
+use lazyeviction::util::json::Json;
+
+// pool_e2e.rs owns 8953-8956, telemetry_e2e.rs 8960-8961, streaming_e2e.rs
+// 8970-8977; this binary uses 8980-8993 so all four run in parallel.
+const IDENTITY_PORTS: [(&str, &str, &str); 4] = [
+    ("full", "127.0.0.1:8980", "127.0.0.1:8984"),
+    ("h2o", "127.0.0.1:8981", "127.0.0.1:8985"),
+    ("tova", "127.0.0.1:8982", "127.0.0.1:8986"),
+    ("lazy", "127.0.0.1:8983", "127.0.0.1:8987"),
+];
+const AFFINITY_ADDR: &str = "127.0.0.1:8988";
+const AFFINITY_METRICS: &str = "127.0.0.1:8989";
+const DISCONNECT_ADDR: &str = "127.0.0.1:8990";
+const DISCONNECT_METRICS: &str = "127.0.0.1:8991";
+const KILL_ADDR: &str = "127.0.0.1:8992";
+const KILL_METRICS: &str = "127.0.0.1:8993";
+
+fn pooled_cfg(policy: &str, batch: usize, n_blocks: usize) -> EngineConfig {
+    let mut cfg = EngineConfig {
+        batch,
+        cache: 64,
+        budget: 40,
+        policy: policy.into(),
+        record_live: false,
+        pool: Some(PoolConfig {
+            block_size: 8,
+            n_blocks,
+            low_watermark: 2,
+            high_watermark: 4,
+        }),
+        ..Default::default()
+    };
+    cfg.params.window = 8;
+    cfg.params.recent = 8;
+    cfg
+}
+
+/// Spawn an N-replica fleet for `cfg` and wait for its listener.
+fn serve_fleet_on(
+    addr: &'static str,
+    cfg: EngineConfig,
+    replicas: usize,
+    opts: FleetOptions,
+    shutdown: &Arc<AtomicBool>,
+    telemetry: Option<Arc<Telemetry>>,
+) {
+    {
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            let engines: Vec<Engine> = (0..replicas)
+                .map(|_| Engine::new_sim(cfg.clone()).expect("sim engine"))
+                .collect();
+            let _ = lazyeviction::server::serve_fleet(engines, addr, shutdown, telemetry, opts);
+        });
+    }
+    for _ in 0..200 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            drop(s);
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("fleet server did not come up within 4s");
+}
+
+/// One request → one terminal line on a fresh connection.
+fn roundtrip(addr: &str, request: &str) -> Json {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(&stream, "{request}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("terminal line");
+    Json::parse(&line).unwrap_or_else(|e| panic!("bad reply '{line}': {e}"))
+}
+
+/// One HTTP/1.0 exchange against the scrape listener → body.
+fn http_get_body(addr: &str, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect scrape listener");
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read scrape response");
+    buf.split_once("\r\n\r\n").expect("head/body").1.to_string()
+}
+
+/// Value of the unlabeled `name value` sample, if present.
+fn metric(body: &str, name: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        l.strip_prefix(name)?
+            .strip_prefix(' ')?
+            .trim()
+            .parse::<f64>()
+            .ok()
+    })
+}
+
+/// Value of the per-replica `name{replica="i"} value` sample, if present.
+fn labeled_metric(body: &str, name: &str, replica: usize) -> Option<f64> {
+    let key = format!("{name}{{replica=\"{replica}\"}}");
+    body.lines().find_map(|l| {
+        l.strip_prefix(&key)?
+            .strip_prefix(' ')?
+            .trim()
+            .parse::<f64>()
+            .ok()
+    })
+}
+
+#[test]
+fn fleet_output_is_byte_identical_to_single_engine_control() {
+    // For each policy: the same prompts through a single-engine control
+    // and a 3-replica fleet. Whatever replica the router picks runs the
+    // identical engine config, so every byte of every response must match.
+    let prompts = [
+        r#"{"prompt":"#A=3;B=7;\n>","max_new":32}"#,
+        r#"{"prompt":"#C=2;D=9;E=4;\n>","max_new":24}"#,
+    ];
+    for (policy, control_addr, fleet_addr) in IDENTITY_PORTS {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        {
+            let cfg = pooled_cfg(policy, 2, 16);
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                let engine = Engine::new_sim(cfg).expect("sim engine");
+                let _ = lazyeviction::server::serve(engine, control_addr, shutdown);
+            });
+        }
+        serve_fleet_on(
+            fleet_addr,
+            pooled_cfg(policy, 2, 16),
+            3,
+            FleetOptions::default(),
+            &shutdown,
+            None,
+        );
+        for _ in 0..200 {
+            if TcpStream::connect(control_addr).is_ok() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        for request in prompts {
+            let control = roundtrip(control_addr, request);
+            let fleet = roundtrip(fleet_addr, request);
+            assert!(
+                control.get("error").is_none() && fleet.get("error").is_none(),
+                "policy {policy}: request failed: {control:?} / {fleet:?}"
+            );
+            assert_eq!(
+                fleet.str_at("text").unwrap(),
+                control.str_at("text").unwrap(),
+                "policy {policy}: fleet output diverged from control"
+            );
+            assert_eq!(
+                fleet.usize_at("tokens").unwrap(),
+                control.usize_at("tokens").unwrap(),
+                "policy {policy}: token counts diverged"
+            );
+        }
+        shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+#[test]
+fn identical_prompts_concentrate_on_one_replica() {
+    // Three distinct prompt groups, four requests each, sequential. The
+    // router's first sight of a group places it by pressure; every repeat
+    // must follow it home (sticky map / digest match). Each repeat then
+    // hits the home replica's prefix cache — so across the whole fleet
+    // exactly 9 prefix hits (3 per group) and 9 affinity routes exist. Any
+    // group migrating between replicas would re-seed a cache and lose a
+    // hit, so the totals are the concentration proof.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let telemetry = Telemetry::new();
+    spawn_metrics_listener(AFFINITY_METRICS, telemetry.clone(), shutdown.clone())
+        .expect("bind metrics listener");
+    serve_fleet_on(
+        AFFINITY_ADDR,
+        pooled_cfg("lazy", 2, 16),
+        3,
+        FleetOptions::default(),
+        &shutdown,
+        Some(telemetry),
+    );
+
+    let groups = [
+        r#"{"prompt":"#A=1;B=1;\n>","max_new":16}"#,
+        r#"{"prompt":"#B=2;C=2;\n>","max_new":16}"#,
+        r#"{"prompt":"#C=3;D=3;\n>","max_new":16}"#,
+    ];
+    for round in 0..4 {
+        for (g, request) in groups.iter().enumerate() {
+            let j = roundtrip(AFFINITY_ADDR, request);
+            assert!(
+                j.get("error").is_none(),
+                "group {g} round {round} failed: {j:?}"
+            );
+        }
+    }
+
+    // the pump publishes router counters and each actor its labeled pool
+    // gauges within a tick; poll for the settled totals
+    let mut body = String::new();
+    let mut settled = false;
+    for _ in 0..250 {
+        body = http_get_body(AFFINITY_METRICS, "/metrics");
+        let hits: f64 = (0..3)
+            .map(|r| labeled_metric(&body, "lazyeviction_pool_prefix_hits", r).unwrap_or(0.0))
+            .sum();
+        if hits == 9.0
+            && metric(&body, "lazyeviction_router_routed_affinity_total") == Some(9.0)
+        {
+            settled = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(settled, "routing/prefix counters never settled:\n{body}");
+    assert_eq!(
+        metric(&body, "lazyeviction_router_routed_pressure_total"),
+        Some(3.0),
+        "exactly the first request of each group routes by pressure"
+    );
+    assert_eq!(
+        metric(&body, "lazyeviction_router_rebalances_total"),
+        Some(0.0),
+        "an uncontended fleet never rebalances"
+    );
+    assert_eq!(metric(&body, "lazyeviction_replicas_alive"), Some(3.0));
+    // per-replica concentration: hits only ever come in whole groups of 3
+    for r in 0..3 {
+        let hits = labeled_metric(&body, "lazyeviction_pool_prefix_hits", r).unwrap_or(0.0);
+        assert_eq!(
+            hits as u64 % 3,
+            0,
+            "replica {r}: {hits} hits — a group split across replicas"
+        );
+    }
+
+    // kill_replica is a chaos verb: without --fault-injection it must be
+    // refused, and the fleet introspection command must answer
+    let refused = roundtrip(AFFINITY_ADDR, r#"{"cmd":"kill_replica","replica":0}"#);
+    assert!(
+        refused.str_at("error").unwrap().contains("fault"),
+        "kill_replica must be gated: {refused:?}"
+    );
+    let fleet = roundtrip(AFFINITY_ADDR, r#"{"cmd":"fleet"}"#);
+    let replicas = fleet.get("fleet").and_then(|v| v.as_arr()).expect("fleet array");
+    assert_eq!(replicas.len(), 3);
+    assert!(replicas.iter().all(|r| r.f64_at("alive").ok() == Some(1.0)));
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn mid_decode_disconnect_reclaims_only_the_home_replica() {
+    // One streaming client hangs up mid-decode on a 3-replica swap-tier
+    // fleet. The cancel must route to the victim's home replica alone:
+    // exactly one replica counts the cancellation and returns its blocks
+    // and parked tier bytes to idle; the other two never owned anything.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let telemetry = Telemetry::new();
+    spawn_metrics_listener(DISCONNECT_METRICS, telemetry.clone(), shutdown.clone())
+        .expect("bind metrics listener");
+    let mut cfg = pooled_cfg("lazy", 2, 9);
+    cfg.prefix_cache = None;
+    cfg.host_tier = Some(HostTierConfig { max_bytes: 1 << 20 });
+    cfg.preempt_mode = PreemptMode::Swap;
+    serve_fleet_on(
+        DISCONNECT_ADDR,
+        cfg,
+        3,
+        FleetOptions::default(),
+        &shutdown,
+        Some(telemetry),
+    );
+
+    {
+        let stream = TcpStream::connect(DISCONNECT_ADDR).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writeln!(
+            &stream,
+            r#"{{"prompt":"#A=3;B=7;\n>","max_new":4096,"stream":true}}"#
+        )
+        .unwrap();
+        for i in 0..5 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).expect("token line");
+            assert_eq!(j.str_at("event").unwrap(), "token", "line {i}: {line}");
+        }
+        // drop both halves: the reader thread sees EOF mid-decode
+    }
+
+    let mut body = String::new();
+    let mut settled = false;
+    for _ in 0..250 {
+        body = http_get_body(DISCONNECT_METRICS, "/metrics");
+        let cancelled: f64 = (0..3)
+            .map(|r| {
+                labeled_metric(&body, "lazyeviction_cancelled_rows_total", r).unwrap_or(0.0)
+            })
+            .sum();
+        let drained = (0..3).all(|r| {
+            labeled_metric(&body, "lazyeviction_pool_free_blocks", r) == Some(9.0)
+                && labeled_metric(&body, "lazyeviction_pool_parked_bytes", r) == Some(0.0)
+        });
+        if cancelled == 1.0 && drained {
+            settled = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        settled,
+        "abort did not reclaim exactly the home replica's state:\n{body}"
+    );
+    // exactly one replica owned the request — and it streamed the tokens
+    let home: Vec<usize> = (0..3)
+        .filter(|&r| {
+            labeled_metric(&body, "lazyeviction_cancelled_rows_total", r) == Some(1.0)
+        })
+        .collect();
+    assert_eq!(home.len(), 1, "one home replica, not {home:?}");
+    assert!(
+        labeled_metric(&body, "lazyeviction_streamed_tokens_total", home[0]).unwrap() >= 5.0,
+        "the streamed events must be counted on the home replica"
+    );
+    for r in 0..3 {
+        assert_eq!(
+            labeled_metric(&body, "lazyeviction_requests_finished_total", r),
+            Some(0.0),
+            "no replica ever finished the abandoned request"
+        );
+    }
+
+    // the fleet stays healthy: a fresh client is served to completion
+    let j = roundtrip(DISCONNECT_ADDR, r#"{"prompt":"#A=1;\n>","max_new":8}"#);
+    assert!(j.get("error").is_none(), "post-abort request failed: {j:?}");
+    assert_eq!(j.usize_at("tokens").unwrap(), 8);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn killed_replica_drains_to_survivors_with_no_hung_connections() {
+    // Four clients send the same long prompt — affinity stacks all four on
+    // one replica (batch = 1: one decodes, three queue). Killing that
+    // replica mid-serve must resolve every one of them: the active row
+    // fails deterministically, the queued fresh requests are orphaned back
+    // to the router and finish on the survivors. No connection may hang.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let telemetry = Telemetry::new();
+    spawn_metrics_listener(KILL_METRICS, telemetry.clone(), shutdown.clone())
+        .expect("bind metrics listener");
+    let opts = FleetOptions {
+        routing: Routing::Affinity,
+        fault_injection: true,
+        ..FleetOptions::default()
+    };
+    serve_fleet_on(
+        KILL_ADDR,
+        pooled_cfg("lazy", 1, 16),
+        3,
+        opts,
+        &shutdown,
+        Some(telemetry),
+    );
+
+    let request = r#"{"prompt":"#A=3;B=7;\n>","max_new":4096}"#;
+    let mut clients = Vec::new();
+    for _ in 0..4 {
+        let stream = TcpStream::connect(KILL_ADDR).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        writeln!(&stream, "{request}").unwrap();
+        clients.push(stream);
+    }
+
+    // admin connection: wait until the home replica is actually decoding,
+    // identify it, then kill it
+    let admin = TcpStream::connect(KILL_ADDR).unwrap();
+    admin
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut admin_reader = BufReader::new(admin.try_clone().unwrap());
+    let mut ask = |cmd: &str| -> Json {
+        writeln!(&admin, "{cmd}").unwrap();
+        let mut line = String::new();
+        admin_reader.read_line(&mut line).expect("admin reply");
+        Json::parse(&line).unwrap_or_else(|e| panic!("bad admin reply '{line}': {e}"))
+    };
+    let mut home = None;
+    for _ in 0..250 {
+        let fleet = ask(r#"{"cmd":"fleet"}"#);
+        let replicas = fleet.get("fleet").and_then(|v| v.as_arr()).expect("fleet array");
+        home = replicas.iter().enumerate().find_map(|(i, r)| {
+            (r.f64_at("active").ok() == Some(1.0) && r.f64_at("queue_len").ok() == Some(3.0))
+                .then_some(i)
+        });
+        if home.is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let home = home.expect("all four requests must stack on one decoding replica");
+    let killed = ask(&format!(r#"{{"cmd":"kill_replica","replica":{home}}}"#));
+    assert_eq!(killed.usize_at("killed").ok(), Some(home), "kill refused: {killed:?}");
+
+    // every connection resolves: the active row fails with the kill error,
+    // the three orphans complete on the survivors
+    let mut errors = 0usize;
+    let mut completed = 0usize;
+    for (i, stream) in clients.into_iter().enumerate() {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader
+            .read_line(&mut line)
+            .unwrap_or_else(|e| panic!("client {i} hung after the kill: {e}"));
+        let j = Json::parse(&line).unwrap_or_else(|e| panic!("client {i}: bad '{line}': {e}"));
+        match j.get("error").and_then(|v| v.as_str()) {
+            Some(msg) => {
+                assert!(
+                    msg.contains("killed"),
+                    "client {i}: unexpected failure '{msg}'"
+                );
+                errors += 1;
+            }
+            None => {
+                assert_eq!(j.usize_at("tokens").unwrap(), 4096, "client {i} truncated");
+                completed += 1;
+            }
+        }
+    }
+    assert_eq!(errors, 1, "exactly the active row dies with its replica");
+    assert_eq!(completed, 3, "every orphan must finish on a survivor");
+
+    // the fleet reports the death and keeps serving
+    let mut alive_ok = false;
+    let mut body = String::new();
+    for _ in 0..250 {
+        body = http_get_body(KILL_METRICS, "/metrics");
+        if metric(&body, "lazyeviction_replicas_alive") == Some(2.0) {
+            alive_ok = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(alive_ok, "replicas_alive never dropped to 2:\n{body}");
+    let j = roundtrip(KILL_ADDR, r#"{"prompt":"#B=5;\n>","max_new":8}"#);
+    assert!(j.get("error").is_none(), "post-kill request failed: {j:?}");
+    assert_eq!(j.usize_at("tokens").unwrap(), 8);
+    shutdown.store(true, Ordering::Relaxed);
+}
