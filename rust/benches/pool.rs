@@ -157,6 +157,7 @@ fn main() -> anyhow::Result<()> {
         };
         let cold = e.run_all(reqs(1))?;
         let warm = e.run_all(reqs(2))?;
+        e.audit_invariants(&[], true, "prefill-skip drain");
         let prefills = e.exec_counts().prefill;
         println!(
             "\nPrefill-skip scenario — identical prompt twice through one engine\n\
@@ -224,6 +225,7 @@ fn main() -> anyhow::Result<()> {
         cfg.params.recent = 8;
         let mut e = Engine::new_sim(cfg)?;
         let rs = e.run_all((0..3).map(mk).collect())?;
+        e.audit_invariants(&[], true, "preemption-resume drain");
         println!(
             "\nPreemption-resume scenario — 3 requests, 2 rows, 9-block pool\n\
              \x20 preemptions {}, resumes {} (fallbacks {}), recomputed tokens {}",
@@ -315,6 +317,7 @@ fn main() -> anyhow::Result<()> {
         };
         let mut e = Engine::new_sim(tier_cfg(true, PreemptMode::Recompute, 1, 16))?;
         let r = e.run_all(vec![mk(0, 60)])?;
+        e.audit_invariants(&[], true, "tier-promotion drain");
         assert_eq!(r[0].text, control, "the tier must not change outputs");
         let m = &e.metrics;
         println!(
@@ -351,6 +354,7 @@ fn main() -> anyhow::Result<()> {
         };
         let mut e = Engine::new_sim(tier_cfg(true, PreemptMode::Swap, 2, 9))?;
         let rs = e.run_all((0..3).map(|i| mk(i, 50)).collect())?;
+        e.audit_invariants(&[], true, "swap-preemption drain");
         for r in &rs {
             assert_eq!(r.text, solo, "request {}: swap resume diverged", r.id);
             assert_eq!(r.metrics.tokens_out, 50);
@@ -582,6 +586,7 @@ fn main() -> anyhow::Result<()> {
                 };
                 let mut e = Engine::new_sim(cfg)?;
                 let rs = e.run_all((0..n_reqs).map(|id| mk(id, max_new)).collect())?;
+                e.audit_invariants(&[], true, "trajectory drain");
                 if scenario == "steady" {
                     steady_text = rs.first().map(|r| r.text.clone());
                 }
@@ -678,6 +683,7 @@ fn main() -> anyhow::Result<()> {
                     }
                 }
                 assert_eq!(ttft.n(), n_reqs, "every request must stream a first token");
+                e.audit_invariants(&[], true, "stream drain");
                 let m = &e.metrics;
                 report.push(BenchScenario {
                     policy: policy.into(),

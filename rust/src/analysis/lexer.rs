@@ -1,0 +1,452 @@
+//! A small hand-rolled Rust lexer — just enough structure for the lint
+//! rules in [`super::rules`]: a token stream with line numbers, string
+//! literals separated from code, comments stripped (except `lazylint:`
+//! control comments, which are parsed into [`Suppression`]s), and
+//! `#[cfg(test)]` regions marked so rules can skip test code.
+//!
+//! This is *not* a Rust parser. It recognizes exactly the lexical shapes
+//! the rules need to be sound on this codebase: line and nested block
+//! comments, plain/raw/byte string literals with escapes, char literals vs
+//! lifetimes, identifiers, numbers, and single-character punctuation. No
+//! crates.io access in this environment, so no `syn` — and none needed:
+//! every rule is a token-sequence pattern, not a semantic query.
+
+/// What a token is, as far as the rules care.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`unwrap`, `let`, `HashMap`, …).
+    Ident,
+    /// String literal; `text` is the raw content between the quotes
+    /// (escapes left unprocessed — the rules match literal names, which
+    /// never contain escapes).
+    Str,
+    /// Char literal (`'a'`, `'\n'`).
+    Char,
+    /// Lifetime (`'a` in type position).
+    Life,
+    /// Numeric literal.
+    Num,
+    /// One punctuation character; `text` is that character.
+    Punct,
+}
+
+/// One token: kind, source text, 1-based line, and whether it sits inside
+/// a `#[cfg(test)]` item (attribute + brace-matched body).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+    pub in_test: bool,
+}
+
+impl Tok {
+    pub fn is(&self, kind: Kind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+/// A `// lazylint: allow(<rule>): <reason>` control comment. It applies to
+/// findings on its own line and on the line directly below (so it can sit
+/// on its own line above the offending statement).
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub line: usize,
+    pub rule: String,
+    /// Non-empty human justification after the closing paren. A
+    /// suppression without one is itself reported (`allow-reason`).
+    pub reason: String,
+    /// Malformed control comment (bad `allow(...)` shape); reported.
+    pub malformed: bool,
+}
+
+/// One lexed file: the token stream plus the control comments found in it.
+#[derive(Clone, Debug, Default)]
+pub struct FileFacts {
+    /// Repo-relative path, `/`-separated (rules scope on suffixes of it).
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub suppressions: Vec<Suppression>,
+}
+
+impl FileFacts {
+    /// Lex `src`. `path` is kept verbatim for scoping and reporting.
+    pub fn lex(path: &str, src: &str) -> FileFacts {
+        let mut f = FileFacts {
+            path: path.to_string(),
+            ..FileFacts::default()
+        };
+        let b: Vec<char> = src.chars().collect();
+        let mut i = 0usize;
+        let mut line = 1usize;
+        while i < b.len() {
+            let c = b[i];
+            if c == '\n' {
+                line += 1;
+                i += 1;
+            } else if c.is_whitespace() {
+                i += 1;
+            } else if c == '/' && b.get(i + 1) == Some(&'/') {
+                let start = i + 2;
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                if let Some(s) = parse_control(text.trim(), line) {
+                    f.suppressions.push(s);
+                }
+            } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                // nested block comments, line counting preserved
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            } else if c == '"' {
+                let (text, ni, nl) = lex_string(&b, i + 1, line);
+                f.push(Kind::Str, text, line);
+                line = nl;
+                i = ni;
+            } else if c == 'b'
+                && b.get(i + 1) == Some(&'"')
+                && !matches!(b.get(i.wrapping_sub(1)), Some(p) if p.is_alphanumeric() || *p == '_')
+            {
+                // byte string: escaped like a plain string, `b` prefix
+                let (text, ni, nl) = lex_string(&b, i + 2, line);
+                f.push(Kind::Str, text, line);
+                line = nl;
+                i = ni;
+            } else if is_raw_string_start(&b, i) {
+                let (text, ni, nl) = lex_raw_string(&b, i, line);
+                f.push(Kind::Str, text, line);
+                line = nl;
+                i = ni;
+            } else if c == '\'' {
+                // char literal vs lifetime: a lifetime is `'ident` not
+                // followed by a closing quote; everything else (escapes,
+                // single chars) closes with `'`
+                let (kind, text, ni) = lex_quote(&b, i);
+                f.push(kind, text, line);
+                i = ni;
+            } else if c.is_alphabetic() || c == '_' {
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                f.push(Kind::Ident, b[start..i].iter().collect(), line);
+            } else if c.is_ascii_digit() {
+                let start = i;
+                // numbers (incl. hex/underscores/float tails); a trailing
+                // `.` followed by an ident is a method call, not a float
+                while i < b.len()
+                    && (b[i].is_alphanumeric()
+                        || b[i] == '_'
+                        || (b[i] == '.'
+                            && b.get(i + 1).is_some_and_digit()))
+                {
+                    i += 1;
+                }
+                f.push(Kind::Num, b[start..i].iter().collect(), line);
+            } else {
+                f.push(Kind::Punct, c.to_string(), line);
+                i += 1;
+            }
+        }
+        mark_test_regions(&mut f.toks);
+        f
+    }
+
+    fn push(&mut self, kind: Kind, text: String, line: usize) {
+        self.toks.push(Tok {
+            kind,
+            text,
+            line,
+            in_test: false,
+        });
+    }
+
+    /// Iterator over non-test tokens (what most rules scan).
+    pub fn code_toks(&self) -> impl Iterator<Item = (usize, &Tok)> {
+        self.toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.in_test)
+    }
+}
+
+/// Whether `i` starts a *raw* string: `r"`, `r#"`, `br#"`, …. Plain `b"`
+/// byte strings are escaped and handled by [`lex_string`] instead.
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while b.get(j) == Some(&'#') {
+        j += 1;
+    }
+    b.get(j) == Some(&'"') && !matches!(b.get(i.wrapping_sub(1)), Some(c) if c.is_alphanumeric() || *c == '_')
+}
+
+/// Lex a plain (possibly byte-prefixed) string body starting *after* the
+/// opening quote. Returns (content, next index, next line).
+fn lex_string(b: &[char], mut i: usize, mut line: usize) -> (String, usize, usize) {
+    let start = i;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => break,
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    let text: String = b[start..i.min(b.len())].iter().collect();
+    (text, (i + 1).min(b.len()), line)
+}
+
+/// Lex a raw string starting at its prefix (`r`, `br`, …). No escapes;
+/// terminated by `"` followed by the same number of `#`s it opened with.
+fn lex_raw_string(b: &[char], mut i: usize, mut line: usize) -> (String, usize, usize) {
+    if b.get(i) == Some(&'b') {
+        i += 1;
+    }
+    i += 1; // the `r`
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&'#') {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // the opening quote
+    let start = i;
+    while i < b.len() {
+        if b[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == '"' {
+            let mut ok = true;
+            for k in 0..hashes {
+                if b.get(i + 1 + k) != Some(&'#') {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                let text: String = b[start..i].iter().collect();
+                return (text, i + 1 + hashes, line);
+            }
+        }
+        i += 1;
+    }
+    (b[start.min(b.len())..].iter().collect(), b.len(), line)
+}
+
+/// Lex from a `'`: char literal (closes with `'`) or lifetime.
+fn lex_quote(b: &[char], i: usize) -> (Kind, String, usize) {
+    // escape: always a char literal
+    if b.get(i + 1) == Some(&'\\') {
+        let mut j = i + 2;
+        while j < b.len() && b[j] != '\'' {
+            j += 1;
+        }
+        return (Kind::Char, b[i + 1..j.min(b.len())].iter().collect(), (j + 1).min(b.len()));
+    }
+    // 'x' — a single char then a closing quote
+    if b.get(i + 2) == Some(&'\'') {
+        let text = b.get(i + 1).map(|c| c.to_string()).unwrap_or_default();
+        return (Kind::Char, text, i + 3);
+    }
+    // lifetime: 'ident (no closing quote)
+    let mut j = i + 1;
+    while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+        j += 1;
+    }
+    (Kind::Life, b[i + 1..j].iter().collect(), j)
+}
+
+/// Parse a line comment body into a control comment, if it is one.
+/// Syntax: `lazylint: allow(<rule>): <reason>`.
+fn parse_control(text: &str, line: usize) -> Option<Suppression> {
+    let rest = text.strip_prefix("lazylint:")?.trim();
+    let bad = |why: &str| Suppression {
+        line,
+        rule: String::new(),
+        reason: why.to_string(),
+        malformed: true,
+    };
+    let Some(inner) = rest.strip_prefix("allow(") else {
+        return Some(bad("expected `allow(<rule>)`"));
+    };
+    let Some(close) = inner.find(')') else {
+        return Some(bad("unclosed `allow(`"));
+    };
+    let rule = inner[..close].trim().to_string();
+    if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_lowercase() || c == '-') {
+        return Some(bad("rule name must be kebab-case"));
+    }
+    let tail = inner[close + 1..].trim();
+    let reason = tail.strip_prefix(':').unwrap_or("").trim().to_string();
+    Some(Suppression {
+        line,
+        rule,
+        reason,
+        malformed: false,
+    })
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item: the attribute
+/// itself, any further attributes, and the brace-matched body of the item
+/// that follows (`mod tests { … }`, a single `#[cfg(test)] fn`, …).
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_at(toks, i) {
+            // find the item body: first `{` after the attribute, then its
+            // matching `}` (items introduced by cfg(test) in this tree are
+            // always brace-delimited modules or functions)
+            let attr_start = i;
+            let mut j = i + 7; // past `# [ cfg ( test ) ]`
+            while j < toks.len() && !toks[j].is(Kind::Punct, "{") {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            let mut end = j;
+            while end < toks.len() {
+                if toks[end].is(Kind::Punct, "{") {
+                    depth += 1;
+                } else if toks[end].is(Kind::Punct, "}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                end += 1;
+            }
+            for t in toks[attr_start..(end + 1).min(toks.len())].iter_mut() {
+                t.in_test = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// `# [ cfg ( test ) ]` starting at token `i`.
+fn is_cfg_test_at(toks: &[Tok], i: usize) -> bool {
+    let want: [(&Kind, &str); 7] = [
+        (&Kind::Punct, "#"),
+        (&Kind::Punct, "["),
+        (&Kind::Ident, "cfg"),
+        (&Kind::Punct, "("),
+        (&Kind::Ident, "test"),
+        (&Kind::Punct, ")"),
+        (&Kind::Punct, "]"),
+    ];
+    want.iter()
+        .enumerate()
+        .all(|(k, (kind, text))| toks.get(i + k).map_or(false, |t| t.kind == **kind && t.text == *text))
+}
+
+/// Tiny helper so the number lexer reads cleanly.
+trait IsDigit {
+    fn is_some_and_digit(&self) -> bool;
+}
+impl IsDigit for Option<&char> {
+    fn is_some_and_digit(&self) -> bool {
+        self.map_or(false, |c| c.is_ascii_digit())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_and_idents() {
+        let f = FileFacts::lex(
+            "x.rs",
+            "let s = \"lazyeviction_x\"; // plain comment\nlet t = r#\"raw \"quoted\" text\"#;",
+        );
+        let strs: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, vec!["lazyeviction_x", "raw \"quoted\" text"]);
+        assert!(f.suppressions.is_empty(), "plain comments are not control comments");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let f = FileFacts::lex("x.rs", r#"let s = "a\"b"; let u = s.unwrap();"#);
+        let s = f.toks.iter().find(|t| t.kind == Kind::Str).unwrap();
+        assert_eq!(s.text, "a\\\"b");
+        assert!(f.toks.iter().any(|t| t.is(Kind::Ident, "unwrap")));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let f = FileFacts::lex("x.rs", "fn f<'a>(x: &'a str) { let c = '\\n'; let d = ']'; }");
+        let lifes = f.toks.iter().filter(|t| t.kind == Kind::Life).count();
+        let chars = f.toks.iter().filter(|t| t.kind == Kind::Char).count();
+        assert_eq!(lifes, 2);
+        assert_eq!(chars, 2);
+        // the `]` char literal must not register as punctuation
+        assert!(!f.toks.iter().any(|t| t.is(Kind::Punct, "]") && t.line == 1 && t.text == "]" && t.kind == Kind::Punct
+            && f.toks.iter().filter(|u| u.is(Kind::Punct, "]")).count() > 1));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() { a.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { b.unwrap(); }\n}\nfn live2() {}";
+        let f = FileFacts::lex("x.rs", src);
+        let unwraps: Vec<bool> = f
+            .toks
+            .iter()
+            .filter(|t| t.is(Kind::Ident, "unwrap"))
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+        assert!(f.toks.iter().any(|t| t.is(Kind::Ident, "live2") && !t.in_test));
+    }
+
+    #[test]
+    fn control_comments_parse() {
+        let src = "// lazylint: allow(panic-surface): bounded by construction\nx[0];\n// lazylint: allow(determinism)\n// lazylint: nonsense\n";
+        let f = FileFacts::lex("x.rs", src);
+        assert_eq!(f.suppressions.len(), 3);
+        assert_eq!(f.suppressions[0].rule, "panic-surface");
+        assert_eq!(f.suppressions[0].reason, "bounded by construction");
+        assert!(!f.suppressions[0].malformed);
+        assert_eq!(f.suppressions[1].rule, "determinism");
+        assert!(f.suppressions[1].reason.is_empty(), "missing reason is recorded as empty");
+        assert!(f.suppressions[2].malformed);
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let f = FileFacts::lex("x.rs", "/* a /* nested */ b\nc */ ident_after");
+        let t = f.toks.iter().find(|t| t.is(Kind::Ident, "ident_after")).unwrap();
+        assert_eq!(t.line, 2, "block comment newlines must advance the line counter");
+    }
+}

@@ -1,0 +1,435 @@
+//! `lazylint` — the repo's own static-analysis pass.
+//!
+//! Eight PRs of pool/tier/fleet machinery rest on invariants that until
+//! now existed only as prose: the deterministic-failure-routing contract
+//! on the serving threads, doc/metric/flag parity, the no-sleep-poll
+//! serve-loop contract, simulator determinism, and the `BENCH_pool.json`
+//! schema. This module turns each into a mechanical check over a lexed
+//! token stream ([`lexer`]) so violations fail CI instead of waiting for
+//! a reviewer. The rule catalog, scoping and suppression syntax are
+//! documented in docs/analysis.md; ARCHITECTURE.md §Static analysis maps
+//! each rule to the contract it enforces. The *dynamic* counterpart —
+//! runtime invariants a lexer cannot see — is [`crate::kvpool::audit`].
+//!
+//! Zero dependencies by construction: the lexer is hand-rolled (no
+//! crates.io in this environment), rules are token-sequence patterns, and
+//! the whole pass runs from a plain binary (`cargo run --release --bin
+//! lazylint -- rust/src docs`).
+//!
+//! ## Suppressions
+//!
+//! `// lazylint: allow(<rule>): <reason>` on the offending line or the
+//! line directly above suppresses that rule there. The reason is
+//! mandatory — an allow without one (or a malformed control comment) is
+//! itself a finding (`allow-reason`), so every suppression in the tree
+//! carries its justification next to the code it excuses.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lexer::FileFacts;
+
+/// One lint finding: rule, repo-relative location, message.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(w, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run every rule over the tree. `rust_src` is the crate source root
+/// (`rust/src`), `docs` the documentation directory; `rust/benches` is
+/// found relative to `rust_src`. Returns the surviving findings, sorted
+/// by (path, line). IO problems (unreadable tree) come back as `Err` so
+/// the binary can distinguish "findings" from "could not run".
+pub fn run(rust_src: &Path, docs: &Path) -> Result<Vec<Finding>, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(rust_src, &mut files)?;
+    files.sort();
+    let mut facts: Vec<FileFacts> = Vec::new();
+    for p in &files {
+        let rel = p
+            .strip_prefix(rust_src)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        facts.push(FileFacts::lex(&rel, &src));
+    }
+    // the bench driver lives outside src/ but inside the contracts
+    let bench_path = rust_src
+        .parent()
+        .map(|r| r.join("benches").join("pool.rs"))
+        .filter(|p| p.is_file());
+    let bench_facts = match &bench_path {
+        Some(p) => {
+            let src = fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+            Some(FileFacts::lex("benches/pool.rs", &src))
+        }
+        None => None,
+    };
+    let observability_md = read_doc(docs, "observability.md");
+    let serving_md = read_doc(docs, "serving.md");
+
+    let mut findings: Vec<Finding> = Vec::new();
+    if observability_md.is_empty() {
+        findings.push(Finding {
+            rule: rules::PARITY,
+            path: "docs/observability.md".into(),
+            line: 0,
+            msg: "docs/observability.md missing or empty — metric/event parity cannot hold".into(),
+        });
+    }
+    if serving_md.is_empty() {
+        findings.push(Finding {
+            rule: rules::PARITY,
+            path: "docs/serving.md".into(),
+            line: 0,
+            msg: "docs/serving.md missing or empty — flag parity cannot hold".into(),
+        });
+    }
+
+    for f in &facts {
+        if panic_surface_scope(&f.path) {
+            findings.extend(apply_suppressions(f, rules::panic_surface(f)));
+        }
+        let d = rules::determinism(
+            f,
+            time_scope(&f.path),
+            sleep_scope(&f.path),
+            hashmap_scope(&f.path),
+        );
+        findings.extend(apply_suppressions(f, d));
+        findings.extend(control_comment_findings(f));
+    }
+    if let Some(b) = &bench_facts {
+        let d = rules::determinism(b, false, false, true);
+        findings.extend(apply_suppressions(b, d));
+        findings.extend(control_comment_findings(b));
+    }
+
+    let inputs = rules::ParityInputs {
+        code: &facts,
+        main: facts.iter().find(|f| f.path == "main.rs"),
+        metrics: facts.iter().find(|f| f.path == "metrics/mod.rs"),
+        flight: facts.iter().find(|f| f.path == "telemetry/flight.rs"),
+        observability_md: &observability_md,
+        serving_md: &serving_md,
+    };
+    findings.extend(suppress_by_path(&facts, rules::parity(&inputs)));
+    if let Some(report) = facts.iter().find(|f| f.path == "bench_harness/report.rs") {
+        findings.extend(suppress_by_path(&facts, rules::schema(report, bench_facts.as_ref())));
+    }
+
+    findings.sort_by(|a, b| (a.path.as_str(), a.line).cmp(&(b.path.as_str(), b.line)));
+    Ok(findings)
+}
+
+/// The serving-path files under the deterministic-failure-routing
+/// contract (ISSUE scope: `server/`, the actor, the telemetry listener,
+/// the wire layer).
+fn panic_surface_scope(path: &str) -> bool {
+    path.starts_with("server/")
+        || path == "coordinator/actor.rs"
+        || path == "telemetry/http.rs"
+        || path == "util/wire.rs"
+}
+
+/// Replay/routing determinism: the simulator and the router are pure
+/// functions of their seeds.
+fn time_scope(path: &str) -> bool {
+    path.starts_with("sim/") || path == "scheduler/routing.rs"
+}
+
+/// The PR 7 condvar contract: no sleep-polling in serve/actor loops.
+fn sleep_scope(path: &str) -> bool {
+    path.starts_with("server/") || path == "coordinator/actor.rs"
+}
+
+/// Ordered-output paths that must not iterate a `HashMap`.
+fn hashmap_scope(path: &str) -> bool {
+    path == "scheduler/routing.rs" || path.starts_with("benches/")
+}
+
+/// Drop findings covered by a well-formed, reasoned `allow` on the same
+/// line or the line above. Reason-less and malformed allows never
+/// suppress (they are reported separately by
+/// [`control_comment_findings`]).
+fn apply_suppressions(f: &FileFacts, found: Vec<Finding>) -> Vec<Finding> {
+    found
+        .into_iter()
+        .filter(|x| {
+            !f.suppressions.iter().any(|s| {
+                !s.malformed
+                    && !s.reason.is_empty()
+                    && s.rule == x.rule
+                    && (s.line == x.line || s.line + 1 == x.line)
+            })
+        })
+        .collect()
+}
+
+/// Cross-file rules (parity, schema) anchor findings to whichever file
+/// owns the offending token; route each finding through that file's
+/// suppressions.
+fn suppress_by_path(facts: &[FileFacts], found: Vec<Finding>) -> Vec<Finding> {
+    found
+        .into_iter()
+        .filter(|x| match facts.iter().find(|f| f.path == x.path) {
+            Some(f) => !f.suppressions.iter().any(|s| {
+                !s.malformed
+                    && !s.reason.is_empty()
+                    && s.rule == x.rule
+                    && (s.line == x.line || s.line + 1 == x.line)
+            }),
+            None => true,
+        })
+        .collect()
+}
+
+/// The meta-rule: every `lazylint:` control comment must be well-formed
+/// and carry a reason.
+fn control_comment_findings(f: &FileFacts) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for s in &f.suppressions {
+        if s.malformed {
+            out.push(Finding {
+                rule: rules::ALLOW_REASON,
+                path: f.path.clone(),
+                line: s.line,
+                msg: format!("malformed lazylint control comment ({})", s.reason),
+            });
+        } else if s.reason.is_empty() {
+            out.push(Finding {
+                rule: rules::ALLOW_REASON,
+                path: f.path.clone(),
+                line: s.line,
+                msg: format!(
+                    "allow({}) needs a reason: `// lazylint: allow({}): <why this is safe>`",
+                    s.rule, s.rule
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let p = entry.path();
+        if p.is_dir() {
+            // vendored shims are out of scope (separate crates, excluded
+            // from the contracts and from #![forbid(unsafe_code)] alike)
+            if p.file_name().map_or(false, |n| n == "vendor") {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().map_or(false, |e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn read_doc(docs: &Path, name: &str) -> String {
+    fs::read_to_string(docs.join(name)).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lexer::FileFacts;
+    use super::rules;
+
+    fn lex(path: &str, src: &str) -> FileFacts {
+        FileFacts::lex(path, src)
+    }
+
+    // ---- rule 1: panic-surface ------------------------------------------
+
+    #[test]
+    fn panic_surface_fires_on_each_seeded_violation() {
+        let bad = lex(
+            "server/mod.rs",
+            "fn f(v: Vec<u32>, i: usize) -> u32 {\n    let a = v.get(0).unwrap();\n    let b = v.first().expect(\"x\");\n    if i > 9 { panic!(\"boom\"); }\n    v[i] + a + b\n}\n",
+        );
+        let hits = rules::panic_surface(&bad);
+        assert_eq!(hits.len(), 4, "unwrap, expect, panic!, indexing: {hits:?}");
+        assert_eq!(hits[0].line, 2);
+        assert_eq!(hits[1].line, 3);
+        assert_eq!(hits[2].line, 4);
+        assert_eq!(hits[3].line, 5);
+    }
+
+    #[test]
+    fn panic_surface_is_quiet_on_the_good_snippet() {
+        let good = lex(
+            "server/mod.rs",
+            "fn f(v: &[u32], i: usize) -> Option<u32> {\n    // unwrap_or_else and arrays-in-types are not findings\n    let d: [u8; 4] = [0; 4];\n    let x = v.get(i).copied().unwrap_or_default();\n    let y = vec![1, 2][..].first().copied().unwrap_or(0);\n    Some(x + y + d.len() as u32)\n}\n",
+        );
+        let hits: Vec<_> = rules::panic_surface(&good);
+        // `vec![1, 2][..]` *is* slicing of a macro result — prev token `]`
+        let slicing: Vec<_> = hits.iter().filter(|h| h.line == 5).collect();
+        assert_eq!(hits.len(), slicing.len(), "only the real slice remains: {hits:?}");
+    }
+
+    #[test]
+    fn panic_surface_skips_test_code_and_reasoned_allows() {
+        let f = lex(
+            "server/mod.rs",
+            "fn live(v: &[u32]) -> u32 {\n    // lazylint: allow(panic-surface): index bounded by the loop above\n    v[0]\n}\n#[cfg(test)]\nmod tests {\n    fn t(v: Vec<u32>) { v.clone().pop().unwrap(); }\n}\n",
+        );
+        let hits = super::apply_suppressions(&f, rules::panic_surface(&f));
+        assert!(hits.is_empty(), "{hits:?}");
+        assert!(super::control_comment_findings(&f).is_empty());
+    }
+
+    #[test]
+    fn reasonless_allow_is_reported_and_does_not_suppress() {
+        let f = lex(
+            "server/mod.rs",
+            "fn live(v: &[u32]) -> u32 {\n    // lazylint: allow(panic-surface)\n    v[0]\n}\n",
+        );
+        let hits = super::apply_suppressions(&f, rules::panic_surface(&f));
+        assert_eq!(hits.len(), 1, "reason-less allow must not suppress");
+        let meta = super::control_comment_findings(&f);
+        assert_eq!(meta.len(), 1);
+        assert_eq!(meta[0].rule, rules::ALLOW_REASON);
+    }
+
+    // ---- rule 3: determinism --------------------------------------------
+
+    #[test]
+    fn determinism_fires_on_clock_sleep_and_hashmap_iteration() {
+        let f = lex(
+            "sim/thing.rs",
+            "use std::time::Instant;\nfn f() {\n    let t = Instant::now();\n    let s = SystemTime::now();\n    std::thread::sleep(d);\n    let m: HashMap<u64, u32> = HashMap::new();\n    for (k, v) in &m { emit(k, v); }\n    let ks: Vec<_> = m.keys().collect();\n}\n",
+        );
+        let hits = rules::determinism(&f, true, true, true);
+        let lines: Vec<usize> = hits.iter().map(|h| h.line).collect();
+        assert!(lines.contains(&3), "Instant::now: {hits:?}");
+        assert!(lines.contains(&4), "SystemTime: {hits:?}");
+        assert!(lines.contains(&5), "thread::sleep: {hits:?}");
+        assert!(lines.contains(&7), "for-in HashMap: {hits:?}");
+        assert!(lines.contains(&8), ".keys(): {hits:?}");
+    }
+
+    #[test]
+    fn determinism_is_quiet_on_keyed_hashmap_access_and_out_of_scope_clocks() {
+        let f = lex(
+            "scheduler/routing.rs",
+            "fn f() {\n    let mut m: HashMap<u64, u32> = HashMap::new();\n    m.insert(1, 2);\n    let _ = m.get(&1);\n    m.clear();\n}\n",
+        );
+        assert!(rules::determinism(&f, true, true, true).is_empty());
+        // Instant in a file outside the time scope is not a finding
+        let g = lex("metrics/mod.rs", "fn f() { let t = Instant::now(); }");
+        assert!(rules::determinism(&g, false, false, false).is_empty());
+    }
+
+    // ---- rule 2: parity --------------------------------------------------
+
+    #[test]
+    fn parity_fires_on_each_seeded_drift() {
+        let code = vec![lex(
+            "telemetry/mod.rs",
+            "pub const A: &str = \"lazyeviction_documented_total\";\npub const B: &str = \"lazyeviction_undocumented_total\";\n",
+        )];
+        let main = lex(
+            "main.rs",
+            "fn f(args: &Args) { let _ = args.usize_or(\"documented-flag\", 1); let _ = args.str_or(\"ghost-flag\", \"\"); }",
+        );
+        let metrics = lex(
+            "metrics/mod.rs",
+            "pub struct PoolGauges { pub free_blocks: u64, pub ghost_field: u64 }\nimpl PoolGauges { pub fn fields(&self) -> V { vec![(\"free_blocks\", 0.0)] } }\n",
+        );
+        let flight = lex(
+            "telemetry/flight.rs",
+            "pub mod event { pub const A: &str = \"queued\"; pub const B: &str = \"ghost_event\"; }",
+        );
+        let obs = "| `lazyeviction_documented_total` | x |\n| `lazyeviction_phantom_total` | y |\n| `queued` | z |\n";
+        let serving = "`--documented-flag N` does things\n";
+        let hits = rules::parity(&rules::ParityInputs {
+            code: &code,
+            main: Some(&main),
+            metrics: Some(&metrics),
+            flight: Some(&flight),
+            observability_md: obs,
+            serving_md: serving,
+        });
+        let msgs: Vec<&str> = hits.iter().map(|h| h.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("lazyeviction_undocumented_total")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("lazyeviction_phantom_total")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("--ghost-flag")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("ghost_event")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("ghost_field")), "{msgs:?}");
+        // the documented halves stay quiet
+        assert!(!msgs.iter().any(|m| m.contains("`lazyeviction_documented_total`")), "{msgs:?}");
+        assert!(!msgs.iter().any(|m| m.contains("--documented-flag")), "{msgs:?}");
+    }
+
+    #[test]
+    fn parity_is_quiet_when_code_and_docs_agree() {
+        let code = vec![lex(
+            "telemetry/mod.rs",
+            "pub const A: &str = \"lazyeviction_x_total\";\npub const P: &str = \"lazyeviction_pool_\";\n",
+        )];
+        let metrics = lex(
+            "metrics/mod.rs",
+            "pub struct PoolGauges { pub free_blocks: u64 }\nimpl PoolGauges { pub fn fields(&self) -> V { vec![(\"free_blocks\", 0.0)] } }\n",
+        );
+        let obs = "All metrics are prefixed `lazyeviction_`.\n| `lazyeviction_x_total` | x |\n| `lazyeviction_pool_<gauge>` | pool |\n";
+        let hits = rules::parity(&rules::ParityInputs {
+            code: &code,
+            main: None,
+            metrics: Some(&metrics),
+            flight: None,
+            observability_md: obs,
+            serving_md: "",
+        });
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+
+    // ---- rule 4: schema --------------------------------------------------
+
+    #[test]
+    fn schema_fires_on_a_validate_key_to_json_never_writes() {
+        let report = lex(
+            "bench_harness/report.rs",
+            "impl R {\n    pub fn to_json(&self) -> Json { Json::obj().set(\"steps\", 1).set(\"completed\", 2) }\n    pub fn validate(j: &Json) -> Result<(), String> {\n        j.get(\"steps\").ok_or(\"missing steps count\")?;\n        j.get(\"renamed_field\").ok_or(\"missing value\")?;\n        Ok(())\n    }\n}\n",
+        );
+        let hits = rules::schema(&report, None);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].msg.contains("renamed_field"));
+    }
+
+    #[test]
+    fn schema_checks_bench_struct_literals_and_stays_quiet_when_aligned() {
+        let report = lex(
+            "bench_harness/report.rs",
+            "impl R {\n    pub fn to_json(&self) -> Json { Json::obj().set(\"steps\", 1).set(\"policy\", 2) }\n    pub fn validate(j: &Json) -> Result<(), String> { j.get(\"steps\").ok_or(\"missing steps count\")?; Ok(()) }\n}\n",
+        );
+        let good_bench = lex(
+            "benches/pool.rs",
+            "fn main() { r.push(BenchScenario { steps: 1, policy: p.into() }); }",
+        );
+        assert!(rules::schema(&report, Some(&good_bench)).is_empty());
+        let bad_bench = lex(
+            "benches/pool.rs",
+            "fn main() { r.push(BenchScenario { steps: 1, stale_name: 2 }); }",
+        );
+        let hits = rules::schema(&report, Some(&bad_bench));
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].msg.contains("stale_name"));
+    }
+}

@@ -1,0 +1,520 @@
+//! The lint rules. Each is a token-sequence pattern over [`FileFacts`],
+//! grounded in a written contract elsewhere in the repo — the rule docs
+//! below name the contract, docs/analysis.md carries the catalog.
+//!
+//! Rules are plain functions over lexed facts so the fixture tests can
+//! drive them on inline snippets; scoping (which files each rule applies
+//! to) lives in [`super::run`].
+
+use super::lexer::{FileFacts, Kind};
+use super::Finding;
+
+pub const PANIC_SURFACE: &str = "panic-surface";
+pub const PARITY: &str = "parity";
+pub const DETERMINISM: &str = "determinism";
+pub const SCHEMA: &str = "schema";
+/// Meta-rule: `lazylint: allow(...)` comments must be well-formed and
+/// carry a reason. Not suppressible.
+pub const ALLOW_REASON: &str = "allow-reason";
+
+/// Keywords that may legitimately precede `[` (slice patterns, types);
+/// an identifier *not* in this set followed by `[` is an indexing site.
+const KEYWORDS: &[&str] = &[
+    "as", "box", "break", "const", "continue", "crate", "dyn", "else", "enum", "fn", "for", "if",
+    "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref", "return", "static",
+    "struct", "trait", "type", "use", "where", "while",
+];
+
+fn finding(rule: &'static str, path: &str, line: usize, msg: String) -> Finding {
+    Finding {
+        rule,
+        path: path.to_string(),
+        line,
+        msg,
+    }
+}
+
+/// **panic-surface** — the deterministic-failure-routing contract (PR 1 /
+/// PR 7; ARCHITECTURE.md §The event-driven serve loop): connection and
+/// actor threads route malformed input and racing channels into error
+/// replies, never into a thread-killing panic. Flags, in non-test code:
+/// `.unwrap()` / `.expect(...)`, `panic!(...)`, and direct slice indexing
+/// (`x[i]`, `f()[i]`, `x[i][j]` — an out-of-bounds index panics exactly
+/// like an unwrap).
+pub fn panic_surface(f: &FileFacts) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = &f.toks;
+    for (i, t) in f.code_toks() {
+        let prev = i.checked_sub(1).and_then(|p| toks.get(p));
+        if t.kind == Kind::Ident && (t.text == "unwrap" || t.text == "expect") {
+            if prev.map_or(false, |p| p.is(Kind::Punct, ".")) {
+                out.push(finding(
+                    PANIC_SURFACE,
+                    &f.path,
+                    t.line,
+                    format!(".{}() can panic the serving thread — route the failure or annotate an allow", t.text),
+                ));
+            }
+        } else if t.is(Kind::Ident, "panic")
+            && toks.get(i + 1).map_or(false, |n| n.is(Kind::Punct, "!"))
+        {
+            out.push(finding(
+                PANIC_SURFACE,
+                &f.path,
+                t.line,
+                "panic!() in serving-path code — return an error instead".to_string(),
+            ));
+        } else if t.is(Kind::Punct, "[") {
+            let is_index = match prev {
+                Some(p) if p.kind == Kind::Ident => !KEYWORDS.contains(&p.text.as_str()),
+                Some(p) if p.kind == Kind::Punct => p.text == ")" || p.text == "]",
+                _ => false,
+            };
+            if is_index {
+                out.push(finding(
+                    PANIC_SURFACE,
+                    &f.path,
+                    t.line,
+                    "direct slice indexing panics out-of-bounds — use .get()/.get_mut() or annotate an allow".to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// **determinism** — replayability contracts: the simulator and the router
+/// must be pure functions of their inputs (`sim/`, `scheduler/routing.rs`
+/// — seeded tie-breaks, no wall clock), the serve/actor loops are
+/// event-driven, not sleep-polled (the PR 7 condvar contract), and nothing
+/// that feeds ordered output may iterate a `HashMap` (iteration order is
+/// randomized per process).
+pub fn determinism(
+    f: &FileFacts,
+    time_scope: bool,
+    sleep_scope: bool,
+    hashmap_scope: bool,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = &f.toks;
+    let seq = |i: usize, pats: &[(Kind, &str)]| {
+        pats.iter()
+            .enumerate()
+            .all(|(k, (kind, text))| toks.get(i + k).map_or(false, |t| !t.in_test && t.kind == *kind && t.text == *text))
+    };
+    if time_scope {
+        for (i, t) in f.code_toks() {
+            if t.is(Kind::Ident, "Instant")
+                && seq(i, &[(Kind::Ident, "Instant"), (Kind::Punct, ":"), (Kind::Punct, ":"), (Kind::Ident, "now")])
+            {
+                out.push(finding(DETERMINISM, &f.path, t.line,
+                    "Instant::now() in replay/routing code breaks run-to-run determinism".to_string()));
+            }
+            if t.is(Kind::Ident, "SystemTime") {
+                out.push(finding(DETERMINISM, &f.path, t.line,
+                    "SystemTime in replay/routing code breaks run-to-run determinism".to_string()));
+            }
+        }
+    }
+    if sleep_scope {
+        for (i, t) in f.code_toks() {
+            if t.is(Kind::Ident, "thread")
+                && seq(i, &[(Kind::Ident, "thread"), (Kind::Punct, ":"), (Kind::Punct, ":"), (Kind::Ident, "sleep")])
+            {
+                out.push(finding(DETERMINISM, &f.path, t.line,
+                    "thread::sleep in a serve/actor loop — use condvar/channel wakeups (PR 7 contract) or annotate an allow".to_string()));
+            }
+        }
+    }
+    if hashmap_scope {
+        out.extend(hashmap_iteration(f));
+    }
+    out
+}
+
+/// Iteration over an identifier that was declared as a `HashMap`
+/// (`name: HashMap<...>` or `name = HashMap::new()`): `.iter()`, `.keys()`
+/// and friends, or a `for _ in name` loop.
+fn hashmap_iteration(f: &FileFacts) -> Vec<Finding> {
+    let toks = &f.toks;
+    let mut names: Vec<String> = Vec::new();
+    for (i, t) in f.code_toks() {
+        if t.is(Kind::Ident, "HashMap") {
+            // `name : HashMap` (binding or field type annotation)
+            if let (Some(p2), Some(p1)) = (i.checked_sub(2).and_then(|k| toks.get(k)), i.checked_sub(1).and_then(|k| toks.get(k))) {
+                if p1.is(Kind::Punct, ":") && p2.kind == Kind::Ident && !names.contains(&p2.text) {
+                    names.push(p2.text.clone());
+                }
+                // `name = HashMap::new()`
+                if p1.is(Kind::Punct, "=") && p2.kind == Kind::Ident && !names.contains(&p2.text) {
+                    names.push(p2.text.clone());
+                }
+            }
+        }
+    }
+    const ITERS: &[&str] = &["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain"];
+    let mut out = Vec::new();
+    for (i, t) in f.code_toks() {
+        if t.kind != Kind::Ident || !names.contains(&t.text) {
+            continue;
+        }
+        // name . iter ( … )
+        if toks.get(i + 1).map_or(false, |d| d.is(Kind::Punct, "."))
+            && toks.get(i + 2).map_or(false, |m| m.kind == Kind::Ident && ITERS.contains(&m.text.as_str()))
+        {
+            out.push(finding(DETERMINISM, &f.path, t.line,
+                format!("`{}` is a HashMap — .{}() has randomized order; collect+sort or use an ordered structure", t.text, toks[i + 2].text)));
+        }
+        // for _ in [&[mut]] name
+        let mut back = i;
+        while back > 0 && toks.get(back - 1).map_or(false, |p| p.is(Kind::Punct, "&") || p.is(Kind::Ident, "mut")) {
+            back -= 1;
+        }
+        if back > 0 && toks.get(back - 1).map_or(false, |p| p.is(Kind::Ident, "in")) {
+            out.push(finding(DETERMINISM, &f.path, t.line,
+                format!("`for … in {}` iterates a HashMap in randomized order", t.text)));
+        }
+    }
+    out
+}
+
+/// Inputs the **parity** rule needs beyond one file.
+pub struct ParityInputs<'a> {
+    /// Every lexed file under `rust/src` (metric-literal scan).
+    pub code: &'a [FileFacts],
+    /// `main.rs` (flag parse sites).
+    pub main: Option<&'a FileFacts>,
+    /// `metrics/mod.rs` (`PoolGauges` struct vs `fields()`).
+    pub metrics: Option<&'a FileFacts>,
+    /// `telemetry/flight.rs` (`mod event` constants).
+    pub flight: Option<&'a FileFacts>,
+    pub observability_md: &'a str,
+    pub serving_md: &'a str,
+}
+
+/// **parity** — docs/observability.md §"One source of truth": every
+/// `lazyeviction_*` metric name in code appears in docs/observability.md
+/// and vice versa (pool gauges via the `lazyeviction_pool_<…>` wildcard),
+/// every flag `main.rs` parses appears in docs/serving.md, every flight
+/// event name appears in docs/observability.md, and the `PoolGauges`
+/// struct fields match the `PoolGauges::fields()` publish list exactly.
+pub fn parity(inp: &ParityInputs) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // --- metric names, both directions -----------------------------------
+    // code side: string literals + the constructed pool-gauge names
+    let mut code_metrics: Vec<(String, String, usize)> = Vec::new(); // (name, path, line)
+    for f in inp.code {
+        for (_, t) in f.code_toks() {
+            if t.kind == Kind::Str && is_metric_name(&t.text) {
+                if !code_metrics.iter().any(|(n, _, _)| n == &t.text) {
+                    code_metrics.push((t.text.clone(), f.path.clone(), t.line));
+                }
+            }
+        }
+    }
+    let (struct_fields, fields_literals) = inp
+        .metrics
+        .map(pool_gauge_sets)
+        .unwrap_or_default();
+    for (name, line) in &struct_fields {
+        let full = format!("lazyeviction_pool_{name}");
+        if !code_metrics.iter().any(|(n, _, _)| n == &full) {
+            let path = inp.metrics.map(|m| m.path.clone()).unwrap_or_default();
+            code_metrics.push((full, path, *line));
+        }
+    }
+    // docs side: names and `<…>` wildcard prefixes, with their lines
+    let (doc_names, doc_prefixes) = doc_metric_names(inp.observability_md);
+    for (name, path, line) in &code_metrics {
+        let documented = doc_names.iter().any(|(n, _)| n == name)
+            || doc_prefixes.iter().any(|p| name.starts_with(p.as_str()));
+        if !documented {
+            out.push(finding(PARITY, path, *line,
+                format!("metric `{name}` is published but not documented in docs/observability.md")));
+        }
+    }
+    for (name, line) in &doc_names {
+        if !code_metrics.iter().any(|(n, _, _)| n == name) {
+            out.push(finding(PARITY, "docs/observability.md", *line,
+                format!("metric `{name}` is documented but nothing in rust/src publishes it")));
+        }
+    }
+
+    // --- PoolGauges struct vs fields() -----------------------------------
+    if let Some(m) = inp.metrics {
+        for (name, line) in &struct_fields {
+            if !fields_literals.iter().any(|(n, _)| n == name) {
+                out.push(finding(PARITY, &m.path, *line,
+                    format!("PoolGauges field `{name}` is missing from PoolGauges::fields() — it will never be published")));
+            }
+        }
+        for (name, line) in &fields_literals {
+            if !struct_fields.iter().any(|(n, _)| n == name) {
+                out.push(finding(PARITY, &m.path, *line,
+                    format!("PoolGauges::fields() publishes `{name}` but the struct has no such field")));
+            }
+        }
+    }
+
+    // --- flags: main.rs parse sites → docs/serving.md --------------------
+    if let Some(main) = inp.main {
+        for (name, line) in flag_parse_sites(main) {
+            if !inp.serving_md.contains(&format!("--{name}")) {
+                out.push(finding(PARITY, &main.path, line,
+                    format!("flag `--{name}` is parsed but not documented in docs/serving.md")));
+            }
+        }
+    }
+
+    // --- flight events → docs/observability.md ---------------------------
+    if let Some(flight) = inp.flight {
+        for (name, line) in event_mod_literals(flight) {
+            if !inp.observability_md.contains(&format!("`{name}`")) {
+                out.push(finding(PARITY, &flight.path, line,
+                    format!("flight event `{name}` is not documented in docs/observability.md")));
+            }
+        }
+    }
+    out
+}
+
+/// A full metric name: `lazyeviction_` + at least one more segment, not a
+/// bare prefix (trailing `_` marks a prefix constant like `POOL_PREFIX`).
+fn is_metric_name(s: &str) -> bool {
+    s.strip_prefix("lazyeviction_").map_or(false, |rest| {
+        !rest.is_empty()
+            && !rest.ends_with('_')
+            && rest.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+    })
+}
+
+/// Scan a markdown document for `lazyeviction_…` mentions. Returns
+/// (full names with lines, wildcard prefixes — `lazyeviction_pool_<gauge>`
+/// contributes the prefix `lazyeviction_pool_`).
+fn doc_metric_names(md: &str) -> (Vec<(String, usize)>, Vec<String>) {
+    let mut names = Vec::new();
+    let mut prefixes = Vec::new();
+    for (ln, line) in md.lines().enumerate() {
+        let mut rest = line;
+        while let Some(at) = rest.find("lazyeviction_") {
+            let tail = &rest[at..];
+            let end = tail
+                .char_indices()
+                .find(|(_, c)| !(c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_'))
+                .map(|(i, _)| i)
+                .unwrap_or(tail.len());
+            let tok = &tail[..end];
+            if tail[end..].starts_with('<') && tok.len() > "lazyeviction_".len() {
+                // wildcard family like `lazyeviction_pool_<counter>`; the
+                // bare namespace mention (`prefixed lazyeviction_`) is NOT
+                // a wildcard — it would make the code→docs check vacuous
+                if !prefixes.iter().any(|p| p == tok) {
+                    prefixes.push(tok.to_string());
+                }
+            } else if is_metric_name(tok) && !names.iter().any(|(n, _)| n == tok) {
+                names.push((tok.to_string(), ln + 1));
+            }
+            rest = &rest[at + end.max(1)..];
+        }
+    }
+    (names, prefixes)
+}
+
+/// (`PoolGauges` struct field names, `fields()` string literals), each
+/// with a line number.
+fn pool_gauge_sets(f: &FileFacts) -> (Vec<(String, usize)>, Vec<(String, usize)>) {
+    let toks = &f.toks;
+    let mut fields = Vec::new();
+    if let Some(body) = brace_region(f, &["struct", "PoolGauges"]) {
+        let mut i = body.0;
+        while i < body.1 {
+            // `pub name :` at struct depth
+            if toks[i].is(Kind::Ident, "pub")
+                && toks.get(i + 1).map_or(false, |t| t.kind == Kind::Ident)
+                && toks.get(i + 2).map_or(false, |t| t.is(Kind::Punct, ":"))
+            {
+                fields.push((toks[i + 1].text.clone(), toks[i + 1].line));
+                i += 3;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    let mut lits = Vec::new();
+    if let Some(body) = brace_region(f, &["fn", "fields"]) {
+        for t in &toks[body.0..body.1] {
+            if t.kind == Kind::Str && is_plain_key(&t.text) && !lits.iter().any(|(n, _): &(String, usize)| n == &t.text) {
+                lits.push((t.text.clone(), t.line));
+            }
+        }
+    }
+    (fields, lits)
+}
+
+/// `args.<parser>("name")` sites in main.rs — the receiver must literally
+/// be `args` (the CLI parse handle), which keeps JSON `.get("…")` calls
+/// out of the flag set.
+fn flag_parse_sites(f: &FileFacts) -> Vec<(String, usize)> {
+    const PARSERS: &[&str] = &["usize_or", "str_or", "f64_or", "u64_or", "bool_flag", "get", "has"];
+    let toks = &f.toks;
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (i, t) in f.code_toks() {
+        if t.is(Kind::Ident, "args")
+            && toks.get(i + 1).map_or(false, |d| d.is(Kind::Punct, "."))
+            && toks.get(i + 2).map_or(false, |m| m.kind == Kind::Ident && PARSERS.contains(&m.text.as_str()))
+            && toks.get(i + 3).map_or(false, |p| p.is(Kind::Punct, "("))
+            && toks.get(i + 4).map_or(false, |s| s.kind == Kind::Str)
+        {
+            let name = toks[i + 4].text.clone();
+            if !out.iter().any(|(n, _)| n == &name) {
+                out.push((name, toks[i + 4].line));
+            }
+        }
+    }
+    out
+}
+
+/// String literals inside `pub mod event { … }` — the flight event names.
+fn event_mod_literals(f: &FileFacts) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    if let Some(body) = brace_region(f, &["mod", "event"]) {
+        for t in &f.toks[body.0..body.1] {
+            if t.kind == Kind::Str && is_plain_key(&t.text) {
+                out.push((t.text.clone(), t.line));
+            }
+        }
+    }
+    out
+}
+
+/// **schema** — bench_harness/report.rs is the `BENCH_pool.json` contract
+/// (docs/observability.md §BENCH_pool.json): every key `validate()`
+/// requires must be a key `to_json()` serializes (a one-sided rename
+/// would make every CI report fail — or never be checked), and every
+/// report field `benches/pool.rs` fills must be a serialized key.
+pub fn schema(report: &FileFacts, bench: Option<&FileFacts>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // serialized keys: `.set("key", …)` anywhere in non-test report code
+    let toks = &report.toks;
+    let mut set_keys: Vec<String> = Vec::new();
+    for (i, t) in report.code_toks() {
+        if t.is(Kind::Ident, "set")
+            && i > 0
+            && toks[i - 1].is(Kind::Punct, ".")
+            && toks.get(i + 1).map_or(false, |p| p.is(Kind::Punct, "("))
+            && toks.get(i + 2).map_or(false, |s| s.kind == Kind::Str)
+        {
+            let k = toks[i + 2].text.clone();
+            if !set_keys.contains(&k) {
+                set_keys.push(k);
+            }
+        }
+    }
+    // required keys: ident-like string literals inside fn validate
+    if let Some(body) = brace_region(report, &["fn", "validate"]) {
+        for t in &report.toks[body.0..body.1] {
+            if t.kind == Kind::Str && is_plain_key(&t.text) && !set_keys.contains(&t.text) {
+                out.push(finding(SCHEMA, &report.path, t.line,
+                    format!("validate() requires key `{}` but to_json() never serializes it", t.text)));
+            }
+        }
+    }
+    // bench side: struct-literal fields of the report types must be
+    // serialized keys (a field rename that misses to_json shows up here)
+    if let Some(b) = bench {
+        for ty in ["BenchScenario", "FleetCell"] {
+            for (name, line) in struct_literal_fields(b, ty) {
+                if !set_keys.contains(&name) {
+                    out.push(finding(SCHEMA, &b.path, line,
+                        format!("benches fill `{ty}.{name}` but report.rs to_json() has no `{name}` key")));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Field idents of every `Type { field: …, … }` struct literal for `ty`.
+fn struct_literal_fields(f: &FileFacts, ty: &str) -> Vec<(String, usize)> {
+    let toks = &f.toks;
+    let mut out: Vec<(String, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].in_test
+            && toks[i].is(Kind::Ident, ty)
+            && toks.get(i + 1).map_or(false, |t| t.is(Kind::Punct, "{"))
+        {
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            while j < toks.len() {
+                if toks[j].is(Kind::Punct, "{") {
+                    depth += 1;
+                } else if toks[j].is(Kind::Punct, "}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth == 1
+                    && toks[j].kind == Kind::Ident
+                    && toks.get(j + 1).map_or(false, |t| t.is(Kind::Punct, ":"))
+                    && !toks.get(j + 2).map_or(false, |t| t.is(Kind::Punct, ":"))
+                    && toks.get(j - 1).map_or(false, |t| t.is(Kind::Punct, "{") || t.is(Kind::Punct, ","))
+                {
+                    if !out.iter().any(|(n, _)| n == &toks[j].text) {
+                        out.push((toks[j].text.clone(), toks[j].line));
+                    }
+                }
+                j += 1;
+            }
+            i = j;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `^[a-z0-9_]+$` — what a JSON key / metric field / event name looks
+/// like; error-message literals (spaces, braces) never match.
+fn is_plain_key(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Token span (start, end) of the brace-matched body following the first
+/// non-test occurrence of the ident sequence `intro` (e.g. `["fn",
+/// "validate"]`). End is exclusive of the closing brace.
+fn brace_region(f: &FileFacts, intro: &[&str]) -> Option<(usize, usize)> {
+    let toks = &f.toks;
+    let mut i = 0usize;
+    'outer: while i < toks.len() {
+        for (k, want) in intro.iter().enumerate() {
+            match toks.get(i + k) {
+                Some(t) if !t.in_test && t.is(Kind::Ident, want) => {}
+                _ => {
+                    i += 1;
+                    continue 'outer;
+                }
+            }
+        }
+        // found the intro; advance to the first `{`
+        let mut j = i + intro.len();
+        while j < toks.len() && !toks[j].is(Kind::Punct, "{") {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        let start = j + 1;
+        while j < toks.len() {
+            if toks[j].is(Kind::Punct, "{") {
+                depth += 1;
+            } else if toks[j].is(Kind::Punct, "}") {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((start, j));
+                }
+            }
+            j += 1;
+        }
+        return Some((start, toks.len()));
+    }
+    None
+}

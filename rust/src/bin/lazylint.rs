@@ -1,0 +1,41 @@
+//! `lazylint` — run the repo's static-analysis pass from the command line.
+//!
+//! ```text
+//! cargo run --release --bin lazylint -- rust/src docs
+//! ```
+//!
+//! Prints one `path:line: [rule] message` per finding and exits 1 if any
+//! survive suppression, 0 on a clean tree, 2 on usage or IO errors. The
+//! rule catalog and suppression syntax are in docs/analysis.md.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (src, docs) = match (args.first(), args.get(1)) {
+        (Some(s), Some(d)) if args.len() == 2 => (Path::new(s.as_str()), Path::new(d.as_str())),
+        _ => {
+            eprintln!("usage: lazylint <rust-src-dir> <docs-dir>");
+            eprintln!("  e.g. lazylint rust/src docs");
+            return ExitCode::from(2);
+        }
+    };
+    match lazyeviction::analysis::run(src, docs) {
+        Ok(findings) if findings.is_empty() => {
+            println!("lazylint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("lazylint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("lazylint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

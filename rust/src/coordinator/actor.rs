@@ -46,6 +46,7 @@ use std::time::{Duration, Instant};
 use crate::metrics::PoolGauges;
 use crate::scheduler::{AdmissionController, QueuedRequest, ReplicaView, RequestQueue, SloClass};
 use crate::telemetry::event;
+use crate::util::sync::lock_unpoisoned;
 
 use super::{Engine, Request, Response, TokenEvent};
 
@@ -122,12 +123,12 @@ impl ReplicaStatus {
             queue_len: self.queue_len.load(Ordering::Relaxed),
             active: self.active.load(Ordering::Relaxed),
             pressure_floor: self.pressure_floor.load(Ordering::Relaxed),
-            digest: self.digest.lock().unwrap().clone(),
+            digest: lock_unpoisoned(&self.digest).clone(),
         }
     }
 
     fn set_digest(&self, d: Vec<u64>) {
-        let mut g = self.digest.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.digest);
         if *g != d {
             *g = d;
         }
@@ -146,7 +147,7 @@ pub struct ActorHandle {
 impl ActorHandle {
     /// True if the message was delivered to a live actor.
     fn send(&self, msg: EngineMsg) -> bool {
-        match &*self.tx.lock().unwrap() {
+        match &*lock_unpoisoned(&self.tx) {
             Some(tx) => tx.send(msg).is_ok(),
             None => false,
         }
@@ -155,7 +156,7 @@ impl ActorHandle {
     /// Deliver a request to a live actor; a dead one hands the request
     /// back so the router can place it somewhere else.
     pub fn submit(&self, q: QueuedRequest) -> Result<(), QueuedRequest> {
-        match &*self.tx.lock().unwrap() {
+        match &*lock_unpoisoned(&self.tx) {
             Some(tx) => match tx.send(EngineMsg::Submit(q)) {
                 Ok(()) => Ok(()),
                 Err(mpsc::SendError(EngineMsg::Submit(q))) => Err(q),
@@ -186,7 +187,7 @@ impl ActorHandle {
     /// Fault injection / shutdown: drop the inbound sender. The actor sees
     /// `Disconnected` on its next receive and tears down deterministically.
     pub fn kill(&self) {
-        self.tx.lock().unwrap().take();
+        lock_unpoisoned(&self.tx).take();
     }
 
     pub fn is_alive(&self) -> bool {
@@ -195,7 +196,7 @@ impl ActorHandle {
 
     /// Wait for the actor thread to exit (after `drain` or `kill`).
     pub fn join(&self) {
-        if let Some(j) = self.join.lock().unwrap().take() {
+        if let Some(j) = lock_unpoisoned(&self.join).take() {
             let _ = j.join();
         }
     }
@@ -418,7 +419,10 @@ fn actor_loop(
                     }
                 }
             } else {
-                // queued work held by the pressure latch: yield, re-evaluate
+                // queued work held by the pressure latch: the wake condition
+                // is the engine's own pool state, not a message, so there is
+                // nothing to park on
+                // lazylint: allow(determinism): 1ms yield while the admission latch waits on pool pressure, which no channel signals
                 std::thread::sleep(Duration::from_millis(1));
             }
         }

@@ -1689,7 +1689,85 @@ impl Engine {
                 finished.push(self.finish_row(i));
             }
         }
+        // debug builds audit the pool/tier conservation laws every step;
+        // non-strict pins because undrained preemption snapshots may be
+        // held by the caller (run_all's pending queue, the serve queues)
+        #[cfg(debug_assertions)]
+        self.audit_invariants(&[], false, "step end");
         Ok(finished)
+    }
+
+    /// Check the pool/tier conservation laws ([`crate::kvpool::audit`])
+    /// against everything this engine can see: live row tables,
+    /// prefix-cache forks, tier entries, and the preemption snapshots still
+    /// queued inside the engine. `external` lists snapshot-carrying
+    /// requests the *caller* holds (drained preemptions waiting in its
+    /// queue) so their tier pins and ledgers are attributed rather than
+    /// flagged. `strict_pins` additionally requires every pinned tier
+    /// entry to be owned by a visible snapshot — only sound when
+    /// `external` plus the engine's own queue covers all of them (i.e.
+    /// after a full drain). Panics with an owner dump on violation.
+    ///
+    /// Dense-mode engines (no pool) have no distributed ownership to
+    /// check; the call is a no-op. Public (and compiled in release) so the
+    /// CI quick-bench gate can audit at drain points; only the automatic
+    /// per-step hook above is debug-only.
+    pub fn audit_invariants(&self, external: &[&Request], strict_pins: bool, context: &str) {
+        use crate::kvpool::audit::{Auditor, LedgerRef, PinRef, TableRef, TierView};
+        let Some(pool) = &self.pool else { return };
+        let mut tables: Vec<TableRef> = Vec::new();
+        let mut ledgers: Vec<LedgerRef> = Vec::new();
+        for (i, row) in self.rows.iter().enumerate() {
+            let Some(row) = row else { continue };
+            if let Some(t) = row.seq.block_table() {
+                tables.push(TableRef {
+                    owner: format!("row {i} (req {})", row.req.id),
+                    table: t,
+                });
+            }
+            for e in &row.parked.entries {
+                ledgers.push(LedgerRef {
+                    owner: format!("row {i} (req {})", row.req.id),
+                    tier_id: e.tier_id,
+                    records: e.records.len(),
+                });
+            }
+        }
+        let mut pins: Vec<PinRef> = Vec::new();
+        let queued = self.preempted.iter().map(|(_, r)| r);
+        for r in queued.chain(external.iter().copied()) {
+            let Some(st) = &r.resume else { continue };
+            if let Some(swapped) = &st.swapped {
+                for sb in swapped {
+                    pins.push(PinRef {
+                        owner: format!("preempted req {}", r.id),
+                        tier_id: sb.tier_id,
+                        rows: sb.rows,
+                    });
+                }
+            }
+            for e in &st.parked.entries {
+                ledgers.push(LedgerRef {
+                    owner: format!("preempted req {}", r.id),
+                    tier_id: e.tier_id,
+                    records: e.records.len(),
+                });
+            }
+        }
+        Auditor {
+            pool,
+            tables,
+            cache_blocks: self
+                .prefix_cache
+                .as_ref()
+                .map(|c| c.pinned_block_ids())
+                .unwrap_or_default(),
+            tier: self.tier.as_ref().map(TierView::of),
+            pins,
+            ledgers,
+            strict_pins,
+        }
+        .assert_clean(context);
     }
 
     /// Park the eviction pass's demoted rows (`demote_buf`, slot order ⇒

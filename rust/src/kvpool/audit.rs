@@ -1,0 +1,625 @@
+//! Runtime invariant auditor — the dynamic counterpart of the `lazylint`
+//! static pass ([`crate::analysis`]).
+//!
+//! The pool/tier stack rests on conservation laws that no single module can
+//! check alone: block refcounts are distributed across row tables and
+//! prefix-cache forks, tier bytes across parked entries, pin ownership
+//! across preemption snapshots that ride a queue the engine does not own.
+//! The [`Auditor`] takes one consistent view of all of it — assembled by
+//! `Engine::audit_invariants` at a step boundary — and checks:
+//!
+//! 1. **Refcount conservation** — for every block, the pool's refcount
+//!    equals the number of references actually held: row block tables plus
+//!    prefix-cache entry forks (with multiplicity,
+//!    [`PrefixCache::pinned_block_ids`](crate::kvpool::PrefixCache::pinned_block_ids)).
+//!    A leak (refcount > holders) silently shrinks serving capacity; the
+//!    reverse (holders > refcount) means a future release will free a block
+//!    someone still reads.
+//! 2. **Free-list / live-set disjointness** — zero-refcount blocks match
+//!    the free list's size exactly, and `free + used == total`.
+//! 3. **Slot identity** — every table maps its `len` slots densely
+//!    (`locate` resolves each one) into in-bounds, live blocks; the tail
+//!    block is the only partial one.
+//! 4. **Tier byte-budget conservation** — parked entry bytes sum to
+//!    `bytes_in_use`, never exceed `max_bytes`, and the entry count matches
+//!    `parked_blocks`.
+//! 5. **Pinned entries never shed** — every swap-preemption pin reference
+//!    resolves to a live, pinned tier entry with the expected row count
+//!    (the tier's "a resume can never lose its bytes" promise). In
+//!    *strict* mode the reverse also holds: every pinned entry is owned by
+//!    a known pin reference. Strict only makes sense when the caller can
+//!    enumerate *all* outstanding preemption snapshots (tests and benches
+//!    after a full drain); at step boundaries snapshots live in queues
+//!    outside the engine, so the step hook audits non-strict.
+//! 6. **Ledger references** — a row's demotion ledger entry that still
+//!    resolves must be unpinned with a matching record count; a missing
+//!    entry is legal (shed under byte pressure — the demotion became a
+//!    plain eviction).
+//!
+//! Violations panic (via [`Auditor::assert_clean`]) with a full owner dump,
+//! so the failing test names the row/request/cache holder of every block
+//! involved. The automatic step-boundary hook is compiled only under
+//! `debug_assertions`; release callers (the quick-bench gate in CI) invoke
+//! `Engine::audit_invariants` explicitly at drain points.
+
+use super::pool::{BlockId, BlockPool};
+use super::table::BlockTable;
+use crate::kvtier::TierBlockId;
+
+/// One table holding block references, tagged with who owns it.
+pub struct TableRef<'a> {
+    /// Human-readable owner (`"row 3 (req 17)"`, `"prefix-cache entry"`).
+    pub owner: String,
+    pub table: &'a BlockTable,
+}
+
+/// Snapshot of one parked tier entry (from `HostTier::entries_for_audit`).
+#[derive(Clone, Debug)]
+pub struct TierEntryInfo {
+    pub id: TierBlockId,
+    pub rows: usize,
+    pub pinned: bool,
+    pub bytes: usize,
+}
+
+/// Snapshot of the host tier's accounting.
+#[derive(Clone, Debug, Default)]
+pub struct TierView {
+    pub max_bytes: usize,
+    pub bytes_in_use: usize,
+    pub parked_blocks: usize,
+    pub entries: Vec<TierEntryInfo>,
+}
+
+impl TierView {
+    /// Assemble from a live tier.
+    pub fn of(t: &crate::kvtier::HostTier) -> TierView {
+        TierView {
+            max_bytes: t.max_bytes(),
+            bytes_in_use: t.bytes_in_use(),
+            parked_blocks: t.parked_blocks(),
+            entries: t
+                .entries_for_audit()
+                .into_iter()
+                .map(|(id, rows, pinned, bytes)| TierEntryInfo {
+                    id,
+                    rows,
+                    pinned,
+                    bytes,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A swap-preemption snapshot's claim on one pinned tier entry.
+#[derive(Clone, Debug)]
+pub struct PinRef {
+    pub owner: String,
+    pub tier_id: TierBlockId,
+    pub rows: usize,
+}
+
+/// A row's demotion-ledger claim on one unpinned tier entry.
+#[derive(Clone, Debug)]
+pub struct LedgerRef {
+    pub owner: String,
+    pub tier_id: TierBlockId,
+    pub records: usize,
+}
+
+/// One detected inconsistency: which law broke, and the evidence.
+#[derive(Clone, Debug)]
+pub struct AuditViolation {
+    /// Short law name (`"refcount-conservation"`, `"tier-budget"`, …).
+    pub law: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for AuditViolation {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(w, "[{}] {}", self.law, self.detail)
+    }
+}
+
+/// One consistent view of the pool/tier ownership graph, ready to check.
+/// Plain data by design: tests hand-build views with injected violations
+/// to prove each law actually trips.
+pub struct Auditor<'a> {
+    pub pool: &'a BlockPool,
+    /// Row block tables (and any other table-shaped holders).
+    pub tables: Vec<TableRef<'a>>,
+    /// Prefix-cache block references, with multiplicity.
+    pub cache_blocks: Vec<BlockId>,
+    pub tier: Option<TierView>,
+    /// Swap-preemption pins from every snapshot the caller can see.
+    pub pins: Vec<PinRef>,
+    /// Demotion-ledger references from live rows and queued snapshots.
+    pub ledgers: Vec<LedgerRef>,
+    /// Require every pinned tier entry to be owned by a known [`PinRef`].
+    /// Only sound when `pins` covers *all* outstanding snapshots (post-drain
+    /// tests/benches) — at step boundaries snapshots live outside the engine.
+    pub strict_pins: bool,
+}
+
+impl<'a> Auditor<'a> {
+    /// Run every law; first violation wins.
+    pub fn check(&self) -> Result<(), AuditViolation> {
+        self.check_refcounts()?;
+        self.check_free_list()?;
+        self.check_slot_identity()?;
+        self.check_tier()?;
+        Ok(())
+    }
+
+    /// [`check`](Self::check), panicking with a full owner dump on failure.
+    /// `context` names the call site (`"step end"`, `"bench drain"`).
+    pub fn assert_clean(&self, context: &str) {
+        if let Err(v) = self.check() {
+            panic!(
+                "kvpool audit failed at {context}: {v}\n{}",
+                self.owner_dump()
+            );
+        }
+    }
+
+    /// Expected refcount per block from the holders the caller enumerated.
+    fn expected_refcounts(&self) -> Vec<u32> {
+        let mut exp = vec![0u32; self.pool.total_blocks()];
+        for tr in &self.tables {
+            for &b in tr.table.blocks() {
+                if let Some(slot) = exp.get_mut(b as usize) {
+                    *slot += 1;
+                }
+            }
+        }
+        for &b in &self.cache_blocks {
+            if let Some(slot) = exp.get_mut(b as usize) {
+                *slot += 1;
+            }
+        }
+        exp
+    }
+
+    fn check_refcounts(&self) -> Result<(), AuditViolation> {
+        for (b, &expected) in self.expected_refcounts().iter().enumerate() {
+            let actual = self.pool.refcount(b as BlockId);
+            if actual != expected {
+                return Err(AuditViolation {
+                    law: "refcount-conservation",
+                    detail: format!(
+                        "block {b}: pool refcount {actual}, but {expected} reference(s) held \
+                         ({} leaked)",
+                        actual as i64 - expected as i64
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn check_free_list(&self) -> Result<(), AuditViolation> {
+        let total = self.pool.total_blocks();
+        let zero_rc = (0..total)
+            .filter(|&b| self.pool.refcount(b as BlockId) == 0)
+            .count();
+        if zero_rc != self.pool.free_blocks() {
+            return Err(AuditViolation {
+                law: "free-list-disjointness",
+                detail: format!(
+                    "{zero_rc} block(s) have refcount 0 but the free list holds {}",
+                    self.pool.free_blocks()
+                ),
+            });
+        }
+        if self.pool.free_blocks() + self.pool.used_blocks() != total {
+            return Err(AuditViolation {
+                law: "free-list-disjointness",
+                detail: format!(
+                    "free {} + used {} != total {total}",
+                    self.pool.free_blocks(),
+                    self.pool.used_blocks()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn check_slot_identity(&self) -> Result<(), AuditViolation> {
+        let total = self.pool.total_blocks();
+        for tr in &self.tables {
+            let t = tr.table;
+            if t.len() > t.capacity_tokens() {
+                return Err(AuditViolation {
+                    law: "slot-identity",
+                    detail: format!(
+                        "{}: len {} exceeds capacity {} of {} block(s)",
+                        tr.owner,
+                        t.len(),
+                        t.capacity_tokens(),
+                        t.n_blocks()
+                    ),
+                });
+            }
+            for slot in 0..t.len() {
+                let Some((b, _off)) = t.locate(slot) else {
+                    return Err(AuditViolation {
+                        law: "slot-identity",
+                        detail: format!("{}: slot {slot} < len does not locate", tr.owner),
+                    });
+                };
+                if (b as usize) >= total {
+                    return Err(AuditViolation {
+                        law: "slot-identity",
+                        detail: format!("{}: slot {slot} maps to out-of-range block {b}", tr.owner),
+                    });
+                }
+                if self.pool.refcount(b) == 0 {
+                    return Err(AuditViolation {
+                        law: "slot-identity",
+                        detail: format!("{}: slot {slot} maps to freed block {b}", tr.owner),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_tier(&self) -> Result<(), AuditViolation> {
+        let Some(tier) = &self.tier else {
+            return Ok(());
+        };
+        let sum: usize = tier.entries.iter().map(|e| e.bytes).sum();
+        if sum != tier.bytes_in_use {
+            return Err(AuditViolation {
+                law: "tier-budget",
+                detail: format!(
+                    "entry bytes sum to {sum} but bytes_in_use reports {}",
+                    tier.bytes_in_use
+                ),
+            });
+        }
+        if tier.bytes_in_use > tier.max_bytes {
+            return Err(AuditViolation {
+                law: "tier-budget",
+                detail: format!(
+                    "bytes_in_use {} exceeds the {}-byte budget",
+                    tier.bytes_in_use, tier.max_bytes
+                ),
+            });
+        }
+        if tier.entries.len() != tier.parked_blocks {
+            return Err(AuditViolation {
+                law: "tier-budget",
+                detail: format!(
+                    "{} entries but parked_blocks reports {}",
+                    tier.entries.len(),
+                    tier.parked_blocks
+                ),
+            });
+        }
+        // every pin must resolve to a live, pinned, size-matching entry
+        for p in &self.pins {
+            let Some(e) = tier.entries.iter().find(|e| e.id == p.tier_id) else {
+                return Err(AuditViolation {
+                    law: "pinned-never-shed",
+                    detail: format!(
+                        "{} pins tier entry {} but it is gone — a resume would lose its bytes",
+                        p.owner, p.tier_id
+                    ),
+                });
+            };
+            if !e.pinned {
+                return Err(AuditViolation {
+                    law: "pinned-never-shed",
+                    detail: format!(
+                        "{} pins tier entry {} but the entry is unpinned (LRU-sheddable)",
+                        p.owner, p.tier_id
+                    ),
+                });
+            }
+            if e.rows != p.rows {
+                return Err(AuditViolation {
+                    law: "pinned-never-shed",
+                    detail: format!(
+                        "{}: tier entry {} holds {} row(s), snapshot expects {}",
+                        p.owner, p.tier_id, e.rows, p.rows
+                    ),
+                });
+            }
+        }
+        if self.strict_pins {
+            for e in tier.entries.iter().filter(|e| e.pinned) {
+                if !self.pins.iter().any(|p| p.tier_id == e.id) {
+                    return Err(AuditViolation {
+                        law: "pinned-never-shed",
+                        detail: format!(
+                            "pinned tier entry {} ({} rows) has no owning snapshot — pinned \
+                             bytes leaked",
+                            e.id, e.rows
+                        ),
+                    });
+                }
+            }
+        }
+        // a resolvable ledger entry must be unpinned and size-matching;
+        // unresolvable is legal (shed under pressure)
+        for l in &self.ledgers {
+            if let Some(e) = tier.entries.iter().find(|e| e.id == l.tier_id) {
+                if e.pinned {
+                    return Err(AuditViolation {
+                        law: "ledger-identity",
+                        detail: format!(
+                            "{}: demotion ledger references *pinned* tier entry {}",
+                            l.owner, l.tier_id
+                        ),
+                    });
+                }
+                if e.rows != l.records {
+                    return Err(AuditViolation {
+                        law: "ledger-identity",
+                        detail: format!(
+                            "{}: tier entry {} holds {} row(s) but the ledger carries {} record(s)",
+                            l.owner, l.tier_id, e.rows, l.records
+                        ),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Everything a human needs to attribute a violation: who holds what.
+    fn owner_dump(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "pool: {} total, {} free, {} used, {} shared\n",
+            self.pool.total_blocks(),
+            self.pool.free_blocks(),
+            self.pool.used_blocks(),
+            self.pool.shared_blocks()
+        ));
+        for tr in &self.tables {
+            s.push_str(&format!(
+                "  table {}: len {} blocks {:?}\n",
+                tr.owner,
+                tr.table.len(),
+                tr.table.blocks()
+            ));
+        }
+        if !self.cache_blocks.is_empty() {
+            s.push_str(&format!("  prefix-cache refs: {:?}\n", self.cache_blocks));
+        }
+        if let Some(t) = &self.tier {
+            s.push_str(&format!(
+                "tier: {}/{} bytes, {} parked\n",
+                t.bytes_in_use, t.max_bytes, t.parked_blocks
+            ));
+            for e in &t.entries {
+                s.push_str(&format!(
+                    "  entry {}: rows {}, {} bytes{}\n",
+                    e.id,
+                    e.rows,
+                    e.bytes,
+                    if e.pinned { ", pinned" } else { "" }
+                ));
+            }
+        }
+        for p in &self.pins {
+            s.push_str(&format!(
+                "  pin {} -> tier {} ({} rows)\n",
+                p.owner, p.tier_id, p.rows
+            ));
+        }
+        for l in &self.ledgers {
+            s.push_str(&format!(
+                "  ledger {} -> tier {} ({} records)\n",
+                l.owner, l.tier_id, l.records
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::{PoolConfig, PrefixCache, PrefixCacheConfig};
+    use crate::kvtier::HostTier;
+
+    fn pool(n: usize) -> BlockPool {
+        BlockPool::new(PoolConfig {
+            block_size: 4,
+            n_blocks: n,
+            low_watermark: 0,
+            high_watermark: 0,
+        })
+        .unwrap()
+    }
+
+    fn table_of(tokens: usize, p: &mut BlockPool) -> BlockTable {
+        let mut t = BlockTable::new(p.block_size());
+        for _ in 0..tokens {
+            assert!(t.push_token(p));
+        }
+        t
+    }
+
+    fn auditor<'a>(p: &'a BlockPool, tables: Vec<TableRef<'a>>) -> Auditor<'a> {
+        Auditor {
+            pool: p,
+            tables,
+            cache_blocks: Vec::new(),
+            tier: None,
+            pins: Vec::new(),
+            ledgers: Vec::new(),
+            strict_pins: false,
+        }
+    }
+
+    #[test]
+    fn consistent_state_passes_all_laws() {
+        let mut p = pool(8);
+        let t1 = table_of(6, &mut p);
+        let t2 = table_of(4, &mut p);
+        let mut cache = PrefixCache::new(PrefixCacheConfig::default());
+        let ids: Vec<u32> = (0..4).collect();
+        cache.insert(&ids, &t2, None, &mut p);
+        let a = Auditor {
+            cache_blocks: cache.pinned_block_ids(),
+            ..auditor(
+                &p,
+                vec![
+                    TableRef {
+                        owner: "row 0".into(),
+                        table: &t1,
+                    },
+                    TableRef {
+                        owner: "row 1".into(),
+                        table: &t2,
+                    },
+                ],
+            )
+        };
+        assert!(a.check().is_ok(), "{:?}", a.check());
+    }
+
+    #[test]
+    fn leaked_refcount_trips_conservation() {
+        let mut p = pool(4);
+        let t = table_of(4, &mut p);
+        // the auditor is told about no holders: the table's block is a leak
+        let a = auditor(&p, Vec::new());
+        let v = a.check().unwrap_err();
+        assert_eq!(v.law, "refcount-conservation", "{v}");
+        // and the symmetric direction: a holder the pool forgot
+        let mut p2 = pool(4);
+        let t2 = table_of(4, &mut p2);
+        let a2 = auditor(
+            &p2,
+            vec![
+                TableRef {
+                    owner: "row 0".into(),
+                    table: &t2,
+                },
+                TableRef {
+                    owner: "phantom".into(),
+                    table: &t2,
+                },
+            ],
+        );
+        assert_eq!(a2.check().unwrap_err().law, "refcount-conservation");
+        drop(t);
+    }
+
+    #[test]
+    fn tier_budget_overshoot_trips() {
+        let p = pool(1);
+        let mut a = auditor(&p, Vec::new());
+        a.tier = Some(TierView {
+            max_bytes: 64,
+            bytes_in_use: 128,
+            parked_blocks: 1,
+            entries: vec![TierEntryInfo {
+                id: 0,
+                rows: 2,
+                pinned: false,
+                bytes: 128,
+            }],
+        });
+        let v = a.check().unwrap_err();
+        assert_eq!(v.law, "tier-budget");
+        assert!(v.detail.contains("exceeds"), "{v}");
+    }
+
+    #[test]
+    fn tier_byte_accounting_drift_trips() {
+        let p = pool(1);
+        let mut a = auditor(&p, Vec::new());
+        a.tier = Some(TierView {
+            max_bytes: 256,
+            bytes_in_use: 96, // entries actually sum to 64
+            parked_blocks: 1,
+            entries: vec![TierEntryInfo {
+                id: 0,
+                rows: 1,
+                pinned: false,
+                bytes: 64,
+            }],
+        });
+        assert_eq!(a.check().unwrap_err().law, "tier-budget");
+    }
+
+    #[test]
+    fn shed_pinned_entry_trips_pin_law() {
+        let p = pool(1);
+        let mut a = auditor(&p, Vec::new());
+        a.tier = Some(TierView::default());
+        a.pins.push(PinRef {
+            owner: "req 9".into(),
+            tier_id: 42,
+            rows: 3,
+        });
+        let v = a.check().unwrap_err();
+        assert_eq!(v.law, "pinned-never-shed");
+        assert!(v.detail.contains("req 9"), "{v}");
+    }
+
+    #[test]
+    fn strict_mode_catches_orphaned_pinned_entries() {
+        let mut tier = HostTier::new(1 << 16);
+        let id = tier.park(vec![0.0; 8], vec![0.0; 8], 2, true).unwrap();
+        let p = pool(1);
+        let mut a = auditor(&p, Vec::new());
+        a.tier = Some(TierView::of(&tier));
+        // non-strict: an unowned pinned entry is tolerated (its snapshot
+        // may live in a queue outside the caller's view)
+        assert!(a.check().is_ok());
+        // strict (post-drain): it is a leak
+        a.strict_pins = true;
+        let v = a.check().unwrap_err();
+        assert_eq!(v.law, "pinned-never-shed");
+        assert!(v.detail.contains(&id.to_string()), "{v}");
+    }
+
+    #[test]
+    fn ledger_mismatches_trip_and_shed_entries_are_tolerated() {
+        let mut tier = HostTier::new(1 << 16);
+        let id = tier.park(vec![0.0; 8], vec![0.0; 8], 2, false).unwrap();
+        let p = pool(1);
+        let mut a = auditor(&p, Vec::new());
+        a.tier = Some(TierView::of(&tier));
+        // a shed (absent) ledger target is legal
+        a.ledgers.push(LedgerRef {
+            owner: "row 0".into(),
+            tier_id: 999,
+            records: 4,
+        });
+        assert!(a.check().is_ok());
+        // a resolvable one must match the entry's row count
+        a.ledgers.push(LedgerRef {
+            owner: "row 0".into(),
+            tier_id: id,
+            records: 3,
+        });
+        assert_eq!(a.check().unwrap_err().law, "ledger-identity");
+    }
+
+    #[test]
+    fn assert_clean_panics_with_owner_dump() {
+        let mut p = pool(4);
+        let t = table_of(4, &mut p);
+        let a = auditor(&p, Vec::new());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.assert_clean("unit test");
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("refcount-conservation"), "{msg}");
+        assert!(msg.contains("pool: 4 total"), "dump must name the holders: {msg}");
+        drop(t);
+    }
+}

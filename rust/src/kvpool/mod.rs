@@ -46,6 +46,7 @@
 //! residency — tier entries hold byte copies, never block references.
 
 pub mod arena;
+pub mod audit;
 pub mod pool;
 pub mod prefix;
 pub mod table;

@@ -203,6 +203,19 @@ impl PrefixCache {
         ids.len()
     }
 
+    /// Every block reference the cache holds, *with multiplicity*: a block
+    /// referenced by two overlapping entries appears twice, because each
+    /// entry's fork bumped its refcount independently. This is the cache's
+    /// contribution to the pool refcount conservation check
+    /// ([`crate::kvpool::audit`]) — unlike [`pinned_blocks`](Self::pinned_blocks),
+    /// which dedups for the exported gauge.
+    pub fn pinned_block_ids(&self) -> Vec<BlockId> {
+        self.entries
+            .iter()
+            .flat_map(|e| e.table.blocks().iter().copied())
+            .collect()
+    }
+
     /// Blocks that shedding the whole cache would return to the free list
     /// right now (blocks the cache is the sole holder of — refcount 1, so
     /// each is referenced by exactly one entry and counting is exact). The

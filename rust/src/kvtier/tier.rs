@@ -154,6 +154,17 @@ impl HostTier {
         }
     }
 
+    /// Per-entry (id, rows, pinned, bytes) — the tier's side of the runtime
+    /// invariant audit ([`crate::kvpool::audit`]): byte-budget conservation
+    /// (entry bytes must sum to [`bytes_in_use`](Self::bytes_in_use)) and
+    /// pinned-entry accounting (every pin reference must resolve here).
+    pub fn entries_for_audit(&self) -> Vec<(TierBlockId, usize, bool, usize)> {
+        self.entries
+            .iter()
+            .map(|(id, e)| (*id, e.rows, e.pinned, e.bytes()))
+            .collect()
+    }
+
     fn shed_lru_unpinned(&mut self) -> bool {
         let at = self
             .entries

@@ -26,8 +26,19 @@
 //!   fidelity/accuracy metrics for the paper's tables, and pool-capacity
 //!   replay (effective batch under a fixed global block budget)
 //! * [`bench_harness`] — table/figure regeneration harness
+//! * [`analysis`] — `lazylint`, the repo's own static-analysis pass: the
+//!   contracts the layers above rely on (deterministic failure routing,
+//!   doc/metric/flag parity, replay determinism, the bench-report schema)
+//!   enforced mechanically; its runtime counterpart is [`kvpool::audit`]
 //! * [`util`] — offline substrate (JSON, RNG, stats, CLI)
 
+// The whole stack is safe Rust; the only unsafe in the tree lives in the
+// vendored PJRT shim crates (separate crates, so this attribute does not
+// reach them). Enforced here rather than linted so a violation is a
+// compile error, not a finding.
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod attention;
 pub mod bench_harness;
 pub mod coordinator;

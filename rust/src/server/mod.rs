@@ -109,6 +109,7 @@ use crate::scheduler::{header_hashes, QueuedRequest, ReplicaView, Router, Routin
 use crate::telemetry::{event, labeled, names, Telemetry};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 use crate::util::wire;
 
 /// Upper bound on a request's `max_new`; larger asks are capped, not erred,
@@ -196,7 +197,7 @@ struct Route {
 type Routes = Arc<Mutex<HashMap<u64, Route>>>;
 
 fn send_reply(routes: &Routes, id: u64, reply: ServeReply) {
-    if let Some(rt) = routes.lock().unwrap().remove(&id) {
+    if let Some(rt) = lock_unpoisoned(routes).remove(&id) {
         let _ = rt.tx.send(ConnEvent::Reply(reply));
     }
 }
@@ -206,7 +207,7 @@ fn send_reply(routes: &Routes, id: u64, reply: ServeReply) {
 /// was actually handed to a streaming client (routes for non-streaming
 /// requests and already-cancelled rows swallow their events).
 fn send_token(routes: &Routes, ev: TokenEvent) -> bool {
-    let g = routes.lock().unwrap();
+    let g = lock_unpoisoned(routes);
     if let Some(rt) = g.get(&ev.req) {
         if rt.stream {
             let _ = rt.tx.send(ConnEvent::Reply(ServeReply::Token(ev)));
@@ -272,20 +273,23 @@ impl Fleet {
         let mut q = q;
         loop {
             let views = self.views();
-            let decision = self.router.lock().unwrap().choose(&hashes, q.id, &views);
+            let decision = lock_unpoisoned(&self.router).choose(&hashes, q.id, &views);
             let Some(d) = decision else {
-                self.placements.lock().unwrap().remove(&q.id);
+                lock_unpoisoned(&self.placements).remove(&q.id);
                 return Err((q.id, "no live replicas".to_string()));
             };
-            self.placements.lock().unwrap().insert(q.id, d.replica);
-            match self.handles[d.replica].submit(q) {
+            let Some(h) = self.handles.get(d.replica) else {
+                // the router only hands out indices < views.len(), but a
+                // defective decision must fail the request, not the thread
+                lock_unpoisoned(&self.placements).remove(&q.id);
+                return Err((q.id, format!("router chose unknown replica {}", d.replica)));
+            };
+            lock_unpoisoned(&self.placements).insert(q.id, d.replica);
+            match h.submit(q) {
                 Ok(()) => return Ok(()),
                 Err(back) => {
                     // raced a dying replica: flag it so choose() skips it
-                    self.handles[d.replica]
-                        .status
-                        .alive
-                        .store(false, Ordering::Release);
+                    h.status.alive.store(false, Ordering::Release);
                     q = back;
                 }
             }
@@ -295,9 +299,11 @@ impl Fleet {
     /// Client gone: drop the route and tell the home replica to release
     /// whatever it owns for this id.
     fn cancel(&self, id: u64) {
-        self.routes.lock().unwrap().remove(&id);
-        if let Some(r) = self.placements.lock().unwrap().remove(&id) {
-            self.handles[r].cancel(id);
+        lock_unpoisoned(&self.routes).remove(&id);
+        if let Some(r) = lock_unpoisoned(&self.placements).remove(&id) {
+            if let Some(h) = self.handles.get(r) {
+                h.cancel(id);
+            }
         }
     }
 
@@ -305,7 +311,7 @@ impl Fleet {
     fn publish_metrics(&self, streamed: &[u64]) {
         let Some(t) = &self.telemetry else { return };
         let reg = &t.registry;
-        let c = self.router.lock().unwrap().counters;
+        let c = lock_unpoisoned(&self.router).counters;
         reg.set_counter(names::ROUTED_AFFINITY, c.routed_affinity);
         reg.set_counter(names::ROUTED_PRESSURE, c.routed_pressure);
         reg.set_counter(names::ROUTED_RR, c.routed_rr);
@@ -353,29 +359,26 @@ pub fn serve_fleet(
     telemetry: Option<Arc<Telemetry>>,
     opts: FleetOptions,
 ) -> Result<()> {
-    anyhow::ensure!(!engines.is_empty(), "fleet needs at least one engine");
+    let Some(head) = engines.first() else {
+        anyhow::bail!("fleet needs at least one engine");
+    };
     let listener = TcpListener::bind(addr)?;
     let local_addr = listener.local_addr()?;
     let n = engines.len();
     eprintln!(
         "lazyevictiond: serving on {addr} (policy={}, budget={}, batch={}{}, replicas={n}, routing={})",
-        engines[0].policy_name(),
-        engines[0].cfg.budget,
-        engines[0].cfg.batch,
-        match &engines[0].cfg.pool {
+        head.policy_name(),
+        head.cfg.budget,
+        head.cfg.batch,
+        match &head.cfg.pool {
             Some(p) => format!(", pool={}x{}", p.n_blocks, p.block_size),
             None => String::new(),
         },
         opts.routing.as_str(),
     );
 
-    let block_size = engines[0]
-        .cfg
-        .pool
-        .as_ref()
-        .map(|p| p.block_size)
-        .unwrap_or(16);
-    let tokenizer = engines[0].tokenizer.clone();
+    let block_size = head.cfg.pool.as_ref().map(|p| p.block_size).unwrap_or(16);
+    let tokenizer = head.tokenizer.clone();
     let (etx, erx) = mpsc::channel::<ActorEvent>();
     let mut handles = Vec::with_capacity(n);
     for (i, mut e) in engines.into_iter().enumerate() {
@@ -437,6 +440,7 @@ pub fn serve_fleet(
                 // every replica exited; submits now fail deterministically
                 // ("no live replicas") — idle until shutdown
                 fleet.publish_metrics(&streamed);
+                // lazylint: allow(determinism): every replica already exited — there is no event source left to wake on, only the shutdown flag to poll
                 std::thread::sleep(Duration::from_millis(25));
             }
         }
@@ -468,16 +472,18 @@ fn pump_event(fleet: &Arc<Fleet>, ev: ActorEvent, streamed: &mut [u64]) {
     match ev {
         ActorEvent::Token { replica, ev } => {
             if send_token(&fleet.routes, ev) {
-                streamed[replica] += 1;
+                if let Some(s) = streamed.get_mut(replica) {
+                    *s += 1;
+                }
             }
         }
         ActorEvent::Done { resp, gauges, .. } => {
-            fleet.placements.lock().unwrap().remove(&resp.id);
+            lock_unpoisoned(&fleet.placements).remove(&resp.id);
             let id = resp.id;
             send_reply(&fleet.routes, id, ServeReply::Done(resp, gauges));
         }
         ActorEvent::Failed { req, error, .. } => {
-            fleet.placements.lock().unwrap().remove(&req);
+            lock_unpoisoned(&fleet.placements).remove(&req);
             send_reply(&fleet.routes, req, ServeReply::Failed(error));
         }
         ActorEvent::Orphaned { req, .. } => {
@@ -616,7 +622,7 @@ fn handle_conn(stream: TcpStream, fleet: Arc<Fleet>, next_id: Arc<AtomicU64>) {
                 continue;
             }
         };
-        fleet.routes.lock().unwrap().insert(
+        lock_unpoisoned(&fleet.routes).insert(
             id,
             Route {
                 tx: tx.clone(),

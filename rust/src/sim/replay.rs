@@ -90,6 +90,7 @@ impl ReplayResult {
 /// observed over *live* tokens; needs check liveness of the needed token or
 /// any live member of its redundancy group.
 pub fn replay(trace: &Trace, policy: &dyn Policy, cfg: ReplayConfig) -> ReplayResult {
+    // lazylint: allow(determinism): wall-clock measures wall_s only; no replay decision reads it
     let t0 = Instant::now();
     let mut res = ReplayResult::default();
     let mut seq = SeqKv::new(cfg.capacity.max(trace.total_len as usize + 1));

@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::Telemetry;
+use crate::util::sync::lock_unpoisoned;
 
 /// Bind `addr` and serve scrapes on a background thread until `shutdown`.
 /// Returns once the listener is bound (so callers can connect immediately).
@@ -54,7 +55,7 @@ fn handle_scrape(mut stream: std::net::TcpStream, telemetry: Arc<Telemetry>) {
         match stream.read(&mut chunk) {
             Ok(0) => break,
             Ok(n) => {
-                buf.extend_from_slice(&chunk[..n]);
+                buf.extend_from_slice(chunk.get(..n).unwrap_or(&[]));
                 if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
                     break;
                 }
@@ -80,7 +81,7 @@ fn handle_scrape(mut stream: std::net::TcpStream, telemetry: Arc<Telemetry>) {
         let req_id = target
             .split_once("req=")
             .and_then(|(_, v)| v.split('&').next().unwrap_or(v).parse::<u64>().ok());
-        let flight = telemetry.flight.lock().unwrap();
+        let flight = lock_unpoisoned(&telemetry.flight);
         let events = match req_id {
             Some(id) => flight.events_for(id),
             None => flight.events(),

@@ -5,6 +5,7 @@ pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod wire;
 
 /// In-house property-test driver: runs `f` over `n` seeded random cases and

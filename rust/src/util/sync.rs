@@ -1,0 +1,52 @@
+//! Synchronization helpers shared by the serve loop, the engine actors and
+//! the telemetry listener.
+//!
+//! The one that matters: [`lock_unpoisoned`]. The serving threads follow a
+//! deterministic-failure-routing contract (ARCHITECTURE.md §The event-driven
+//! serve loop): a panicked worker must never cascade into killing the
+//! listener or a sibling connection thread just because they share a mutex.
+//! `Mutex::lock().unwrap()` does exactly that cascade — the second thread
+//! dies on the `PoisonError`. Every cross-thread lock on the serving path
+//! goes through this helper instead, which recovers the guard: all the
+//! protected state here (route maps, router placement state, the flight
+//! ring) is valid after any partial update, so continuing beats dying.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Poisoning is a *hint*, not an invariant violation: the data under the
+/// serving-path mutexes is never left in a torn state by a panic (inserts
+/// and removes on maps are atomic from the guard's perspective), so the
+/// right response is to keep serving, not to propagate the panic to every
+/// thread that ever touches the lock.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_after_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex must actually be poisoned");
+        let g = lock_unpoisoned(&m);
+        assert_eq!(*g, vec![1, 2, 3], "data survives the poisoned holder");
+    }
+
+    #[test]
+    fn plain_lock_path_is_unchanged() {
+        let m = Mutex::new(7u32);
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+}

@@ -43,7 +43,7 @@ impl<'a> Lexer<'a> {
     }
 
     pub fn ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
             self.i += 1;
         }
     }
@@ -66,7 +66,7 @@ impl<'a> Lexer<'a> {
     }
 
     pub fn lit(&mut self, s: &str) -> Result<(), JsonError> {
-        if self.b[self.i..].starts_with(s.as_bytes()) {
+        if self.b.get(self.i..).map_or(false, |t| t.starts_with(s.as_bytes())) {
             self.i += s.len();
             Ok(())
         } else {
@@ -85,6 +85,7 @@ impl<'a> Lexer<'a> {
         loop {
             match self.peek().ok_or_else(|| self.error("unterminated string"))? {
                 b'"' => {
+                    // lazylint: allow(panic-surface): start <= i <= len by the scan loop; this span cannot be out of bounds
                     let raw = &self.b[start..self.i];
                     self.i += 1;
                     return Ok(RawStr { raw, escaped });
@@ -96,14 +97,10 @@ impl<'a> Lexer<'a> {
                         b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => self.i += 1,
                         b'u' => {
                             self.i += 1;
-                            if self.i + 4 > self.b.len()
-                                || !self.b[self.i..self.i + 4]
-                                    .iter()
-                                    .all(|c| c.is_ascii_hexdigit())
-                            {
-                                return Err(self.error("bad \\u"));
+                            match self.b.get(self.i..self.i + 4) {
+                                Some(h) if h.iter().all(|c| c.is_ascii_hexdigit()) => self.i += 4,
+                                _ => return Err(self.error("bad \\u")),
                             }
-                            self.i += 4;
                         }
                         _ => return Err(self.error("bad escape")),
                     }
@@ -138,7 +135,7 @@ impl<'a> Lexer<'a> {
                 self.i += 1;
             }
         }
-        std::str::from_utf8(&self.b[start..self.i])
+        std::str::from_utf8(self.b.get(start..self.i).unwrap_or_default())
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .ok_or_else(|| self.error("bad number"))
@@ -240,14 +237,15 @@ impl<'a> RawStr<'a> {
         let b = self.raw;
         let mut i = 0;
         while i < b.len() {
-            if b[i] != b'\\' {
+            if b.get(i).copied() != Some(b'\\') {
                 // copy the maximal escape-free run in one UTF-8 validation
                 let start = i;
-                while i < b.len() && b[i] != b'\\' {
+                while i < b.len() && b.get(i).copied() != Some(b'\\') {
                     i += 1;
                 }
                 out.push_str(
-                    std::str::from_utf8(&b[start..i]).map_err(|_| err("invalid utf8", start))?,
+                    std::str::from_utf8(b.get(start..i).unwrap_or_default())
+                        .map_err(|_| err("invalid utf8", start))?,
                 );
                 continue;
             }
@@ -430,6 +428,7 @@ fn push_u64(out: &mut Vec<u8>, mut x: u64) {
     let mut tmp = [0u8; 20];
     let mut n = 0;
     loop {
+        // lazylint: allow(panic-surface): n < 20 == tmp.len() — a u64 has at most 20 decimal digits
         tmp[n] = b'0' + (x % 10) as u8;
         x /= 10;
         n += 1;
@@ -438,6 +437,7 @@ fn push_u64(out: &mut Vec<u8>, mut x: u64) {
         }
     }
     for k in (0..n).rev() {
+        // lazylint: allow(panic-surface): k < n <= tmp.len() by the digit loop above
         out.push(tmp[k]);
     }
 }
@@ -457,7 +457,9 @@ pub fn push_escaped(out: &mut Vec<u8>, s: &str) {
                 out.extend_from_slice(b"\\u00");
                 let v = c as u32;
                 const HEX: &[u8; 16] = b"0123456789abcdef";
+                // lazylint: allow(panic-surface): v >> 4 is < 16 == HEX.len() for v < 0x20
                 out.push(HEX[(v >> 4) as usize]);
+                // lazylint: allow(panic-surface): v & 0xf is < 16 == HEX.len()
                 out.push(HEX[(v & 0xf) as usize]);
             }
             c => {
