@@ -18,7 +18,7 @@ use lazyeviction::kvpool::PoolConfig;
 use lazyeviction::kvtier::HostTierConfig;
 use lazyeviction::scheduler::preempt::crossover_fed_tokens;
 use lazyeviction::sim::capacity::{run_capacity, run_fleet, CapacitySpec, FleetRouting, FleetSpec};
-use lazyeviction::telemetry::StreamingHistogram;
+use lazyeviction::telemetry::{span, SpanContext, StreamingHistogram, Telemetry};
 use lazyeviction::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -539,7 +539,9 @@ fn main() -> anyhow::Result<()> {
     // before writing; CI uploads the file as an artifact, so successive
     // runs form a diffable trajectory without parsing bench stdout.
     {
-        use lazyeviction::bench_harness::report::{BenchReport, BenchScenario, Quantiles};
+        use lazyeviction::bench_harness::report::{
+            BenchReport, BenchScenario, Quantiles, RecurrenceCell,
+        };
         let scenario_cfg = |scenario: &str, policy: &str| {
             let (batch, blocks, tier) = match scenario {
                 "steady" => (2, 16, false),  // uncontended continuous batching
@@ -799,6 +801,101 @@ fn main() -> anyhow::Result<()> {
             table.print();
             let cells: Vec<Json> = report.fleet.iter().map(|c| c.to_json()).collect();
             out = out.set("fleet", Json::obj().set("cells", cells));
+        }
+
+        // Recurrence section (schema v3): the lazy tier cell re-run with the
+        // observatory on, against an identical control with it off. The flag
+        // must be output-invariant (same text either way), and a recurrence-
+        // heavy lazy trace must record nonzero time-to-promotion samples —
+        // the lagged-eviction bet, measured in the artifact itself.
+        {
+            let mut cfg_on = scenario_cfg("tier", "lazy");
+            cfg_on.observe_recurrence = true;
+            let mut on = Engine::new_sim(cfg_on)?;
+            let r_on = on.run_all(vec![mk(0, 60)])?;
+            let mut off = Engine::new_sim(scenario_cfg("tier", "lazy"))?;
+            let r_off = off.run_all(vec![mk(0, 60)])?;
+            assert_eq!(
+                r_on[0].text, r_off[0].text,
+                "--observe-recurrence must be output-invariant"
+            );
+            let obs = on.recurrence().expect("observatory enabled for this cell");
+            assert!(obs.passes_total > 0, "the tier cell must evict");
+            assert!(
+                obs.promotion_hist.n() > 0,
+                "the tier cell must record time-to-promotion samples"
+            );
+            println!(
+                "\nrecurrence observatory (lazy, tier cell): {} passes, {} decisions, \
+                 {} promotions observed (median parked {:.0} steps)",
+                obs.passes_total,
+                obs.decisions_total,
+                obs.promotion_hist.n(),
+                obs.promotion_hist.quantile(0.5),
+            );
+            report.push_recurrence(RecurrenceCell {
+                policy: "lazy".into(),
+                scenario: "tier".into(),
+                passes: obs.passes_total,
+                decisions: obs.decisions_total,
+                mri: Quantiles::from_hist(&obs.mri_hist),
+                time_to_promotion_steps: Quantiles::from_hist(&obs.promotion_hist),
+                postmortem: obs.postmortem,
+            });
+        }
+
+        // Span trail: the steady lazy cell re-run with telemetry attached,
+        // writing the v2 span JSONL CI archives next to BENCH_pool.json. The
+        // schema check here is the bench-side gate — a malformed line fails
+        // the bench, not a downstream consumer.
+        {
+            let span_path = std::path::Path::new("BENCH_pool_spans.jsonl");
+            std::fs::remove_file(span_path).ok(); // with_trace appends
+            let t = Telemetry::with_trace(4096, Some(span_path))?;
+            let mut e = Engine::new_sim(scenario_cfg("steady", "lazy"))?;
+            e.attach_telemetry(t.clone());
+            let reqs: Vec<Request> = (0..4).map(|id| mk(id, 50)).collect();
+            let mut roots: HashMap<u64, u64> = HashMap::new();
+            for r in &reqs {
+                let root = t.span_open(
+                    r.id,
+                    span::name::REQUEST,
+                    SpanContext::default(),
+                    None,
+                    0.0,
+                    "bench",
+                );
+                e.note_span(r.id, SpanContext::child_of(root, root));
+                roots.insert(r.id, root);
+            }
+            let rs = e.run_all(reqs)?;
+            for r in &rs {
+                let root = roots.get(&r.id).copied().unwrap_or(0);
+                t.span_close_full(
+                    root,
+                    Some(r.metrics.tokens_out as f64),
+                    Some("finished"),
+                    false,
+                );
+            }
+            t.flush();
+            let stats = span::validate_span_file(span_path)
+                .map_err(|err| anyhow::anyhow!("span JSONL failed schema check: {err}"))?;
+            assert!(
+                stats.opens >= rs.len() as u64 * 2,
+                "each request must trace at least a root and a prefill span \
+                 ({} opens for {} requests)",
+                stats.opens,
+                rs.len()
+            );
+            assert_eq!(stats.opens, stats.closes, "every span must close");
+            println!(
+                "span trail: {} opens / {} closes / {} flight events -> {}",
+                stats.opens,
+                stats.closes,
+                stats.flight_events,
+                span_path.display()
+            );
         }
         report.save(std::path::Path::new("BENCH_pool.json"))?;
     }

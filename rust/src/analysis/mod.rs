@@ -123,6 +123,7 @@ pub fn run(rust_src: &Path, docs: &Path) -> Result<Vec<Finding>, String> {
         main: facts.iter().find(|f| f.path == "main.rs"),
         metrics: facts.iter().find(|f| f.path == "metrics/mod.rs"),
         flight: facts.iter().find(|f| f.path == "telemetry/flight.rs"),
+        span: facts.iter().find(|f| f.path == "telemetry/span.rs"),
         observability_md: &observability_md,
         serving_md: &serving_md,
     };
@@ -357,13 +358,18 @@ mod tests {
             "telemetry/flight.rs",
             "pub mod event { pub const A: &str = \"queued\"; pub const B: &str = \"ghost_event\"; }",
         );
-        let obs = "| `lazyeviction_documented_total` | x |\n| `lazyeviction_phantom_total` | y |\n| `queued` | z |\n";
+        let span = lex(
+            "telemetry/span.rs",
+            "pub mod name { pub const A: &str = \"request\"; pub const B: &str = \"ghost_span\"; }",
+        );
+        let obs = "| `lazyeviction_documented_total` | x |\n| `lazyeviction_phantom_total` | y |\n| `queued` | z |\n| `lazyeviction_span_request_ms` | s |\n";
         let serving = "`--documented-flag N` does things\n";
         let hits = rules::parity(&rules::ParityInputs {
             code: &code,
             main: Some(&main),
             metrics: Some(&metrics),
             flight: Some(&flight),
+            span: Some(&span),
             observability_md: obs,
             serving_md: serving,
         });
@@ -373,9 +379,11 @@ mod tests {
         assert!(msgs.iter().any(|m| m.contains("--ghost-flag")), "{msgs:?}");
         assert!(msgs.iter().any(|m| m.contains("ghost_event")), "{msgs:?}");
         assert!(msgs.iter().any(|m| m.contains("ghost_field")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("lazyeviction_span_ghost_span_ms")), "{msgs:?}");
         // the documented halves stay quiet
         assert!(!msgs.iter().any(|m| m.contains("`lazyeviction_documented_total`")), "{msgs:?}");
         assert!(!msgs.iter().any(|m| m.contains("--documented-flag")), "{msgs:?}");
+        assert!(!msgs.iter().any(|m| m.contains("`lazyeviction_span_request_ms`")), "{msgs:?}");
     }
 
     #[test]
@@ -394,6 +402,7 @@ mod tests {
             main: None,
             metrics: Some(&metrics),
             flight: None,
+            span: None,
             observability_md: obs,
             serving_md: "",
         });

@@ -188,6 +188,9 @@ pub struct ParityInputs<'a> {
     pub metrics: Option<&'a FileFacts>,
     /// `telemetry/flight.rs` (`mod event` constants).
     pub flight: Option<&'a FileFacts>,
+    /// `telemetry/span.rs` (`mod name` constants — each publishes a
+    /// constructed `lazyeviction_span_<name>_ms` histogram).
+    pub span: Option<&'a FileFacts>,
     pub observability_md: &'a str,
     pub serving_md: &'a str,
 }
@@ -222,6 +225,17 @@ pub fn parity(inp: &ParityInputs) -> Vec<Finding> {
         if !code_metrics.iter().any(|(n, _, _)| n == &full) {
             let path = inp.metrics.map(|m| m.path.clone()).unwrap_or_default();
             code_metrics.push((full, path, *line));
+        }
+    }
+    // span duration histograms are constructed (`lazyeviction_span_<name>_ms`
+    // via `span::metric_name`), never literal — synthesize one per `mod name`
+    // constant so the doc check covers them like any other metric
+    if let Some(span) = inp.span {
+        for (lit, line) in span_mod_literals(span) {
+            let full = format!("lazyeviction_span_{lit}_ms");
+            if !code_metrics.iter().any(|(n, _, _)| n == &full) {
+                code_metrics.push((full, span.path.clone(), line));
+            }
         }
     }
     // docs side: names and `<…>` wildcard prefixes, with their lines
@@ -388,6 +402,20 @@ fn event_mod_literals(f: &FileFacts) -> Vec<(String, usize)> {
     out
 }
 
+/// String literals inside `pub mod name { … }` of telemetry/span.rs — the
+/// span names whose duration histograms the registry publishes.
+fn span_mod_literals(f: &FileFacts) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    if let Some(body) = brace_region(f, &["mod", "name"]) {
+        for t in &f.toks[body.0..body.1] {
+            if t.kind == Kind::Str && is_plain_key(&t.text) {
+                out.push((t.text.clone(), t.line));
+            }
+        }
+    }
+    out
+}
+
 /// **schema** — bench_harness/report.rs is the `BENCH_pool.json` contract
 /// (docs/observability.md §BENCH_pool.json): every key `validate()`
 /// requires must be a key `to_json()` serializes (a one-sided rename
@@ -423,7 +451,7 @@ pub fn schema(report: &FileFacts, bench: Option<&FileFacts>) -> Vec<Finding> {
     // bench side: struct-literal fields of the report types must be
     // serialized keys (a field rename that misses to_json shows up here)
     if let Some(b) = bench {
-        for ty in ["BenchScenario", "FleetCell"] {
+        for ty in ["BenchScenario", "FleetCell", "RecurrenceCell"] {
             for (name, line) in struct_literal_fields(b, ty) {
                 if !set_keys.contains(&name) {
                     out.push(finding(SCHEMA, &b.path, line,

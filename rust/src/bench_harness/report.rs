@@ -21,8 +21,12 @@ use crate::util::json::Json;
 /// fields do not need a bump — `validate` only requires, never forbids.
 /// History: 1 = the original policy × scenario grid; 2 = + the optional
 /// `fleet` section (multi-replica routing cells; absent when a bench
-/// records no fleet scenarios, and validated when present).
-pub const SCHEMA_VERSION: usize = 2;
+/// records no fleet scenarios, and validated when present); 3 = + the
+/// optional `recurrence` section (eviction-observatory cells: pass and
+/// decision counts, MRI and time-to-promotion quantiles, false-eviction
+/// postmortem counts; present only for cells run with
+/// `observe_recurrence` on).
+pub const SCHEMA_VERSION: usize = 3;
 
 /// Latency quantile summary extracted from a [`StreamingHistogram`].
 #[derive(Clone, Debug, Default)]
@@ -149,6 +153,50 @@ impl FleetCell {
     }
 }
 
+/// One eviction-observatory cell (the `recurrence` section, schema v3):
+/// what the [`crate::eviction::RecurrenceObservatory`] saw for a policy ×
+/// scenario run with `observe_recurrence` on. The cell records whether
+/// lagged eviction's bet paid off: `time_to_promotion_steps` is how long
+/// parked entries sat before recurrence pulled them back, and `postmortem`
+/// splits those promotions by parked duration (fast promotions = tokens
+/// that should never have left the device tier).
+#[derive(Clone, Debug, Default)]
+pub struct RecurrenceCell {
+    pub policy: String,
+    pub scenario: String,
+    /// Eviction passes observed.
+    pub passes: u64,
+    /// Per-token verdicts recorded across all passes.
+    pub decisions: u64,
+    /// Max recurrence-interval distribution over observed tokens (steps).
+    pub mri: Quantiles,
+    /// Steps parked in the host tier before promotion.
+    pub time_to_promotion_steps: Quantiles,
+    /// Promotions by parked duration, in
+    /// [`crate::eviction::observatory::POSTMORTEM_LABELS`] order.
+    pub postmortem: [u64; 4],
+}
+
+impl RecurrenceCell {
+    pub fn to_json(&self) -> Json {
+        let mut pm = Json::obj();
+        for (label, &n) in crate::eviction::observatory::POSTMORTEM_LABELS
+            .iter()
+            .zip(self.postmortem.iter())
+        {
+            pm = pm.set(label, n as f64);
+        }
+        Json::obj()
+            .set("policy", self.policy.as_str())
+            .set("scenario", self.scenario.as_str())
+            .set("passes", self.passes as f64)
+            .set("decisions", self.decisions as f64)
+            .set("mri", self.mri.to_json())
+            .set("time_to_promotion_steps", self.time_to_promotion_steps.to_json())
+            .set("postmortem", pm)
+    }
+}
+
 /// The whole recorded run: metadata + every grid cell.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
@@ -158,6 +206,8 @@ pub struct BenchReport {
     pub results: Vec<BenchScenario>,
     /// Multi-replica routing cells; empty = no fleet section serialized.
     pub fleet: Vec<FleetCell>,
+    /// Eviction-observatory cells; empty = no recurrence section serialized.
+    pub recurrence: Vec<RecurrenceCell>,
 }
 
 impl BenchReport {
@@ -167,6 +217,7 @@ impl BenchReport {
             samples,
             results: Vec::new(),
             fleet: Vec::new(),
+            recurrence: Vec::new(),
         }
     }
 
@@ -176,6 +227,10 @@ impl BenchReport {
 
     pub fn push_fleet(&mut self, c: FleetCell) {
         self.fleet.push(c);
+    }
+
+    pub fn push_recurrence(&mut self, c: RecurrenceCell) {
+        self.recurrence.push(c);
     }
 
     pub fn to_json(&self) -> Json {
@@ -188,6 +243,10 @@ impl BenchReport {
         if !self.fleet.is_empty() {
             let fleet: Vec<Json> = self.fleet.iter().map(|c| c.to_json()).collect();
             j = j.set("fleet", fleet);
+        }
+        if !self.recurrence.is_empty() {
+            let rec: Vec<Json> = self.recurrence.iter().map(|c| c.to_json()).collect();
+            j = j.set("recurrence", rec);
         }
         j
     }
@@ -312,6 +371,51 @@ impl BenchReport {
                 }
             }
         }
+        // the recurrence section is additive too: absent = observatory off
+        if let Some(rec) = j.get("recurrence") {
+            let cells = rec.as_arr().ok_or("recurrence is not an array")?;
+            if cells.is_empty() {
+                return Err("recurrence present but empty".into());
+            }
+            for (i, c) in cells.iter().enumerate() {
+                for key in ["policy", "scenario"] {
+                    c.get(key)
+                        .and_then(|v| v.as_str())
+                        .ok_or(format!("recurrence[{i}]: missing string '{key}'"))?;
+                }
+                for key in ["passes", "decisions"] {
+                    let v = c
+                        .get(key)
+                        .and_then(|v| v.as_f64())
+                        .ok_or(format!("recurrence[{i}]: missing number '{key}'"))?;
+                    if v < 0.0 {
+                        return Err(format!("recurrence[{i}]: negative '{key}'"));
+                    }
+                }
+                for hist in ["mri", "time_to_promotion_steps"] {
+                    let q = c
+                        .get(hist)
+                        .ok_or(format!("recurrence[{i}]: missing '{hist}'"))?;
+                    for key in ["n", "mean", "p50", "p90", "p99", "max"] {
+                        q.get(key)
+                            .and_then(|v| v.as_f64())
+                            .ok_or(format!("recurrence[{i}].{hist}: missing '{key}'"))?;
+                    }
+                }
+                let pm = c
+                    .get("postmortem")
+                    .ok_or(format!("recurrence[{i}]: missing 'postmortem'"))?;
+                for label in crate::eviction::observatory::POSTMORTEM_LABELS {
+                    let v = pm
+                        .get(label)
+                        .and_then(|v| v.as_f64())
+                        .ok_or(format!("recurrence[{i}].postmortem: missing '{label}'"))?;
+                    if v < 0.0 {
+                        return Err(format!("recurrence[{i}].postmortem: negative '{label}'"));
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
@@ -390,7 +494,7 @@ mod tests {
         );
         assert!(BenchReport::validate(&j).is_err());
         // a result missing a required counter
-        let bad = r#"{"schema_version":2,"bench":"pool","samples":1,
+        let bad = r#"{"schema_version":3,"bench":"pool","samples":1,
             "results":[{"policy":"lazy","scenario":"steady"}]}"#;
         assert!(BenchReport::validate(&Json::parse(bad).unwrap()).is_err());
         // non-monotone quantiles
@@ -429,9 +533,42 @@ mod tests {
         let mut bad = r.clone();
         bad.fleet[0].replicas = 0;
         assert!(BenchReport::validate(&bad.to_json()).is_err());
-        let bad = r#"{"schema_version":2,"bench":"pool","samples":1,
+        let bad = r#"{"schema_version":3,"bench":"pool","samples":1,
             "results":[],"fleet":[{"routing":"rr"}]}"#;
         assert!(BenchReport::validate(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn recurrence_section_is_optional_but_validated_when_present() {
+        let mut r = sample_report();
+        BenchReport::validate(&r.to_json()).expect("no recurrence section needed");
+        assert!(r.to_json().get("recurrence").is_none(), "empty not serialized");
+        let mut mri = StreamingHistogram::counts();
+        let mut ttp = StreamingHistogram::counts();
+        for x in [4.0, 12.0, 40.0] {
+            mri.observe(x);
+            ttp.observe(x);
+        }
+        r.push_recurrence(RecurrenceCell {
+            policy: "lazy".into(),
+            scenario: "tier".into(),
+            passes: 7,
+            decisions: 120,
+            mri: Quantiles::from_hist(&mri),
+            time_to_promotion_steps: Quantiles::from_hist(&ttp),
+            postmortem: [1, 1, 1, 0],
+        });
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        BenchReport::validate(&j).expect("recurrence cell is schema-valid");
+        let cells = j.get("recurrence").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(cells[0].str_at("policy").unwrap(), "lazy");
+        assert!(cells[0].get("postmortem").unwrap().get("le8").is_some());
+        // a cell missing the postmortem labels is rejected (corrupt the
+        // serialized form so the failure is recurrence's, not results')
+        let good = r.to_json().to_string();
+        let bad = good.replace(r#""le32""#, r#""oops""#);
+        let err = BenchReport::validate(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.contains("postmortem"), "{err}");
     }
 
     #[test]

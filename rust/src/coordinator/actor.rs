@@ -45,7 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::PoolGauges;
 use crate::scheduler::{AdmissionController, QueuedRequest, ReplicaView, RequestQueue, SloClass};
-use crate::telemetry::event;
+use crate::telemetry::{event, span, SpanContext};
 use crate::util::sync::lock_unpoisoned;
 
 use super::{Engine, Request, Response, TokenEvent};
@@ -241,6 +241,11 @@ fn actor_loop(
     let queue = RequestQueue::new();
     let mut admission = AdmissionController::new();
     let mut classes: HashMap<u64, SloClass> = HashMap::new();
+    // per-request trace contexts (kept across the preempt/resume round
+    // trip, forwarded to the engine before every submit) and the currently
+    // open queue-wait span per queued request
+    let mut spans: HashMap<u64, SpanContext> = HashMap::new();
+    let mut qwaits: HashMap<u64, u64> = HashMap::new();
     let mut cancels: Vec<u64> = Vec::new();
     let mut pending: Vec<EngineMsg> = Vec::new();
     let mut draining = false;
@@ -266,6 +271,20 @@ fn actor_loop(
             match msg {
                 EngineMsg::Submit(q) => {
                     classes.insert(q.id, q.class);
+                    if !q.span.is_off() {
+                        spans.insert(q.id, q.span);
+                        if let Some(t) = engine.telemetry() {
+                            let sid = t.span_open(
+                                q.id,
+                                span::name::QUEUE_WAIT,
+                                q.span,
+                                Some(replica),
+                                0.0,
+                                q.class.as_str(),
+                            );
+                            qwaits.insert(q.id, sid);
+                        }
+                    }
                     queue.push(q);
                     idle = false;
                 }
@@ -291,6 +310,12 @@ fn actor_loop(
         // single-engine loop (queued-fresh / queued-preempted / active).
         for id in std::mem::take(&mut cancels) {
             classes.remove(&id);
+            spans.remove(&id);
+            if let Some(sid) = qwaits.remove(&id) {
+                if let Some(t) = engine.telemetry() {
+                    t.span_close_full(sid, None, Some("cancelled"), false);
+                }
+            }
             if let Some(q) = queue.remove(id) {
                 match &q.resume {
                     Some(st) => engine.release_discarded_state(st, id),
@@ -328,8 +353,16 @@ fn actor_loop(
                 max_new: q.max_new,
                 resume: q.resume.clone(),
             };
+            engine.note_span(q.id, q.span);
             match engine.submit(req, queued_s) {
-                Ok(true) => idle = false,
+                Ok(true) => {
+                    if let Some(sid) = qwaits.remove(&q.id) {
+                        if let Some(t) = engine.telemetry() {
+                            t.span_close_full(sid, Some(queued_s * 1e3), None, false);
+                        }
+                    }
+                    idle = false;
+                }
                 Ok(false) => {
                     queue.push_front(q);
                     break;
@@ -338,6 +371,12 @@ fn actor_loop(
                     let msg = format!("{e:#}");
                     eprintln!("replica {replica}: submit error (request {}): {msg}", q.id);
                     classes.remove(&q.id);
+                    spans.remove(&q.id);
+                    if let Some(sid) = qwaits.remove(&q.id) {
+                        if let Some(t) = engine.telemetry() {
+                            t.span_close_full(sid, None, Some("error"), false);
+                        }
+                    }
                     let _ = events.send(ActorEvent::Failed {
                         replica,
                         req: q.id,
@@ -359,6 +398,7 @@ fn actor_loop(
                     let gauges = engine.pool_gauges();
                     for resp in done {
                         classes.remove(&resp.id);
+                        spans.remove(&resp.id);
                         let _ = events.send(ActorEvent::Done {
                             replica,
                             resp,
@@ -372,6 +412,7 @@ fn actor_loop(
                     engine.drain_token_events();
                     for id in engine.abort_rows() {
                         classes.remove(&id);
+                        spans.remove(&id);
                         let _ = events.send(ActorEvent::Failed {
                             replica,
                             req: id,
@@ -381,21 +422,36 @@ fn actor_loop(
                 }
             }
             let now = Instant::now();
-            queue.push_front_all(
-                engine
-                    .take_preempted()
-                    .into_iter()
-                    .map(|r| QueuedRequest {
-                        class: classes.get(&r.id).copied().unwrap_or_default(),
-                        id: r.id,
-                        prompt: r.prompt,
-                        template: r.template,
-                        max_new: r.max_new,
-                        queued_at: now,
-                        resume: r.resume,
-                    })
-                    .collect(),
-            );
+            let requeued: Vec<QueuedRequest> = engine
+                .take_preempted()
+                .into_iter()
+                .map(|r| QueuedRequest {
+                    class: classes.get(&r.id).copied().unwrap_or_default(),
+                    span: spans.get(&r.id).copied().unwrap_or_default(),
+                    id: r.id,
+                    prompt: r.prompt,
+                    template: r.template,
+                    max_new: r.max_new,
+                    queued_at: now,
+                    resume: r.resume,
+                })
+                .collect();
+            if let Some(t) = engine.telemetry() {
+                for q in &requeued {
+                    if !q.span.is_off() {
+                        let sid = t.span_open(
+                            q.id,
+                            span::name::QUEUE_WAIT,
+                            q.span,
+                            Some(replica),
+                            0.0,
+                            "requeue",
+                        );
+                        qwaits.insert(q.id, sid);
+                    }
+                }
+            }
+            queue.push_front_all(requeued);
         }
 
         // ---- publish: registry snapshots + the router's lock-free view
@@ -443,6 +499,13 @@ fn actor_loop(
         }
         while let Some(q) = queue.try_pop() {
             classes.remove(&q.id);
+            spans.remove(&q.id);
+            if let Some(sid) = qwaits.remove(&q.id) {
+                if let Some(t) = engine.telemetry() {
+                    let note = if q.resume.is_some() { "killed" } else { "orphaned" };
+                    t.span_close_full(sid, None, Some(note), false);
+                }
+            }
             match &q.resume {
                 Some(st) => {
                     // the snapshot references this replica's pool/tier —
@@ -506,6 +569,7 @@ mod tests {
             class: SloClass::Standard,
             queued_at: Instant::now(),
             resume: None,
+            span: SpanContext::default(),
         }
     }
 

@@ -40,6 +40,7 @@
 //! moves land (see `kvtier` for the demotion/promotion/swap lifecycle the
 //! engine drives on top of this).
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -49,6 +50,7 @@ use crate::coordinator::row::RowState;
 use crate::coordinator::{
     EngineConfig, PreemptMode, PreemptedState, Request, Response, TokenEvent,
 };
+use crate::eviction::observatory::RecurrenceObservatory;
 use crate::eviction::score::importance;
 use crate::eviction::{self, Policy};
 use crate::kvcache::TokenRecord;
@@ -58,7 +60,7 @@ use crate::kvpool::{
 use crate::kvtier::{HostTier, ParkedEntry, SwappedBlock, TierBlockId};
 use crate::metrics::{EngineMetrics, PoolGauges, RequestMetrics};
 use crate::runtime::{Client, DecodeBackend, Manifest, ModelExecutor, SimBackend};
-use crate::telemetry::event;
+use crate::telemetry::{event, span, SpanContext};
 use crate::tokenizer::Tokenizer;
 
 pub struct Engine {
@@ -115,6 +117,20 @@ pub struct Engine {
     /// feed streaming clients; `run_all` drains them per step so the
     /// buffer stays bounded in batch runs too.
     token_events: Vec<TokenEvent>,
+    /// Trace contexts noted via [`Engine::note_span`] before submission:
+    /// request id → the root-span link every engine-side span nests under.
+    /// Entries are removed at finish/abort; preempted requests keep theirs
+    /// for the resume round trip.
+    span_ctxs: HashMap<u64, SpanContext>,
+    /// Open `preempt` round-trip span per preempted request id, closed when
+    /// the request is re-admitted (resume) or discarded. A request orphaned
+    /// to another replica leaves its entry behind; the bounded open-span
+    /// ring in the recorder absorbs the leak.
+    preempt_spans: HashMap<u64, u64>,
+    /// Recurrence observatory (present iff `cfg.observe_recurrence`):
+    /// records eviction-pass decisions and promotion outcomes. Strictly
+    /// read-only over decode state — output is byte-identical either way.
+    recurrence: Option<RecurrenceObservatory>,
 }
 
 impl Engine {
@@ -188,6 +204,9 @@ impl Engine {
             move_buf: Vec::new(),
             demote_buf: Vec::new(),
             token_events: Vec::new(),
+            span_ctxs: HashMap::new(),
+            preempt_spans: HashMap::new(),
+            recurrence: cfg.observe_recurrence.then(RecurrenceObservatory::new),
             exec,
             cfg,
         })
@@ -309,6 +328,61 @@ impl Engine {
         }
     }
 
+    /// Note request `id`'s trace context before its submit: every
+    /// engine-side span (prefill, decode windows, eviction passes,
+    /// demote/promote/swap) for that request links under `ctx`. A default
+    /// (off) context clears any stale entry. The actor forwards this from
+    /// the queued request; callers that never trace never call it.
+    pub fn note_span(&mut self, id: u64, ctx: SpanContext) {
+        if ctx.is_off() {
+            self.span_ctxs.remove(&id);
+        } else {
+            self.span_ctxs.insert(id, ctx);
+        }
+    }
+
+    /// The recurrence observatory, present iff `cfg.observe_recurrence`.
+    pub fn recurrence(&self) -> Option<&RecurrenceObservatory> {
+        self.recurrence.as_ref()
+    }
+
+    /// Open a span under `ctx`; 0 (a no-op id for [`Engine::span_close`])
+    /// when tracing is off for this request or no telemetry is attached.
+    fn span_open(
+        &self,
+        req: u64,
+        name: &'static str,
+        ctx: SpanContext,
+        detail: f64,
+        note: &'static str,
+    ) -> u64 {
+        if ctx.is_off() {
+            return 0;
+        }
+        match &self.telemetry {
+            Some(t) => t.span_open(req, name, ctx, self.replica, detail, note),
+            None => 0,
+        }
+    }
+
+    /// Close a span opened by [`Engine::span_open`] (no-op for id 0).
+    fn span_close(&self, id: u64, detail: Option<f64>, note: Option<&'static str>) {
+        if id == 0 {
+            return;
+        }
+        if let Some(t) = &self.telemetry {
+            t.span_close_full(id, detail, note, false);
+        }
+    }
+
+    /// Close the `preempt` round-trip span for `rid`, if one is open. The
+    /// note records how the round trip ended (resume mode or discard).
+    fn close_preempt_span(&mut self, rid: u64, note: &'static str) {
+        if let Some(sid) = self.preempt_spans.remove(&rid) {
+            self.span_close(sid, None, Some(note));
+        }
+    }
+
     /// Push counter/gauge/histogram snapshots into the attached registry.
     /// No-op without telemetry; called by the serve loop each iteration so
     /// scrapers read fresh values without touching engine state.
@@ -347,6 +421,36 @@ impl Engine {
                 None => g.publish(reg),
             }
         }
+        if let Some(obs) = &self.recurrence {
+            use crate::eviction::observatory::POSTMORTEM_LABELS;
+            reg.set_counter(&key("lazyeviction_recurrence_passes_total"), obs.passes_total);
+            reg.set_counter(
+                &key("lazyeviction_recurrence_decisions_total"),
+                obs.decisions_total,
+            );
+            reg.set_histogram(&key("lazyeviction_recurrence_mri"), &obs.mri_hist);
+            reg.set_histogram(
+                &key("lazyeviction_time_to_promotion_steps"),
+                &obs.promotion_hist,
+            );
+            for (label, &count) in POSTMORTEM_LABELS.iter().zip(obs.postmortem.iter()) {
+                let k = match self.replica {
+                    // two labels: render_prometheus groups on the base name
+                    // before '{', so the composite key stays one family
+                    Some(r) => format!(
+                        "lazyeviction_false_eviction_postmortem_total{{parked_steps=\"{label}\",replica=\"{r}\"}}"
+                    ),
+                    None => crate::telemetry::labeled(
+                        "lazyeviction_false_eviction_postmortem_total",
+                        "parked_steps",
+                        label,
+                    ),
+                };
+                reg.set_counter(&k, count);
+            }
+        }
+        // span duration histograms share the registry with engine metrics
+        t.publish_span_metrics();
     }
 
     /// Test/debug introspection: `(pos, block, offset)` for every live slot
@@ -455,6 +559,7 @@ impl Engine {
     /// told, not silently retried.
     pub fn abort_rows(&mut self) -> Vec<u64> {
         let mut ids = Vec::new();
+        let mut closes: Vec<(u64, u32)> = Vec::new();
         for slot in self.rows.iter_mut() {
             if let Some(mut row) = slot.take() {
                 if let Some(pool) = self.pool.as_mut() {
@@ -465,8 +570,17 @@ impl Engine {
                         tier.release(e.tier_id);
                     }
                 }
+                if row.decode_span != 0 {
+                    closes.push((row.decode_span, row.decode_span_steps));
+                }
                 ids.push(row.req.id);
             }
+        }
+        for (sid, steps) in closes {
+            self.span_close(sid, Some(steps as f64), Some("abort"));
+        }
+        for id in &ids {
+            self.span_ctxs.remove(id);
         }
         ids
     }
@@ -502,6 +616,14 @@ impl Engine {
                 tier.release(e.tier_id);
             }
         }
+        if row.decode_span != 0 {
+            self.span_close(
+                row.decode_span,
+                Some(row.decode_span_steps as f64),
+                Some("abort"),
+            );
+        }
+        self.span_ctxs.remove(&id);
         self.metrics.cancelled_rows += 1;
         self.tele_event(
             id,
@@ -532,6 +654,8 @@ impl Engine {
                 tier.release(e.tier_id);
             }
         }
+        self.close_preempt_span(id, "discard");
+        self.span_ctxs.remove(&id);
         self.metrics.cancelled_rows += 1;
         self.tele_event(
             id,
@@ -568,6 +692,7 @@ impl Engine {
             return self.submit_resumed(req, st);
         }
         let req_id = req.id;
+        let ctx = self.span_ctxs.get(&req_id).copied().unwrap_or_default();
         let Some(row_idx) = self.rows.iter().position(|r| r.is_none()) else {
             return Ok(false);
         };
@@ -657,8 +782,11 @@ impl Engine {
         let mut prefill_ms = None;
         let pre = if let Some(seed) = seed_opt {
             self.metrics.prefill_skips += 1;
+            let sid = self.span_open(req_id, span::name::PREFIX_SKIP, ctx, premapped as f64, "");
+            self.span_close(sid, None, None);
             Prefilled::Seeded(seed)
         } else {
+            let sid = self.span_open(req_id, span::name::PREFILL, ctx, p as f64, "");
             let t0 = Instant::now();
             let (toks, valid) = padded_tokens(&ids, p_bucket);
             let prefilled = if self.pool.is_some() {
@@ -669,12 +797,14 @@ impl Engine {
             let out = match prefilled {
                 Ok(o) => o,
                 Err(e) => {
+                    self.span_close(sid, None, Some("error"));
                     release_fork(self, &mut fork);
                     return Err(e);
                 }
             };
             if let Prefilled::Dense(o) = &out {
                 if let Err(e) = self.exec.insert(&o.k_seq, &o.v_seq, row_idx) {
+                    self.span_close(sid, None, Some("error"));
                     release_fork(self, &mut fork);
                     return Err(e);
                 }
@@ -682,10 +812,12 @@ impl Engine {
             let dt = t0.elapsed();
             self.metrics.record_prefill(dt);
             prefill_ms = Some(dt.as_secs_f64() * 1e3);
+            self.span_close(sid, None, None);
             out
         };
 
         let mut row = RowState::new(req, self.cfg.cache, queued_s);
+        row.span = ctx;
         row.admit_seq = self.admit_seq;
         self.admit_seq += 1;
         if let Some(pool) = self.pool.as_ref() {
@@ -890,11 +1022,13 @@ impl Engine {
         if st.finish.is_some() {
             let row_idx = self.rows.iter().position(|r| r.is_none()).expect("checked");
             let mut row = RowState::resume(req, self.cfg.cache, queued_s, &st);
+            row.span = self.span_ctxs.get(&rid).copied().unwrap_or_default();
             row.admit_seq = self.admit_seq;
             self.admit_seq += 1;
             self.metrics.resumes += 1;
             self.rows[row_idx] = Some(row);
             self.metrics.record_queue_wait(queued_s);
+            self.close_preempt_span(rid, "finished");
             self.tele_event(rid, event::RESUME, st.pos as usize, st.records.len(), 0.0, "finished");
             return Ok(true);
         }
@@ -927,6 +1061,7 @@ impl Engine {
             let admitted = self.submit(req, queued_s)?;
             if admitted {
                 self.metrics.resume_fallbacks += 1;
+                self.close_preempt_span(rid, "restart");
                 self.tele_event(rid, event::RESUME_RESTART, st.pos as usize, 0, 0.0, "");
                 // the restart regenerates tokens, but the request's
                 // timeline is still the original one: keep the
@@ -1013,6 +1148,7 @@ impl Engine {
 
         let row_idx = self.rows.iter().position(|r| r.is_none()).expect("checked");
         let mut row = RowState::resume(req, self.cfg.cache, queued_s, &st);
+        row.span = self.span_ctxs.get(&rid).copied().unwrap_or_default();
         row.admit_seq = self.admit_seq;
         self.admit_seq += 1;
         {
@@ -1074,6 +1210,7 @@ impl Engine {
         self.metrics.recomputed_tokens += recomputed as u64;
         self.rows[row_idx] = Some(row);
         self.metrics.record_queue_wait(queued_s);
+        self.close_preempt_span(rid, "recompute");
         self.tele_event(rid, event::RESUME, st.pos as usize, n_live, recomputed as f64, "");
         Ok(true)
     }
@@ -1122,6 +1259,7 @@ impl Engine {
         }
         let row_idx = self.rows.iter().position(|r| r.is_none()).expect("checked");
         let mut row = RowState::resume(req, self.cfg.cache, queued_s, &st);
+        row.span = self.span_ctxs.get(&rid).copied().unwrap_or_default();
         row.admit_seq = self.admit_seq;
         self.admit_seq += 1;
         {
@@ -1138,6 +1276,7 @@ impl Engine {
             swapped.len(),
             "the parked table and the restored live set must agree"
         );
+        let swap_span = self.span_open(rid, span::name::SWAP_IN, row.span, 0.0, "");
         let mut moved = 0usize;
         for (bi, sw) in swapped.iter().enumerate() {
             let blk = {
@@ -1164,13 +1303,17 @@ impl Engine {
                         t.release(later.tier_id);
                     }
                 }
+                self.span_close(swap_span, None, Some("error"));
+                self.close_preempt_span(rid, "error");
                 return Err(e);
             }
         }
+        self.span_close(swap_span, Some(moved as f64), None);
         self.metrics.resumes += 1;
         self.metrics.swap_in_bytes += moved as u64;
         self.rows[row_idx] = Some(row);
         self.metrics.record_queue_wait(queued_s);
+        self.close_preempt_span(rid, "swap");
         self.tele_event(rid, event::RESUME_SWAP, st.pos as usize, n_live, moved as f64, "");
         Ok(true)
     }
@@ -1191,6 +1334,19 @@ impl Engine {
         let rid = row.req.id;
         let pos = row.pos as usize;
         let live = row.seq.len();
+        if row.decode_span != 0 {
+            self.span_close(
+                row.decode_span,
+                Some(row.decode_span_steps as f64),
+                Some("preempt"),
+            );
+            row.decode_span = 0;
+            row.decode_span_steps = 0;
+        }
+        let preempt_span = self.span_open(rid, span::name::PREEMPT, row.span, live as f64, "");
+        if preempt_span != 0 {
+            self.preempt_spans.insert(rid, preempt_span);
+        }
         // swap mode: park the whole table before the blocks are released —
         // `None` means the recompute snapshot below carries the row instead
         let swapped = self.try_swap_out_row(&row);
@@ -1255,7 +1411,12 @@ impl Engine {
         if !use_swap || self.tier.is_none() {
             return None;
         }
-        let t = row.seq.block_table()?;
+        let swap_span = self.span_open(row.req.id, span::name::SWAP_OUT, row.span, 0.0, "");
+        let shed_before = self.tier.as_ref().map(|t| t.shed_blocks).unwrap_or(0);
+        let Some(t) = row.seq.block_table() else {
+            self.span_close(swap_span, None, Some("no_table"));
+            return None;
+        };
         let bs = t.block_size();
         let blocks: Vec<(BlockId, usize)> = t
             .blocks()
@@ -1284,11 +1445,32 @@ impl Engine {
                     tier.release(sw.tier_id);
                 }
                 self.metrics.tier_rejects += 1;
+                self.tele_event(
+                    row.req.id,
+                    event::TIER_REJECT,
+                    row.pos as usize,
+                    live,
+                    self.metrics.tier_rejects as f64,
+                    "swap_out",
+                );
+                self.span_close(swap_span, None, Some("rejected"));
                 return None;
             }
         }
+        let shed = self.tier.as_ref().map(|t| t.shed_blocks).unwrap_or(0) - shed_before;
+        if shed > 0 {
+            self.tele_event(
+                row.req.id,
+                event::TIER_SHED,
+                row.pos as usize,
+                live,
+                shed as f64,
+                "swap_out",
+            );
+        }
         self.metrics.swap_preempts += 1;
         self.metrics.swap_out_bytes += moved as u64;
+        self.span_close(swap_span, Some(moved as f64), None);
         Some(parked)
     }
 
@@ -1416,6 +1598,30 @@ impl Engine {
             return Ok(finished);
         }
 
+        // open a decode-window span for every traced row that lacks one;
+        // each span aggregates up to DECODE_WINDOW_STEPS decode steps so
+        // long generations stay cheap to trace
+        let opens: Vec<(usize, u64)> = self
+            .rows
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.as_ref().map(|row| (i, row)))
+            .filter(|(_, row)| row.decode_span == 0 && !row.span.is_off())
+            .map(|(i, row)| {
+                (
+                    i,
+                    self.span_open(row.req.id, span::name::DECODE_WINDOW, row.span, 0.0, ""),
+                )
+            })
+            .collect();
+        for (i, sid) in opens {
+            if sid != 0 {
+                if let Some(row) = self.rows[i].as_mut() {
+                    row.decode_span = sid;
+                }
+            }
+        }
+
         let t0 = Instant::now();
         let paged = self.pool.is_some();
         // stage inputs: block tables + lens (paged) or slot masks (dense)
@@ -1474,7 +1680,7 @@ impl Engine {
         // per-row: observe attention, record the new token, pick next input
         for i in 0..b {
             // phase 1 (row borrow): tracker update + logical push + output
-            let (write_at, decode_ev, tok_ev) = {
+            let (write_at, decode_ev, tok_ev, win_ev) = {
                 let Some(row) = self.rows[i].as_mut() else {
                     continue;
                 };
@@ -1517,6 +1723,18 @@ impl Engine {
                     row.decode_logged = true;
                     Some((row.req.id, row.pos as usize, row.seq.len()))
                 };
+                // fold this step into the open decode-window span; a full
+                // window closes (phase 2) and the next step opens a new one
+                row.decode_span_steps += 1;
+                let win_ev =
+                    if row.decode_span != 0 && row.decode_span_steps >= span::DECODE_WINDOW_STEPS {
+                        let ev = (row.decode_span, row.decode_span_steps);
+                        row.decode_span = 0;
+                        row.decode_span_steps = 0;
+                        Some(ev)
+                    } else {
+                        None
+                    };
 
                 let logits = &out.logits[i * self.vocab..(i + 1) * self.vocab];
                 let pred = self
@@ -1552,7 +1770,7 @@ impl Engine {
                 } else {
                     None
                 };
-                (write_at, decode_ev, tok_ev)
+                (write_at, decode_ev, tok_ev, win_ev)
             };
             // phase 2 (backend): any shared-tail CoW copy lands first, then
             // the new token's K/V row goes to its table-mapped location
@@ -1579,6 +1797,9 @@ impl Engine {
                     "",
                 );
                 self.token_events.push(ev);
+            }
+            if let Some((sid, steps)) = win_ev {
+                self.span_close(sid, Some(steps as f64), None);
             }
         }
         self.metrics.record_step(t0.elapsed(), active);
@@ -1609,11 +1830,28 @@ impl Engine {
             let wants = wants && (self.pool.is_none() || self.make_row_private(i)?);
             if wants {
                 self.demote_buf.clear();
+                let pass_span = {
+                    let row = self.rows[i].as_ref().expect("wants ⇒ row present");
+                    self.span_open(row.req.id, span::name::EVICT_PASS, row.span, 0.0, "")
+                };
                 let evict_ev = {
                     let row = self.rows[i].as_mut().unwrap();
                     let keep =
                         self.policy
                             .select_keep(row.seq.records(), self.cfg.budget, row.pos);
+                    // observe the pass *before* apply_keep mutates/reorders
+                    // the records — verdicts must reflect decision time
+                    if let Some(obs) = self.recurrence.as_mut() {
+                        obs.observe_pass(
+                            row.req.id,
+                            row.pos,
+                            row.seq.records(),
+                            &keep,
+                            self.tier.is_some(),
+                            self.cfg.params.window,
+                            &self.cfg.params.score,
+                        );
+                    }
                     let n_evicted = row.seq.len() - keep.len();
                     row.evictions += n_evicted;
                     match self.pool.as_mut() {
@@ -1661,6 +1899,7 @@ impl Engine {
                     self.move_buf = moves;
                     self.move_buf.clear();
                 }
+                self.span_close(pass_span, Some(n_evicted as f64), None);
                 any_evict = true;
             } else if !paged {
                 for (j, v) in self.gather_buf[range].iter_mut().enumerate() {
@@ -1785,6 +2024,9 @@ impl Engine {
         }
         let step_t = self.rows[i].as_ref().map(|r| r.pos).unwrap_or(0);
         let rid = self.rows[i].as_ref().map(|r| r.req.id).unwrap_or(0);
+        let row_ctx = self.rows[i].as_ref().map(|r| r.span).unwrap_or_default();
+        let demote_span = self.span_open(rid, span::name::DEMOTE, row_ctx, 0.0, "");
+        let shed_before = self.tier.as_ref().map(|t| t.shed_blocks).unwrap_or(0);
         let re = {
             let d = self.exec.dims();
             d.n_layers * d.n_heads * d.d_head
@@ -1828,16 +2070,33 @@ impl Engine {
                         });
                     }
                 }
-                None => self.metrics.tier_rejects += 1,
+                None => {
+                    self.metrics.tier_rejects += 1;
+                    let live = self.rows[i].as_ref().map(|r| r.seq.len()).unwrap_or(0);
+                    self.tele_event(
+                        rid,
+                        event::TIER_REJECT,
+                        step_t as usize,
+                        live,
+                        self.metrics.tier_rejects as f64,
+                        "demote",
+                    );
+                }
             }
             gi = ge;
         }
         self.demote_buf = demoted;
         self.demote_buf.clear();
+        let shed = self.tier.as_ref().map(|t| t.shed_blocks).unwrap_or(0) - shed_before;
+        if shed > 0 {
+            let live = self.rows[i].as_ref().map(|r| r.seq.len()).unwrap_or(0);
+            self.tele_event(rid, event::TIER_SHED, step_t as usize, live, shed as f64, "demote");
+        }
         if parked_tokens > 0 {
             let live = self.rows[i].as_ref().map(|r| r.seq.len()).unwrap_or(0);
             self.tele_event(rid, event::DEMOTE, step_t as usize, live, parked_tokens as f64, "");
         }
+        self.span_close(demote_span, Some(parked_tokens as f64), None);
         Ok(())
     }
 
@@ -1875,7 +2134,7 @@ impl Engine {
         }
         let score_cfg = self.cfg.params.score;
         let w = self.cfg.params.window;
-        let (step_t, rid, plan) = {
+        let (step_t, rid, row_ctx, plan) = {
             let Some(row) = self.rows[i].as_ref() else {
                 return Ok(());
             };
@@ -1910,18 +2169,21 @@ impl Engine {
                     plan.push(e.tier_id);
                 }
             }
-            (step_t, row.req.id, plan)
+            (step_t, row.req.id, row.span, plan)
         };
         if plan.is_empty() {
             return Ok(());
         }
+        let promote_span = self.span_open(rid, span::name::PROMOTE, row_ctx, 0.0, "");
+        let shed_before = self.tier.as_ref().map(|t| t.shed_blocks).unwrap_or(0);
+        let mut promoted_tokens = 0usize;
         let re = {
             let d = self.exec.dims();
             d.n_layers * d.n_heads * d.d_head
         };
         for id in plan {
             // pull the entry out of the ledger and its bytes out of the tier
-            let (records, k, v) = {
+            let (records, parked_at, k, v) = {
                 let row = self.rows[i].as_mut().expect("checked in planning");
                 let at = row
                     .parked
@@ -1937,7 +2199,7 @@ impl Engine {
                     .take(id)
                     .expect("ledger retained only resident entries");
                 debug_assert_eq!(rows, entry.records.len());
-                (entry.records, k, v)
+                (entry.records, entry.parked_at, k, v)
             };
             let n = records.len();
             // the pool must cover the growth (plus a CoW of a shared tail,
@@ -1988,11 +2250,25 @@ impl Engine {
                     .write_kv_rows(blk, off, &k[j * re..(j + 1) * re], &v[j * re..(j + 1) * re])?;
                 self.metrics.false_evictions_avoided += 1;
             }
+            // a promotion is a false eviction avoided: record how long the
+            // token sat parked before its importance re-crossed the bar
+            if let Some(obs) = self.recurrence.as_mut() {
+                for _ in 0..n {
+                    obs.observe_promotion(step_t.saturating_sub(parked_at));
+                }
+            }
             self.metrics.promotions += 1;
             self.metrics.swap_in_bytes += bytes as u64;
+            promoted_tokens += n;
             let live = self.rows[i].as_ref().map(|r| r.seq.len()).unwrap_or(0);
             self.tele_event(rid, event::PROMOTE, step_t as usize, live, n as f64, "");
         }
+        let shed = self.tier.as_ref().map(|t| t.shed_blocks).unwrap_or(0) - shed_before;
+        if shed > 0 {
+            let live = self.rows[i].as_ref().map(|r| r.seq.len()).unwrap_or(0);
+            self.tele_event(rid, event::TIER_SHED, step_t as usize, live, shed as f64, "promote");
+        }
+        self.span_close(promote_span, Some(promoted_tokens as f64), None);
         Ok(())
     }
 
@@ -2006,6 +2282,11 @@ impl Engine {
                 tier.release(e.tier_id);
             }
         }
+        if row.decode_span != 0 {
+            self.span_close(row.decode_span, Some(row.decode_span_steps as f64), None);
+            row.decode_span = 0;
+        }
+        self.span_ctxs.remove(&row.req.id);
         let total = row.admitted_at.elapsed().as_secs_f64();
         let ttft = row
             .first_token_at
@@ -2201,6 +2482,38 @@ mod tests {
         // clearing the cache releases the pin: fully free again
         e.clear_prefix_cache();
         assert_eq!(e.pool_gauges().unwrap().free_blocks, 16);
+    }
+
+    #[test]
+    fn observe_recurrence_is_output_invariant_and_records() {
+        let pool = PoolConfig {
+            block_size: 8,
+            n_blocks: 16,
+            low_watermark: 1,
+            high_watermark: 2,
+        };
+        let mk = |observe: bool| {
+            let mut cfg = sim_cfg(1, Some(pool.clone()));
+            cfg.host_tier = Some(crate::kvtier::HostTierConfig::default());
+            cfg.observe_recurrence = observe;
+            Engine::new_sim(cfg).unwrap()
+        };
+        let mut on = mk(true);
+        let mut off = mk(false);
+        let r_on = on.run_all(vec![req(1, 60)]).unwrap();
+        let r_off = off.run_all(vec![req(1, 60)]).unwrap();
+        // the observatory only observes: engine output is byte-identical
+        assert_eq!(r_on[0].text, r_off[0].text);
+        assert_eq!(r_on[0].metrics.evictions, r_off[0].metrics.evictions);
+        assert_eq!(r_on[0].live_curve, r_off[0].live_curve);
+        assert!(off.recurrence().is_none());
+        let obs = on.recurrence().expect("flag on ⇒ observatory present");
+        assert!(obs.passes_total > 0, "budget 40 / 60 tokens must evict");
+        assert!(obs.decisions_total > 0);
+        assert!(obs.mri_hist.n() > 0);
+        let pass = obs.passes().next().expect("ring holds the passes");
+        assert_eq!(pass.req, 1);
+        assert!(!pass.decisions.is_empty());
     }
 
     #[test]

@@ -99,6 +99,11 @@ pub struct EngineConfig {
     /// Preemption resume mode. `Swap` requires `host_tier`; `Auto` without
     /// a tier degenerates to recompute.
     pub preempt_mode: PreemptMode,
+    /// Attach a recurrence observatory (`eviction::observatory`) recording
+    /// per-pass eviction decisions, recurrence-interval histograms and
+    /// time-to-promotion for parked tokens. Off by default — decode output
+    /// is byte-identical either way; the observatory only *observes*.
+    pub observe_recurrence: bool,
 }
 
 impl Default for EngineConfig {
@@ -117,6 +122,7 @@ impl Default for EngineConfig {
             prefix_cache: Some(PrefixCacheConfig::default()),
             host_tier: None,
             preempt_mode: PreemptMode::Recompute,
+            observe_recurrence: false,
         }
     }
 }

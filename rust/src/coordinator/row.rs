@@ -6,6 +6,7 @@ use std::time::Instant;
 use crate::coordinator::{FinishReason, PreemptedState, Request};
 use crate::kvcache::SeqKv;
 use crate::kvtier::ParkedBlocks;
+use crate::telemetry::SpanContext;
 
 #[derive(Debug)]
 pub struct RowState {
@@ -40,6 +41,14 @@ pub struct RowState {
     /// Demotion ledger: this row's evicted-but-parked blocks in the host
     /// tier, awaiting recurrence-driven promotion (empty without a tier).
     pub parked: ParkedBlocks,
+    /// The request's trace context (root-span link). Default = tracing off;
+    /// the engine opens every row-scoped span (prefill, decode windows,
+    /// eviction passes, demote/promote/swap) as a child of this.
+    pub span: SpanContext,
+    /// Open `decode_window` span id (0 = none open).
+    pub decode_span: u64,
+    /// Decode steps folded into the currently open window span.
+    pub decode_span_steps: u32,
 }
 
 impl RowState {
@@ -63,6 +72,9 @@ impl RowState {
             admit_seq: 0,
             decode_logged: false,
             parked: ParkedBlocks::default(),
+            span: SpanContext::default(),
+            decode_span: 0,
+            decode_span_steps: 0,
         }
     }
 
@@ -92,6 +104,9 @@ impl RowState {
             admit_seq: 0,
             decode_logged: false,
             parked: st.parked.clone(),
+            span: SpanContext::default(),
+            decode_span: 0,
+            decode_span_steps: 0,
         }
     }
 

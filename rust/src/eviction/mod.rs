@@ -11,6 +11,7 @@
 pub mod full;
 pub mod h2o;
 pub mod lazy;
+pub mod observatory;
 pub mod raas;
 pub mod rkv;
 pub mod scissorhands;
@@ -21,6 +22,7 @@ pub mod window;
 
 use crate::kvcache::TokenRecord;
 
+pub use observatory::RecurrenceObservatory;
 pub use score::{H2Mode, ScoreConfig, ScoreForm};
 
 /// An eviction policy decides *when* to evict and *which* slots to keep.

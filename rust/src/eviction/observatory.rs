@@ -1,0 +1,327 @@
+//! Recurrence observatory: records *why* each eviction decision was made.
+//!
+//! LazyEviction's whole bet is that Token Importance Recurrence is
+//! observable — a token that mattered once will matter again within a
+//! bounded interval (its MRI). The observatory instruments the eviction
+//! pass so that bet can be audited after the fact:
+//!
+//! * **per-pass decision records** — for every pass: the keep threshold
+//!   (minimum importance among kept tokens), the minimum importance among
+//!   kept *non-recent* tokens (the same cut `promote_parked` uses as its
+//!   promotion bar), and a per-token verdict (keep / evict / demote) with
+//!   the token's TS, MRI and importance score at decision time;
+//! * **recurrence-interval histogram** — the MRI distribution over every
+//!   token the pass examined, i.e. what the policy actually saw;
+//! * **time-to-promotion histogram** — for each parked token promoted back,
+//!   how many steps it sat in the host tier first;
+//! * **false-eviction postmortem counters** — promotions bucketed by parked
+//!   duration: a promotion after 2 steps means the pass evicted a token the
+//!   very next window proved it needed (an observably wrong call the tier
+//!   absorbed), while a promotion after 500 steps is genuine long-range
+//!   recurrence no greedy policy could have kept.
+//!
+//! The observatory is strictly *read-only over engine state*: it is handed
+//! the same records and keep-set the pass computed and never influences
+//! them, so `--observe-recurrence` on vs off produces byte-identical decode
+//! output (asserted by an engine test and the pool bench). It is bounded:
+//! a ring of [`RecurrenceObservatory::PASS_CAP`] pass records plus four
+//! fixed-bucket histograms/counter families.
+
+use std::collections::VecDeque;
+
+use crate::eviction::recent_slots;
+use crate::eviction::score::{importance, ScoreConfig};
+use crate::kvcache::TokenRecord;
+use crate::telemetry::StreamingHistogram;
+use crate::util::json::Json;
+
+/// What the pass decided for one token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Token stays in the device cache.
+    Keep,
+    /// Token dropped destructively (no host tier configured).
+    Evict,
+    /// Token evicted from the device but parked in the host tier.
+    Demote,
+}
+
+impl Verdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Verdict::Keep => "keep",
+            Verdict::Evict => "evict",
+            Verdict::Demote => "demote",
+        }
+    }
+}
+
+/// One token's decision inside a pass, with the signals the policy saw.
+#[derive(Clone, Copy, Debug)]
+pub struct PassDecision {
+    /// Absolute token position.
+    pub pos: u32,
+    /// Last activation step (TS) at decision time.
+    pub ts: u32,
+    /// Maximal recurrence interval at decision time.
+    pub mri: u32,
+    /// Importance score I_t (Eq. 2) at decision time.
+    pub score: f64,
+    pub verdict: Verdict,
+}
+
+/// One eviction pass: the thresholds that shaped it plus every per-token
+/// verdict.
+#[derive(Clone, Debug)]
+pub struct PassRecord {
+    pub req: u64,
+    pub step: u32,
+    /// Minimum importance among *kept* tokens — the bar a token had to
+    /// clear to stay (infinity when the pass kept nothing).
+    pub keep_threshold: f64,
+    /// Minimum importance among kept tokens *older than the recent window*
+    /// — the same bar `promote_parked` holds parked tokens to, so
+    /// comparing an evicted token's score against this predicts whether a
+    /// later recurrence would win promotion.
+    pub min_nonrecent: f64,
+    pub decisions: Vec<PassDecision>,
+}
+
+/// Postmortem bucket upper bounds (parked steps); the last is open-ended.
+pub const POSTMORTEM_BOUNDS: [u32; 3] = [8, 32, 128];
+/// Label per postmortem bucket, aligned with [`POSTMORTEM_BOUNDS`] + the
+/// open tail.
+pub const POSTMORTEM_LABELS: [&str; 4] = ["le8", "le32", "le128", "gt128"];
+
+/// Bounded recorder for eviction-pass decisions and recurrence outcomes.
+#[derive(Debug)]
+pub struct RecurrenceObservatory {
+    /// Most recent pass records (ring, oldest dropped).
+    passes: VecDeque<PassRecord>,
+    /// Passes observed since creation (including ones pushed off the ring).
+    pub passes_total: u64,
+    /// Per-token verdicts observed since creation.
+    pub decisions_total: u64,
+    /// MRI distribution over every token an eviction pass examined.
+    pub mri_hist: StreamingHistogram,
+    /// Steps parked before promotion, per promoted token.
+    pub promotion_hist: StreamingHistogram,
+    /// Promotions by parked duration, [`POSTMORTEM_LABELS`] order.
+    pub postmortem: [u64; 4],
+}
+
+impl Default for RecurrenceObservatory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RecurrenceObservatory {
+    /// Pass records retained (each holds one decision per examined token,
+    /// so the ring is the dominant memory cost — bound it tightly).
+    pub const PASS_CAP: usize = 256;
+
+    pub fn new() -> RecurrenceObservatory {
+        RecurrenceObservatory {
+            passes: VecDeque::new(),
+            passes_total: 0,
+            decisions_total: 0,
+            mri_hist: StreamingHistogram::counts(),
+            promotion_hist: StreamingHistogram::counts(),
+            postmortem: [0; 4],
+        }
+    }
+
+    /// Record one eviction pass. `records` and `keep` are exactly what the
+    /// policy saw and returned; `tiered` says whether evicted tokens are
+    /// parked (verdict demote) or destroyed (verdict evict). `window` is
+    /// the recent-set size used for the non-recent threshold (the same
+    /// `w.min(budget)` the lazy policy pins).
+    pub fn observe_pass(
+        &mut self,
+        req: u64,
+        step: u32,
+        records: &[TokenRecord],
+        keep: &[u32],
+        tiered: bool,
+        window: usize,
+        score: &ScoreConfig,
+    ) {
+        let mut kept = vec![false; records.len()];
+        for &k in keep {
+            if let Some(slot) = kept.get_mut(k as usize) {
+                *slot = true;
+            }
+        }
+        let mut recent = vec![false; records.len()];
+        for r in recent_slots(records, window.min(records.len())) {
+            recent[r as usize] = true;
+        }
+        let mut keep_threshold = f64::INFINITY;
+        let mut min_nonrecent = f64::INFINITY;
+        let mut decisions = Vec::with_capacity(records.len());
+        for (i, rec) in records.iter().enumerate() {
+            let s = importance(rec, step, score);
+            self.mri_hist.observe(rec.mri as f64);
+            let verdict = if kept[i] {
+                keep_threshold = keep_threshold.min(s);
+                if !recent[i] {
+                    min_nonrecent = min_nonrecent.min(s);
+                }
+                Verdict::Keep
+            } else if tiered {
+                Verdict::Demote
+            } else {
+                Verdict::Evict
+            };
+            decisions.push(PassDecision {
+                pos: rec.pos,
+                ts: rec.ts,
+                mri: rec.mri,
+                score: s,
+                verdict,
+            });
+        }
+        self.passes_total += 1;
+        self.decisions_total += decisions.len() as u64;
+        if self.passes.len() == Self::PASS_CAP {
+            self.passes.pop_front();
+        }
+        self.passes.push_back(PassRecord {
+            req,
+            step,
+            keep_threshold,
+            min_nonrecent,
+            decisions,
+        });
+    }
+
+    /// Record one parked token winning promotion after `parked_steps` in
+    /// the host tier.
+    pub fn observe_promotion(&mut self, parked_steps: u32) {
+        self.promotion_hist.observe(parked_steps as f64);
+        let b = POSTMORTEM_BOUNDS
+            .iter()
+            .position(|&ub| parked_steps <= ub)
+            .unwrap_or(POSTMORTEM_BOUNDS.len());
+        self.postmortem[b] += 1;
+    }
+
+    /// Retained pass records, oldest first.
+    pub fn passes(&self) -> impl Iterator<Item = &PassRecord> {
+        self.passes.iter()
+    }
+
+    /// JSON summary (the shape the bench report's recurrence section and
+    /// the `observe` wire command embed).
+    pub fn to_json(&self) -> Json {
+        let mut post = Json::obj();
+        for (label, &n) in POSTMORTEM_LABELS.iter().zip(self.postmortem.iter()) {
+            post = post.set(*label, n as f64);
+        }
+        Json::obj()
+            .set("passes_total", self.passes_total as f64)
+            .set("decisions_total", self.decisions_total as f64)
+            .set("passes_retained", self.passes.len())
+            .set("mri_n", self.mri_hist.n() as f64)
+            .set("mri_p50", self.mri_hist.quantile(0.5))
+            .set("mri_p99", self.mri_hist.quantile(0.99))
+            .set("time_to_promotion_n", self.promotion_hist.n() as f64)
+            .set("time_to_promotion_p50", self.promotion_hist.quantile(0.5))
+            .set("time_to_promotion_max", self.promotion_hist.max())
+            .set("false_eviction_postmortem", post)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(pos: u32, ts: u32, mri: u32) -> TokenRecord {
+        let mut r = TokenRecord::new(pos, 0);
+        r.ts = ts;
+        r.mri = mri;
+        r
+    }
+
+    fn cfg() -> ScoreConfig {
+        ScoreConfig::default()
+    }
+
+    #[test]
+    fn pass_records_verdicts_and_thresholds() {
+        let mut obs = RecurrenceObservatory::new();
+        let records = vec![rec(0, 90, 10), rec(1, 10, 3), rec(2, 99, 1), rec(3, 100, 0)];
+        // keep slots 0 and 3; window=1 pins only the newest pos (3)
+        obs.observe_pass(7, 100, &records, &[0, 3], false, 1, &cfg());
+        assert_eq!(obs.passes_total, 1);
+        assert_eq!(obs.decisions_total, 4);
+        let p = obs.passes().next().unwrap();
+        assert_eq!(p.req, 7);
+        assert_eq!(p.step, 100);
+        let verdicts: Vec<Verdict> = p.decisions.iter().map(|d| d.verdict).collect();
+        assert_eq!(
+            verdicts,
+            vec![Verdict::Keep, Verdict::Evict, Verdict::Evict, Verdict::Keep]
+        );
+        // keep_threshold = min importance over kept {0, 3}; slot 0 is the
+        // only kept non-recent token, so min_nonrecent is its score exactly
+        let s0 = importance(&records[0], 100, &cfg());
+        assert!(p.keep_threshold <= s0 + 1e-12);
+        assert!((p.min_nonrecent - s0).abs() < 1e-12);
+        // every examined token's MRI landed in the histogram
+        assert_eq!(obs.mri_hist.n(), 4);
+    }
+
+    #[test]
+    fn tiered_passes_mark_demote_not_evict() {
+        let mut obs = RecurrenceObservatory::new();
+        let records = vec![rec(0, 5, 2), rec(1, 6, 0)];
+        obs.observe_pass(1, 10, &records, &[1], true, 1, &cfg());
+        let p = obs.passes().next().unwrap();
+        assert_eq!(p.decisions[0].verdict, Verdict::Demote);
+        assert_eq!(p.decisions[1].verdict, Verdict::Keep);
+        assert_eq!(p.decisions[0].verdict.as_str(), "demote");
+    }
+
+    #[test]
+    fn promotion_buckets_split_by_parked_duration() {
+        let mut obs = RecurrenceObservatory::new();
+        for steps in [1, 8, 9, 32, 33, 128, 129, 5000] {
+            obs.observe_promotion(steps);
+        }
+        assert_eq!(obs.postmortem, [2, 2, 2, 2]);
+        assert_eq!(obs.promotion_hist.n(), 8);
+        assert_eq!(obs.promotion_hist.max(), 5000.0);
+    }
+
+    #[test]
+    fn pass_ring_is_bounded() {
+        let mut obs = RecurrenceObservatory::new();
+        let records = vec![rec(0, 1, 1)];
+        for i in 0..(RecurrenceObservatory::PASS_CAP as u64 + 10) {
+            obs.observe_pass(i, 2, &records, &[0], false, 1, &cfg());
+        }
+        assert_eq!(obs.passes().count(), RecurrenceObservatory::PASS_CAP);
+        assert_eq!(
+            obs.passes_total,
+            RecurrenceObservatory::PASS_CAP as u64 + 10
+        );
+        // oldest dropped: the first retained pass is req 10
+        assert_eq!(obs.passes().next().unwrap().req, 10);
+    }
+
+    #[test]
+    fn json_summary_carries_all_sections() {
+        let mut obs = RecurrenceObservatory::new();
+        obs.observe_pass(1, 4, &[rec(0, 1, 2), rec(1, 2, 0)], &[1], true, 1, &cfg());
+        obs.observe_promotion(3);
+        let j = obs.to_json();
+        assert_eq!(j.f64_at("passes_total").unwrap(), 1.0);
+        assert_eq!(j.f64_at("decisions_total").unwrap(), 2.0);
+        assert_eq!(j.f64_at("time_to_promotion_n").unwrap(), 1.0);
+        let post = j.get("false_eviction_postmortem").unwrap();
+        assert_eq!(post.f64_at("le8").unwrap(), 1.0);
+        assert_eq!(post.f64_at("gt128").unwrap(), 0.0);
+    }
+}

@@ -28,7 +28,9 @@
 //! Prometheus-style scrape listener (`GET /metrics`, `GET /trace`),
 //! --trace-out FILE streams flight-recorder lifecycle events as JSONL,
 //! --trace-events N bounds the in-memory flight ring (default 4096).
-//! See docs/observability.md.
+//! --observe-recurrence turns on the eviction recurrence observatory
+//! (per-pass decision records + promotion histograms; default off — the
+//! hot path stays clean). See docs/observability.md.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -67,6 +69,7 @@ fn engine_config_from(args: &Args) -> EngineConfig {
         prefix_cache: None,
         host_tier: None,
         preempt_mode: PreemptMode::Recompute,
+        observe_recurrence: args.bool_flag("observe-recurrence"),
     };
     cfg.collect_sketches = cfg.policy.starts_with("rkv");
     if args.bool_flag("stop-newline") {
@@ -354,7 +357,7 @@ fn main() -> Result<()> {
                  prefix flags: --prefix-entries 64 --no-prefix-cache\n\
                  tier flags:   --host-tier-bytes N --preempt-mode recompute|swap|auto\n\
                  fleet flags:  --replicas N --routing affinity|pressure|rr --router-seed S --fault-injection\n\
-                 telemetry:    --metrics-addr HOST:PORT --trace-out FILE --trace-events 4096\n\
+                 telemetry:    --metrics-addr HOST:PORT --trace-out FILE --trace-events 4096 --observe-recurrence\n\
                  every flag and the server's pool gauge fields: docs/serving.md; fleet: docs/fleet.md"
             );
             std::process::exit(2);

@@ -88,6 +88,11 @@ pub struct QueuedRequest {
     /// submissions). Rides the queue round trip back into `Engine::submit`;
     /// `Arc` keeps the per-admission-attempt clone a refcount bump.
     pub resume: Option<Arc<PreemptedState>>,
+    /// Trace context assigned at the listener (`telemetry::span`): the
+    /// request's root span, which every engine-side span links under.
+    /// Default (`trace == 0`) means tracing is off — no span is recorded
+    /// anywhere downstream.
+    pub span: crate::telemetry::SpanContext,
 }
 
 impl QueuedRequest {
@@ -305,6 +310,7 @@ mod tests {
             class: SloClass::Standard,
             queued_at: Instant::now(),
             resume: None,
+            span: crate::telemetry::SpanContext::default(),
         }
     }
 

@@ -114,6 +114,19 @@ pub enum RouteReason {
     Rebalanced,
 }
 
+impl RouteReason {
+    /// Stable label used in span notes and the flag/metric surface
+    /// (matches `Routing::as_str` where the variants overlap).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RouteReason::Affinity => "affinity",
+            RouteReason::Pressure => "pressure",
+            RouteReason::RoundRobin => "rr",
+            RouteReason::Rebalanced => "rebalanced",
+        }
+    }
+}
+
 /// A placement decision: target replica + how it was reached.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Decision {

@@ -106,7 +106,7 @@ use anyhow::Result;
 use crate::coordinator::{spawn_engine_actor, ActorEvent, ActorHandle, Engine, Response, TokenEvent};
 use crate::metrics::PoolGauges;
 use crate::scheduler::{header_hashes, QueuedRequest, ReplicaView, Router, Routing, SloClass};
-use crate::telemetry::{event, labeled, names, Telemetry};
+use crate::telemetry::{event, labeled, names, span, SpanContext, Telemetry};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
 use crate::util::sync::lock_unpoisoned;
@@ -167,6 +167,7 @@ pub fn parse_request(line: &str, id: u64) -> Result<(QueuedRequest, bool)> {
             class,
             queued_at: Instant::now(),
             resume: None,
+            span: SpanContext::default(),
         },
         w.stream,
     ))
@@ -192,6 +193,9 @@ enum ConnEvent {
 struct Route {
     tx: mpsc::Sender<ConnEvent>,
     stream: bool,
+    /// The request's root `request` span id (0 = tracing off), closed when
+    /// the terminal reply resolves this route (or on cancellation).
+    root: u64,
 }
 
 type Routes = Arc<Mutex<HashMap<u64, Route>>>;
@@ -200,6 +204,18 @@ fn send_reply(routes: &Routes, id: u64, reply: ServeReply) {
     if let Some(rt) = lock_unpoisoned(routes).remove(&id) {
         let _ = rt.tx.send(ConnEvent::Reply(reply));
     }
+}
+
+/// Close the request's root span (looked up from its still-live route)
+/// with the terminal outcome. Flushes: the root close is the last line of
+/// a request's trace, and crash-truncated JSONL must still carry it.
+fn close_root_span(fleet: &Fleet, id: u64, detail: Option<f64>, note: Option<&'static str>) {
+    let Some(t) = &fleet.telemetry else { return };
+    let root = lock_unpoisoned(&fleet.routes)
+        .get(&id)
+        .map(|r| r.root)
+        .unwrap_or(0);
+    t.span_close_full(root, detail, note, true);
 }
 
 /// Forward one token event to its (streaming) route without consuming the
@@ -273,22 +289,42 @@ impl Fleet {
         let mut q = q;
         loop {
             let views = self.views();
+            // one `route` span per placement attempt: its note records the
+            // router's verdict (affinity/pressure/rr/rebalanced — or why
+            // the attempt failed), its detail the chosen replica
+            let route_span = match &self.telemetry {
+                Some(t) if !q.span.is_off() => {
+                    t.span_open(q.id, span::name::ROUTE, q.span, None, 0.0, "")
+                }
+                _ => 0,
+            };
+            let close_route = |detail: Option<f64>, note: &'static str| {
+                if let Some(t) = &self.telemetry {
+                    t.span_close_full(route_span, detail, Some(note), false);
+                }
+            };
             let decision = lock_unpoisoned(&self.router).choose(&hashes, q.id, &views);
             let Some(d) = decision else {
+                close_route(None, "no_live_replicas");
                 lock_unpoisoned(&self.placements).remove(&q.id);
                 return Err((q.id, "no live replicas".to_string()));
             };
             let Some(h) = self.handles.get(d.replica) else {
                 // the router only hands out indices < views.len(), but a
                 // defective decision must fail the request, not the thread
+                close_route(Some(d.replica as f64), "unknown_replica");
                 lock_unpoisoned(&self.placements).remove(&q.id);
                 return Err((q.id, format!("router chose unknown replica {}", d.replica)));
             };
             lock_unpoisoned(&self.placements).insert(q.id, d.replica);
             match h.submit(q) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    close_route(Some(d.replica as f64), d.reason.as_str());
+                    return Ok(());
+                }
                 Err(back) => {
                     // raced a dying replica: flag it so choose() skips it
+                    close_route(Some(d.replica as f64), "dead_replica");
                     h.status.alive.store(false, Ordering::Release);
                     q = back;
                 }
@@ -299,7 +335,13 @@ impl Fleet {
     /// Client gone: drop the route and tell the home replica to release
     /// whatever it owns for this id.
     fn cancel(&self, id: u64) {
-        lock_unpoisoned(&self.routes).remove(&id);
+        let root = lock_unpoisoned(&self.routes)
+            .remove(&id)
+            .map(|rt| rt.root)
+            .unwrap_or(0);
+        if let Some(t) = &self.telemetry {
+            t.span_close_full(root, None, Some("cancelled"), true);
+        }
         if let Some(r) = lock_unpoisoned(&self.placements).remove(&id) {
             if let Some(h) = self.handles.get(r) {
                 h.cancel(id);
@@ -326,6 +368,7 @@ impl Fleet {
             };
             reg.set_counter(&key, s);
         }
+        t.publish_span_metrics();
     }
 }
 
@@ -480,16 +523,33 @@ fn pump_event(fleet: &Arc<Fleet>, ev: ActorEvent, streamed: &mut [u64]) {
         ActorEvent::Done { resp, gauges, .. } => {
             lock_unpoisoned(&fleet.placements).remove(&resp.id);
             let id = resp.id;
+            close_root_span(
+                fleet,
+                id,
+                Some(resp.metrics.tokens_out as f64),
+                Some(resp.finish.as_str()),
+            );
             send_reply(&fleet.routes, id, ServeReply::Done(resp, gauges));
         }
         ActorEvent::Failed { req, error, .. } => {
             lock_unpoisoned(&fleet.placements).remove(&req);
+            close_root_span(fleet, req, None, Some("failed"));
             send_reply(&fleet.routes, req, ServeReply::Failed(error));
         }
-        ActorEvent::Orphaned { req, .. } => {
+        ActorEvent::Orphaned { replica, req } => {
             // a killed replica never admitted this request: place it again
-            // on the survivors; only give up when the whole fleet is gone
+            // on the survivors; only give up when the whole fleet is gone.
+            // The `reroute` hop span (detail = the dead replica) is what
+            // stitches the two replicas' span trees under one trace.
+            if let Some(t) = &fleet.telemetry {
+                if !req.span.is_off() {
+                    let sid =
+                        t.span_open(req.id, span::name::REROUTE, req.span, None, replica as f64, "");
+                    t.span_close_full(sid, None, None, false);
+                }
+            }
             if let Err((id, msg)) = fleet.submit(req) {
+                close_root_span(fleet, id, None, Some("failed"));
                 send_reply(&fleet.routes, id, ServeReply::Failed(msg));
             }
         }
@@ -611,7 +671,7 @@ fn handle_conn(stream: TcpStream, fleet: Arc<Fleet>, next_id: Arc<AtomicU64>) {
             continue;
         }
         let id = next_id.fetch_add(1, Ordering::Relaxed);
-        let (q, stream_mode) = match parse_request(&line, id) {
+        let (mut q, stream_mode) = match parse_request(&line, id) {
             Ok(v) => v,
             Err(e) => {
                 let _ = writeln!(
@@ -622,11 +682,29 @@ fn handle_conn(stream: TcpStream, fleet: Arc<Fleet>, next_id: Arc<AtomicU64>) {
                 continue;
             }
         };
+        // trace root: every downstream span (route, queue wait, prefill,
+        // decode windows, eviction, preempt/re-route hops — on whichever
+        // replica ends up serving it) links under this id
+        let root = match &fleet.telemetry {
+            Some(t) => t.span_open(
+                id,
+                span::name::REQUEST,
+                SpanContext::default(),
+                None,
+                0.0,
+                q.class.as_str(),
+            ),
+            None => 0,
+        };
+        if root != 0 {
+            q.span = SpanContext::child_of(root, root);
+        }
         lock_unpoisoned(&fleet.routes).insert(
             id,
             Route {
                 tx: tx.clone(),
                 stream: stream_mode,
+                root,
             },
         );
         if let Some(t) = &fleet.telemetry {

@@ -37,6 +37,13 @@ pub mod event {
     pub const EVICT: &str = "evict";
     /// Evicted blocks parked in the host tier; `detail` = tokens parked.
     pub const DEMOTE: &str = "demote";
+    /// The tier refused a park outright (byte budget full of pinned
+    /// state); `detail` = cumulative rejects. The demotion stayed
+    /// destructive (or the swap preemption fell back to recompute).
+    pub const TIER_REJECT: &str = "tier_reject";
+    /// Unpinned tier entries destroyed under byte pressure while this
+    /// request parked; `detail` = blocks shed (`tier_shed_blocks` delta).
+    pub const TIER_SHED: &str = "tier_shed";
     /// Parked tokens promoted back on recurrence; `detail` = tokens.
     pub const PROMOTE: &str = "promote";
     /// Row preempted, recompute snapshot taken; `detail` = live tokens.
@@ -163,6 +170,19 @@ impl FlightRecorder {
             self.dropped += 1;
         }
         self.ring.push_back(ev);
+    }
+
+    /// Append an auxiliary JSONL line (a v2 span line) to the same sink
+    /// the flight events stream into, keeping `--trace-out` one
+    /// chronological file. No-op without an output path; `flush` makes the
+    /// line durable immediately (span closes of terminal spans).
+    pub fn write_aux(&mut self, line: &Json, flush: bool) {
+        if let Some(w) = self.out.as_mut() {
+            let _ = writeln!(w, "{}", line.to_string());
+            if flush {
+                let _ = w.flush();
+            }
+        }
     }
 
     /// All retained events for one request, in emission order.

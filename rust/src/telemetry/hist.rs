@@ -270,6 +270,52 @@ mod tests {
     }
 
     #[test]
+    fn quantile_empty_is_zero_for_any_q() {
+        let h = StreamingHistogram::latency_ms();
+        for q in [0.0, 0.5, 1.0, -3.0, 7.0] {
+            assert_eq!(h.quantile(q), 0.0, "empty histogram, q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_single_observation_reports_itself() {
+        let mut h = StreamingHistogram::latency_ms();
+        h.observe(0.42);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.42, "single sample, q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_all_in_overflow_bucket_clamps_to_observed_range() {
+        // every sample above the last bound lands in the +Inf bucket, whose
+        // interpolation upper edge is the observed max — never infinity
+        let mut h = StreamingHistogram::counts();
+        for x in [20000.0, 30000.0, 40000.0] {
+            h.observe(x);
+        }
+        for q in [0.0, 0.5, 1.0] {
+            let v = h.quantile(q);
+            assert!(v.is_finite(), "q={q} leaked +Inf: {v}");
+            assert!((20000.0..=40000.0).contains(&v), "q={q} out of range: {v}");
+        }
+        assert_eq!(h.quantile(1.0), 40000.0);
+    }
+
+    #[test]
+    fn quantile_clamps_out_of_range_q() {
+        let mut h = StreamingHistogram::latency_ms();
+        for i in 1..=10 {
+            h.observe(i as f64);
+        }
+        // q below 0 behaves as q=0 (the min); above 1 as q=1 (the max)
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
+        assert_eq!(h.quantile(1.0), 10.0);
+    }
+
+    #[test]
     fn non_finite_observations_are_dropped() {
         let mut h = StreamingHistogram::latency_ms();
         h.observe(f64::NAN);

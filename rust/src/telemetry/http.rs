@@ -5,7 +5,11 @@
 //!
 //! * `GET /metrics` — Prometheus text exposition of the registry
 //! * `GET /trace?req=N` — JSONL flight-recorder events for request `N`
-//! * `GET /trace` — JSONL of every retained flight event
+//! * `GET /trace` — JSONL of retained flight events (most recent
+//!   [`DEFAULT_TRACE_LIMIT`]; `?limit=N` overrides, so a full 4096-event
+//!   ring never stalls the HTTP/1.0 listener by default)
+//! * `GET /trace/spans[?req=N][&limit=N]` — closed request spans as
+//!   nested JSON trees (same default limit, applied to spans considered)
 //!
 //! Hand-rolled on `std::net` like the main server (no hyper/tokio in the
 //! offline crate set). Connections are scrape-shaped: read one request
@@ -19,6 +23,19 @@ use std::time::Duration;
 
 use super::Telemetry;
 use crate::util::sync::lock_unpoisoned;
+
+/// Events/spans returned by `GET /trace` and `GET /trace/spans` when the
+/// client sends no `limit=N` — documented in docs/observability.md.
+pub const DEFAULT_TRACE_LIMIT: usize = 1024;
+
+/// Value of `key=` in an HTTP target's query string, if present.
+fn query_param(target: &str, key: &str) -> Option<u64> {
+    let (_, query) = target.split_once('?')?;
+    query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix(key).and_then(|v| v.strip_prefix('=')))
+        .and_then(|v| v.parse::<u64>().ok())
+}
 
 /// Bind `addr` and serve scrapes on a background thread until `shutdown`.
 /// Returns once the listener is bound (so callers can connect immediately).
@@ -77,15 +94,27 @@ fn handle_scrape(mut stream: std::net::TcpStream, telemetry: Arc<Telemetry>) {
             "text/plain; version=0.0.4",
             telemetry.registry.render_prometheus(),
         )
+    } else if target == "/trace/spans" || target.starts_with("/trace/spans?") {
+        let req_id = query_param(target, "req");
+        let limit = query_param(target, "limit")
+            .map(|n| n as usize)
+            .unwrap_or(DEFAULT_TRACE_LIMIT);
+        let spans = lock_unpoisoned(&telemetry.spans);
+        let body = spans.trees_json(req_id, limit).to_string();
+        ("200 OK", "application/json", body)
     } else if target == "/trace" || target.starts_with("/trace?") {
-        let req_id = target
-            .split_once("req=")
-            .and_then(|(_, v)| v.split('&').next().unwrap_or(v).parse::<u64>().ok());
+        let req_id = query_param(target, "req");
+        let limit = query_param(target, "limit")
+            .map(|n| n as usize)
+            .unwrap_or(DEFAULT_TRACE_LIMIT);
         let flight = lock_unpoisoned(&telemetry.flight);
-        let events = match req_id {
+        let mut events = match req_id {
             Some(id) => flight.events_for(id),
             None => flight.events(),
         };
+        if events.len() > limit {
+            events.drain(..events.len() - limit);
+        }
         let body = events
             .iter()
             .map(|e| e.to_json().to_string() + "\n")

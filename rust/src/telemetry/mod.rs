@@ -15,6 +15,11 @@
 //!   events (queued → admitted → prefill → decode → evict/demote/promote →
 //!   preempt/swap/resume → finish), dumpable as JSONL (`--trace-out`) and
 //!   queryable per-request over the wire (`trace` command, `GET /trace`).
+//! * [`span::SpanRecorder`] — causal, timed request spans with
+//!   parent/child links stitched across replicas, served as trees
+//!   (`GET /trace/spans`), interleaved into the `--trace-out` JSONL as v2
+//!   lines, and fed into the registry as `lazyeviction_span_<name>_ms`
+//!   duration histograms.
 //!
 //! The engine is single-threaded; [`Telemetry`] is the `Arc` handle shared
 //! between it, the serve loop's connection threads, and the scrape
@@ -24,6 +29,7 @@ pub mod flight;
 pub mod hist;
 pub mod http;
 pub mod registry;
+pub mod span;
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -32,6 +38,7 @@ pub use flight::{event, FlightEvent, FlightRecorder};
 pub use hist::StreamingHistogram;
 pub use http::spawn_metrics_listener;
 pub use registry::{MetricKind, Registry};
+pub use span::{Span, SpanContext, SpanRecorder};
 
 /// Canonical metric names (the `lazyeviction_` namespace). Pool gauges are
 /// published as `lazyeviction_pool_<field>` from `PoolGauges::fields()`.
@@ -70,10 +77,14 @@ pub fn labeled(name: &str, label: &str, value: impl std::fmt::Display) -> String
     format!("{name}{{{label}=\"{value}\"}}")
 }
 
-/// Shared handle: registry (interior mutex) + flight recorder (mutex).
+/// Shared handle: registry (interior mutex) + flight recorder (mutex) +
+/// span recorder (mutex). Lock discipline: never hold two of the inner
+/// locks at once — the span helpers below take the span lock, release it,
+/// then take the flight lock to forward the JSONL line.
 pub struct Telemetry {
     pub registry: Registry,
     pub flight: Mutex<FlightRecorder>,
+    pub spans: Mutex<SpanRecorder>,
 }
 
 impl Telemetry {
@@ -82,10 +93,13 @@ impl Telemetry {
         Arc::new(Telemetry {
             registry: Registry::new(),
             flight: Mutex::new(FlightRecorder::new(FlightRecorder::DEFAULT_CAP)),
+            spans: Mutex::new(SpanRecorder::new(SpanRecorder::DEFAULT_CAP)),
         })
     }
 
     /// Telemetry whose flight recorder also appends JSONL to `trace_out`.
+    /// Span open/close lines share the same sink (v2 lines, see
+    /// docs/observability.md §Spans) and the same ring capacity.
     pub fn with_trace(cap: usize, trace_out: Option<&Path>) -> std::io::Result<Arc<Telemetry>> {
         let flight = match trace_out {
             Some(p) => FlightRecorder::with_output(cap, p)?,
@@ -94,6 +108,7 @@ impl Telemetry {
         Ok(Arc::new(Telemetry {
             registry: Registry::new(),
             flight: Mutex::new(flight),
+            spans: Mutex::new(SpanRecorder::new(cap)),
         }))
     }
 
@@ -116,6 +131,61 @@ impl Telemetry {
     /// Retained flight events for one request.
     pub fn events_for(&self, req: u64) -> Vec<FlightEvent> {
         self.flight.lock().unwrap().events_for(req)
+    }
+
+    /// Open a span (see [`span::SpanRecorder::open`]) and forward the v2
+    /// JSONL line to the trace sink. Returns the span id; children link to
+    /// it via [`SpanContext::child_of`].
+    pub fn span_open(
+        &self,
+        req: u64,
+        name: &'static str,
+        ctx: SpanContext,
+        replica: Option<usize>,
+        detail: f64,
+        note: &'static str,
+    ) -> u64 {
+        let (id, line) = self
+            .spans
+            .lock()
+            .unwrap()
+            .open(req, name, ctx, replica, detail, note);
+        self.flight.lock().unwrap().write_aux(&line, false);
+        id
+    }
+
+    /// Close span `id`, optionally overriding detail/note, and forward the
+    /// v2 JSONL line. No-op for id 0 (tracing off) or an unknown id.
+    /// `flush` makes the line durable (close of a terminal `request` span).
+    pub fn span_close_full(
+        &self,
+        id: u64,
+        detail: Option<f64>,
+        note: Option<&'static str>,
+        flush: bool,
+    ) {
+        if id == 0 {
+            return;
+        }
+        if let Some(line) = self.spans.lock().unwrap().close(id, detail, note) {
+            self.flight.lock().unwrap().write_aux(&line, flush);
+        }
+    }
+
+    /// Close span `id` with its open-time detail/note, unflushed.
+    pub fn span_close(&self, id: u64) {
+        self.span_close_full(id, None, None, false);
+    }
+
+    /// Closed spans for one request (or all), oldest-first.
+    pub fn spans_for(&self, req: Option<u64>, limit: usize) -> Vec<Span> {
+        self.spans.lock().unwrap().spans_for(req, limit)
+    }
+
+    /// Publish the per-name span duration histograms into the registry
+    /// (`lazyeviction_span_<name>_ms` families).
+    pub fn publish_span_metrics(&self) {
+        self.spans.lock().unwrap().publish(&self.registry);
     }
 
     pub fn flush(&self) {

@@ -1,0 +1,611 @@
+//! Request span tracing: bounded, allocation-cheap open/close spans with
+//! parent/child links, recorded fleet-wide into one [`SpanRecorder`].
+//!
+//! Every request gets a *trace id* at the listener — the id of its root
+//! `request` span. Each lifecycle stage (router decision, queue wait,
+//! prefill vs prefix-skip, decode windows, eviction passes, demote /
+//! promote / swap round-trips, preemption round-trips, orphan re-routes)
+//! opens a child span carrying that trace id, so an orphaned request's
+//! spans stitch into one tree even when two replicas (and the server
+//! thread) recorded different stages. Exported three ways:
+//!
+//! * `GET /trace/spans[?req=N][&limit=N]` — closed spans as nested trees;
+//! * the `--trace-out` JSONL sink — v2 `span_open` / `span_close` lines
+//!   interleaved with the v1 flight events (see docs/observability.md);
+//! * the metrics registry — per-name duration histograms under
+//!   `lazyeviction_span_<name>_ms`.
+//!
+//! Memory is bounded by construction: the closed-span ring and the
+//! open-span list both cap out and count drops, and a span is two fixed
+//! structs — no per-span allocation beyond the ring slot.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::hist::StreamingHistogram;
+use super::registry::Registry;
+
+/// Span names, in rough lifecycle order. `&'static str` so opening a span
+/// never allocates for the name. The metric family publishes each as
+/// `lazyeviction_span_<name>_ms` (see [`metric_name`]); lazylint's parity
+/// rule scans this module's constants, so every name added here must also
+/// be documented in docs/observability.md §Spans.
+pub mod name {
+    /// Root span: listener accept → terminal reply (or cancel/kill).
+    pub const REQUEST: &str = "request";
+    /// One router decision; `note` = the route reason (affinity/pressure/
+    /// rr/rebalanced), `detail` = chosen replica.
+    pub const ROUTE: &str = "route";
+    /// Scheduler-queue residency on one replica; `note` = SLO class.
+    pub const QUEUE_WAIT: &str = "queue_wait";
+    /// Prefill execution; `detail` = prompt tokens fed.
+    pub const PREFILL: &str = "prefill";
+    /// Prefill skipped on a full-prompt prefix hit; `detail` = tokens
+    /// premapped from the cache.
+    pub const PREFIX_SKIP: &str = "prefix_skip";
+    /// A window of consecutive decode steps for one row; `detail` = steps
+    /// aggregated (bounded by [`super::DECODE_WINDOW_STEPS`]).
+    pub const DECODE_WINDOW: &str = "decode_window";
+    /// One eviction pass over a row; `detail` = tokens evicted.
+    pub const EVICT_PASS: &str = "evict_pass";
+    /// Evicted blocks parked into the host tier; `detail` = tokens parked.
+    pub const DEMOTE: &str = "demote";
+    /// Parked tokens promoted back on recurrence; `detail` = tokens.
+    pub const PROMOTE: &str = "promote";
+    /// Whole-table device→host swap (swap-mode preemption).
+    pub const SWAP_OUT: &str = "swap_out";
+    /// Host→device copy-back on a swap-mode resume; `detail` = bytes.
+    pub const SWAP_IN: &str = "swap_in";
+    /// Preemption round-trip: victim snapshot → re-queue → re-admission.
+    pub const PREEMPT: &str = "preempt";
+    /// Orphan re-route hop: a dead replica's queued request re-submitted
+    /// through the router; `detail` = the replica that died.
+    pub const REROUTE: &str = "reroute";
+}
+
+/// Every span name, in lifecycle order — drives the per-name duration
+/// histograms and keeps `metric_name` exhaustive.
+pub const ALL_NAMES: &[&str] = &[
+    name::REQUEST,
+    name::ROUTE,
+    name::QUEUE_WAIT,
+    name::PREFILL,
+    name::PREFIX_SKIP,
+    name::DECODE_WINDOW,
+    name::EVICT_PASS,
+    name::DEMOTE,
+    name::PROMOTE,
+    name::SWAP_OUT,
+    name::SWAP_IN,
+    name::PREEMPT,
+    name::REROUTE,
+];
+
+/// Decode steps aggregated into one `decode_window` span (per-step spans
+/// would swamp the ring on long reasoning outputs).
+pub const DECODE_WINDOW_STEPS: u32 = 32;
+
+/// Metric-name prefix for span duration histograms (trailing `_` marks a
+/// prefix constant, like `POOL_PREFIX`).
+pub const SPAN_METRIC_PREFIX: &str = "lazyeviction_span_";
+
+/// Registry key for one span name's duration histogram:
+/// `lazyeviction_span_<name>_ms`.
+pub fn metric_name(span_name: &str) -> String {
+    format!("{SPAN_METRIC_PREFIX}{span_name}_ms")
+}
+
+/// The (trace, parent) pair a span is opened under. Copied across channel
+/// hops (server → actor → engine) so child spans link back without any
+/// shared state. `trace == 0` means "no tracing" — every recording helper
+/// treats such a context as a no-op, which is how the whole subsystem
+/// stays free when telemetry is off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanContext {
+    /// Root span id of the request's trace (0 = tracing disabled).
+    pub trace: u64,
+    /// Parent span id (0 = this span is the root).
+    pub parent: u64,
+}
+
+impl SpanContext {
+    /// Context for children of span `id` inside trace `trace`.
+    pub fn child_of(trace: u64, id: u64) -> SpanContext {
+        SpanContext { trace, parent: id }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.trace == 0
+    }
+}
+
+/// One span. While open, `dur_ms` is negative (sentinel); closing fills it
+/// and moves the span into the closed ring.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Globally unique (per recorder) span id; ids start at 1 so 0 can
+    /// mean "none" in contexts and wire shapes.
+    pub id: u64,
+    pub trace: u64,
+    pub parent: u64,
+    pub req: u64,
+    pub name: &'static str,
+    /// Replica that recorded the span; `None` for server-side spans.
+    pub replica: Option<usize>,
+    /// Seconds since the recorder epoch at open.
+    pub start_s: f64,
+    /// Wall duration; negative while the span is still open.
+    pub dur_ms: f64,
+    /// Event-specific scalar, documented per name in [`name`].
+    pub detail: f64,
+    /// Free-form qualifier (route reason, SLO class, teardown cause).
+    pub note: &'static str,
+}
+
+impl Span {
+    /// Flat JSON shape shared by the tree endpoint and the JSONL lines.
+    fn fields(&self) -> Json {
+        let mut j = Json::obj()
+            .set("span", self.id as f64)
+            .set("trace", self.trace as f64)
+            .set("parent", self.parent as f64)
+            .set("req", self.req as f64)
+            .set("name", self.name)
+            .set("t_s", self.start_s)
+            .set("detail", self.detail);
+        if let Some(r) = self.replica {
+            j = j.set("replica", r);
+        }
+        if !self.note.is_empty() {
+            j = j.set("note", self.note);
+        }
+        j
+    }
+
+    /// The v2 JSONL `span_open` line.
+    fn open_line(&self) -> Json {
+        self.fields().set("v", 2usize).set("kind", "span_open")
+    }
+
+    /// The v2 JSONL `span_close` line (`t_s` stays the open time; the
+    /// close time is `t_s + dur_ms / 1e3`).
+    fn close_line(&self) -> Json {
+        self.fields()
+            .set("v", 2usize)
+            .set("kind", "span_close")
+            .set("dur_ms", self.dur_ms)
+    }
+}
+
+/// Bounded open-list + closed-ring span store, plus per-name duration
+/// histograms. One per [`super::Telemetry`], shared by the whole fleet so
+/// span ids (and therefore trace ids) are globally unique.
+pub struct SpanRecorder {
+    epoch: Instant,
+    next_id: u64,
+    cap: usize,
+    /// Spans opened but not yet closed. Linear scan on close — the open
+    /// set is small (≤ active requests × a few stages) and bounded.
+    open: Vec<Span>,
+    /// Closed spans, oldest first.
+    ring: VecDeque<Span>,
+    /// Per-name duration histograms, keyed by [`ALL_NAMES`] order.
+    hists: Vec<StreamingHistogram>,
+    /// Closed spans pushed out of the ring + open spans force-dropped.
+    pub dropped: u64,
+}
+
+impl SpanRecorder {
+    pub const DEFAULT_CAP: usize = 4096;
+    /// Open spans are far fewer than closed ones; a leak (opens that are
+    /// never closed) hits this cap and gets force-dropped, not hoarded.
+    const OPEN_CAP: usize = 1024;
+
+    pub fn new(cap: usize) -> SpanRecorder {
+        SpanRecorder {
+            epoch: Instant::now(),
+            next_id: 1,
+            cap: cap.max(1),
+            open: Vec::new(),
+            ring: VecDeque::with_capacity(cap.max(1).min(1024)),
+            hists: ALL_NAMES
+                .iter()
+                .map(|_| StreamingHistogram::latency_ms())
+                .collect(),
+            dropped: 0,
+        }
+    }
+
+    /// Open a span. With `ctx.trace == 0` the new span becomes its own
+    /// trace root (listener behavior); otherwise it joins `ctx`'s trace
+    /// under `ctx.parent`. Returns the span id and the JSONL `span_open`
+    /// line for the caller to forward to the trace sink.
+    pub fn open(
+        &mut self,
+        req: u64,
+        name: &'static str,
+        ctx: SpanContext,
+        replica: Option<usize>,
+        detail: f64,
+        note: &'static str,
+    ) -> (u64, Json) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let span = Span {
+            id,
+            trace: if ctx.trace == 0 { id } else { ctx.trace },
+            parent: ctx.parent,
+            req,
+            name,
+            replica,
+            start_s: self.epoch.elapsed().as_secs_f64(),
+            dur_ms: -1.0,
+            detail,
+            note,
+        };
+        let line = span.open_line();
+        if self.open.len() >= Self::OPEN_CAP {
+            self.open.remove(0);
+            self.dropped += 1;
+        }
+        self.open.push(span);
+        (id, line)
+    }
+
+    /// Close span `id`, overriding `detail`/`note` when given. Returns the
+    /// JSONL `span_close` line, or `None` for id 0 / an unknown id (spans
+    /// force-dropped under pressure close as no-ops, never panics).
+    pub fn close(
+        &mut self,
+        id: u64,
+        detail: Option<f64>,
+        note: Option<&'static str>,
+    ) -> Option<Json> {
+        if id == 0 {
+            return None;
+        }
+        let at = self.open.iter().rposition(|s| s.id == id)?;
+        let mut span = self.open.swap_remove(at);
+        span.dur_ms = ((self.epoch.elapsed().as_secs_f64() - span.start_s) * 1e3).max(0.0);
+        if let Some(d) = detail {
+            span.detail = d;
+        }
+        if let Some(n) = note {
+            span.note = n;
+        }
+        if let Some(slot) = ALL_NAMES.iter().position(|&n| n == span.name) {
+            if let Some(h) = self.hists.get_mut(slot) {
+                h.observe(span.dur_ms);
+            }
+        }
+        let line = span.close_line();
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(span);
+        Some(line)
+    }
+
+    /// Closed spans (optionally for one request), most recent `limit`
+    /// kept, returned oldest-first.
+    pub fn spans_for(&self, req: Option<u64>, limit: usize) -> Vec<Span> {
+        let mut out: Vec<Span> = self
+            .ring
+            .iter()
+            .filter(|s| req.map_or(true, |r| s.req == r))
+            .cloned()
+            .collect();
+        if out.len() > limit {
+            out.drain(..out.len() - limit);
+        }
+        out
+    }
+
+    pub fn open_len(&self) -> usize {
+        self.open.len()
+    }
+
+    pub fn closed_len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Nested span trees for the `/trace/spans` endpoint: roots are spans
+    /// whose parent is 0 or fell out of the selected set, children sorted
+    /// by start time. `{"spans": [tree, …], "dropped": n}`.
+    pub fn trees_json(&self, req: Option<u64>, limit: usize) -> Json {
+        let spans = self.spans_for(req, limit);
+        let present: Vec<u64> = spans.iter().map(|s| s.id).collect();
+        let mut roots: Vec<Json> = Vec::new();
+        for s in &spans {
+            if s.parent == 0 || !present.contains(&s.parent) {
+                roots.push(tree_node(s, &spans));
+            }
+        }
+        Json::obj()
+            .set("spans", roots)
+            .set("dropped", self.dropped as f64)
+    }
+
+    /// Publish every non-empty per-name duration histogram into the
+    /// registry as `lazyeviction_span_<name>_ms`.
+    pub fn publish(&self, registry: &Registry) {
+        for (slot, span_name) in ALL_NAMES.iter().enumerate() {
+            if let Some(h) = self.hists.get(slot) {
+                if h.n() > 0 {
+                    registry.set_histogram(&metric_name(span_name), h);
+                }
+            }
+        }
+    }
+}
+
+/// One node of the `/trace/spans` tree: the span's flat fields plus its
+/// (start-ordered) children. Recursion depth is bounded by the lifecycle
+/// (request → stage → sub-stage, ≤ 4 in practice); a malformed cycle
+/// cannot occur because children always have larger ids than parents.
+fn tree_node(s: &Span, spans: &[Span]) -> Json {
+    let mut children: Vec<&Span> = spans.iter().filter(|c| c.parent == s.id).collect();
+    children.sort_by(|a, b| {
+        a.start_s
+            .partial_cmp(&b.start_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    let kids: Vec<Json> = children.iter().map(|c| tree_node(c, spans)).collect();
+    s.fields().set("dur_ms", s.dur_ms).set("children", kids)
+}
+
+/// Counts from one pass of [`validate_span_file`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanFileStats {
+    /// v2 `span_open` lines.
+    pub opens: u64,
+    /// v2 `span_close` lines.
+    pub closes: u64,
+    /// v1 flight-event lines interleaved in the same file.
+    pub flight_events: u64,
+}
+
+/// Schema check for a `--trace-out` file carrying v2 span lines: every
+/// `span_close` references a previously opened span id, every nonzero
+/// parent id resolves to an already-opened span, and no close carries a
+/// negative duration. Flight-event lines (no `kind` key) pass through
+/// uncounted against the span rules. Returns the first violation.
+pub fn validate_span_file(path: &Path) -> Result<SpanFileStats, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    validate_span_lines(&text)
+}
+
+/// [`validate_span_file`] over in-memory JSONL text (unit-testable).
+pub fn validate_span_lines(text: &str) -> Result<SpanFileStats, String> {
+    let mut stats = SpanFileStats::default();
+    let mut seen: Vec<u64> = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        let kind = match j.get("kind").and_then(|k| k.as_str()) {
+            Some(k) => k.to_string(),
+            None => {
+                // a v1 flight event — carries `event`, not `kind`
+                stats.flight_events += 1;
+                continue;
+            }
+        };
+        let id = j
+            .get("span")
+            .and_then(|v| v.as_f64())
+            .ok_or(format!("line {}: {kind} without span id", ln + 1))? as u64;
+        let parent = j.get("parent").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        match kind.as_str() {
+            "span_open" => {
+                if parent != 0 && !seen.contains(&parent) {
+                    return Err(format!(
+                        "line {}: span {id} opens under unknown parent {parent}",
+                        ln + 1
+                    ));
+                }
+                seen.push(id);
+                stats.opens += 1;
+            }
+            "span_close" => {
+                if !seen.contains(&id) {
+                    return Err(format!(
+                        "line {}: span_close for never-opened span {id}",
+                        ln + 1
+                    ));
+                }
+                let dur = j
+                    .get("dur_ms")
+                    .and_then(|v| v.as_f64())
+                    .ok_or(format!("line {}: span_close without dur_ms", ln + 1))?;
+                if dur < 0.0 {
+                    return Err(format!(
+                        "line {}: span {id} closed with negative duration {dur}",
+                        ln + 1
+                    ));
+                }
+                stats.closes += 1;
+            }
+            other => return Err(format!("line {}: unknown kind '{other}'", ln + 1)),
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_close_links_and_measures() {
+        let mut r = SpanRecorder::new(16);
+        let (root, line) = r.open(7, name::REQUEST, SpanContext::default(), None, 0.0, "");
+        assert_eq!(line.str_at("kind").unwrap(), "span_open");
+        assert_eq!(line.f64_at("trace").unwrap() as u64, root);
+        let (child, _) = r.open(
+            7,
+            name::QUEUE_WAIT,
+            SpanContext::child_of(root, root),
+            Some(1),
+            0.0,
+            "standard",
+        );
+        let close = r.close(child, None, None).expect("child closes");
+        assert!(close.f64_at("dur_ms").unwrap() >= 0.0);
+        assert_eq!(close.f64_at("parent").unwrap() as u64, root);
+        r.close(root, Some(42.0), Some("finish")).expect("root closes");
+        let spans = r.spans_for(Some(7), usize::MAX);
+        assert_eq!(spans.len(), 2);
+        let root_span = spans.iter().find(|s| s.id == root).unwrap();
+        assert_eq!(root_span.detail, 42.0);
+        assert_eq!(root_span.note, "finish");
+        assert_eq!(root_span.trace, root);
+    }
+
+    #[test]
+    fn close_of_unknown_or_zero_id_is_a_noop() {
+        let mut r = SpanRecorder::new(4);
+        assert!(r.close(0, None, None).is_none());
+        assert!(r.close(99, None, None).is_none());
+        assert_eq!(r.closed_len(), 0);
+    }
+
+    #[test]
+    fn ring_and_open_list_are_bounded() {
+        let mut r = SpanRecorder::new(2);
+        for i in 0..4 {
+            let (id, _) = r.open(i, name::ROUTE, SpanContext::default(), None, 0.0, "");
+            let _ = r.close(id, None, None);
+        }
+        assert_eq!(r.closed_len(), 2);
+        assert_eq!(r.dropped, 2);
+        // open-list cap: force-dropped opens close as no-ops later
+        let mut r = SpanRecorder::new(4);
+        let mut first = 0;
+        for i in 0..(SpanRecorder::OPEN_CAP + 1) as u64 {
+            let (id, _) = r.open(i, name::ROUTE, SpanContext::default(), None, 0.0, "");
+            if i == 0 {
+                first = id;
+            }
+        }
+        assert_eq!(r.open_len(), SpanRecorder::OPEN_CAP);
+        assert!(r.close(first, None, None).is_none(), "dropped span is gone");
+    }
+
+    #[test]
+    fn trees_nest_children_under_parents() {
+        let mut r = SpanRecorder::new(64);
+        let (root, _) = r.open(3, name::REQUEST, SpanContext::default(), None, 0.0, "");
+        let ctx = SpanContext::child_of(root, root);
+        let (q, _) = r.open(3, name::QUEUE_WAIT, ctx, Some(0), 0.0, "");
+        let _ = r.close(q, None, None);
+        let (d, _) = r.open(3, name::DECODE_WINDOW, ctx, Some(0), 8.0, "");
+        let _ = r.close(d, None, None);
+        // a different request's span must not leak into req=3 trees
+        let (other, _) = r.open(4, name::REQUEST, SpanContext::default(), None, 0.0, "");
+        let _ = r.close(other, None, None);
+        let _ = r.close(root, None, None);
+        let trees = r.trees_json(Some(3), usize::MAX);
+        let roots = trees.get("spans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(roots.len(), 1, "{trees:?}");
+        assert_eq!(roots[0].str_at("name").unwrap(), "request");
+        let kids = roots[0].get("children").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(kids.len(), 2);
+        assert_eq!(kids[0].str_at("name").unwrap(), "queue_wait");
+        assert_eq!(kids[1].str_at("name").unwrap(), "decode_window");
+        assert_eq!(kids[1].f64_at("detail").unwrap(), 8.0);
+    }
+
+    #[test]
+    fn orphaned_children_surface_as_roots() {
+        // parent fell out of the ring (or lives on another page): the
+        // child still renders, as a root of its own subtree
+        let mut r = SpanRecorder::new(64);
+        let ctx = SpanContext {
+            trace: 1000,
+            parent: 999,
+        };
+        let (c, _) = r.open(5, name::PREFILL, ctx, Some(2), 12.0, "");
+        let _ = r.close(c, None, None);
+        let trees = r.trees_json(Some(5), usize::MAX);
+        let roots = trees.get("spans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].f64_at("trace").unwrap() as u64, 1000);
+    }
+
+    #[test]
+    fn limit_keeps_most_recent_spans() {
+        let mut r = SpanRecorder::new(64);
+        for i in 0..10u64 {
+            let (id, _) = r.open(i, name::ROUTE, SpanContext::default(), None, i as f64, "");
+            let _ = r.close(id, None, None);
+        }
+        let spans = r.spans_for(None, 3);
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].detail, 7.0, "oldest of the most recent 3");
+        assert_eq!(spans[2].detail, 9.0);
+    }
+
+    #[test]
+    fn publish_exports_span_histograms() {
+        let mut r = SpanRecorder::new(16);
+        let (id, _) = r.open(1, name::EVICT_PASS, SpanContext::default(), None, 0.0, "");
+        let _ = r.close(id, None, None);
+        let reg = Registry::new();
+        r.publish(&reg);
+        let text = reg.render_prometheus();
+        assert!(
+            text.contains("lazyeviction_span_evict_pass_ms_count"),
+            "{text}"
+        );
+        assert!(
+            !text.contains("lazyeviction_span_route_ms"),
+            "empty hists stay unpublished: {text}"
+        );
+    }
+
+    #[test]
+    fn validator_accepts_a_recorded_stream_and_rejects_corruption() {
+        let mut r = SpanRecorder::new(64);
+        let mut lines = String::new();
+        let (root, l) = r.open(9, name::REQUEST, SpanContext::default(), None, 0.0, "");
+        lines.push_str(&(l.to_string() + "\n"));
+        let (c, l) = r.open(9, name::PREFILL, SpanContext::child_of(root, root), None, 4.0, "");
+        lines.push_str(&(l.to_string() + "\n"));
+        lines.push_str(&(r.close(c, None, None).unwrap().to_string() + "\n"));
+        // a v1 flight line interleaves fine
+        lines.push_str("{\"seq\":0,\"t_s\":0.1,\"req\":9,\"event\":\"decode\",\"step\":1,\"live\":1,\"detail\":0}\n");
+        lines.push_str(&(r.close(root, None, None).unwrap().to_string() + "\n"));
+        let stats = validate_span_lines(&lines).expect("valid stream");
+        assert_eq!(stats.opens, 2);
+        assert_eq!(stats.closes, 2);
+        assert_eq!(stats.flight_events, 1);
+        // close without an open
+        let bad = "{\"v\":2,\"kind\":\"span_close\",\"span\":5,\"dur_ms\":1.0}\n";
+        assert!(validate_span_lines(bad).is_err());
+        // unresolved parent
+        let bad = "{\"v\":2,\"kind\":\"span_open\",\"span\":5,\"parent\":4}\n";
+        assert!(validate_span_lines(bad).is_err());
+        // negative duration
+        let bad = "{\"v\":2,\"kind\":\"span_open\",\"span\":5,\"parent\":0}\n\
+                   {\"v\":2,\"kind\":\"span_close\",\"span\":5,\"dur_ms\":-1.0}\n";
+        assert!(validate_span_lines(bad).is_err());
+    }
+
+    #[test]
+    fn metric_names_cover_all_span_names() {
+        for n in ALL_NAMES {
+            let m = metric_name(n);
+            assert!(m.starts_with(SPAN_METRIC_PREFIX));
+            assert!(m.ends_with("_ms"));
+        }
+        assert_eq!(ALL_NAMES.len(), 13);
+    }
+}

@@ -24,8 +24,8 @@ use lazyeviction::server::FleetOptions;
 use lazyeviction::telemetry::{spawn_metrics_listener, Telemetry};
 use lazyeviction::util::json::Json;
 
-// pool_e2e.rs owns 8953-8956, telemetry_e2e.rs 8960-8961, streaming_e2e.rs
-// 8970-8977; this binary uses 8980-8993 so all four run in parallel.
+// pool_e2e.rs owns 8953-8956, telemetry_e2e.rs 8960-8963, streaming_e2e.rs
+// 8970-8977; this binary uses 8980-8995 so all four run in parallel.
 const IDENTITY_PORTS: [(&str, &str, &str); 4] = [
     ("full", "127.0.0.1:8980", "127.0.0.1:8984"),
     ("h2o", "127.0.0.1:8981", "127.0.0.1:8985"),
@@ -38,6 +38,8 @@ const DISCONNECT_ADDR: &str = "127.0.0.1:8990";
 const DISCONNECT_METRICS: &str = "127.0.0.1:8991";
 const KILL_ADDR: &str = "127.0.0.1:8992";
 const KILL_METRICS: &str = "127.0.0.1:8993";
+const ORPHAN_ADDR: &str = "127.0.0.1:8994";
+const ORPHAN_METRICS: &str = "127.0.0.1:8995";
 
 fn pooled_cfg(policy: &str, batch: usize, n_blocks: usize) -> EngineConfig {
     let mut cfg = EngineConfig {
@@ -364,6 +366,197 @@ fn mid_decode_disconnect_reclaims_only_the_home_replica() {
     let j = roundtrip(DISCONNECT_ADDR, r#"{"prompt":"#A=1;\n>","max_new":8}"#);
     assert!(j.get("error").is_none(), "post-abort request failed: {j:?}");
     assert_eq!(j.usize_at("tokens").unwrap(), 8);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+/// Depth-first flatten of one `/trace/spans` tree node into `out`.
+fn flatten<'a>(node: &'a Json, out: &mut Vec<&'a Json>) {
+    out.push(node);
+    if let Some(kids) = node.get("children").and_then(|v| v.as_arr()) {
+        for k in kids {
+            flatten(k, out);
+        }
+    }
+}
+
+#[test]
+fn orphan_span_tree_stitches_across_replicas() {
+    // The span-tracing acceptance test: 3 replicas, all four requests
+    // stacked on one by affinity, home replica killed mid-decode. For an
+    // orphan that finished on a survivor, `GET /trace/spans?req=N` alone
+    // must reconstruct the whole story: the router's decision for the dead
+    // replica AND for the survivor (two `route` spans with different
+    // replica details), the `reroute` hop naming the dead replica, the
+    // survivor-side queue/prefill/decode spans — all stitched under one
+    // root with monotone timestamps.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    // 4 × 4096-token decodes emit ~650 spans each (evict passes dominate);
+    // an oversized ring keeps the early route/reroute spans from being
+    // pushed out before the trees are queried
+    let telemetry = Telemetry::with_trace(16384, None).expect("telemetry");
+    spawn_metrics_listener(ORPHAN_METRICS, telemetry.clone(), shutdown.clone())
+        .expect("bind metrics listener");
+    let opts = FleetOptions {
+        routing: Routing::Affinity,
+        fault_injection: true,
+        ..FleetOptions::default()
+    };
+    serve_fleet_on(
+        ORPHAN_ADDR,
+        pooled_cfg("lazy", 1, 16),
+        3,
+        opts,
+        &shutdown,
+        Some(telemetry),
+    );
+
+    let request = r#"{"prompt":"#A=3;B=7;\n>","max_new":4096}"#;
+    let mut clients = Vec::new();
+    for _ in 0..4 {
+        let stream = TcpStream::connect(ORPHAN_ADDR).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        writeln!(&stream, "{request}").unwrap();
+        clients.push(stream);
+    }
+
+    let admin = TcpStream::connect(ORPHAN_ADDR).unwrap();
+    admin
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut admin_reader = BufReader::new(admin.try_clone().unwrap());
+    let mut ask = |cmd: &str| -> Json {
+        writeln!(&admin, "{cmd}").unwrap();
+        let mut line = String::new();
+        admin_reader.read_line(&mut line).expect("admin reply");
+        Json::parse(&line).unwrap_or_else(|e| panic!("bad admin reply '{line}': {e}"))
+    };
+    let mut home = None;
+    for _ in 0..250 {
+        let fleet = ask(r#"{"cmd":"fleet"}"#);
+        let replicas = fleet.get("fleet").and_then(|v| v.as_arr()).expect("fleet array");
+        home = replicas.iter().enumerate().find_map(|(i, r)| {
+            (r.f64_at("active").ok() == Some(1.0) && r.f64_at("queue_len").ok() == Some(3.0))
+                .then_some(i)
+        });
+        if home.is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let home = home.expect("all four requests must stack on one decoding replica");
+    let killed = ask(&format!(r#"{{"cmd":"kill_replica","replica":{home}}}"#));
+    assert_eq!(killed.usize_at("killed").ok(), Some(home), "kill refused: {killed:?}");
+
+    // drain every client; the orphans complete on survivors
+    let mut completed = 0usize;
+    for (i, stream) in clients.into_iter().enumerate() {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader
+            .read_line(&mut line)
+            .unwrap_or_else(|e| panic!("client {i} hung after the kill: {e}"));
+        let j = Json::parse(&line).unwrap_or_else(|e| panic!("client {i}: bad '{line}': {e}"));
+        if j.get("error").is_none() {
+            completed += 1;
+        }
+    }
+    assert_eq!(completed, 3, "every orphan must finish on a survivor");
+
+    // the four clients took request ids 1..=4; find an orphan's tree — a
+    // closed root whose descendants include a reroute hop. Roots close
+    // (with flush) right after the reply line, so poll briefly.
+    let mut orphan_root = None;
+    'search: for _ in 0..250 {
+        for req in 1..=4u64 {
+            let body =
+                http_get_body(ORPHAN_METRICS, &format!("/trace/spans?req={req}&limit=4096"));
+            let tree = Json::parse(&body).expect("span tree body is JSON");
+            let roots = tree.get("spans").and_then(|v| v.as_arr()).expect("spans array");
+            let found = roots
+                .iter()
+                .find(|r| r.str_at("name").ok() == Some("request"))
+                .cloned();
+            if let Some(root) = found {
+                let mut nodes = Vec::new();
+                flatten(&root, &mut nodes);
+                if nodes.iter().any(|n| n.str_at("name").ok() == Some("reroute")) {
+                    orphan_root = Some(root);
+                    break 'search;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let root = orphan_root.expect("no orphaned request ever produced a rerouted span tree");
+
+    // one root, terminal, parented at 0
+    assert_eq!(root.f64_at("parent").unwrap(), 0.0);
+    assert!(root.f64_at("dur_ms").unwrap() >= 0.0, "the root must be closed");
+    let trace = root.f64_at("span").unwrap();
+    let req = root.f64_at("req").unwrap();
+
+    let mut nodes = Vec::new();
+    flatten(&root, &mut nodes);
+    // stitched: every span in the tree carries the root's trace id and the
+    // request's id — nothing from another request leaks into this story
+    for n in &nodes {
+        assert_eq!(n.f64_at("trace").unwrap(), trace, "foreign trace id: {n:?}");
+        assert_eq!(n.f64_at("req").unwrap(), req, "foreign request id: {n:?}");
+        assert!(n.f64_at("dur_ms").unwrap() >= 0.0, "unclosed span in tree: {n:?}");
+    }
+    // monotone: a child never starts before its parent
+    fn check_monotone(node: &Json) {
+        let t0 = node.f64_at("t_s").unwrap();
+        if let Some(kids) = node.get("children").and_then(|v| v.as_arr()) {
+            for k in kids {
+                assert!(
+                    k.f64_at("t_s").unwrap() >= t0,
+                    "child starts before parent: {k:?}"
+                );
+                check_monotone(k);
+            }
+        }
+    }
+    check_monotone(&root);
+
+    // the router decided twice — once for the dead replica, once for a
+    // survivor — and the reroute hop names the dead replica
+    let route_targets: Vec<f64> = nodes
+        .iter()
+        .filter(|n| n.str_at("name").ok() == Some("route"))
+        .map(|n| n.f64_at("detail").unwrap())
+        .collect();
+    assert!(
+        route_targets.len() >= 2,
+        "both routing decisions must be in the tree: {route_targets:?}"
+    );
+    assert!(
+        route_targets.contains(&(home as f64)),
+        "the first decision targeted the dead replica {home}: {route_targets:?}"
+    );
+    assert!(
+        route_targets.iter().any(|&t| t != home as f64),
+        "the re-route decision must target a survivor: {route_targets:?}"
+    );
+    let reroutes: Vec<f64> = nodes
+        .iter()
+        .filter(|n| n.str_at("name").ok() == Some("reroute"))
+        .map(|n| n.f64_at("detail").unwrap())
+        .collect();
+    assert_eq!(
+        reroutes,
+        vec![home as f64],
+        "exactly one reroute hop, naming the dead replica"
+    );
+    // the survivor-side lifecycle is all there
+    for stage in ["queue_wait", "prefill", "decode_window"] {
+        assert!(
+            nodes.iter().any(|n| n.str_at("name").ok() == Some(stage)),
+            "missing {stage} span in the stitched tree"
+        );
+    }
     shutdown.store(true, Ordering::Relaxed);
 }
 

@@ -21,7 +21,7 @@ use lazyeviction::kvtier::HostTierConfig;
 use lazyeviction::telemetry::{spawn_metrics_listener, Telemetry};
 use lazyeviction::util::json::Json;
 
-// pool_e2e.rs owns 8953-8956, telemetry_e2e.rs 8960-8961; this binary
+// pool_e2e.rs owns 8953-8956, telemetry_e2e.rs 8960-8963; this binary
 // uses 8970-8977 so the three can run in parallel
 const POLICY_PORTS: [(&str, &str); 4] = [
     ("full", "127.0.0.1:8970"),

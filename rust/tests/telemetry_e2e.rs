@@ -225,6 +225,118 @@ fn scrape_stats_and_trace_during_and_after_serving() {
 }
 
 #[test]
+fn trace_spans_endpoint_serves_request_tree_and_trace_limit_pages() {
+    // this binary owns 8960-8963; 8960/8961 belong to the scrape test above
+    const SERVE2: &str = "127.0.0.1:8962";
+    const METRICS2: &str = "127.0.0.1:8963";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let telemetry = Telemetry::new();
+    spawn_metrics_listener(METRICS2, telemetry.clone(), shutdown.clone())
+        .expect("bind metrics listener");
+    {
+        let shutdown = shutdown.clone();
+        let t = telemetry.clone();
+        std::thread::spawn(move || {
+            let engine = Engine::new_sim(pooled_cfg(2, 12)).expect("sim engine");
+            let _ = lazyeviction::server::serve_with_telemetry(engine, SERVE2, shutdown, Some(t));
+        });
+    }
+    let mut up = false;
+    for _ in 0..200 {
+        if TcpStream::connect(SERVE2).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(up, "server did not come up within 4s");
+
+    for c in 0..2u32 {
+        let stream = TcpStream::connect(SERVE2).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writeln!(&stream, r#"{{"prompt":"#A={c};B=7;\n>","max_new":48}}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).expect("json response line");
+        assert!(j.get("error").is_none(), "server returned an error: {line}");
+    }
+
+    // the root span closes (with flush) right after the reply line is
+    // written — poll briefly instead of racing the server thread
+    let mut tree = Json::obj();
+    let mut rooted = false;
+    for _ in 0..100 {
+        let (head, body) = http_get(METRICS2, "/trace/spans?req=1");
+        assert!(head.starts_with("HTTP/1.0 200"), "spans head: {head}");
+        tree = Json::parse(&body).expect("span tree body is JSON");
+        let roots = tree.get("spans").and_then(|v| v.as_arr()).expect("spans array");
+        if roots
+            .iter()
+            .any(|r| r.str_at("name").ok() == Some("request"))
+        {
+            rooted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(rooted, "request 1 never produced a closed root span: {tree:?}");
+    let roots = tree.get("spans").and_then(|v| v.as_arr()).unwrap();
+    let root = roots
+        .iter()
+        .find(|r| r.str_at("name").ok() == Some("request"))
+        .unwrap();
+    assert_eq!(root.f64_at("req").unwrap(), 1.0);
+    assert_eq!(root.f64_at("parent").unwrap(), 0.0);
+    assert!(root.f64_at("dur_ms").unwrap() >= 0.0);
+    // the lifecycle stages nest under the root and start no earlier
+    let t0 = root.f64_at("t_s").unwrap();
+    let kids = root.get("children").and_then(|v| v.as_arr()).expect("children");
+    let names: Vec<&str> = kids.iter().filter_map(|k| k.str_at("name").ok()).collect();
+    for stage in ["route", "queue_wait", "prefill"] {
+        assert!(names.contains(&stage), "missing {stage}: {names:?}");
+    }
+    for k in kids {
+        assert!(k.f64_at("t_s").unwrap() >= t0, "child starts before root: {k:?}");
+        assert_eq!(
+            root.f64_at("span").unwrap(),
+            k.f64_at("trace").unwrap(),
+            "every child must carry the root's trace id"
+        );
+    }
+    // a req filter returns nothing for an id that never ran
+    let (_, other) = http_get(METRICS2, "/trace/spans?req=99");
+    let none = Json::parse(&other).unwrap();
+    assert!(none.get("spans").and_then(|v| v.as_arr()).unwrap().is_empty());
+
+    // /trace pagination: limit=1 keeps only the newest event
+    let (_, all) = http_get(METRICS2, "/trace");
+    let total = all.lines().count();
+    assert!(total > 1, "two served requests must leave multiple events");
+    let (_, one) = http_get(METRICS2, "/trace?limit=1");
+    assert_eq!(one.lines().count(), 1, "limit=1 must return one line");
+    let newest = Json::parse(one.lines().next().unwrap()).unwrap();
+    let last = Json::parse(all.lines().last().unwrap()).unwrap();
+    assert_eq!(
+        newest.usize_at("seq").unwrap(),
+        last.usize_at("seq").unwrap(),
+        "limit keeps the newest events, not the oldest"
+    );
+    // span durations feed the histogram registry on the next publish
+    let mut seen = false;
+    for _ in 0..100 {
+        let (_, body) = http_get(METRICS2, "/metrics");
+        if metric(&body, "lazyeviction_span_request_ms_count").map_or(false, |v| v >= 1.0) {
+            seen = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(seen, "span duration histograms never reached /metrics");
+
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
 fn flight_recorder_orders_swap_preempt_resume() {
     // the quick-bench's contended swap scenario: 3 requests, 2 rows, 9
     // blocks, swap-mode preemption against a 1 MiB tier
